@@ -1,0 +1,80 @@
+//! Quickstart: the library's core loop in ~60 lines.
+//!
+//! 1. Build a BERT-geometry model with synthetic weights.
+//! 2. Apply the paper's structured (group/block) pruning at 80%.
+//! 3. Convert to BSR, let the auto-scheduler compile reuse-deduped plans.
+//! 4. Run the same input through the compiled-dense and sparse engines;
+//!    verify they agree and compare latency + memory footprint.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
+use sparsebert::model::engine::Engine;
+use sparsebert::model::{BertConfig, BertWeights, PruneMode, PruneSpec};
+use sparsebert::scheduler::{AutoScheduler, HwSpec};
+use sparsebert::sparse::prune::BlockShape;
+use sparsebert::util::pool::default_threads;
+use sparsebert::util::propcheck::max_abs_diff;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    // A 2-layer slice of BERT_BASE geometry keeps the example snappy;
+    // ratios are layer-count invariant (see DESIGN.md).
+    let mut cfg = BertConfig::base();
+    cfg.layers = 2;
+    let threads = default_threads();
+    println!("hardware: {}", HwSpec::detect());
+
+    // 1. synthetic weights, 2. structured pruning (1x32 blocks @ 80%)
+    let block = BlockShape::new(1, 32);
+    let mut weights = BertWeights::synthetic(&cfg, 42);
+    let spec = PruneSpec {
+        mode: PruneMode::Structured { pool: 16 },
+        sparsity: 0.8,
+        block,
+    };
+    let achieved = weights.prune(&spec, 7);
+    println!("pruned transformer blocks to {:.1}% zeros (block {block})", achieved * 100.0);
+    let weights = Arc::new(weights);
+
+    // 3. engines: compiled-dense (negative control) vs BSR + scheduler
+    let dense = CompiledDenseEngine::new(Arc::clone(&weights), threads);
+    let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
+    let sparse = SparseBsrEngine::new(Arc::clone(&weights), block, Arc::clone(&sched), threads)?;
+    let snap = sched.buffer.stats.snapshot();
+    println!(
+        "scheduler compiled {} programs for {} block-rows (row reuse {:.1}%)",
+        snap.programs_compiled,
+        snap.rows_total,
+        snap.row_reuse_rate() * 100.0
+    );
+
+    // 4. run + compare
+    let tokens: Vec<u32> = (0..128).map(|i| 10 + (i * 37) % 20000).collect();
+    let x = weights.embed(&tokens);
+    let warm = |e: &dyn Engine| {
+        e.forward(&x);
+    };
+    warm(&dense);
+    warm(&sparse);
+    let t0 = Instant::now();
+    let yd = dense.forward(&x);
+    let dense_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let ys = sparse.forward(&x);
+    let sparse_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    println!("outputs agree: max|Δ| = {:.2e}", max_abs_diff(&yd.data, &ys.data));
+    println!(
+        "dense  : {dense_ms:7.1} ms   ({:.1} MB weights)",
+        dense.weight_footprint_bytes() as f64 / 1e6
+    );
+    println!(
+        "sparse : {sparse_ms:7.1} ms   ({:.1} MB weights)  → {:.2}x speedup",
+        sparse.weight_footprint_bytes() as f64 / 1e6,
+        dense_ms / sparse_ms
+    );
+    assert!(max_abs_diff(&yd.data, &ys.data) < 1e-3);
+    Ok(())
+}

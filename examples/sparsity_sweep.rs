@@ -1,0 +1,81 @@
+//! Sparsity-ratio × block-shape interaction sweep.
+//!
+//! The paper fixes 80% sparsity for Table 1; this example extends the
+//! study (its follow-up #4: "generalize principles for designing
+//! structured sparsification algorithms") by sweeping the sparsity ratio
+//! too, showing where the BSR runtime's crossover against compiled-dense
+//! sits for each block shape — i.e. *when* structured pruning starts
+//! paying for its indexing overhead.
+//!
+//! Run: `cargo run --release --example sparsity_sweep`
+
+use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
+use sparsebert::model::engine::Engine;
+use sparsebert::model::{BertConfig, BertWeights, PruneMode, PruneSpec};
+use sparsebert::scheduler::{AutoScheduler, HwSpec};
+use sparsebert::sparse::prune::BlockShape;
+use sparsebert::util::bench::{measure, BenchConfig};
+use sparsebert::util::pool::default_threads;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = BertConfig::base();
+    cfg.layers = 1; // single block: fastest sweep, identical per-layer ratios
+    let threads = default_threads();
+    let bench = BenchConfig {
+        samples: if std::env::var("SPARSEBERT_BENCH_QUICK").is_ok() { 2 } else { 5 },
+        warmup: 1,
+        max_seconds: 60.0,
+    };
+    let seq = 128;
+    let tokens: Vec<u32> = (0..seq as u32).collect();
+
+    let blocks = [BlockShape::new(1, 4), BlockShape::new(1, 32), BlockShape::new(16, 16)];
+    let ratios = [0.5, 0.7, 0.8, 0.9, 0.95];
+
+    println!("sparsity × block sweep (L=1, H=768, seq={seq}) on {}", HwSpec::detect());
+    print!("{:<10}", "block");
+    for r in ratios {
+        print!(" {:>8}", format!("{:.0}%", r * 100.0));
+    }
+    println!("   (cells: TVM+/Dense ratio; <1.0 = sparse wins)");
+
+    // dense baseline once
+    let dense_w = Arc::new(BertWeights::synthetic(&cfg, 42));
+    let x = dense_w.embed(&tokens);
+    let dense_engine = CompiledDenseEngine::new(Arc::clone(&dense_w), threads);
+    let dense_ms = measure("dense", &bench, || {
+        std::hint::black_box(dense_engine.forward(&x));
+    })
+    .summary
+    .mean;
+    println!("{:<10} dense baseline: {dense_ms:.1} ms", "");
+
+    for block in blocks {
+        print!("{:<10}", block.to_string());
+        for ratio in ratios {
+            let mut w = BertWeights::synthetic(&cfg, 42);
+            w.prune(
+                &PruneSpec {
+                    mode: PruneMode::Structured { pool: 16 },
+                    sparsity: ratio,
+                    block,
+                },
+                7,
+            );
+            let w = Arc::new(w);
+            let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
+            let engine = SparseBsrEngine::new(Arc::clone(&w), block, sched, threads)?;
+            let ms = measure(&format!("{block}@{ratio}"), &bench, || {
+                std::hint::black_box(engine.forward(&x));
+            })
+            .summary
+            .mean;
+            print!(" {:>8.3}", ms / dense_ms);
+        }
+        println!();
+    }
+    println!("\nreading: every block shape has a crossover sparsity below which BSR");
+    println!("indexing overhead exceeds the FLOP savings; linear blocks cross earliest.");
+    Ok(())
+}

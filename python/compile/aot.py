@@ -1,0 +1,223 @@
+"""AOT lowering: JAX → HLO text artifacts for the Rust PJRT runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax≥0.5
+emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted artifacts (all under `artifacts/`):
+
+  encoder_micro.hlo.txt / .json   — dense micro encoder (runtime tests)
+  encoder_tiny.hlo.txt  / .json   — dense tiny encoder (serving/XLA engine)
+  bsr_micro.hlo.txt     / .json   — L1 Pallas BSR layer (cross-language
+                                    kernel check: Rust feeds BSR arrays it
+                                    built itself and compares outputs)
+  train_step_micro.hlo.txt/.json  — one SGD step of an MLM head over the
+                                    micro encoder (E2E training example)
+
+Each `.json` manifest records the exact positional input ordering, shapes,
+and static attributes so the Rust loader can assemble literals without
+guessing. Python runs ONCE at build time (`make artifacts`); nothing here
+is on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.bsr_spmm import bsr_spmm, vmem_report
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple1/to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, name: str, hlo: str, manifest: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(hlo)
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  wrote {name}.hlo.txt ({len(hlo)} chars)")
+
+
+def emit_encoder(out_dir: str, config_name: str, tokens: int) -> None:
+    """Dense encoder forward, flat positional params."""
+    cfg = M.CONFIGS[config_name]
+    h = cfg["hidden"]
+    x_spec = jax.ShapeDtypeStruct((tokens, h), jnp.float32)
+    params = M.init_params(cfg, seed=0)
+    flat = M.flatten_params(params)
+    specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in flat]
+
+    def fn(x, *fp):
+        return M.encoder_flat(cfg, x, *fp)
+
+    lowered = jax.jit(fn).lower(x_spec, *specs)
+    hlo = to_hlo_text(lowered)
+    manifest = {
+        "kind": "encoder_dense",
+        "config": cfg,
+        "config_name": config_name,
+        "tokens": tokens,
+        "inputs": (
+            [{"name": "x", "shape": [tokens, h], "dtype": "f32"}]
+            + [
+                {"name": n, "shape": list(p.shape), "dtype": "f32"}
+                for n, p in zip(M.flat_param_names(cfg), flat)
+            ]
+        ),
+        "outputs": [{"name": "y", "shape": [tokens, h], "dtype": "f32"}],
+    }
+    _write(out_dir, f"encoder_{config_name}", hlo, manifest)
+
+
+def emit_bsr_kernel(out_dir: str) -> None:
+    """The L1 Pallas kernel lowered standalone at a fixed micro geometry.
+
+    The structure (indices/indptr) is runtime input, so Rust can exercise
+    arbitrary patterns with the same artifact as long as nnzb matches.
+    """
+    O, I, T = 32, 48, 8
+    block = (2, 4)
+    sparsity = 0.5
+    rng = np.random.default_rng(7)
+    w = ref.prune_structured(rng.normal(size=(O, I)).astype(np.float32), sparsity, block, rng)
+    data, indices, indptr = ref.dense_to_bsr(w, block)
+
+    def fn(x, d, i, p):
+        return (bsr_spmm(x, d, i, p, block=block, out_features=O, interpret=True),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((T, I), jnp.float32),
+        jax.ShapeDtypeStruct(data.shape, jnp.float32),
+        jax.ShapeDtypeStruct(indices.shape, jnp.int32),
+        jax.ShapeDtypeStruct(indptr.shape, jnp.int32),
+    )
+    hlo = to_hlo_text(lowered)
+    manifest = {
+        "kind": "bsr_spmm",
+        "block": list(block),
+        "shape": [O, I],
+        "tokens": T,
+        "nnz_blocks": int(data.shape[0]),
+        "inputs": [
+            {"name": "x", "shape": [T, I], "dtype": "f32"},
+            {"name": "data", "shape": list(data.shape), "dtype": "f32"},
+            {"name": "indices", "shape": list(indices.shape), "dtype": "i32"},
+            {"name": "indptr", "shape": list(indptr.shape), "dtype": "i32"},
+        ],
+        "outputs": [{"name": "y", "shape": [T, O], "dtype": "f32"}],
+        "vmem_report": vmem_report(
+            tokens=T, in_features=I, block=block,
+            nnz_blocks=int(data.shape[0]), out_features=O,
+        ),
+    }
+    _write(out_dir, "bsr_micro", hlo, manifest)
+
+
+def emit_train_step(out_dir: str) -> None:
+    """One SGD step of MLM over the micro encoder: the E2E training
+    example (`examples/train_sparse.rs`) drives this from Rust.
+
+    Signature: (x_emb [T,H], labels [T] i32, lr [] f32, *flat_params)
+            → (loss [], *updated_flat_params)
+    The MLM head reuses the token embedding is omitted — a dedicated
+    [V,H] output projection is the last two flat params.
+    """
+    cfg = M.CONFIGS["micro"]
+    tokens, h, v = 12, cfg["hidden"], cfg["vocab"]
+    params = M.init_params(cfg, seed=0)
+    flat = M.flatten_params(params)
+    rng = np.random.default_rng(3)
+    head_w = rng.normal(0, 0.02, size=(v, h)).astype(np.float32)
+    head_b = np.zeros((v,), dtype=np.float32)
+    flat_all = flat + [jnp.asarray(head_w), jnp.asarray(head_b)]
+
+    def loss_fn(fp, x, labels):
+        enc_fp, head_w, head_b = fp[:-2], fp[-2], fp[-1]
+        (y,) = M.encoder_flat(cfg, x, *enc_fp)
+        logits = y @ head_w.T + head_b
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+        return nll
+
+    def step(x, labels, lr, *fp):
+        fp = list(fp)
+        loss, grads = jax.value_and_grad(loss_fn)(fp, x, labels)
+        new = [p - lr * g for p, g in zip(fp, grads)]
+        return tuple([loss] + new)
+
+    specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in flat_all]
+    lowered = jax.jit(step).lower(
+        jax.ShapeDtypeStruct((tokens, h), jnp.float32),
+        jax.ShapeDtypeStruct((tokens,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        *specs,
+    )
+    hlo = to_hlo_text(lowered)
+    names = M.flat_param_names(cfg) + ["mlm.head.w", "mlm.head.b"]
+    manifest = {
+        "kind": "train_step_mlm",
+        "config": cfg,
+        "config_name": "micro",
+        "tokens": tokens,
+        "inputs": (
+            [
+                {"name": "x", "shape": [tokens, h], "dtype": "f32"},
+                {"name": "labels", "shape": [tokens], "dtype": "i32"},
+                {"name": "lr", "shape": [], "dtype": "f32"},
+            ]
+            + [{"name": n, "shape": list(p.shape), "dtype": "f32"} for n, p in zip(names, flat_all)]
+        ),
+        "outputs": (
+            [{"name": "loss", "shape": [], "dtype": "f32"}]
+            + [{"name": n, "shape": list(p.shape), "dtype": "f32"} for n, p in zip(names, flat_all)]
+        ),
+    }
+    _write(out_dir, "train_step_micro", hlo, manifest)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only",
+        default="",
+        help="comma-separated subset: encoder_micro,encoder_tiny,bsr,train",
+    )
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    def want(name):
+        return not only or name in only
+
+    print(f"AOT lowering → {os.path.abspath(args.out)}")
+    if want("encoder_micro"):
+        emit_encoder(args.out, "micro", tokens=8)
+    if want("encoder_tiny"):
+        emit_encoder(args.out, "tiny", tokens=128)
+    if want("bsr"):
+        emit_bsr_kernel(args.out)
+    if want("train"):
+        emit_train_step(args.out)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Synthetic pre-training corpus (BookCorpus/Wikipedia substitute).
+
+The paper pre-trains on BookCorpus + English Wikipedia; neither is
+available here (repro band 0), so we build a deterministic synthetic
+corpus that preserves the two properties the MLM/NSP objectives and the
+downstream probes actually exercise:
+
+* **Zipfian marginals** — natural-text token frequencies are power-law;
+  the head/tail split is what makes MLM non-trivial (rare tokens are
+  hard, frequent ones easy).
+* **Latent topics** — each sentence is drawn from one of `n_topics`
+  topic-conditional distributions over a topic-specific vocabulary
+  slice. Topics give NSP its signal (adjacent sentences share topics)
+  and give the GLUE-like probes graded difficulty (DESIGN.md §3).
+
+Special token ids follow BERT conventions: PAD=0, [CLS]=1, [SEP]=2,
+[MASK]=3; ids 4..10 are reserved task-marker tokens.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PAD, CLS, SEP, MASK = 0, 1, 2, 3
+RESERVED = 10  # first normal token id
+
+
+class SyntheticCorpus:
+    """Deterministic topic-structured Zipf corpus."""
+
+    def __init__(self, vocab: int, n_topics: int = 16, zipf_s: float = 1.05, seed: int = 0):
+        assert vocab > RESERVED + n_topics * 8, "vocab too small for topic structure"
+        self.vocab = vocab
+        self.n_topics = n_topics
+        rng = np.random.default_rng(seed)
+        usable = vocab - RESERVED
+        ranks = np.arange(1, usable + 1, dtype=np.float64)
+        base = 1.0 / ranks**zipf_s
+        base /= base.sum()
+        # Each topic boosts a random slice of the vocabulary 20×.
+        self.topic_dists = np.empty((n_topics, usable))
+        slice_w = usable // n_topics
+        for t in range(n_topics):
+            boost = np.ones(usable)
+            lo = t * slice_w
+            boost[lo : lo + slice_w] = 20.0
+            d = base * boost
+            self.topic_dists[t] = d / d.sum()
+        # per-topic permutation so topical tokens are spread over ranks
+        self.perm = rng.permutation(usable)
+
+    def sentence(self, topic: int, length: int, rng) -> np.ndarray:
+        """Token ids of one sentence from `topic` (no specials)."""
+        raw = rng.choice(len(self.perm), size=length, p=self.topic_dists[topic])
+        return (self.perm[raw] + RESERVED).astype(np.int32)
+
+    def pair_sequence(self, topic_a: int, topic_b: int, seq: int, rng) -> np.ndarray:
+        """`[CLS] a... [SEP] b... [SEP]` padded to `seq`."""
+        body = seq - 3
+        la = body // 2
+        lb = body - la
+        a = self.sentence(topic_a, la, rng)
+        b = self.sentence(topic_b, lb, rng)
+        out = np.full(seq, PAD, dtype=np.int32)
+        out[0] = CLS
+        out[1 : 1 + la] = a
+        out[1 + la] = SEP
+        out[2 + la : 2 + la + lb] = b
+        out[2 + la + lb] = SEP
+        return out
+
+    def single_sequence(self, topic: int, seq: int, rng) -> np.ndarray:
+        """`[CLS] tokens... [SEP]` padded to `seq`."""
+        body = seq - 2
+        s = self.sentence(topic, body, rng)
+        out = np.full(seq, PAD, dtype=np.int32)
+        out[0] = CLS
+        out[1 : 1 + body] = s
+        out[1 + body] = SEP
+        return out
+
+    # -- objectives ---------------------------------------------------------
+
+    def mlm_batch(self, batch: int, seq: int, rng):
+        """(tokens [B,T] int32, labels [B,T] int32 with -1=ignore).
+
+        BERT masking recipe: 15% of non-special positions selected; of
+        those 80% → [MASK], 10% → random token, 10% → unchanged.
+        """
+        tokens = np.stack(
+            [self.single_sequence(rng.integers(self.n_topics), seq, rng) for _ in range(batch)]
+        )
+        labels = np.full_like(tokens, -1)
+        maskable = tokens >= RESERVED
+        select = (rng.random(tokens.shape) < 0.15) & maskable
+        labels[select] = tokens[select]
+        roll = rng.random(tokens.shape)
+        to_mask = select & (roll < 0.8)
+        to_rand = select & (roll >= 0.8) & (roll < 0.9)
+        tokens = tokens.copy()
+        tokens[to_mask] = MASK
+        tokens[to_rand] = rng.integers(RESERVED, self.vocab, size=int(to_rand.sum()))
+        return tokens, labels
+
+    def nsp_batch(self, batch: int, seq: int, rng):
+        """(tokens [B,T], labels [B] — 1 if the two segments share a topic)."""
+        tokens = np.empty((batch, seq), dtype=np.int32)
+        labels = np.empty(batch, dtype=np.int32)
+        for i in range(batch):
+            ta = int(rng.integers(self.n_topics))
+            same = bool(rng.random() < 0.5)
+            tb = ta if same else int((ta + 1 + rng.integers(self.n_topics - 1)) % self.n_topics)
+            tokens[i] = self.pair_sequence(ta, tb, seq, rng)
+            labels[i] = int(same)
+        return tokens, labels

@@ -1,0 +1,78 @@
+"""Tensor-bundle interchange with the Rust runtime.
+
+Writes/reads the same manifest-directory format as
+`rust/src/util/tensorfile.rs::TensorBundle`: a `manifest.json` naming
+tensors plus one `.npy` (v1, `<f4`/`<i4`, C-order) per tensor.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+
+def save_bundle(dir_path: str, tensors: dict, meta: dict | None = None) -> None:
+    """Save `{name: ndarray}` to a bundle directory."""
+    os.makedirs(dir_path, exist_ok=True)
+    entries = {}
+    for i, (name, arr) in enumerate(sorted(tensors.items())):
+        arr = np.asarray(arr)
+        if arr.dtype in (np.float64, np.float32):
+            arr = arr.astype("<f4")
+            dtype = "f32"
+        elif arr.dtype in (np.int64, np.int32):
+            arr = arr.astype("<i4")
+            dtype = "i32"
+        else:
+            raise TypeError(f"tensor '{name}': unsupported dtype {arr.dtype}")
+        fname = f"t{i:04d}.npy"
+        np.save(os.path.join(dir_path, fname), arr, allow_pickle=False)
+        entries[name] = {"file": fname, "shape": list(arr.shape), "dtype": dtype}
+    manifest = {"tensors": entries, "meta": {k: str(v) for k, v in (meta or {}).items()}}
+    with open(os.path.join(dir_path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+
+
+def load_bundle(dir_path: str):
+    """Load a bundle directory → (tensors dict, meta dict)."""
+    with open(os.path.join(dir_path, "manifest.json")) as f:
+        manifest = json.load(f)
+    tensors = {}
+    for name, entry in manifest["tensors"].items():
+        arr = np.load(os.path.join(dir_path, entry["file"]), allow_pickle=False)
+        assert list(arr.shape) == entry["shape"], (name, arr.shape, entry["shape"])
+        tensors[name] = arr
+    return tensors, manifest.get("meta", {})
+
+
+def params_to_bundle_tensors(config: dict, params: dict) -> dict:
+    """Flatten a model params dict into Rust-compatible bundle naming
+    (`layer{l}.attn.wq`, `emb.tok`, ... — see
+    rust/src/model/weights.rs::to_bundle)."""
+    out = {
+        "emb.tok": params["emb.tok"],
+        "emb.pos": params["emb.pos"],
+        "emb.ln.gamma": params["emb.ln.gamma"],
+        "emb.ln.beta": params["emb.ln.beta"],
+    }
+    for l, lp in enumerate(params["layers"]):
+        for name, arr in lp.items():
+            out[f"layer{l}.{name}"] = arr
+    return out
+
+
+def bundle_tensors_to_params(config: dict, tensors: dict) -> dict:
+    from .model import LAYER_PARAM_NAMES
+
+    layers = []
+    for l in range(config["layers"]):
+        layers.append({n: tensors[f"layer{l}.{n}"] for n in LAYER_PARAM_NAMES})
+    return {
+        "emb.tok": tensors["emb.tok"],
+        "emb.pos": tensors["emb.pos"],
+        "emb.ln.gamma": tensors["emb.ln.gamma"],
+        "emb.ln.beta": tensors["emb.ln.beta"],
+        "layers": layers,
+    }

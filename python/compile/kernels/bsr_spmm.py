@@ -1,0 +1,138 @@
+"""L1: Pallas BSR × dense kernel — the paper's sparse attention/FFN
+hot-spot expressed for the TPU memory hierarchy.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's TVM
+CPU schedule walks `indptr`/`indices` with vectorized inner loops over a
+cache-resident activation panel. On TPU the analogous structure is:
+
+* the **grid** runs over output block-rows (one program instance per
+  block-row of the BSR weight) — TVM's parallel outer loop;
+* `BlockSpec` pins the **activation panel X [T, I] in VMEM** (the
+  scratchpad analog of the CPU L2-resident panel) and gives each
+  instance its own `[T, r]` output tile;
+* the inner `fori_loop` gathers only **stored blocks** and feeds an
+  `[T, c] @ [c, r]` contraction to the MXU per block — block columns of
+  32 fill one MXU pass at f32, which is the TPU-side echo of the paper's
+  1×32 result.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO for both pytest and the
+AOT artifacts. Real-TPU efficiency is *estimated* from the VMEM/MXU
+model in `vmem_report` (EXPERIMENTS.md §Perf-L1), never from
+interpret-mode wallclock.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def bsr_spmm(x, data, indices, indptr, *, block, out_features, interpret=True):
+    """Compute `y = x @ W^T` with W in SciPy BSR layout.
+
+    Args:
+      x: [T, I] dense activations (token-major, float32).
+      data: [nnzb, r, c] stored blocks of W ([O, I]).
+      indices: [nnzb] int32 block-column ids.
+      indptr: [n_block_rows+1] int32 offsets.
+      block: (r, c) block shape.
+      out_features: O (= n_block_rows * r).
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns:
+      [T, O] float32.
+    """
+    r, c = block
+    t, in_features = x.shape
+    n_block_rows = out_features // r
+    assert n_block_rows * r == out_features, (block, out_features)
+    assert indptr.shape[0] == n_block_rows + 1
+    if data.shape[0] == 0:
+        # Degenerate all-zero matrix: the fori_loop body is traced even
+        # though it never executes, and tracing cannot slice a 0-length
+        # array. Pad with one dummy block; indptr stays all-zero so the
+        # loop trip count is 0 at runtime.
+        data = jnp.zeros((1, r, c), jnp.float32)
+        indices = jnp.zeros((1,), jnp.int32)
+
+    kernel = functools.partial(_bsr_kernel, block=block, tokens=t)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_block_rows,),
+        in_specs=[
+            # full activation panel resident per instance (VMEM analog)
+            pl.BlockSpec((t, in_features), lambda bi: (0, 0)),
+            pl.BlockSpec(data.shape, lambda bi: (0, 0, 0)),
+            pl.BlockSpec(indices.shape, lambda bi: (0,)),
+            pl.BlockSpec(indptr.shape, lambda bi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t, r), lambda bi: (0, bi)),
+        out_shape=jax.ShapeDtypeStruct((t, out_features), jnp.float32),
+        interpret=interpret,
+    )(x, data, indices, indptr)
+
+
+def _bsr_kernel(x_ref, data_ref, indices_ref, indptr_ref, o_ref, *, block, tokens):
+    r, c = block
+    bi = pl.program_id(0)
+    k0 = indptr_ref[bi]
+    k1 = indptr_ref[bi + 1]
+
+    def body(pos, acc):
+        bj = indices_ref[pos]
+        # [T, c] activation panel slice for this block column
+        xblk = pl.load(x_ref, (slice(None), pl.ds(bj * c, c)))
+        # [r, c] stored block
+        wblk = pl.load(data_ref, (pos, slice(None), slice(None)))
+        # MXU contraction: [T, c] @ [c, r]
+        return acc + jnp.dot(xblk, wblk.T, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(k0, k1, body, jnp.zeros((tokens, r), jnp.float32))
+    o_ref[...] = acc
+
+
+def bsr_linear(x, data, indices, indptr, bias, *, block, out_features, interpret=True):
+    """BSR linear layer: `bsr_spmm` plus bias — the unit the L2 model
+    composes for attention projections and FFN."""
+    y = bsr_spmm(
+        x, data, indices, indptr, block=block, out_features=out_features, interpret=interpret
+    )
+    return y + bias[None, :]
+
+
+def vmem_report(*, tokens, in_features, block, nnz_blocks, out_features):
+    """Static VMEM-footprint / MXU-utilization estimate for a kernel
+    instance — the L1 perf deliverable (interpret-mode wallclock is not a
+    TPU proxy; structure is what we can optimize).
+
+    Returns a dict with:
+      vmem_bytes — resident bytes per grid instance (X panel + avg blocks
+                   of one row + output tile);
+      mxu_utilization — fraction of an MXU 128×128 pass actually filled
+                   by one [T, c] @ [c, r] block contraction;
+      flops — useful FLOPs for the whole spmm.
+    """
+    r, c = block
+    n_block_rows = out_features // r
+    avg_blocks_per_row = nnz_blocks / max(1, n_block_rows)
+    x_panel = tokens * in_features * 4
+    row_blocks = avg_blocks_per_row * r * c * 4
+    out_tile = tokens * r * 4
+    # MXU model: a 128x128 systolic pass multiplies [<=128 tokens, <=128 k]
+    # by [<=128 k, <=128 n]; utilization is the filled fraction of each
+    # dimension (f32; bf16 would double the k dimension).
+    util = (
+        min(tokens, 128) / 128.0
+        * min(c, 128) / 128.0
+        * min(r, 128) / 128.0
+    )
+    return {
+        "vmem_bytes": int(x_panel + row_blocks + out_tile),
+        "mxu_utilization": util,
+        "flops": 2 * nnz_blocks * r * c * tokens,
+        "grid": n_block_rows,
+    }

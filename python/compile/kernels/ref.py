@@ -1,0 +1,113 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is deliberately naive: densify, matmul, compare. The
+pytest suite drives `bsr_spmm.bsr_spmm` (Pallas, interpret=True) against
+these functions over a sweep of shapes/blocks/sparsities, which is the
+L1 correctness signal for the whole stack (the Rust BSR kernels are in
+turn cross-checked against artifacts produced from these graphs).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bsr_to_dense(data, indices, indptr, shape, block):
+    """Densify SciPy-layout BSR arrays.
+
+    Args:
+      data: [nnzb, r, c] block values.
+      indices: [nnzb] block-column ids.
+      indptr: [n_block_rows + 1] offsets.
+      shape: (rows, cols) of the dense matrix.
+      block: (r, c) block shape.
+    """
+    rows, cols = shape
+    r, c = block
+    out = np.zeros((rows, cols), dtype=np.float32)
+    data = np.asarray(data)
+    indices = np.asarray(indices)
+    indptr = np.asarray(indptr)
+    for bi in range(rows // r):
+        for pos in range(int(indptr[bi]), int(indptr[bi + 1])):
+            bj = int(indices[pos])
+            out[bi * r : (bi + 1) * r, bj * c : (bj + 1) * c] = data[pos]
+    return jnp.asarray(out)
+
+
+def bsr_spmm_ref(x, data, indices, indptr, *, shape, block):
+    """Reference `y = x @ W^T` with W given in BSR form, W: [O, I]."""
+    w = bsr_to_dense(data, indices, indptr, shape, block)
+    return x @ w.T
+
+
+def dense_to_bsr(w, block):
+    """Convert a dense numpy matrix to SciPy-layout BSR arrays, keeping
+    every block that contains at least one nonzero (mirrors the Rust
+    `BsrMatrix::from_dense`)."""
+    w = np.asarray(w, dtype=np.float32)
+    rows, cols = w.shape
+    r, c = block
+    assert rows % r == 0 and cols % c == 0, f"block {block} !| {w.shape}"
+    data, indices, indptr = [], [], [0]
+    for bi in range(rows // r):
+        for bj in range(cols // c):
+            blk = w[bi * r : (bi + 1) * r, bj * c : (bj + 1) * c]
+            if np.any(blk != 0.0):
+                data.append(blk)
+                indices.append(bj)
+        indptr.append(len(indices))
+    if data:
+        data_arr = np.stack(data).astype(np.float32)
+    else:
+        data_arr = np.zeros((0, r, c), dtype=np.float32)
+    return (
+        data_arr,
+        np.asarray(indices, dtype=np.int32),
+        np.asarray(indptr, dtype=np.int32),
+    )
+
+
+def prune_structured(w, sparsity, block, rng):
+    """Block-magnitude pruning (keep the strongest (1-sparsity) fraction
+    of blocks by group L1 norm) — the Eq.(3) projection used to build
+    kernel-test fixtures. `rng` breaks ties deterministically."""
+    w = np.array(w, dtype=np.float32, copy=True)
+    rows, cols = w.shape
+    r, c = block
+    brows, bcols = rows // r, cols // c
+    scores = np.abs(w).reshape(brows, r, bcols, c).sum(axis=(1, 3))
+    n_blocks = brows * bcols
+    keep = max(1, int(round((1.0 - sparsity) * n_blocks)))
+    flat = scores.reshape(-1) + rng.uniform(0, 1e-9, size=n_blocks)
+    threshold = np.partition(flat, n_blocks - keep)[n_blocks - keep]
+    mask = (flat >= threshold).reshape(brows, bcols)
+    full = np.repeat(np.repeat(mask, r, axis=0), c, axis=1)
+    return w * full
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis (token-major [T, H])."""
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def gelu_ref(x):
+    """Tanh-approximate GELU (BERT convention; matches the Rust kernel)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x**3)))
+
+
+def attention_ref(q, k, v, heads):
+    """Multi-head attention, token-major [T, H]."""
+    t, h = q.shape
+    d = h // heads
+    out = []
+    for head in range(heads):
+        sl = slice(head * d, (head + 1) * d)
+        scores = (q[:, sl] @ k[:, sl].T) / jnp.sqrt(jnp.float32(d))
+        p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+        p = p / p.sum(axis=-1, keepdims=True)
+        out.append(p @ v[:, sl])
+    return jnp.concatenate(out, axis=-1)

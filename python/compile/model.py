@@ -1,0 +1,213 @@
+"""L2: the BERT encoder compute graph in JAX.
+
+Dense and block-sparse variants of the same post-LN encoder. The sparse
+variant routes all six projections per block (Q/K/V/O + FFN up/down)
+through the L1 Pallas BSR kernel, so lowering `encoder_sparse` bakes the
+kernel into the same HLO module the Rust runtime loads.
+
+Numerics contract (kept in lock-step with `rust/src/model/bert.rs`, and
+asserted cross-language by `rust/tests/xla_artifacts.rs`):
+  * weights are `[out, in]`, activations token-major `[T, H]`, `y = x@W.T + b`;
+  * post-LN residual blocks, LayerNorm eps 1e-5;
+  * tanh-approximate GELU;
+  * softmax over the key axis, scores scaled by 1/sqrt(head_dim).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.bsr_spmm import bsr_linear
+
+LN_EPS = 1e-5
+
+
+# --------------------------------------------------------------------------
+# Configuration (mirrors rust/src/model/config.rs)
+# --------------------------------------------------------------------------
+
+CONFIGS = {
+    # BERT_BASE: the paper's pruning target (perf geometry).
+    "base": dict(layers=12, hidden=768, heads=12, intermediate=3072, vocab=30522, max_seq=512),
+    # Actually-trained tiny model (Table 2 pipeline).
+    "tiny": dict(layers=4, hidden=256, heads=4, intermediate=1024, vocab=8192, max_seq=128),
+    # Unit-test scale.
+    "micro": dict(layers=1, hidden=32, heads=2, intermediate=64, vocab=101, max_seq=16),
+}
+
+
+def init_params(config: dict, seed: int) -> dict:
+    """Gaussian init (std 0.02), biases zero, LN affine identity."""
+    rng = np.random.default_rng(seed)
+    h, i = config["hidden"], config["intermediate"]
+
+    def mat(o, inn):
+        return jnp.asarray(rng.normal(0, 0.02, size=(o, inn)).astype(np.float32))
+
+    def vec(n, fill=0.0):
+        return jnp.full((n,), fill, dtype=jnp.float32)
+
+    layers = []
+    for _ in range(config["layers"]):
+        layers.append(
+            {
+                "attn.wq": mat(h, h), "attn.bq": vec(h),
+                "attn.wk": mat(h, h), "attn.bk": vec(h),
+                "attn.wv": mat(h, h), "attn.bv": vec(h),
+                "attn.wo": mat(h, h), "attn.bo": vec(h),
+                "ffn.up": mat(i, h), "ffn.b_up": vec(i),
+                "ffn.down": mat(h, i), "ffn.b_down": vec(h),
+                "ln1.gamma": vec(h, 1.0), "ln1.beta": vec(h),
+                "ln2.gamma": vec(h, 1.0), "ln2.beta": vec(h),
+            }
+        )
+    return {
+        "emb.tok": mat(config["vocab"], h),
+        "emb.pos": mat(config["max_seq"], h),
+        "emb.ln.gamma": vec(h, 1.0),
+        "emb.ln.beta": vec(h),
+        "layers": layers,
+    }
+
+
+# --------------------------------------------------------------------------
+# Ops
+# --------------------------------------------------------------------------
+
+def layernorm(x, gamma, beta):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + LN_EPS) * gamma + beta
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x**3)))
+
+
+def attention(q, k, v, heads):
+    """Token-major multi-head attention. q/k/v: [T, H]."""
+    t, h = q.shape
+    d = h // heads
+    qh = q.reshape(t, heads, d).transpose(1, 0, 2)  # [A, T, d]
+    kh = k.reshape(t, heads, d).transpose(1, 0, 2)
+    vh = v.reshape(t, heads, d).transpose(1, 0, 2)
+    scores = jnp.einsum("atd,asd->ats", qh, kh) / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("ats,asd->atd", p, vh)  # [A, T, d]
+    return ctx.transpose(1, 0, 2).reshape(t, h)
+
+
+def embed(params, tokens):
+    """Token ids [T] → embedded activations [T, H]."""
+    x = params["emb.tok"][tokens] + params["emb.pos"][: tokens.shape[0]]
+    return layernorm(x, params["emb.ln.gamma"], params["emb.ln.beta"])
+
+
+# --------------------------------------------------------------------------
+# Dense encoder
+# --------------------------------------------------------------------------
+
+def encoder_layer(lp: dict, x, heads: int):
+    """One post-LN transformer block, token-major [T, H]."""
+    q = x @ lp["attn.wq"].T + lp["attn.bq"]
+    k = x @ lp["attn.wk"].T + lp["attn.bk"]
+    v = x @ lp["attn.wv"].T + lp["attn.bv"]
+    ctx = attention(q, k, v, heads)
+    attn_out = ctx @ lp["attn.wo"].T + lp["attn.bo"]
+    x = layernorm(x + attn_out, lp["ln1.gamma"], lp["ln1.beta"])
+    ff = gelu(x @ lp["ffn.up"].T + lp["ffn.b_up"])
+    ff_out = ff @ lp["ffn.down"].T + lp["ffn.b_down"]
+    return layernorm(x + ff_out, lp["ln2.gamma"], lp["ln2.beta"])
+
+
+def encoder(params: dict, x, heads: int):
+    """Full encoder over embedded input x [T, H] → [T, H]."""
+    for lp in params["layers"]:
+        x = encoder_layer(lp, x, heads)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Sparse encoder (L1 Pallas kernel on every projection)
+# --------------------------------------------------------------------------
+
+def encoder_layer_sparse(lp: dict, sp: dict, x, heads: int, block, interpret=True):
+    """Transformer block with BSR projections.
+
+    `sp[name]` holds `(data, indices, indptr)` for each of the six
+    projection matrices; biases/LN stay dense in `lp`.
+    """
+    h = x.shape[1]
+    i = lp["ffn.b_up"].shape[0]
+
+    def lin(name, xx, bias, out_features):
+        data, indices, indptr = sp[name]
+        return bsr_linear(
+            xx, data, indices, indptr, bias,
+            block=block, out_features=out_features, interpret=interpret,
+        )
+
+    q = lin("attn.wq", x, lp["attn.bq"], h)
+    k = lin("attn.wk", x, lp["attn.bk"], h)
+    v = lin("attn.wv", x, lp["attn.bv"], h)
+    ctx = attention(q, k, v, heads)
+    attn_out = lin("attn.wo", ctx, lp["attn.bo"], h)
+    x = layernorm(x + attn_out, lp["ln1.gamma"], lp["ln1.beta"])
+    ff = gelu(lin("ffn.up", x, lp["ffn.b_up"], i))
+    ff_out = lin("ffn.down", ff, lp["ffn.b_down"], h)
+    return layernorm(x + ff_out, lp["ln2.gamma"], lp["ln2.beta"])
+
+
+def encoder_sparse(params: dict, sparse: list, x, heads: int, block, interpret=True):
+    for lp, sp in zip(params["layers"], sparse):
+        x = encoder_layer_sparse(lp, sp, x, heads, block, interpret=interpret)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Flat parameter ordering for AOT interchange with Rust
+# --------------------------------------------------------------------------
+
+LAYER_PARAM_NAMES = [
+    "attn.wq", "attn.bq", "attn.wk", "attn.bk", "attn.wv", "attn.bv",
+    "attn.wo", "attn.bo", "ffn.up", "ffn.b_up", "ffn.down", "ffn.b_down",
+    "ln1.gamma", "ln1.beta", "ln2.gamma", "ln2.beta",
+]
+
+
+def flat_param_names(config: dict) -> list:
+    """Deterministic flat ordering of *encoder* parameters (embeddings are
+    applied host-side in Rust, so the AOT module takes embedded activations
+    plus these tensors)."""
+    names = []
+    for l in range(config["layers"]):
+        for n in LAYER_PARAM_NAMES:
+            names.append(f"layer{l}.{n}")
+    return names
+
+
+def flatten_params(params: dict) -> list:
+    out = []
+    for lp in params["layers"]:
+        for n in LAYER_PARAM_NAMES:
+            out.append(lp[n])
+    return out
+
+
+def unflatten_params(config: dict, flat: list) -> dict:
+    """Inverse of `flatten_params` (encoder part only)."""
+    per = len(LAYER_PARAM_NAMES)
+    layers = []
+    for l in range(config["layers"]):
+        chunk = flat[l * per : (l + 1) * per]
+        layers.append(dict(zip(LAYER_PARAM_NAMES, chunk)))
+    return {"layers": layers}
+
+
+def encoder_flat(config: dict, x, *flat_params):
+    """Encoder entry point with a flat signature — the function that is
+    AOT-lowered (jax.jit-friendly: every argument is an array)."""
+    params = unflatten_params(config, list(flat_params))
+    return (encoder(params, x, config["heads"]),)

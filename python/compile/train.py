@@ -1,0 +1,355 @@
+"""Table 2 pipeline: pre-train tiny BERT, sparsify, probe, report.
+
+Mirrors the paper's §2.3 protocol at laptop scale:
+
+1. **Pre-train** the tiny encoder (L=4, H=256, A=4) with MLM + NSP on the
+   synthetic corpus, Adam, jitted train step.
+2. **Sparsify**: group-magnitude projection (Eq. 2/3's ℓ0 form) at 1×32
+   blocks to 50% and 80%, followed by masked *retraining* (the mask is
+   re-applied after every step, the standard prune-retrain recipe) with a
+   group-lasso regularizer term pushing surviving blocks to stay
+   coherent.
+3. **Probe** the 9 synthetic GLUE/SQuAD tasks per variant.
+4. **Emit** `artifacts/table2.json` (rendered by `sparsebert table2`)
+   plus weight bundles for each variant (loadable by the Rust engines).
+
+Run via `make table2` (or `python -m compile.train --quick` for CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .data import SyntheticCorpus
+from .io_utils import params_to_bundle_tensors, save_bundle
+from .tasks import TASKS, evaluate_task
+
+BLOCK = (1, 32)
+PRUNABLE = ["attn.wq", "attn.wk", "attn.wv", "attn.wo", "ffn.up", "ffn.down"]
+
+
+# ---------------------------------------------------------------------------
+# Objective heads
+# ---------------------------------------------------------------------------
+
+def pretrain_loss(params, head, batch_tokens, batch_labels, nsp_tokens, nsp_labels, heads):
+    """MLM cross-entropy (ignore label -1) + NSP binary CE."""
+    def encode(tokens):
+        x = M.embed(params, tokens)
+        return M.encoder(params, x, heads)
+
+    enc = jax.vmap(encode)(batch_tokens)  # [B,T,H]
+    logits = enc @ head["mlm.w"].T + head["mlm.b"]  # [B,T,V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    labels = jnp.maximum(batch_labels, 0)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (batch_labels >= 0).astype(jnp.float32)
+    mlm = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+    enc2 = jax.vmap(encode)(nsp_tokens)[:, 0, :]  # [B,H] CLS
+    nsp_logits = enc2 @ head["nsp.w"].T + head["nsp.b"]  # [B,2]
+    nsp_logp = jax.nn.log_softmax(nsp_logits, axis=-1)
+    nsp = -jnp.take_along_axis(nsp_logp, nsp_labels[:, None], axis=-1).mean()
+    return mlm + nsp, (mlm, nsp)
+
+
+def group_lasso_penalty(params, block):
+    """Σ_blocks ‖w_b‖₂ over prunable matrices (Eq. 1 with Eq. 3 group
+    norm, ℓ2-within-group variant)."""
+    r, c = block
+    total = 0.0
+    for lp in params["layers"]:
+        for name in PRUNABLE:
+            w = lp[name]
+            o, i = w.shape
+            blocks = w.reshape(o // r, r, i // c, c)
+            norms = jnp.sqrt((blocks**2).sum(axis=(1, 3)) + 1e-12)
+            total = total + norms.sum()
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled; optax is not vendored)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(grads, state, params, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda x: x / (1 - b1**t), m)
+    vhat = jax.tree_util.tree_map(lambda x: x / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Pruning (numpy-side projections, mirroring rust/src/sparse/prune.rs)
+# ---------------------------------------------------------------------------
+
+def block_prune_mask(w: np.ndarray, sparsity: float, block) -> np.ndarray:
+    r, c = block
+    o, i = w.shape
+    scores = np.abs(w).reshape(o // r, r, i // c, c).sum(axis=(1, 3))
+    n_blocks = scores.size
+    keep = max(1, int(round((1 - sparsity) * n_blocks)))
+    flat = scores.reshape(-1)
+    thresh = np.partition(flat, n_blocks - keep)[n_blocks - keep]
+    mask_b = (flat >= thresh).reshape(scores.shape)
+    # exact-k correction for ties
+    if mask_b.sum() > keep:
+        excess = int(mask_b.sum() - keep)
+        tie_idx = np.argwhere((flat == thresh).reshape(scores.shape))
+        for j in range(excess):
+            mask_b[tuple(tie_idx[j])] = False
+    return np.repeat(np.repeat(mask_b, r, axis=0), c, axis=1).astype(np.float32)
+
+
+def prune_params(params, sparsity: float, block):
+    """Project prunable matrices; returns (pruned params, masks)."""
+    masks = []
+    new_layers = []
+    for lp in params["layers"]:
+        lm = {}
+        nl = dict(lp)
+        for name in PRUNABLE:
+            w = np.asarray(lp[name])
+            mask = block_prune_mask(w, sparsity, block)
+            lm[name] = jnp.asarray(mask)
+            nl[name] = jnp.asarray(w * mask)
+        masks.append(lm)
+        new_layers.append(nl)
+    return {**params, "layers": new_layers}, masks
+
+
+def apply_masks(params, masks):
+    new_layers = []
+    for lp, lm in zip(params["layers"], masks):
+        nl = dict(lp)
+        for name in PRUNABLE:
+            nl[name] = lp[name] * lm[name]
+        new_layers.append(nl)
+    return {**params, "layers": new_layers}
+
+
+def actual_sparsity(params) -> float:
+    zeros = total = 0
+    for lp in params["layers"]:
+        for name in PRUNABLE:
+            w = np.asarray(lp[name])
+            zeros += int((w == 0).sum())
+            total += w.size
+    return zeros / total
+
+
+# ---------------------------------------------------------------------------
+# Training driver
+# ---------------------------------------------------------------------------
+
+def train_variant(cfg, corpus, params, head, *, steps, masks, lam, batch, seq, lr, seed, log_every=50):
+    """Train (or retrain) for `steps`; masks (if any) re-applied each step."""
+    heads_n = cfg["heads"]
+    state_p = adam_init(params)
+    state_h = adam_init(head)
+
+    @jax.jit
+    def step_fn(params, head, sp, sh, bt, bl, nt, nl):
+        def loss_fn(params, head):
+            loss, aux = pretrain_loss(params, head, bt, bl, nt, nl, heads_n)
+            if lam > 0:
+                loss = loss + lam * group_lasso_penalty(params, BLOCK)
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+            params, head
+        )
+        params, sp = adam_update(grads[0], sp, params, lr)
+        head, sh = adam_update(grads[1], sh, head, lr)
+        return params, head, sp, sh, loss, aux
+
+    rng = np.random.default_rng(seed)
+    history = []
+    t0 = time.time()
+    for it in range(steps):
+        bt, bl = corpus.mlm_batch(batch, seq, rng)
+        nt, nl = corpus.nsp_batch(batch, seq, rng)
+        params, head, state_p, state_h, loss, (mlm, nsp) = step_fn(
+            params, head, state_p, state_h,
+            jnp.asarray(bt), jnp.asarray(bl), jnp.asarray(nt), jnp.asarray(nl),
+        )
+        if masks is not None:
+            params = apply_masks(params, masks)
+        if it % log_every == 0 or it == steps - 1:
+            history.append(
+                {"step": it, "loss": float(loss), "mlm": float(mlm), "nsp": float(nsp)}
+            )
+            print(
+                f"    step {it:4d}  loss {float(loss):.4f}  mlm {float(mlm):.4f} "
+                f"nsp {float(nsp):.4f}  ({time.time()-t0:.1f}s)"
+            )
+    return params, head, history
+
+
+def make_encode_fn(cfg, params, batch=64):
+    heads_n = cfg["heads"]
+
+    @jax.jit
+    def enc(tokens):
+        def one(t):
+            x = M.embed(params, t)
+            return M.encoder(params, x, heads_n)
+        return jax.vmap(one)(tokens)
+
+    def encode(tokens):
+        outs = []
+        for i in range(0, len(tokens), batch):
+            chunk = tokens[i : i + batch]
+            if len(chunk) < batch:  # pad to avoid re-jit
+                pad = np.repeat(chunk[-1:], batch - len(chunk), axis=0)
+                out = enc(jnp.asarray(np.concatenate([chunk, pad])))[: len(chunk)]
+            else:
+                out = enc(jnp.asarray(chunk))
+            outs.append(np.asarray(out))
+        return np.concatenate(outs)
+
+    return encode
+
+
+def probe_only(args, cfg, corpus):
+    """Reload `weights_tiny_{dense,sp50,sp80}` bundles and regenerate
+    table2.json (used after probe-harness changes — the expensive
+    pre-training is reused)."""
+    from .io_utils import bundle_tensors_to_params, load_bundle
+
+    rows = {}
+    for tag, label in [("dense", "Dense"), ("sp50", "50% Zeros"), ("sp80", "80% Zeros")]:
+        path = os.path.join(args.out, f"weights_tiny_{tag}")
+        tensors, _ = load_bundle(path)
+        params = jax.tree_util.tree_map(jnp.asarray, bundle_tensors_to_params(cfg, tensors))
+        encode = make_encode_fn(cfg, params)
+        rows[label] = {}
+        for task in TASKS:
+            score = evaluate_task(task, encode, corpus, seed=args.seed)
+            rows[label][task] = round(score, 1)
+            print(f"    {label:10s} {task:10s} {score:5.1f}")
+    report_path = os.path.join(args.out, "table2.json")
+    with open(report_path) as f:
+        report = json.load(f)
+    report["rows"] = rows
+    report["probe"] = "cls+meanpool"
+    with open(report_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print("table2.json updated (probe-only)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=600, help="pre-training steps")
+    ap.add_argument("--retrain-steps", type=int, default=250)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=48)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--lam", type=float, default=1e-5, help="group-lasso weight")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true", help="smoke-test scale")
+    ap.add_argument(
+        "--probe-only",
+        action="store_true",
+        help="skip training; re-probe the saved weight bundles and rewrite table2.json",
+    )
+    args = ap.parse_args()
+    if args.quick:
+        args.steps, args.retrain_steps = 40, 20
+
+    cfg = M.CONFIGS["tiny"]
+    corpus = SyntheticCorpus(cfg["vocab"], seed=args.seed)
+    if args.probe_only:
+        return probe_only(args, cfg, corpus)
+    rng = np.random.default_rng(args.seed)
+    params = M.init_params(cfg, seed=args.seed)
+    head = {
+        "mlm.w": jnp.asarray(rng.normal(0, 0.02, (cfg["vocab"], cfg["hidden"])).astype(np.float32)),
+        "mlm.b": jnp.zeros((cfg["vocab"],), jnp.float32),
+        "nsp.w": jnp.asarray(rng.normal(0, 0.02, (2, cfg["hidden"])).astype(np.float32)),
+        "nsp.b": jnp.zeros((2,), jnp.float32),
+    }
+
+    print(f"[1/4] pre-training dense tiny BERT ({args.steps} steps)")
+    params, head, hist_dense = train_variant(
+        cfg, corpus, params, head,
+        steps=args.steps, masks=None, lam=args.lam,
+        batch=args.batch, seq=args.seq, lr=args.lr, seed=args.seed + 1,
+    )
+
+    variants = {"Dense": (params, hist_dense)}
+    for ratio, label in [(0.5, "50% Zeros"), (0.8, "80% Zeros")]:
+        print(f"[2/4] sparsify to {label} (block {BLOCK[0]}x{BLOCK[1]}) + retrain")
+        pruned, masks = prune_params(params, ratio, BLOCK)
+        print(f"    achieved sparsity {actual_sparsity(pruned):.3f}")
+        retrained, _, hist = train_variant(
+            cfg, corpus, pruned, head,
+            steps=args.retrain_steps, masks=masks, lam=args.lam,
+            batch=args.batch, seq=args.seq, lr=args.lr * 0.5, seed=args.seed + 2,
+        )
+        variants[label] = (retrained, hist)
+
+    print("[3/4] probing 9 tasks per variant")
+    rows = {}
+    for label, (p, _) in variants.items():
+        encode = make_encode_fn(cfg, p)
+        rows[label] = {}
+        for task in TASKS:
+            score = evaluate_task(task, encode, corpus, seed=args.seed)
+            rows[label][task] = round(score, 1)
+            print(f"    {label:10s} {task:10s} {score:5.1f}")
+
+    print("[4/4] writing artifacts")
+    os.makedirs(args.out, exist_ok=True)
+    report = {
+        "experiment": "table2",
+        "config": cfg,
+        "block": list(BLOCK),
+        "steps": args.steps,
+        "retrain_steps": args.retrain_steps,
+        "seed": args.seed,
+        "columns": list(TASKS.keys()),
+        "rows": rows,
+        "loss_history": {k: v for k, (_, v) in [(k, (p, h)) for k, (p, h) in variants.items()]},
+    }
+    # fix: loss_history values
+    report["loss_history"] = {k: h for k, (_, h) in variants.items()}
+    with open(os.path.join(args.out, "table2.json"), "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    for label, (p, _) in variants.items():
+        tag = {"Dense": "dense", "50% Zeros": "sp50", "80% Zeros": "sp80"}[label]
+        tensors = params_to_bundle_tensors(cfg, jax.tree_util.tree_map(np.asarray, p))
+        save_bundle(
+            os.path.join(args.out, f"weights_tiny_{tag}"),
+            tensors,
+            meta={
+                "format": "sparsebert-weights-v1",
+                "config": json.dumps(cfg, sort_keys=True, separators=(",", ":")),
+                "variant": label,
+            },
+        )
+    print("table2.json + weight bundles written")
+
+
+if __name__ == "__main__":
+    main()

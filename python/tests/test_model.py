@@ -1,0 +1,119 @@
+"""L2 correctness: dense vs sparse encoder, op oracles, param plumbing."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.CONFIGS["micro"]
+
+
+def pruned_params(sparsity=0.6, block=(2, 4), seed=0):
+    params = M.init_params(CFG, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    sparse = []
+    for lp in params["layers"]:
+        sp = {}
+        for name in ["attn.wq", "attn.wk", "attn.wv", "attn.wo", "ffn.up", "ffn.down"]:
+            w = ref.prune_structured(np.asarray(lp[name]), sparsity, block, rng)
+            lp[name] = jnp.asarray(w)
+            sp[name] = tuple(map(jnp.asarray, ref.dense_to_bsr(w, block)))
+        sparse.append(sp)
+    return params, sparse
+
+
+def test_sparse_encoder_matches_dense():
+    block = (2, 4)
+    params, sparse = pruned_params(block=block)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(6, CFG["hidden"])).astype(np.float32))
+    y_dense = M.encoder(params, x, CFG["heads"])
+    y_sparse = M.encoder_sparse(params, sparse, x, CFG["heads"], block)
+    np.testing.assert_allclose(np.asarray(y_sparse), np.asarray(y_dense), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sparsity=st.floats(0.0, 0.9), seed=st.integers(0, 1000))
+def test_sparse_encoder_matches_dense_sweep(sparsity, seed):
+    block = (1, 4)
+    params, sparse = pruned_params(sparsity=sparsity, block=block, seed=seed)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, CFG["hidden"])).astype(np.float32))
+    y_dense = M.encoder(params, x, CFG["heads"])
+    y_sparse = M.encoder_sparse(params, sparse, x, CFG["heads"], block)
+    np.testing.assert_allclose(np.asarray(y_sparse), np.asarray(y_dense), rtol=2e-3, atol=2e-4)
+
+
+def test_layer_ops_match_refs():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(5, 8)).astype(np.float32))
+    gamma = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    beta = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(M.layernorm(x, gamma, beta)),
+        np.asarray(ref.layernorm_ref(x, gamma, beta)),
+        rtol=1e-5, atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(M.gelu(x)), np.asarray(ref.gelu_ref(x)), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_attention_matches_ref():
+    rng = np.random.default_rng(2)
+    t, h, heads = 7, 16, 4
+    q, k, v = (jnp.asarray(rng.normal(size=(t, h)).astype(np.float32)) for _ in range(3))
+    got = M.attention(q, k, v, heads)
+    want = ref.attention_ref(q, k, v, heads)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_flatten_unflatten_roundtrip():
+    params = M.init_params(CFG, seed=4)
+    flat = M.flatten_params(params)
+    names = M.flat_param_names(CFG)
+    assert len(flat) == len(names) == CFG["layers"] * 16
+    back = M.unflatten_params(CFG, flat)
+    for lp0, lp1 in zip(params["layers"], back["layers"]):
+        for k in lp0:
+            np.testing.assert_array_equal(np.asarray(lp0[k]), np.asarray(lp1[k]))
+
+
+def test_encoder_flat_matches_encoder():
+    params = M.init_params(CFG, seed=5)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(3, CFG["hidden"])).astype(np.float32))
+    (y_flat,) = M.encoder_flat(CFG, x, *M.flatten_params(params))
+    y = M.encoder(params, x, CFG["heads"])
+    np.testing.assert_allclose(np.asarray(y_flat), np.asarray(y), rtol=1e-6, atol=1e-7)
+
+
+def test_embed_shapes():
+    params = M.init_params(CFG, seed=6)
+    tokens = jnp.asarray(np.array([1, 5, 9], dtype=np.int32))
+    x = M.embed(params, tokens)
+    assert x.shape == (3, CFG["hidden"])
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+def test_bundle_params_roundtrip(tmp_path):
+    from compile.io_utils import (
+        bundle_tensors_to_params,
+        load_bundle,
+        params_to_bundle_tensors,
+        save_bundle,
+    )
+
+    params = M.init_params(CFG, seed=7)
+    tensors = params_to_bundle_tensors(CFG, params)
+    save_bundle(str(tmp_path / "b"), tensors, meta={"config": "x"})
+    loaded, meta = load_bundle(str(tmp_path / "b"))
+    assert meta["config"] == "x"
+    back = bundle_tensors_to_params(CFG, loaded)
+    np.testing.assert_array_equal(
+        np.asarray(params["layers"][0]["attn.wq"]),
+        back["layers"][0]["attn.wq"],
+    )

@@ -1,0 +1,100 @@
+//! Ablation A2: pattern cardinality vs block size (`cargo bench --bench
+//! ablation_patterns`) — the quantitative form of the paper's Discussion
+//! explanation for the non-monotonic curve, and the introspection tooling
+//! its follow-up #1 requests.
+//!
+//! For each block shape in the paper sweep, reports: stored blocks,
+//! distinct row patterns, row-reuse rate, run fusion (merged runs per
+//! row), and load imbalance — plus the same statistics under *independent*
+//! (pool=∞) pruning to show how much of the reuse comes from group-
+//! regularization-induced pattern replication.
+
+use sparsebert::model::config::BertConfig;
+use sparsebert::model::weights::{BertWeights, PruneMode, PruneSpec};
+use sparsebert::scheduler::{build_plan, PlanOptions};
+use sparsebert::sparse::pattern::PatternStats;
+use sparsebert::sparse::prune::BlockShape;
+use sparsebert::sparse::BsrMatrix;
+
+struct Agg {
+    nnzb: usize,
+    distinct: usize,
+    reuse: f64,
+    runs_per_row: f64,
+    imbalance: f64,
+}
+
+fn aggregate(w: &BertWeights, block: BlockShape) -> Agg {
+    let (mut nnzb, mut distinct, mut reuse, mut runs, mut rows) = (0usize, 0usize, 0.0, 0usize, 0usize);
+    let mut imbalance: f64 = 0.0;
+    let mut mats = 0usize;
+    for lw in &w.layers {
+        for (_, m) in lw.prunable() {
+            let bsr = BsrMatrix::from_dense(m, block).unwrap();
+            let stats = PatternStats::of(&bsr);
+            nnzb += bsr.nnz_blocks();
+            distinct += stats.distinct;
+            reuse += stats.reuse_rate;
+            imbalance = imbalance.max(stats.imbalance());
+            let plan = build_plan(&bsr, PlanOptions::tvm_plus());
+            runs += plan.rows.iter().map(|(p, _)| p.run_count()).sum::<usize>();
+            rows += plan.rows.len();
+            mats += 1;
+        }
+    }
+    Agg {
+        nnzb,
+        distinct,
+        reuse: reuse / mats as f64,
+        runs_per_row: runs as f64 / rows.max(1) as f64,
+        imbalance,
+    }
+}
+
+fn main() {
+    let mut cfg = BertConfig::base();
+    cfg.layers = 2;
+    println!("A2 pattern ablation: H={} I={} L={} sparsity=0.8", cfg.hidden, cfg.intermediate, cfg.layers);
+    println!(
+        "{:<10} | {:>8} {:>9} {:>7} {:>9} {:>9} | {:>9} {:>7}",
+        "block", "nnzb", "patterns", "reuse", "runs/row", "imbal", "pat-ind", "reuse-i"
+    );
+    for block in BlockShape::paper_sweep() {
+        // group-regularized (pool=16) — what the paper's training produces
+        let mut w = BertWeights::synthetic(&cfg, 42);
+        w.prune(
+            &PruneSpec {
+                mode: PruneMode::Structured { pool: 16 },
+                sparsity: 0.8,
+                block,
+            },
+            7,
+        );
+        let a = aggregate(&w, block);
+        // independent pruning (pool=∞) — no replication pressure
+        let mut wi = BertWeights::synthetic(&cfg, 42);
+        wi.prune(
+            &PruneSpec {
+                mode: PruneMode::Structured { pool: usize::MAX },
+                sparsity: 0.8,
+                block,
+            },
+            7,
+        );
+        let b = aggregate(&wi, block);
+        println!(
+            "{:<10} | {:>8} {:>9} {:>7.3} {:>9.2} {:>9.2} | {:>9} {:>7.3}",
+            block.to_string(),
+            a.nnzb,
+            a.distinct,
+            a.reuse,
+            a.runs_per_row,
+            a.imbalance,
+            b.distinct,
+            b.reuse,
+        );
+    }
+    println!("\nreading: 'patterns' should FALL as blocks grow (the paper's cardinality");
+    println!("argument), while 'reuse' under independent pruning stays near zero for");
+    println!("small blocks — replication comes from the group regularizer, not chance.");
+}

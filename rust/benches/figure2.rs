@@ -1,0 +1,23 @@
+//! `cargo bench --bench figure2` — regenerate Figure 2 (the structured-
+//! sparsity performance curve) and verify its two qualitative claims.
+
+use sparsebert::bench_harness::figure2::run_figure2;
+use sparsebert::bench_harness::Table1Config;
+
+fn main() {
+    let mut cfg = Table1Config::default();
+    cfg.eager_baselines = false; // figure 2 uses only the TVM+/Dense series
+    let fig = run_figure2(&cfg);
+    println!("{}", fig.ascii);
+    println!(
+        "best config: {} (ratio {:.3}); best-is-linear-block: {} (paper: true, 1x32)",
+        fig.best_label, fig.best_ratio, fig.best_is_linear
+    );
+    println!(
+        "non-monotone linear series: {} (paper: true — improves to a minimum, degrades by 1x384)",
+        fig.nonmonotone
+    );
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/figure2.csv", &fig.csv).expect("write csv");
+    eprintln!("wrote results/figure2.csv");
+}

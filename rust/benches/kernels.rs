@@ -1,0 +1,82 @@
+//! Microbenchmarks of the kernel layer (`cargo bench --bench kernels`) —
+//! the per-operator numbers that feed the §Perf iteration log:
+//! single-layer dense vs BSR spmm across block shapes, plus attention and
+//! layernorm, with achieved-GFLOP/s readouts for roofline comparison.
+
+use sparsebert::kernels::attention::multi_head_attention;
+use sparsebert::kernels::bsr_spmm::{bsr_linear, bsr_linear_planned};
+use sparsebert::kernels::dense_matmul::linear_dense_parallel;
+use sparsebert::kernels::ops::layernorm_fm;
+use sparsebert::scheduler::{build_plan, PlanOptions};
+use sparsebert::sparse::dense::Matrix;
+use sparsebert::sparse::prune::{prune_structured_replicated, BlockShape};
+use sparsebert::sparse::BsrMatrix;
+use sparsebert::util::bench::{measure, BenchConfig};
+use sparsebert::util::pool::default_threads;
+use sparsebert::util::rng::Rng;
+
+fn main() {
+    let bench = BenchConfig::from_env();
+    let threads = default_threads();
+    let (o, i, t) = (768usize, 768usize, 128usize);
+    let mut rng = Rng::new(3);
+    let x = Matrix::randn(i, t, 1.0, &mut rng);
+    let w_dense = Matrix::randn(o, i, 1.0, &mut rng);
+    let dense_flops = 2.0 * o as f64 * i as f64 * t as f64;
+
+    println!("kernel microbench: W[{o}x{i}] · X[{i}x{t}], threads={threads}");
+    let m = measure("dense", &bench, || {
+        std::hint::black_box(linear_dense_parallel(&w_dense, &x, None, threads));
+    });
+    println!(
+        "{:<24} {:>12}  {:>8.2} GFLOP/s",
+        "dense axpy",
+        m.summary.paper_cell_ms(),
+        dense_flops / (m.summary.mean / 1e3) / 1e9
+    );
+
+    for block in [
+        BlockShape::new(1, 1),
+        BlockShape::new(1, 8),
+        BlockShape::new(1, 32),
+        BlockShape::new(1, 128),
+        BlockShape::new(16, 16),
+        BlockShape::new(64, 64),
+    ] {
+        let mut w = w_dense.clone();
+        let mut prng = Rng::new(7);
+        prune_structured_replicated(&mut w, 0.8, block, 16, &mut prng);
+        let bsr = BsrMatrix::from_dense(&w, block).unwrap();
+        let plan = build_plan(&bsr, PlanOptions::tvm_plus());
+        let sparse_flops = 2.0 * bsr.stored_elems() as f64 * t as f64;
+        let md = measure(&format!("bsr-direct-{block}"), &bench, || {
+            std::hint::black_box(bsr_linear(&bsr, &x, None));
+        });
+        let mp = measure(&format!("bsr-planned-{block}"), &bench, || {
+            std::hint::black_box(bsr_linear_planned(&bsr, &plan, &x, None, threads));
+        });
+        println!(
+            "bsr {block:<8} direct {:>12}  planned {:>12}  {:>8.2} GFLOP/s  ({} runs/{} rows)",
+            md.summary.paper_cell_ms(),
+            mp.summary.paper_cell_ms(),
+            sparse_flops / (mp.summary.mean / 1e3) / 1e9,
+            plan.rows.iter().map(|(p, _)| p.run_count()).sum::<usize>(),
+            plan.rows.len(),
+        );
+    }
+
+    let q = Matrix::randn(o, t, 1.0, &mut rng);
+    let m = measure("attention", &bench, || {
+        std::hint::black_box(multi_head_attention(&q, &q, &q, 12, threads));
+    });
+    println!("{:<24} {:>12}", "attention (12 heads)", m.summary.paper_cell_ms());
+
+    let gamma = vec![1.0f32; o];
+    let beta = vec![0.0f32; o];
+    let m = measure("layernorm", &bench, || {
+        let mut y = q.clone();
+        layernorm_fm(&mut y, &gamma, &beta, 1e-5);
+        std::hint::black_box(y);
+    });
+    println!("{:<24} {:>12}", "layernorm(768x128)", m.summary.paper_cell_ms());
+}

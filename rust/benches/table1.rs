@@ -1,0 +1,63 @@
+//! `cargo bench --bench table1` — regenerate the paper's Table 1.
+//!
+//! Scale knobs (all env vars; defaults favor this single-core testbed):
+//!   SPARSEBERT_BENCH_FULL=1      L=12 paper geometry
+//!   SPARSEBERT_BENCH_QUICK=1     3 samples, 1 warmup
+//!   SPARSEBERT_BENCH_SAMPLES=n   override sample count
+//!
+//! Writes `results/table1.json` + prints the paper-layout table.
+
+use sparsebert::bench_harness::{report, run_table1, Table1Config};
+use sparsebert::scheduler::HwSpec;
+use sparsebert::util::json::Json;
+
+fn main() {
+    let cfg = Table1Config::default();
+    eprintln!(
+        "table1 bench: L={} seq={} sparsity={} samples={} on {}",
+        cfg.layers,
+        cfg.seq,
+        cfg.sparsity,
+        cfg.bench.samples,
+        HwSpec::detect()
+    );
+    let rows = run_table1(&cfg);
+    println!(
+        "{}",
+        report::render_table1(&rows, "Table 1 — inference times (this testbed)")
+    );
+    let best = report::argmin_config(&rows).expect("rows");
+    println!(
+        "optimal block: {} at TVM+/Dense = {:.3} (paper: 1x32 at 0.451)",
+        best.label, best.ratio_mean
+    );
+    println!(
+        "linear series non-monotone: {} (paper: true)",
+        report::linear_series_nonmonotone(&rows)
+    );
+    // paper headline claims, restated on this testbed:
+    let dense = &rows[0];
+    if let (Some(py), tvm_plus_best) = (&dense.pytorch, best.tvm_plus.summary.mean) {
+        println!(
+            "speedup vs eager-PyTorch baseline: {:.1}x (paper: ~4x)",
+            py.summary.mean / tvm_plus_best
+        );
+    }
+    println!(
+        "speedup vs standard-TVM on same pruned weights: {:.1}x (paper: ~2.2x)",
+        best.tvm.summary.mean / best.tvm_plus.summary.mean
+    );
+    std::fs::create_dir_all("results").ok();
+    let j = report::table1_json(
+        &rows,
+        &[
+            ("experiment", Json::Str("table1".into())),
+            ("layers", Json::Num(cfg.layers as f64)),
+            ("seq", Json::Num(cfg.seq as f64)),
+            ("sparsity", Json::Num(cfg.sparsity)),
+            ("hw", Json::Str(HwSpec::detect().to_string())),
+        ],
+    );
+    std::fs::write("results/table1.json", j.to_string_pretty()).expect("write results");
+    eprintln!("wrote results/table1.json");
+}

@@ -1,0 +1,70 @@
+//! Figure 2 regeneration: the structured-sparsity performance curve.
+//!
+//! Shares the Table 1 sweep (same measurements feed both artifacts, as in
+//! the paper) and emits the series as CSV + ASCII chart plus the two
+//! qualitative checks the paper's Results section makes:
+//!
+//! 1. the linear-block series is **non-monotonic** (improves to a
+//!    minimum, then degrades);
+//! 2. the optimal block is a **linear** block, not a square one.
+
+use super::report;
+use super::table1::{run_table1, Table1Config, Table1Row};
+
+/// Figure 2 output bundle.
+#[derive(Debug, Clone)]
+pub struct Figure2 {
+    pub rows: Vec<Table1Row>,
+    pub csv: String,
+    pub ascii: String,
+    pub best_label: String,
+    pub best_ratio: f64,
+    pub nonmonotone: bool,
+    pub best_is_linear: bool,
+}
+
+/// Run the sweep and assemble Figure 2.
+pub fn run_figure2(cfg: &Table1Config) -> Figure2 {
+    build_figure2(run_table1(cfg))
+}
+
+/// Assemble from pre-computed rows (lets the CLI reuse one sweep for both
+/// artifacts, exactly like the paper).
+pub fn build_figure2(rows: Vec<Table1Row>) -> Figure2 {
+    let best = report::argmin_config(&rows).expect("non-empty sweep");
+    let best_label = best.label.clone();
+    let best_ratio = best.ratio_mean;
+    let best_is_linear = best_label.starts_with("1x") && !best_label.contains("irregular");
+    let nonmonotone = report::linear_series_nonmonotone(&rows);
+    Figure2 {
+        csv: report::figure2_csv(&rows),
+        ascii: report::figure2_ascii(&rows),
+        best_label,
+        best_ratio,
+        nonmonotone,
+        best_is_linear,
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune::BlockShape;
+
+    #[test]
+    fn figure2_smoke() {
+        let mut cfg = Table1Config::smoke();
+        cfg.only_blocks = Some(vec![
+            BlockShape::new(1, 4),
+            BlockShape::new(1, 32),
+            BlockShape::new(16, 16),
+        ]);
+        cfg.eager_baselines = false;
+        let fig = run_figure2(&cfg);
+        assert_eq!(fig.rows.len(), 4);
+        assert!(fig.csv.contains("1x32"));
+        assert!(fig.ascii.contains("Dense"));
+        assert!(fig.best_ratio > 0.0 && fig.best_ratio < 1.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Benchmark harness regenerating every table and figure in the paper's
+//! evaluation section (DESIGN.md §4 experiment index):
+//!
+//! * [`table1`] — Table 1: inference ms across {PyTorch, TensorFlow,
+//!   TVM, TVM⁺} × {dense, irregular 1×1, 8 linear, 5 square} at 80%
+//!   sparsity, plus the TVM⁺/Dense ratio column;
+//! * [`figure2`] — Figure 2: the same sweep as a series (CSV + ASCII
+//!   plot), with non-monotonicity and argmin checks;
+//! * [`report`] — paper-style rendering + JSON export.
+//!
+//! Geometry: the full paper setting is BERT_BASE (L=12) at seq 128. On
+//! this testbed (single core) the default harness uses the same H=768 /
+//! 3072 *tensor shapes* with fewer layers — every ratio in Table 1 is
+//! layer-count-invariant because each layer repeats the same six
+//! projections. `--layers 12` (or `SPARSEBERT_BENCH_FULL=1`) restores the
+//! paper's exact geometry.
+
+pub mod figure2;
+pub mod report;
+pub mod table1;
+
+pub use table1::{run_table1, Table1Config, Table1Row};

@@ -1,0 +1,207 @@
+//! Rendering: paper-style text tables, CSV, and JSON exports.
+
+use super::table1::Table1Row;
+use crate::util::json::Json;
+
+/// Render Table 1 in the paper's layout.
+pub fn render_table1(rows: &[Table1Row], title: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<16} {:>12} {:>13} {:>14} {:>15} {:>16}\n",
+        "ℓ1 block size", "PyTorch ms", "Tensorflow ms", "TVM ms (std)", "TVM+ ms (std)", "TVM+/Dense (std)"
+    ));
+    for r in rows {
+        let py = r
+            .pytorch
+            .as_ref()
+            .map(|m| format!("{:.0}", m.summary.mean))
+            .unwrap_or_default();
+        let tf = r
+            .tensorflow
+            .as_ref()
+            .map(|m| format!("{:.0}", m.summary.mean))
+            .unwrap_or_default();
+        out.push_str(&format!(
+            "{:<16} {:>12} {:>13} {:>14} {:>15} {:>16}\n",
+            r.label,
+            py,
+            tf,
+            r.tvm.summary.paper_cell_ms(),
+            r.tvm_plus.summary.paper_cell_ms(),
+            format!("{:.3} ({:.3})", r.ratio_mean, r.ratio_std),
+        ));
+    }
+    out
+}
+
+/// JSON export (consumed by EXPERIMENTS.md tooling and regression
+/// comparisons).
+pub fn table1_json(rows: &[Table1Row], meta: &[(&str, Json)]) -> Json {
+    let mut root = Json::obj();
+    for (k, v) in meta {
+        root.set(k, v.clone());
+    }
+    let mut arr = Vec::new();
+    for r in rows {
+        let mut j = Json::obj();
+        j.set("label", r.label.as_str())
+            .set("tvm_ms", r.tvm.summary.mean)
+            .set("tvm_std", r.tvm.summary.std)
+            .set("tvm_plus_ms", r.tvm_plus.summary.mean)
+            .set("tvm_plus_std", r.tvm_plus.summary.std)
+            .set("ratio", r.ratio_mean)
+            .set("ratio_std", r.ratio_std)
+            .set("row_reuse", r.row_reuse);
+        if let Some(m) = &r.pytorch {
+            j.set("pytorch_ms", m.summary.mean);
+        }
+        if let Some(m) = &r.tensorflow {
+            j.set("tensorflow_ms", m.summary.mean);
+        }
+        arr.push(j);
+    }
+    root.set("rows", Json::Arr(arr));
+    root
+}
+
+/// CSV series for Figure 2 (config label, ratio, std).
+pub fn figure2_csv(rows: &[Table1Row]) -> String {
+    let mut out = String::from("config,tvm_plus_ms,ratio,ratio_std,row_reuse\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{:.3},{:.4},{:.4},{:.4}\n",
+            r.label, r.tvm_plus.summary.mean, r.ratio_mean, r.ratio_std, r.row_reuse
+        ));
+    }
+    out
+}
+
+/// ASCII bar chart of TVM⁺/Dense per configuration (Figure 2 analog).
+pub fn figure2_ascii(rows: &[Table1Row]) -> String {
+    let width = 50usize;
+    let max_ratio = rows
+        .iter()
+        .map(|r| r.ratio_mean)
+        .fold(0.0f64, f64::max)
+        .max(1.0);
+    let mut out = String::new();
+    out.push_str("TVM+/Dense by block configuration (lower = faster)\n");
+    for r in rows {
+        let bar = ((r.ratio_mean / max_ratio) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:<16} {:>6.3} |{}\n",
+            r.label,
+            r.ratio_mean,
+            "█".repeat(bar.max(1))
+        ));
+    }
+    out
+}
+
+/// Find the best (lowest-ratio) sparse config — the paper's headline
+/// "optimal block shape" result.
+pub fn argmin_config(rows: &[Table1Row]) -> Option<&Table1Row> {
+    rows.iter()
+        .filter(|r| r.label != "Dense")
+        .min_by(|a, b| a.ratio_mean.partial_cmp(&b.ratio_mean).unwrap())
+}
+
+/// Check the paper's non-monotonicity claim on the linear-block series:
+/// ratio decreases from 1×1 into a minimum and increases again by 1×384.
+pub fn linear_series_nonmonotone(rows: &[Table1Row]) -> bool {
+    let linear: Vec<&Table1Row> = rows
+        .iter()
+        .filter(|r| r.label.starts_with("1x") && !r.label.contains("irregular"))
+        .collect();
+    if linear.len() < 3 {
+        return false;
+    }
+    let first = linear.first().unwrap().ratio_mean;
+    let last = linear.last().unwrap().ratio_mean;
+    let min = linear
+        .iter()
+        .map(|r| r.ratio_mean)
+        .fold(f64::INFINITY, f64::min);
+    min < first - 0.02 && min < last - 0.02
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::{measure_custom, BenchConfig};
+
+    fn fake_row(label: &str, tvm: f64, tvm_plus: f64, denom: f64) -> Table1Row {
+        let cfg = BenchConfig {
+            samples: 3,
+            warmup: 0,
+            max_seconds: 10.0,
+        };
+        Table1Row {
+            label: label.to_string(),
+            pytorch: None,
+            tensorflow: None,
+            tvm: measure_custom("t", &cfg, || tvm),
+            tvm_plus: measure_custom("tp", &cfg, || tvm_plus),
+            ratio_mean: tvm_plus / denom,
+            ratio_std: 0.001,
+            row_reuse: 0.5,
+        }
+    }
+
+    fn fake_rows() -> Vec<Table1Row> {
+        let d = 772.0;
+        vec![
+            fake_row("Dense", 764.0, 772.0, d),
+            fake_row("1x1 (irregular)", 759.0, 754.0, d),
+            fake_row("1x4", 756.0, 583.0, d),
+            fake_row("1x32", 795.0, 348.0, d),
+            fake_row("1x384", 779.0, 576.0, d),
+            fake_row("16x16", 768.0, 417.0, d),
+        ]
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let rows = fake_rows();
+        let text = render_table1(&rows, "t1");
+        for r in &rows {
+            assert!(text.contains(&r.label), "{text}");
+        }
+        assert!(text.contains("0.451"), "{text}");
+    }
+
+    #[test]
+    fn csv_and_json_parse() {
+        let rows = fake_rows();
+        let csv = figure2_csv(&rows);
+        assert_eq!(csv.lines().count(), rows.len() + 1);
+        let j = table1_json(&rows, &[("sparsity", Json::Num(0.8))]);
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), rows.len());
+    }
+
+    #[test]
+    fn argmin_and_nonmonotone_on_paper_shape() {
+        let rows = fake_rows();
+        assert_eq!(argmin_config(&rows).unwrap().label, "1x32");
+        assert!(linear_series_nonmonotone(&rows));
+        // monotone series → false
+        let d = 700.0;
+        let mono = vec![
+            fake_row("1x4", 700.0, 600.0, d),
+            fake_row("1x8", 700.0, 500.0, d),
+            fake_row("1x16", 700.0, 400.0, d),
+        ];
+        assert!(!linear_series_nonmonotone(&mono));
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let rows = fake_rows();
+        let chart = figure2_ascii(&rows);
+        assert!(chart.contains("1x32"));
+        assert!(chart.lines().count() >= rows.len());
+    }
+}

@@ -1,0 +1,160 @@
+//! Dynamic batching: size-or-deadline accumulation.
+//!
+//! A batch closes when it reaches `max_batch` requests OR the oldest
+//! member has waited `max_wait`. The window trades tail latency for
+//! throughput (larger batches amortize dispatch and parallelize across
+//! the worker pool); ablation A3 sweeps it.
+
+use super::request::InferenceRequest;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// No batching: every request is its own batch (latency-optimal
+    /// baseline for A3).
+    pub fn immediate() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        }
+    }
+}
+
+/// Pull-based batcher over an mpsc receiver of requests. The worker loop
+/// calls [`Batcher::next_batch`], which blocks until it can return a
+/// non-empty batch, or `None` once the channel is closed and drained.
+pub struct Batcher {
+    rx: mpsc::Receiver<InferenceRequest>,
+    policy: BatchPolicy,
+    /// Request carried over after a size-limited batch closed.
+    pending: Option<InferenceRequest>,
+}
+
+impl Batcher {
+    pub fn new(rx: mpsc::Receiver<InferenceRequest>, policy: BatchPolicy) -> Batcher {
+        Batcher {
+            rx,
+            policy,
+            pending: None,
+        }
+    }
+
+    pub fn next_batch(&mut self) -> Option<Vec<InferenceRequest>> {
+        let mut batch = Vec::with_capacity(self.policy.max_batch);
+        if let Some(first) = self.pending.take() {
+            batch.push(first);
+        } else {
+            match self.rx.recv() {
+                Ok(req) => batch.push(req),
+                Err(_) => return None, // closed and drained
+            }
+        }
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest::new(id, vec![1, 2, 3], "x")
+    }
+
+    #[test]
+    fn batches_up_to_size() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let mut b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(50),
+            },
+        );
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2[0].id, 4);
+        drop(tx);
+        assert_eq!(b.next_batch().unwrap().len(), 2); // 8,9
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn deadline_closes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1)).unwrap();
+        let mut b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(5),
+            },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+        drop(tx);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn immediate_policy_single_batches() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..3 {
+            tx.send(req(i)).unwrap();
+        }
+        drop(tx);
+        let mut b = Batcher::new(rx, BatchPolicy::immediate());
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn blocks_until_first_request() {
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            let mut b = Batcher::new(rx, BatchPolicy::default());
+            b.next_batch()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        tx.send(req(42)).unwrap();
+        let batch = handle.join().unwrap().unwrap();
+        assert_eq!(batch[0].id, 42);
+    }
+}

@@ -1,0 +1,167 @@
+//! Serving metrics: per-variant latency histograms and throughput
+//! counters, exported as JSON for `sparsebert serve --stats` and the
+//! examples' reports.
+
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug, Default)]
+struct VariantMetrics {
+    total: LatencyHistogram,
+    queue: LatencyHistogram,
+    compute: LatencyHistogram,
+    requests: u64,
+    batches: u64,
+    batched_requests: u64,
+}
+
+/// Thread-safe metrics registry.
+pub struct Metrics {
+    started: Instant,
+    variants: Mutex<BTreeMap<String, VariantMetrics>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            variants: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn record(
+        &self,
+        variant: &str,
+        total_us: u64,
+        queue_us: u64,
+        compute_us: u64,
+    ) {
+        let mut m = self.variants.lock().expect("metrics poisoned");
+        let v = m.entry(variant.to_string()).or_default();
+        v.total.record_us(total_us as f64);
+        v.queue.record_us(queue_us as f64);
+        v.compute.record_us(compute_us as f64);
+        v.requests += 1;
+    }
+
+    pub fn record_batch(&self, variant: &str, size: usize) {
+        let mut m = self.variants.lock().expect("metrics poisoned");
+        let v = m.entry(variant.to_string()).or_default();
+        v.batches += 1;
+        v.batched_requests += size as u64;
+    }
+
+    /// Requests per second since startup, per variant.
+    pub fn throughput_rps(&self, variant: &str) -> f64 {
+        let m = self.variants.lock().expect("metrics poisoned");
+        let elapsed = self.started.elapsed().as_secs_f64();
+        m.get(variant)
+            .map(|v| v.requests as f64 / elapsed.max(1e-9))
+            .unwrap_or(0.0)
+    }
+
+    pub fn requests(&self, variant: &str) -> u64 {
+        let m = self.variants.lock().expect("metrics poisoned");
+        m.get(variant).map(|v| v.requests).unwrap_or(0)
+    }
+
+    pub fn mean_batch_size(&self, variant: &str) -> f64 {
+        let m = self.variants.lock().expect("metrics poisoned");
+        m.get(variant)
+            .map(|v| {
+                if v.batches == 0 {
+                    0.0
+                } else {
+                    v.batched_requests as f64 / v.batches as f64
+                }
+            })
+            .unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let m = self.variants.lock().expect("metrics poisoned");
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let mut root = Json::obj();
+        root.set("uptime_seconds", elapsed);
+        let mut variants = Json::obj();
+        for (name, v) in m.iter() {
+            let mut j = Json::obj();
+            j.set("requests", v.requests)
+                .set("batches", v.batches)
+                .set(
+                    "mean_batch",
+                    if v.batches == 0 {
+                        0.0
+                    } else {
+                        v.batched_requests as f64 / v.batches as f64
+                    },
+                )
+                .set("throughput_rps", v.requests as f64 / elapsed.max(1e-9))
+                .set("latency_p50_us", v.total.percentile_us(50.0))
+                .set("latency_p95_us", v.total.percentile_us(95.0))
+                .set("latency_p99_us", v.total.percentile_us(99.0))
+                .set("latency_mean_us", v.total.mean_us())
+                .set("queue_p95_us", v.queue.percentile_us(95.0))
+                .set("compute_p50_us", v.compute.percentile_us(50.0));
+            variants.set(name, j);
+        }
+        root.set("variants", variants);
+        root
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_export() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.record("tvm+", 1000 + i * 10, 100, 900 + i * 10);
+        }
+        m.record_batch("tvm+", 4);
+        m.record_batch("tvm+", 8);
+        assert_eq!(m.requests("tvm+"), 100);
+        assert!((m.mean_batch_size("tvm+") - 6.0).abs() < 1e-9);
+        assert!(m.throughput_rps("tvm+") > 0.0);
+        let j = m.to_json();
+        let v = j.at(&["variants", "tvm+"]).unwrap();
+        assert_eq!(v.get("requests").unwrap().as_f64(), Some(100.0));
+        let p50 = v.get("latency_p50_us").unwrap().as_f64().unwrap();
+        let p99 = v.get("latency_p99_us").unwrap().as_f64().unwrap();
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn unknown_variant_zeroes() {
+        let m = Metrics::new();
+        assert_eq!(m.requests("nope"), 0);
+        assert_eq!(m.throughput_rps("nope"), 0.0);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = std::sync::Arc::clone(&m);
+                s.spawn(move || {
+                    for _ in 0..500 {
+                        m.record("x", 100, 10, 90);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.requests("x"), 4000);
+    }
+}

@@ -1,0 +1,32 @@
+//! The serving coordinator — L3's request path.
+//!
+//! Architecture (vLLM-router-like, scaled to this system's needs):
+//!
+//! ```text
+//!  clients ──submit()──► Router ──► DynamicBatcher ──► EnginePool workers
+//!     ▲                    │   (per engine variant)         │
+//!     └──── oneshot reply ◄┴──────────── Metrics ◄──────────┘
+//! ```
+//!
+//! * [`request`] — request/response types and synthetic workload traces;
+//! * [`batcher`] — size-or-deadline dynamic batching (the A3 ablation
+//!   sweeps the window);
+//! * [`pool`] — per-variant worker threads executing an
+//!   [`crate::model::Engine`];
+//! * [`router`] — variant registry + dispatch;
+//! * [`metrics`] — latency histograms / throughput counters, JSON export;
+//! * [`server`] — the blocking TCP front-end (JSON-lines protocol) used
+//!   by `sparsebert serve`.
+//!
+//! Python never appears here: engines are native Rust or PJRT executions
+//! of AOT artifacts.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pool;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use request::{InferenceRequest, InferenceResponse, WorkloadTrace};
+pub use router::Router;

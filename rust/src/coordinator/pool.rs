@@ -1,0 +1,256 @@
+//! Per-variant execution pool: a batcher thread feeding engine workers.
+//!
+//! One `VariantPool` per registered engine. Its dispatcher thread pulls
+//! batches from the [`Batcher`]; batch members execute concurrently on
+//! the pool's worker threads (each worker runs `Engine::forward` on one
+//! sequence — sequence-level parallelism complements each engine's
+//! internal row-band threading, which is tuned to stay below core count).
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::request::{InferenceRequest, InferenceResponse};
+use crate::model::engine::Engine;
+use crate::model::weights::BertWeights;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Reply channel plumbed through with each request.
+pub type ReplyTx = mpsc::Sender<InferenceResponse>;
+
+struct Job {
+    request: InferenceRequest,
+    reply: ReplyTx,
+}
+
+/// Handle for submitting to one engine variant.
+pub struct VariantPool {
+    pub name: String,
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    accepting: AtomicBool,
+}
+
+impl VariantPool {
+    /// Spawn the dispatcher for `engine`. `workers` = concurrent
+    /// sequences per batch.
+    pub fn start(
+        name: &str,
+        engine: Arc<dyn Engine>,
+        weights: Arc<BertWeights>,
+        policy: BatchPolicy,
+        workers: usize,
+        metrics: Arc<Metrics>,
+    ) -> Arc<VariantPool> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let vname = name.to_string();
+        let dispatcher = std::thread::Builder::new()
+            .name(format!("dispatch-{name}"))
+            .spawn(move || {
+                dispatch_loop(vname, engine, weights, rx, policy, workers, metrics)
+            })
+            .expect("spawn dispatcher");
+        Arc::new(VariantPool {
+            name: name.to_string(),
+            tx: Mutex::new(Some(tx)),
+            dispatcher: Mutex::new(Some(dispatcher)),
+            accepting: AtomicBool::new(true),
+        })
+    }
+
+    /// Submit a request; the response arrives on `reply`.
+    pub fn submit(&self, request: InferenceRequest, reply: ReplyTx) -> bool {
+        if !self.accepting.load(Ordering::Acquire) {
+            return false;
+        }
+        let guard = self.tx.lock().expect("pool tx poisoned");
+        match guard.as_ref() {
+            Some(tx) => tx.send(Job { request, reply }).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Stop accepting, drain, and join the dispatcher.
+    pub fn shutdown(&self) {
+        self.accepting.store(false, Ordering::Release);
+        self.tx.lock().expect("pool tx poisoned").take();
+        if let Some(t) = self.dispatcher.lock().expect("dispatcher poisoned").take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for VariantPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn dispatch_loop(
+    variant: String,
+    engine: Arc<dyn Engine>,
+    weights: Arc<BertWeights>,
+    rx: mpsc::Receiver<Job>,
+    policy: BatchPolicy,
+    workers: usize,
+    metrics: Arc<Metrics>,
+) {
+    // Adapter: mpsc<Job> → mpsc<InferenceRequest> for the Batcher, with a
+    // side map id → reply channel. Ids are unique per coordinator.
+    let (breq_tx, breq_rx) = mpsc::channel::<InferenceRequest>();
+    let replies: Arc<Mutex<std::collections::HashMap<u64, ReplyTx>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    {
+        let replies = Arc::clone(&replies);
+        std::thread::Builder::new()
+            .name(format!("intake-{variant}"))
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    replies
+                        .lock()
+                        .expect("replies poisoned")
+                        .insert(job.request.id, job.reply);
+                    if breq_tx.send(job.request).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn intake");
+    }
+    let mut batcher = Batcher::new(breq_rx, policy);
+    while let Some(batch) = batcher.next_batch() {
+        let picked_up = Instant::now();
+        let size = batch.len();
+        metrics.record_batch(&variant, size);
+        let workers_now = workers.max(1).min(size);
+        std::thread::scope(|scope| {
+            let batch_ref = &batch;
+            let engine = &engine;
+            let weights = &weights;
+            let metrics = &metrics;
+            let replies = &replies;
+            let variant = &variant;
+            let chunk = size.div_ceil(workers_now);
+            for w in 0..workers_now {
+                let lo = w * chunk;
+                let hi = ((w + 1) * chunk).min(size);
+                if lo >= hi {
+                    break;
+                }
+                scope.spawn(move || {
+                    for req in &batch_ref[lo..hi] {
+                        let t0 = Instant::now();
+                        let x = weights.embed(&req.tokens);
+                        let y = engine.forward(&x);
+                        let compute_us = t0.elapsed().as_micros() as u64;
+                        let queue_us =
+                            picked_up.duration_since(req.enqueued).as_micros() as u64;
+                        let total_us = req.enqueued.elapsed().as_micros() as u64;
+                        metrics.record(variant, total_us, queue_us, compute_us);
+                        let reply = replies
+                            .lock()
+                            .expect("replies poisoned")
+                            .remove(&req.id);
+                        if let Some(tx) = reply {
+                            let _ = tx.send(InferenceResponse {
+                                id: req.id,
+                                cls: y.row(0).to_vec(),
+                                queue_us,
+                                compute_us,
+                                total_us,
+                                batch_size: size,
+                            });
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::bert::CompiledDenseEngine;
+    use crate::model::config::BertConfig;
+
+    fn setup() -> (Arc<dyn Engine>, Arc<BertWeights>) {
+        let cfg = BertConfig::micro();
+        let w = Arc::new(BertWeights::synthetic(&cfg, 51));
+        let e: Arc<dyn Engine> = Arc::new(CompiledDenseEngine::new(Arc::clone(&w), 1));
+        (e, w)
+    }
+
+    #[test]
+    fn pool_processes_requests() {
+        let (engine, weights) = setup();
+        let metrics = Arc::new(Metrics::new());
+        let pool = VariantPool::start(
+            "test",
+            engine,
+            weights,
+            BatchPolicy::default(),
+            2,
+            Arc::clone(&metrics),
+        );
+        let (rtx, rrx) = mpsc::channel();
+        for i in 0..20 {
+            assert!(pool.submit(
+                InferenceRequest::new(i, vec![1, 2, 3, 4], "test"),
+                rtx.clone()
+            ));
+        }
+        let mut got = Vec::new();
+        for _ in 0..20 {
+            let resp = rrx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+            assert!(!resp.cls.is_empty());
+            assert!(resp.total_us >= resp.compute_us);
+            got.push(resp.id);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+        assert_eq!(metrics.requests("test"), 20);
+        assert!(metrics.mean_batch_size("test") >= 1.0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn responses_deterministic_across_batching() {
+        let (engine, weights) = setup();
+        let metrics = Arc::new(Metrics::new());
+        // run the same tokens through two differently-batched pools
+        let mut answers = Vec::new();
+        for policy in [BatchPolicy::immediate(), BatchPolicy::default()] {
+            let pool = VariantPool::start(
+                "d",
+                Arc::clone(&engine),
+                Arc::clone(&weights),
+                policy,
+                3,
+                Arc::clone(&metrics),
+            );
+            let (rtx, rrx) = mpsc::channel();
+            pool.submit(InferenceRequest::new(7, vec![5, 6, 7], "d"), rtx);
+            let resp = rrx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+            answers.push(resp.cls);
+            pool.shutdown();
+        }
+        assert_eq!(answers[0], answers[1]);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let (engine, weights) = setup();
+        let pool = VariantPool::start(
+            "s",
+            engine,
+            weights,
+            BatchPolicy::immediate(),
+            1,
+            Arc::new(Metrics::new()),
+        );
+        pool.shutdown();
+        let (rtx, _rrx) = mpsc::channel();
+        assert!(!pool.submit(InferenceRequest::new(1, vec![1], "s"), rtx));
+    }
+}

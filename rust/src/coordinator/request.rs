@@ -1,0 +1,125 @@
+//! Request/response types and synthetic workload traces.
+
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// A single inference request: a token sequence bound for an engine
+/// variant.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Engine variant name as registered with the router ("tvm+", …).
+    pub variant: String,
+    pub enqueued: Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(id: u64, tokens: Vec<u32>, variant: &str) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            tokens,
+            variant: variant.to_string(),
+            enqueued: Instant::now(),
+        }
+    }
+}
+
+/// The reply: the CLS-position hidden vector (what classification heads
+/// consume) plus timing breakdown.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub cls: Vec<f32>,
+    /// Time spent queued before a worker picked the batch up.
+    pub queue_us: u64,
+    /// Pure engine execution time.
+    pub compute_us: u64,
+    /// End-to-end (enqueue → reply).
+    pub total_us: u64,
+    /// Batch size this request was executed in.
+    pub batch_size: usize,
+}
+
+/// A synthetic request trace for benches and the serving example:
+/// Poisson-ish arrivals (exponential gaps) of fixed-length sequences.
+#[derive(Debug, Clone)]
+pub struct WorkloadTrace {
+    /// (arrival offset in µs, token sequence) pairs, sorted by offset.
+    pub arrivals: Vec<(u64, Vec<u32>)>,
+    pub seq_len: usize,
+}
+
+impl WorkloadTrace {
+    /// `rate_rps` mean arrival rate; `n` requests; tokens uniform over
+    /// the vocab (embedding lookup cost is insensitive to token ids).
+    pub fn poisson(n: usize, rate_rps: f64, seq_len: usize, vocab: usize, seed: u64) -> Self {
+        assert!(rate_rps > 0.0);
+        let mut rng = Rng::new(seed);
+        let mut t_us = 0u64;
+        let mut arrivals = Vec::with_capacity(n);
+        for _ in 0..n {
+            // exponential inter-arrival via inverse CDF
+            let u = rng.f64().max(1e-12);
+            let gap = (-u.ln() / rate_rps * 1e6) as u64;
+            t_us += gap;
+            let tokens: Vec<u32> = (0..seq_len).map(|_| rng.range(10, vocab) as u32).collect();
+            arrivals.push((t_us, tokens));
+        }
+        WorkloadTrace { arrivals, seq_len }
+    }
+
+    /// Closed-loop trace: all requests available immediately (throughput
+    /// measurement mode).
+    pub fn burst(n: usize, seq_len: usize, vocab: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let arrivals = (0..n)
+            .map(|_| {
+                let tokens: Vec<u32> =
+                    (0..seq_len).map(|_| rng.range(10, vocab) as u32).collect();
+                (0u64, tokens)
+            })
+            .collect();
+        WorkloadTrace { arrivals, seq_len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_sorted_and_rate_sane() {
+        let tr = WorkloadTrace::poisson(500, 100.0, 16, 1000, 1);
+        assert_eq!(tr.len(), 500);
+        for w in tr.arrivals.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+        // mean gap ≈ 10_000us → total ≈ 5s ± wide margin
+        let total = tr.arrivals.last().unwrap().0;
+        assert!((1_000_000..20_000_000).contains(&total), "{total}");
+        assert!(tr.arrivals.iter().all(|(_, t)| t.len() == 16));
+    }
+
+    #[test]
+    fn burst_trace_all_at_zero() {
+        let tr = WorkloadTrace::burst(10, 8, 100, 2);
+        assert!(tr.arrivals.iter().all(|(at, _)| *at == 0));
+        assert!(tr.arrivals.iter().all(|(_, t)| t.iter().all(|&x| (10..100).contains(&(x as usize)))));
+    }
+
+    #[test]
+    fn traces_deterministic_by_seed() {
+        let a = WorkloadTrace::poisson(20, 50.0, 8, 512, 7);
+        let b = WorkloadTrace::poisson(20, 50.0, 8, 512, 7);
+        assert_eq!(a.arrivals, b.arrivals);
+    }
+}

@@ -1,0 +1,207 @@
+//! Router: engine-variant registry + request dispatch + workload driver.
+//!
+//! The router is what `sparsebert serve` and the benches talk to. It owns
+//! one [`VariantPool`] per registered engine, a shared [`Metrics`]
+//! registry, and a monotone request-id source.
+
+use super::batcher::BatchPolicy;
+use super::metrics::Metrics;
+use super::pool::VariantPool;
+use super::request::{InferenceRequest, InferenceResponse, WorkloadTrace};
+use crate::model::engine::Engine;
+use crate::model::weights::BertWeights;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+pub struct Router {
+    pools: BTreeMap<String, Arc<VariantPool>>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+/// Result of replaying a workload trace ([`Router::run_trace`]).
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub variant: String,
+    pub requests: usize,
+    pub wall_seconds: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch: f64,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router {
+            pools: BTreeMap::new(),
+            metrics: Arc::new(Metrics::new()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Register an engine under `name` with its batching policy.
+    pub fn register(
+        &mut self,
+        name: &str,
+        engine: Arc<dyn Engine>,
+        weights: Arc<BertWeights>,
+        policy: BatchPolicy,
+        workers: usize,
+    ) {
+        let pool = VariantPool::start(
+            name,
+            engine,
+            weights,
+            policy,
+            workers,
+            Arc::clone(&self.metrics),
+        );
+        self.pools.insert(name.to_string(), pool);
+    }
+
+    pub fn variants(&self) -> Vec<String> {
+        self.pools.keys().cloned().collect()
+    }
+
+    /// Submit asynchronously; the response arrives on the returned
+    /// receiver.
+    pub fn submit(
+        &self,
+        variant: &str,
+        tokens: Vec<u32>,
+    ) -> Result<mpsc::Receiver<InferenceResponse>> {
+        let pool = match self.pools.get(variant) {
+            Some(p) => p,
+            None => bail!(
+                "unknown variant '{variant}' (registered: {:?})",
+                self.variants()
+            ),
+        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        if !pool.submit(InferenceRequest::new(id, tokens, variant), tx) {
+            bail!("variant '{variant}' is shut down");
+        }
+        Ok(rx)
+    }
+
+    /// Blocking convenience call.
+    pub fn infer(&self, variant: &str, tokens: Vec<u32>) -> Result<InferenceResponse> {
+        let rx = self.submit(variant, tokens)?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("variant '{variant}' dropped the request"))
+    }
+
+    /// Replay a workload trace against one variant (open-loop: arrivals
+    /// follow the trace clock) and report latency/throughput.
+    pub fn run_trace(&self, variant: &str, trace: &WorkloadTrace) -> Result<TraceReport> {
+        if !self.pools.contains_key(variant) {
+            bail!("unknown variant '{variant}'");
+        }
+        let started = Instant::now();
+        let mut rxs = Vec::with_capacity(trace.len());
+        for (at_us, tokens) in &trace.arrivals {
+            let target = Duration::from_micros(*at_us);
+            let now = started.elapsed();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            rxs.push(self.submit(variant, tokens.clone())?);
+        }
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            let resp = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("response channel closed"))?;
+            lat_ms.push(resp.total_us as f64 / 1e3);
+        }
+        let wall = started.elapsed().as_secs_f64();
+        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        use crate::util::stats::percentile_sorted;
+        Ok(TraceReport {
+            variant: variant.to_string(),
+            requests: trace.len(),
+            wall_seconds: wall,
+            throughput_rps: trace.len() as f64 / wall,
+            p50_ms: percentile_sorted(&lat_ms, 50.0),
+            p95_ms: percentile_sorted(&lat_ms, 95.0),
+            p99_ms: percentile_sorted(&lat_ms, 99.0),
+            mean_batch: self.metrics.mean_batch_size(variant),
+        })
+    }
+
+    /// Shut down all pools (idempotent).
+    pub fn shutdown(&self) {
+        for pool in self.pools.values() {
+            pool.shutdown();
+        }
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::bert::CompiledDenseEngine;
+    use crate::model::config::BertConfig;
+
+    fn router() -> Router {
+        let cfg = BertConfig::micro();
+        let w = Arc::new(BertWeights::synthetic(&cfg, 61));
+        let e: Arc<dyn Engine> = Arc::new(CompiledDenseEngine::new(Arc::clone(&w), 1));
+        let mut r = Router::new();
+        r.register("dense", e, w, BatchPolicy::default(), 2);
+        r
+    }
+
+    #[test]
+    fn infer_roundtrip() {
+        let r = router();
+        let resp = r.infer("dense", vec![1, 2, 3]).unwrap();
+        assert_eq!(resp.cls.len(), BertConfig::micro().hidden);
+        assert!(r.infer("nope", vec![1]).is_err());
+        r.shutdown();
+    }
+
+    #[test]
+    fn trace_replay_reports() {
+        let r = router();
+        let trace = WorkloadTrace::burst(24, 6, 100, 3);
+        let report = r.run_trace("dense", &trace).unwrap();
+        assert_eq!(report.requests, 24);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
+        assert!(report.mean_batch >= 1.0);
+        r.shutdown();
+    }
+
+    #[test]
+    fn ids_unique_across_threads() {
+        let r = Arc::new(router());
+        let ids = std::sync::Mutex::new(std::collections::HashSet::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let r = Arc::clone(&r);
+                let ids = &ids;
+                s.spawn(move || {
+                    for _ in 0..25 {
+                        let resp = r.infer("dense", vec![2, 3]).unwrap();
+                        assert!(ids.lock().unwrap().insert(resp.id));
+                    }
+                });
+            }
+        });
+        assert_eq!(ids.lock().unwrap().len(), 100);
+        r.shutdown();
+    }
+}

@@ -1,0 +1,248 @@
+//! TCP front-end: JSON-lines over a blocking socket.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"tokens": [12, 99, 4], "variant": "tvm+"}
+//! ← {"id": 7, "cls": [...], "latency_us": 812, "batch": 4}
+//! → {"cmd": "stats"}
+//! ← {"variants": {...}, "uptime_seconds": ...}
+//! → {"cmd": "shutdown"}
+//! ```
+//!
+//! Deliberately minimal (no HTTP dependency exists in the vendor set);
+//! `examples/serve_bert.rs` and the CLI's `client` mode speak it.
+
+use super::router::Router;
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub struct Server {
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(router: Arc<Router>) -> Server {
+        Server {
+            router,
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Bind and serve until a `shutdown` command arrives. Returns the
+    /// bound address through `on_ready` before blocking (tests bind port
+    /// 0 and need the actual port).
+    pub fn serve(&self, addr: &str, on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(false)?;
+        on_ready(listener.local_addr()?);
+        // Accept loop with periodic stop checks via a short accept timeout
+        // is not available on std TcpListener; instead each `shutdown`
+        // command sets the flag and the handler breaks after replying, and
+        // we use a self-connection to unblock accept.
+        for stream in listener.incoming() {
+            if self.stop.load(Ordering::Acquire) {
+                break;
+            }
+            let stream = stream.context("accept")?;
+            let router = Arc::clone(&self.router);
+            let stop = Arc::clone(&self.stop);
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, &router, &stop);
+            });
+        }
+        Ok(())
+    }
+
+    /// Trigger shutdown (used by the handler thread; also callable from
+    /// signal handling in main).
+    pub fn request_stop(&self, addr: std::net::SocketAddr) {
+        self.stop.store(true, Ordering::Release);
+        // unblock the accept loop
+        let _ = TcpStream::connect(addr);
+    }
+
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: &Router, stop: &AtomicBool) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let local = stream.local_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match process_line(&line, router) {
+            Ok(LineOutcome::Reply(j)) => j,
+            Ok(LineOutcome::Shutdown) => {
+                let mut j = Json::obj();
+                j.set("ok", true).set("shutting_down", true);
+                writeln!(writer, "{}", j.to_string_compact())?;
+                stop.store(true, Ordering::Release);
+                if let (Some(_), Some(local)) = (peer, local) {
+                    let _ = TcpStream::connect(local);
+                }
+                return Ok(());
+            }
+            Err(e) => {
+                let mut j = Json::obj();
+                j.set("error", e.to_string());
+                j
+            }
+        };
+        writeln!(writer, "{}", reply.to_string_compact())?;
+    }
+    Ok(())
+}
+
+enum LineOutcome {
+    Reply(Json),
+    Shutdown,
+}
+
+fn process_line(line: &str, router: &Router) -> Result<LineOutcome> {
+    let req = json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "stats" => Ok(LineOutcome::Reply(router.metrics.to_json())),
+            "variants" => {
+                let mut j = Json::obj();
+                j.set("variants", router.variants());
+                Ok(LineOutcome::Reply(j))
+            }
+            "shutdown" => Ok(LineOutcome::Shutdown),
+            other => anyhow::bail!("unknown cmd '{other}'"),
+        };
+    }
+    let tokens: Vec<u32> = req
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .context("missing 'tokens'")?
+        .iter()
+        .map(|t| t.as_usize().map(|v| v as u32).context("bad token id"))
+        .collect::<Result<_>>()?;
+    if tokens.is_empty() {
+        anyhow::bail!("'tokens' must be non-empty");
+    }
+    let variant = req
+        .get("variant")
+        .and_then(Json::as_str)
+        .unwrap_or("tvm+")
+        .to_string();
+    let resp = router.infer(&variant, tokens)?;
+    let mut j = Json::obj();
+    j.set("id", resp.id)
+        .set("cls", resp.cls.iter().map(|&v| v as f64).collect::<Vec<f64>>())
+        .set("latency_us", resp.total_us)
+        .set("queue_us", resp.queue_us)
+        .set("compute_us", resp.compute_us)
+        .set("batch", resp.batch_size);
+    Ok(LineOutcome::Reply(j))
+}
+
+/// Simple client for the JSON-lines protocol (used by the CLI and tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Ok(Client {
+            writer: stream.try_clone()?,
+            reader: BufReader::new(stream),
+        })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        writeln!(self.writer, "{}", req.to_string_compact())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+    }
+
+    pub fn infer(&mut self, variant: &str, tokens: &[u32]) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set(
+            "tokens",
+            tokens.iter().map(|&t| t as usize).collect::<Vec<usize>>(),
+        )
+        .set("variant", variant);
+        self.call(&req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::model::bert::CompiledDenseEngine;
+    use crate::model::config::BertConfig;
+    use crate::model::engine::Engine;
+    use crate::model::weights::BertWeights;
+    use std::sync::mpsc;
+
+    fn serve_router() -> (Arc<Router>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let cfg = BertConfig::micro();
+        let w = Arc::new(BertWeights::synthetic(&cfg, 71));
+        let e: Arc<dyn Engine> = Arc::new(CompiledDenseEngine::new(Arc::clone(&w), 1));
+        let mut r = Router::new();
+        r.register("dense", e, w, BatchPolicy::default(), 2);
+        let router = Arc::new(r);
+        let server = Server::new(Arc::clone(&router));
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |addr| {
+                    addr_tx.send(addr).unwrap();
+                })
+                .unwrap();
+        });
+        let addr = addr_rx.recv().unwrap();
+        (router, addr, handle)
+    }
+
+    #[test]
+    fn tcp_roundtrip_and_shutdown() {
+        let (_router, addr, handle) = serve_router();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        // inference
+        let resp = client.infer("dense", &[1, 2, 3, 4]).unwrap();
+        assert!(resp.get("error").is_none(), "{resp:?}");
+        assert_eq!(
+            resp.get("cls").unwrap().as_arr().unwrap().len(),
+            BertConfig::micro().hidden
+        );
+        assert!(resp.get("latency_us").unwrap().as_f64().unwrap() > 0.0);
+        // stats
+        let mut req = Json::obj();
+        req.set("cmd", "stats");
+        let stats = client.call(&req).unwrap();
+        assert!(stats.at(&["variants", "dense"]).is_some());
+        // bad input handled gracefully
+        let mut bad = Json::obj();
+        bad.set("tokens", Vec::<usize>::new());
+        let err = client.call(&bad).unwrap();
+        assert!(err.get("error").is_some());
+        // unknown variant
+        let e2 = client.infer("nope", &[1]).unwrap();
+        assert!(e2.get("error").is_some());
+        // shutdown
+        let mut sd = Json::obj();
+        sd.set("cmd", "shutdown");
+        let ack = client.call(&sd).unwrap();
+        assert_eq!(ack.get("shutting_down").and_then(Json::as_bool), Some(true));
+        handle.join().unwrap();
+    }
+}

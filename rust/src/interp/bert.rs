@@ -1,0 +1,130 @@
+//! Eager encoder engine — the uncompiled PyTorch / TensorFlow baselines.
+//!
+//! Executes the same post-LN BERT block as the native engines, but
+//! token-major, op-by-op, with a fresh allocation per operator and no
+//! fusion. The `blocked` flag selects the slightly-better matmul tier
+//! (the "Tensorflow" column).
+
+use super::ops::{add_tm, attention_tm, gelu_tm, layernorm_tm, matmul_blocked, matmul_dot};
+use crate::model::engine::Engine;
+use crate::model::weights::BertWeights;
+use crate::sparse::dense::Matrix;
+use std::sync::Arc;
+
+const LN_EPS: f32 = 1e-5;
+
+/// Eager op-by-op engine.
+pub struct InterpEngine {
+    weights: Arc<BertWeights>,
+    blocked: bool,
+    threads: usize,
+}
+
+impl InterpEngine {
+    /// `blocked = false` → "pytorch" tier; `true` → "tensorflow" tier.
+    pub fn new(weights: Arc<BertWeights>, blocked: bool, threads: usize) -> InterpEngine {
+        InterpEngine {
+            weights,
+            blocked,
+            threads,
+        }
+    }
+
+    fn linear(&self, x: &Matrix, w: &Matrix, b: &[f32]) -> Matrix {
+        if self.blocked {
+            matmul_blocked(x, w, Some(b), self.threads)
+        } else {
+            matmul_dot(x, w, Some(b), self.threads)
+        }
+    }
+}
+
+impl Engine for InterpEngine {
+    fn name(&self) -> &str {
+        if self.blocked {
+            "tensorflow"
+        } else {
+            "pytorch"
+        }
+    }
+
+    fn forward(&self, x_tm: &Matrix) -> Matrix {
+        let cfg = &self.weights.config;
+        let mut x = x_tm.clone(); // eager frameworks copy at graph entry
+        for lw in &self.weights.layers {
+            let q = self.linear(&x, &lw.wq, &lw.bq);
+            let k = self.linear(&x, &lw.wk, &lw.bk);
+            let v = self.linear(&x, &lw.wv, &lw.bv);
+            let ctx = attention_tm(&q, &k, &v, cfg.heads, self.threads);
+            let attn_out = self.linear(&ctx, &lw.wo, &lw.bo);
+            let res = add_tm(&x, &attn_out);
+            x = layernorm_tm(&res, &lw.ln1_gamma, &lw.ln1_beta, LN_EPS);
+            let up = self.linear(&x, &lw.w_up, &lw.b_up);
+            let act = gelu_tm(&up);
+            let down = self.linear(&act, &lw.w_down, &lw.b_down);
+            let res2 = add_tm(&x, &down);
+            x = layernorm_tm(&res2, &lw.ln2_gamma, &lw.ln2_beta, LN_EPS);
+        }
+        x
+    }
+
+    fn weight_footprint_bytes(&self) -> usize {
+        self.weights
+            .layers
+            .iter()
+            .flat_map(|l| l.prunable())
+            .map(|(_, m)| m.data.len() * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::bert::CompiledDenseEngine;
+    use crate::model::config::BertConfig;
+    use crate::util::propcheck::assert_allclose;
+
+    #[test]
+    fn interp_matches_compiled_dense() {
+        // The strongest correctness cross-check in the repo: two fully
+        // independent implementations (token-major eager vs feature-major
+        // fused) of the same encoder must agree.
+        let cfg = BertConfig::micro();
+        let w = Arc::new(BertWeights::synthetic(&cfg, 21));
+        let x = w.embed(&[3, 1, 4, 1, 5]);
+        let eager = InterpEngine::new(Arc::clone(&w), false, 1);
+        let compiled = CompiledDenseEngine::new(Arc::clone(&w), 2);
+        let ye = eager.forward(&x);
+        let yc = compiled.forward(&x);
+        assert_allclose(&ye.data, &yc.data, 1e-3, 1e-4, "interp vs compiled");
+    }
+
+    #[test]
+    fn blocked_tier_matches_dot_tier() {
+        let cfg = BertConfig::micro();
+        let w = Arc::new(BertWeights::synthetic(&cfg, 22));
+        let x = w.embed(&[7, 8, 9]);
+        let dot = InterpEngine::new(Arc::clone(&w), false, 2);
+        let blk = InterpEngine::new(Arc::clone(&w), true, 2);
+        assert_eq!(dot.name(), "pytorch");
+        assert_eq!(blk.name(), "tensorflow");
+        assert_allclose(
+            &blk.forward(&x).data,
+            &dot.forward(&x).data,
+            1e-4,
+            1e-5,
+            "blocked vs dot",
+        );
+    }
+
+    #[test]
+    fn output_shape_preserved() {
+        let cfg = BertConfig::micro();
+        let w = Arc::new(BertWeights::synthetic(&cfg, 23));
+        let x = w.embed(&[1, 2]);
+        let y = InterpEngine::new(w, false, 1).forward(&x);
+        assert_eq!((y.rows, y.cols), (2, cfg.hidden));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+}

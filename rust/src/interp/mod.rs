@@ -1,0 +1,21 @@
+//! Eager op-by-op interpreter — the uncompiled-framework baselines.
+//!
+//! Models what "vanilla PyTorch" / "TensorFlow" eager inference does in
+//! the paper's Table 1: every operator runs as its own kernel over
+//! token-major tensors, materializing a fresh output allocation each time,
+//! with no cross-op fusion and no layout planning. Two matmul tiers map
+//! to the two framework columns:
+//!
+//! * [`ops::matmul_dot`] — straightforward dot-product loops
+//!   ("PyTorch ms" column);
+//! * [`ops::matmul_blocked`] — cache-blocked with 4-way accumulator
+//!   unrolling, still eager/unfused ("Tensorflow ms" column, which the
+//!   paper measures ~7% faster than PyTorch).
+//!
+//! Both are threaded over tokens, as the frameworks' BLAS backends would
+//! be. What they *don't* get is what compilation adds: fused bias/GELU,
+//! no temporaries, layout-planned activations — that is
+//! [`crate::model::bert::NativeEngine`]'s territory.
+
+pub mod bert;
+pub mod ops;

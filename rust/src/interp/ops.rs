@@ -1,0 +1,263 @@
+//! Token-major eager operators (uncompiled-baseline tier).
+//!
+//! Convention: activations `[T, H]` (a row per token), weights `[O, I]`
+//! (PyTorch `nn.Linear` layout), `y = x · Wᵀ + b`.
+
+use crate::sparse::dense::Matrix;
+use crate::util::pool;
+
+/// Dot-product matmul: `y[t,o] = Σ_i x[t,i]·w[o,i] + b[o]`.
+/// No blocking, no unrolling — each output element is an independent dot
+/// product, the canonical eager implementation.
+pub fn matmul_dot(x: &Matrix, w: &Matrix, bias: Option<&[f32]>, threads: usize) -> Matrix {
+    assert_eq!(x.cols, w.cols, "matmul_dot: x cols {} != w cols {}", x.cols, w.cols);
+    let (t_n, o_n, i_n) = (x.rows, w.rows, w.cols);
+    let mut y = Matrix::zeros(t_n, o_n);
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    pool::parallel_chunks(t_n, threads, |_, trange| {
+        for t in trange {
+            let xrow = x.row(t);
+            // SAFETY: disjoint token rows per worker.
+            let yrow =
+                unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(t * o_n), o_n) };
+            for o in 0..o_n {
+                let wrow = w.row(o);
+                let mut acc = 0.0f32;
+                for i in 0..i_n {
+                    acc += xrow[i] * wrow[i];
+                }
+                yrow[o] = acc + bias.map(|b| b[o]).unwrap_or(0.0);
+            }
+        }
+    });
+    y
+}
+
+/// Cache-blocked matmul with 4 accumulators — the slightly-better eager
+/// tier ("TensorFlow" column). Same token-major semantics as
+/// [`matmul_dot`].
+pub fn matmul_blocked(x: &Matrix, w: &Matrix, bias: Option<&[f32]>, threads: usize) -> Matrix {
+    assert_eq!(x.cols, w.cols);
+    let (t_n, o_n, i_n) = (x.rows, w.rows, w.cols);
+    let mut y = Matrix::zeros(t_n, o_n);
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    pool::parallel_chunks(t_n, threads, |_, trange| {
+        for t in trange {
+            let xrow = x.row(t);
+            // SAFETY: disjoint token rows per worker.
+            let yrow =
+                unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(t * o_n), o_n) };
+            let mut o = 0;
+            while o + 4 <= o_n {
+                let (w0, w1, w2, w3) = (w.row(o), w.row(o + 1), w.row(o + 2), w.row(o + 3));
+                let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for i in 0..i_n {
+                    let xv = xrow[i];
+                    a0 += xv * w0[i];
+                    a1 += xv * w1[i];
+                    a2 += xv * w2[i];
+                    a3 += xv * w3[i];
+                }
+                if let Some(b) = bias {
+                    a0 += b[o];
+                    a1 += b[o + 1];
+                    a2 += b[o + 2];
+                    a3 += b[o + 3];
+                }
+                yrow[o] = a0;
+                yrow[o + 1] = a1;
+                yrow[o + 2] = a2;
+                yrow[o + 3] = a3;
+                o += 4;
+            }
+            while o < o_n {
+                let wrow = w.row(o);
+                let mut acc = 0.0f32;
+                for i in 0..i_n {
+                    acc += xrow[i] * wrow[i];
+                }
+                yrow[o] = acc + bias.map(|b| b[o]).unwrap_or(0.0);
+                o += 1;
+            }
+        }
+    });
+    y
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    #[inline]
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// LayerNorm over the hidden dim, token-major (each row standardized).
+pub fn layernorm_tm(x: &Matrix, gamma: &[f32], beta: &[f32], eps: f32) -> Matrix {
+    assert_eq!(gamma.len(), x.cols);
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for t in 0..x.rows {
+        let row = x.row(t);
+        let mean: f32 = row.iter().sum::<f32>() / x.cols as f32;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let orow = out.row_mut(t);
+        for j in 0..x.cols {
+            orow[j] = (row[j] - mean) * inv * gamma[j] + beta[j];
+        }
+    }
+    out
+}
+
+/// GELU (tanh approximation), fresh allocation (eager semantics).
+pub fn gelu_tm(x: &Matrix) -> Matrix {
+    const C: f32 = 0.7978845608;
+    let mut out = x.clone();
+    for v in out.data.iter_mut() {
+        let u = *v;
+        *v = 0.5 * u * (1.0 + (C * (u + 0.044715 * u * u * u)).tanh());
+    }
+    out
+}
+
+/// Elementwise add, fresh allocation.
+pub fn add_tm(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!(a.cols, b.cols);
+    let mut out = a.clone();
+    for (o, v) in out.data.iter_mut().zip(&b.data) {
+        *o += v;
+    }
+    out
+}
+
+/// Multi-head attention, token-major, eager (materializes per-head score
+/// matrices). `q,k,v: [T, H]`.
+pub fn attention_tm(q: &Matrix, k: &Matrix, v: &Matrix, heads: usize, threads: usize) -> Matrix {
+    let (t_n, h_n) = (q.rows, q.cols);
+    assert!(h_n % heads == 0);
+    let d = h_n / heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Matrix::zeros(t_n, h_n);
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    pool::parallel_chunks(heads, threads, |_, hrange| {
+        for head in hrange {
+            let c0 = head * d;
+            let mut scores = Matrix::zeros(t_n, t_n);
+            for i in 0..t_n {
+                let qrow = &q.row(i)[c0..c0 + d];
+                let srow = scores.row_mut(i);
+                for j in 0..t_n {
+                    let krow = &k.row(j)[c0..c0 + d];
+                    let mut acc = 0.0f32;
+                    for f in 0..d {
+                        acc += qrow[f] * krow[f];
+                    }
+                    srow[j] = acc * scale;
+                }
+            }
+            crate::kernels::ops::softmax_rows(&mut scores);
+            for i in 0..t_n {
+                let srow = scores.row(i);
+                // SAFETY: heads write disjoint column slices; rows are
+                // written via raw pointer to avoid aliasing the &out.
+                let orow = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.get().add(i * h_n + c0), d)
+                };
+                for f in 0..d {
+                    let mut acc = 0.0f32;
+                    for j in 0..t_n {
+                        acc += srow[j] * v.at(j, c0 + f);
+                    }
+                    orow[f] = acc;
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn linear_ref(x: &Matrix, w: &Matrix, bias: Option<&[f32]>) -> Matrix {
+        // y = x · wᵀ (+ b)
+        let mut y = x.matmul_ref(&w.transpose());
+        if let Some(b) = bias {
+            for t in 0..y.rows {
+                for o in 0..y.cols {
+                    let v = y.at(t, o) + b[o];
+                    y.set(t, o, v);
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn dot_matches_reference() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(9, 17, 1.0, &mut rng);
+        let w = Matrix::randn(11, 17, 1.0, &mut rng);
+        let b: Vec<f32> = (0..11).map(|_| rng.f32()).collect();
+        for threads in [1, 3] {
+            let got = matmul_dot(&x, &w, Some(&b), threads);
+            assert_allclose(&got.data, &linear_ref(&x, &w, Some(&b)).data, 1e-5, 1e-6, "dot");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_dot() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::randn(7, 33, 1.0, &mut rng);
+        let w = Matrix::randn(10, 33, 1.0, &mut rng); // o not divisible by 4
+        let b: Vec<f32> = (0..10).map(|_| rng.f32()).collect();
+        let dot = matmul_dot(&x, &w, Some(&b), 1);
+        for threads in [1, 2] {
+            let blk = matmul_blocked(&x, &w, Some(&b), threads);
+            assert_allclose(&blk.data, &dot.data, 1e-5, 1e-6, "blocked");
+        }
+    }
+
+    #[test]
+    fn layernorm_tm_standardizes_rows() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::randn(4, 32, 3.0, &mut rng);
+        let out = layernorm_tm(&x, &vec![1.0; 32], &vec![0.0; 32], 1e-5);
+        for t in 0..4 {
+            let mean: f32 = out.row(t).iter().sum::<f32>() / 32.0;
+            assert!(mean.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn attention_tm_matches_fm_kernel() {
+        // cross-check the two attention implementations against each other
+        let mut rng = Rng::new(4);
+        let t = 6;
+        let h = 16;
+        let q_tm = Matrix::randn(t, h, 1.0, &mut rng);
+        let k_tm = Matrix::randn(t, h, 1.0, &mut rng);
+        let v_tm = Matrix::randn(t, h, 1.0, &mut rng);
+        let got_tm = attention_tm(&q_tm, &k_tm, &v_tm, 2, 2);
+        let got_fm = crate::kernels::attention::multi_head_attention(
+            &q_tm.transpose(),
+            &k_tm.transpose(),
+            &v_tm.transpose(),
+            2,
+            1,
+        );
+        assert_allclose(
+            &got_tm.data,
+            &got_fm.transpose().data,
+            1e-4,
+            1e-5,
+            "attn tm vs fm",
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Multi-head self-attention core in feature-major layout.
+//!
+//! Q, K, V arrive as `[H, T]` (features × tokens). Per head `h` of width
+//! `d = H / heads`:
+//!
+//! * scores `S[T,T] = (Qₕᵀ·Kₕ) / √d` — computed as an outer-product
+//!   accumulation over feature rows so the inner loop stays contiguous
+//!   over tokens;
+//! * `P = softmax_rows(S)`;
+//! * context `Cₕ[d,T] = Vₕ·Pᵀ` — a dot-product contraction over the key
+//!   dimension, both operand rows contiguous.
+//!
+//! The projections producing Q/K/V (and consuming the context) are where
+//! the paper's sparsity lives; they are `bsr_linear`/`linear_dense` calls
+//! in [`crate::model::bert`], not here.
+
+use super::ops::softmax_rows;
+use crate::sparse::dense::Matrix;
+use crate::util::pool;
+
+/// Multi-head attention over feature-major Q/K/V `[H, T]`.
+/// Returns the concatenated context `[H, T]`. `threads` parallelizes over
+/// heads (the natural TVM axis for this op).
+pub fn multi_head_attention(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    heads: usize,
+    threads: usize,
+) -> Matrix {
+    let h = q.rows;
+    let t = q.cols;
+    assert_eq!(k.rows, h);
+    assert_eq!(v.rows, h);
+    assert_eq!(k.cols, t);
+    assert_eq!(v.cols, t);
+    assert!(h % heads == 0, "hidden {h} not divisible by heads {heads}");
+    let d = h / heads;
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let mut out = Matrix::zeros(h, t);
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    pool::parallel_chunks(heads, threads, |_, head_range| {
+        for head in head_range {
+            let row0 = head * d;
+            // scores[i, j] = Σ_f q[row0+f, i] · k[row0+f, j] · scale —
+            // register-tiled over j (accumulators live across the whole
+            // f contraction; EXPERIMENTS.md §Perf L3-4).
+            let mut scores = Matrix::zeros(t, t);
+            const JT: usize = 64;
+            for i in 0..t {
+                let srow = &mut scores.row_mut(i)[..t];
+                let mut jt = 0;
+                while jt < t {
+                    let width = JT.min(t - jt);
+                    let mut acc = [0.0f32; JT];
+                    let acc = &mut acc[..width];
+                    for f in 0..d {
+                        let qi = q.at(row0 + f, i) * scale;
+                        let krow = &k.row(row0 + f)[jt..jt + width];
+                        for u in 0..width {
+                            acc[u] += qi * krow[u];
+                        }
+                    }
+                    srow[jt..jt + width].copy_from_slice(acc);
+                    jt += width;
+                }
+            }
+            softmax_rows(&mut scores);
+            // context[row0+f, i] = Σ_j v[row0+f, j] · scores[i, j].
+            // Transposing P turns the contraction into axpy form
+            // (`ctx[f,:] += v[f,j] · Pᵀ[j,:]`), which vectorizes over the
+            // contiguous query dimension instead of a scalar reduction.
+            let pt = super::dense_matmul::transpose(&scores); // [j, i]
+            // SAFETY: heads write disjoint row bands [row0, row0+d).
+            let band =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(row0 * t), d * t) };
+            band.fill(0.0);
+            for f in 0..d {
+                let vrow = v.row(row0 + f);
+                let orow = &mut band[f * t..(f + 1) * t];
+                let mut j = 0;
+                while j + 4 <= t {
+                    let (a0, a1, a2, a3) = (vrow[j], vrow[j + 1], vrow[j + 2], vrow[j + 3]);
+                    let p0 = &pt.row(j)[..t];
+                    let p1 = &pt.row(j + 1)[..t];
+                    let p2 = &pt.row(j + 2)[..t];
+                    let p3 = &pt.row(j + 3)[..t];
+                    for i in 0..t {
+                        orow[i] += a0 * p0[i] + a1 * p1[i] + a2 * p2[i] + a3 * p3[i];
+                    }
+                    j += 4;
+                }
+                while j < t {
+                    let a = vrow[j];
+                    let pr = &pt.row(j)[..t];
+                    for i in 0..t {
+                        orow[i] += a * pr[i];
+                    }
+                    j += 1;
+                }
+            }
+        }
+    });
+    out
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    /// Accessor: method call makes closures capture the whole struct
+    /// (edition-2021 disjoint capture would otherwise grab the raw
+    /// pointer field, which is not Sync).
+    #[inline]
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::assert_allclose;
+    use crate::util::rng::Rng;
+
+    /// Straightforward token-major oracle.
+    fn attention_ref(q: &Matrix, k: &Matrix, v: &Matrix, heads: usize) -> Matrix {
+        let h = q.rows;
+        let t = q.cols;
+        let d = h / heads;
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut out = Matrix::zeros(h, t);
+        for head in 0..heads {
+            let r0 = head * d;
+            for i in 0..t {
+                // scores for query i
+                let mut s = vec![0.0f32; t];
+                for j in 0..t {
+                    let mut acc = 0.0f32;
+                    for f in 0..d {
+                        acc += q.at(r0 + f, i) * k.at(r0 + f, j);
+                    }
+                    s[j] = acc * scale;
+                }
+                let max = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0;
+                for x in s.iter_mut() {
+                    *x = (*x - max).exp();
+                    sum += *x;
+                }
+                for x in s.iter_mut() {
+                    *x /= sum;
+                }
+                for f in 0..d {
+                    let mut acc = 0.0f32;
+                    for j in 0..t {
+                        acc += s[j] * v.at(r0 + f, j);
+                    }
+                    out.set(r0 + f, i, acc);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_reference_single_head() {
+        let mut rng = Rng::new(1);
+        let q = Matrix::randn(8, 6, 1.0, &mut rng);
+        let k = Matrix::randn(8, 6, 1.0, &mut rng);
+        let v = Matrix::randn(8, 6, 1.0, &mut rng);
+        let got = multi_head_attention(&q, &k, &v, 1, 1);
+        let want = attention_ref(&q, &k, &v, 1);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5, "attn 1 head");
+    }
+
+    #[test]
+    fn matches_reference_multi_head_threaded() {
+        let mut rng = Rng::new(2);
+        let q = Matrix::randn(24, 10, 1.0, &mut rng);
+        let k = Matrix::randn(24, 10, 1.0, &mut rng);
+        let v = Matrix::randn(24, 10, 1.0, &mut rng);
+        let want = attention_ref(&q, &k, &v, 4);
+        for threads in [1, 2, 4] {
+            let got = multi_head_attention(&q, &k, &v, 4, threads);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5, "attn mh");
+        }
+    }
+
+    #[test]
+    fn uniform_keys_average_values() {
+        // If all K columns are identical, softmax is uniform and the
+        // context equals the mean of V over tokens.
+        let t = 5;
+        let mut rng = Rng::new(3);
+        let q = Matrix::randn(4, t, 1.0, &mut rng);
+        let k = Matrix::from_fn(4, t, |i, _| i as f32 * 0.1);
+        let v = Matrix::randn(4, t, 1.0, &mut rng);
+        let got = multi_head_attention(&q, &k, &v, 1, 1);
+        for f in 0..4 {
+            let mean: f32 = v.row(f).iter().sum::<f32>() / t as f32;
+            for i in 0..t {
+                assert!((got.at(f, i) - mean).abs() < 1e-5);
+            }
+        }
+    }
+}

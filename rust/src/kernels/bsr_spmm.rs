@@ -1,0 +1,413 @@
+//! BSR × dense linear kernel — the heart of the TVM⁺ augmentation.
+//!
+//! Computes `Y[O,T] = W_bsr[O,I] · X[I,T] (+ bias)` in feature-major
+//! layout, touching only stored blocks: FLOPs and memory traffic scale
+//! with `nnz`, which is where the paper's 2.2× over compiled-dense comes
+//! from at 80% sparsity.
+//!
+//! Two execution paths:
+//!
+//! * [`bsr_linear`] — direct: walk `indptr`/`indices` as stored. This is
+//!   what a sparse runtime without scheduling support does.
+//! * [`bsr_linear_planned`] — execute a pre-compiled [`SpmmPlan`]. A
+//!   [`RowProgram`] is compiled per *distinct row pattern* (adjacent
+//!   stored blocks are merged into longer runs; offsets are precomputed
+//!   relative so rows sharing a pattern share one program). Plan
+//!   compilation and pattern dedup live in [`crate::scheduler`]; this
+//!   module defines the program format and its executor.
+//!
+//! The run-merging matters most for linear `1×C` blocks: two adjacent
+//! stored blocks are contiguous both in `data` and in the X rows they
+//! touch, so they fuse into a single longer axpy panel — the mechanism
+//! behind the paper's observation that linear blocks beat squares on CPU.
+
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::dense::Matrix;
+use crate::sparse::prune::BlockShape;
+use crate::util::pool;
+use std::sync::Arc;
+
+/// One contiguous unit of work inside a row program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Run {
+    /// First X row (element granularity) this run reads.
+    pub x_row: u32,
+    /// Number of consecutive X rows read (`k·C` for a merged run of `k`
+    /// 1×C blocks; exactly `C` for an unmerged block).
+    pub width: u32,
+    /// Offset into the matrix `data` array, *relative* to the block-row's
+    /// first stored element.
+    pub rel_offset: u32,
+}
+
+/// A compiled schedule for one block-row *pattern*. Rows with identical
+/// patterns share one `RowProgram` (scheduler-level reuse); per-row state
+/// is only the absolute data base offset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowProgram {
+    pub block: BlockShape,
+    pub runs: Vec<Run>,
+    /// Total stored elements this pattern covers (= blocks · r · c).
+    pub elems: u32,
+}
+
+impl RowProgram {
+    /// Compile a program from a block-row's sorted column indices.
+    /// Adjacent columns merge into runs only for `r == 1` (for taller
+    /// blocks the `data` of neighboring blocks is not row-contiguous).
+    pub fn compile(cols: &[u32], block: BlockShape) -> RowProgram {
+        let mut runs: Vec<Run> = Vec::new();
+        let e = block.elems() as u32;
+        for (k, &bj) in cols.iter().enumerate() {
+            let rel = k as u32 * e;
+            let can_merge = block.r == 1
+                && runs
+                    .last()
+                    .map(|r| r.x_row + r.width == bj * block.c as u32 && r.rel_offset + r.width == rel)
+                    .unwrap_or(false);
+            if can_merge {
+                let last = runs.last_mut().unwrap();
+                last.width += block.c as u32;
+            } else {
+                runs.push(Run {
+                    x_row: bj * block.c as u32,
+                    width: block.c as u32,
+                    rel_offset: rel,
+                });
+            }
+        }
+        RowProgram {
+            block,
+            runs,
+            elems: cols.len() as u32 * e,
+        }
+    }
+
+    /// Number of merged runs (instrumentation: fewer runs per block ⇒
+    /// better fusion; reported by `sparsebert inspect`).
+    pub fn run_count(&self) -> usize {
+        self.runs.len()
+    }
+}
+
+/// A full-matrix execution plan: one `(program, data base, y row)` triple
+/// per block-row, with programs shared across rows of equal pattern.
+#[derive(Debug, Clone)]
+pub struct SpmmPlan {
+    pub block: BlockShape,
+    /// Per block-row: shared program + absolute base offset into `data`.
+    pub rows: Vec<(Arc<RowProgram>, u32)>,
+    /// Execution order of block rows (identity unless the auto-scheduler
+    /// reordered for similarity locality).
+    pub order: Vec<u32>,
+    /// Distinct programs compiled (≤ rows; the reuse metric).
+    pub distinct_programs: usize,
+}
+
+/// Direct (unplanned) BSR linear: `Y = W·X + bias`, single-threaded.
+pub fn bsr_linear(w: &BsrMatrix, x: &Matrix, bias: Option<&[f32]>) -> Matrix {
+    assert_eq!(w.cols, x.rows, "bsr_linear: W cols {} != X rows {}", w.cols, x.rows);
+    let mut y = Matrix::zeros(w.rows, x.cols);
+    let t = x.cols;
+    for bi in 0..w.block_rows() {
+        init_bias_rows(&mut y, bi, w.block.r, bias);
+        for pos in w.row_range(bi) {
+            let bj = w.indices[pos] as usize;
+            let blk = w.block_data(pos);
+            accumulate_block(
+                &mut y.data[bi * w.block.r * t..(bi + 1) * w.block.r * t],
+                t,
+                blk,
+                x,
+                bj * w.block.c,
+                w.block,
+            );
+        }
+    }
+    y
+}
+
+/// Planned + threaded BSR linear. Block rows are distributed dynamically
+/// (grain of a few rows) because per-row cost is pattern-dependent —
+/// exactly the load imbalance large blocks induce.
+pub fn bsr_linear_planned(
+    w: &BsrMatrix,
+    plan: &SpmmPlan,
+    x: &Matrix,
+    bias: Option<&[f32]>,
+    threads: usize,
+) -> Matrix {
+    assert_eq!(w.cols, x.rows);
+    assert_eq!(plan.rows.len(), w.block_rows(), "plan/matrix row mismatch");
+    assert_eq!(plan.block, w.block, "plan/matrix block mismatch");
+    let mut y = Matrix::zeros(w.rows, x.cols);
+    let t = x.cols;
+    let r = w.block.r;
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    let exec_range = |range: std::ops::Range<usize>| {
+        for &bi_u in &plan.order[range] {
+            let bi = bi_u as usize;
+            let (program, base) = &plan.rows[bi];
+            // SAFETY: each block-row index appears exactly once in
+            // plan.order (validated at plan build), so writers of Y row
+            // bands are disjoint.
+            let yband = unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(bi * r * t), r * t) };
+            if let Some(b) = bias {
+                for i in 0..r {
+                    let v = b[bi * r + i];
+                    yband[i * t..(i + 1) * t].iter_mut().for_each(|o| *o = v);
+                }
+            }
+            execute_program(program, *base as usize, &w.data, x, yband, t);
+        }
+    };
+    if threads <= 1 {
+        exec_range(0..plan.order.len());
+    } else {
+        pool::parallel_dynamic(plan.order.len(), threads, 4, exec_range);
+    }
+    y
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    /// Accessor: method call makes closures capture the whole struct
+    /// (edition-2021 disjoint capture would otherwise grab the raw
+    /// pointer field, which is not Sync).
+    #[inline]
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[inline]
+fn init_bias_rows(y: &mut Matrix, bi: usize, r: usize, bias: Option<&[f32]>) {
+    if let Some(b) = bias {
+        for i in 0..r {
+            let o = bi * r + i;
+            let v = b[o];
+            y.row_mut(o).iter_mut().for_each(|x| *x = v);
+        }
+    }
+}
+
+/// Accumulate one stored block into the Y band (`r` rows × `t` tokens).
+#[inline]
+fn accumulate_block(
+    yband: &mut [f32],
+    t: usize,
+    blk: &[f32],
+    x: &Matrix,
+    x_row0: usize,
+    block: BlockShape,
+) {
+    for i in 0..block.r {
+        let coeffs = &blk[i * block.c..(i + 1) * block.c];
+        axpy_panel(&mut yband[i * t..(i + 1) * t], coeffs, x, x_row0, t);
+    }
+}
+
+/// `y += Σ_j coeffs[j] · X[x_row0 + j, :]` with 4-way unrolling — the
+/// innermost loop of the whole system. Slices are re-bounded to `t` up
+/// front so LLVM drops per-element bounds checks and vectorizes the body
+/// (perf log: EXPERIMENTS.md §Perf L3-2).
+#[inline]
+fn axpy_panel(yrow: &mut [f32], coeffs: &[f32], x: &Matrix, x_row0: usize, t: usize) {
+    let yrow = &mut yrow[..t];
+    let mut j = 0;
+    while j + 4 <= coeffs.len() {
+        let (a0, a1, a2, a3) = (coeffs[j], coeffs[j + 1], coeffs[j + 2], coeffs[j + 3]);
+        let x0 = &x.row(x_row0 + j)[..t];
+        let x1 = &x.row(x_row0 + j + 1)[..t];
+        let x2 = &x.row(x_row0 + j + 2)[..t];
+        let x3 = &x.row(x_row0 + j + 3)[..t];
+        for k in 0..t {
+            yrow[k] += a0 * x0[k] + a1 * x1[k] + a2 * x2[k] + a3 * x3[k];
+        }
+        j += 4;
+    }
+    while j < coeffs.len() {
+        let a = coeffs[j];
+        if a != 0.0 {
+            let xr = &x.row(x_row0 + j)[..t];
+            for k in 0..t {
+                yrow[k] += a * xr[k];
+            }
+        }
+        j += 1;
+    }
+}
+
+/// Execute one row program against a Y band.
+#[inline]
+fn execute_program(
+    program: &RowProgram,
+    base: usize,
+    data: &[f32],
+    x: &Matrix,
+    yband: &mut [f32],
+    t: usize,
+) {
+    let block = program.block;
+    if block.r == 1 {
+        // merged runs: every run is a contiguous coeff slice × contiguous
+        // X row panel
+        for run in &program.runs {
+            let coeffs = &data[base + run.rel_offset as usize
+                ..base + run.rel_offset as usize + run.width as usize];
+            axpy_panel(yband, coeffs, x, run.x_row as usize, t);
+        }
+    } else {
+        for run in &program.runs {
+            let blk = &data[base + run.rel_offset as usize
+                ..base + run.rel_offset as usize + block.elems()];
+            for i in 0..block.r {
+                let coeffs = &blk[i * block.c..(i + 1) * block.c];
+                axpy_panel(&mut yband[i * t..(i + 1) * t], coeffs, x, run.x_row as usize, t);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::plan::build_plan;
+    use crate::sparse::prune::{prune_structured, prune_structured_replicated};
+    use crate::util::propcheck::{self, assert_allclose};
+    use crate::util::rng::Rng;
+
+    fn random_bsr(
+        rows: usize,
+        cols: usize,
+        block: BlockShape,
+        sparsity: f64,
+        seed: u64,
+    ) -> (Matrix, BsrMatrix) {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(rows, cols, 1.0, &mut rng);
+        prune_structured(&mut w, sparsity, block);
+        let bsr = BsrMatrix::from_dense(&w, block).unwrap();
+        (w, bsr)
+    }
+
+    #[test]
+    fn direct_matches_dense_reference() {
+        let block = BlockShape::new(2, 4);
+        let (w, bsr) = random_bsr(16, 32, block, 0.6, 1);
+        let mut rng = Rng::new(2);
+        let x = Matrix::randn(32, 9, 1.0, &mut rng);
+        let want = w.matmul_ref(&x);
+        let got = bsr_linear(&bsr, &x, None);
+        assert_allclose(&got.data, &want.data, 1e-5, 1e-6, "bsr direct");
+    }
+
+    #[test]
+    fn direct_with_bias() {
+        let block = BlockShape::new(1, 8);
+        let (w, bsr) = random_bsr(8, 24, block, 0.5, 3);
+        let mut rng = Rng::new(4);
+        let x = Matrix::randn(24, 5, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut want = w.matmul_ref(&x);
+        for o in 0..8 {
+            for j in 0..5 {
+                let v = want.at(o, j) + bias[o];
+                want.set(o, j, v);
+            }
+        }
+        let got = bsr_linear(&bsr, &x, Some(&bias));
+        assert_allclose(&got.data, &want.data, 1e-5, 1e-6, "bsr bias");
+    }
+
+    #[test]
+    fn program_merges_adjacent_linear_blocks() {
+        let block = BlockShape::new(1, 4);
+        // columns 0,1,2 adjacent; 5 isolated
+        let p = RowProgram::compile(&[0, 1, 2, 5], block);
+        assert_eq!(p.runs.len(), 2);
+        assert_eq!(p.runs[0], Run { x_row: 0, width: 12, rel_offset: 0 });
+        assert_eq!(p.runs[1], Run { x_row: 20, width: 4, rel_offset: 12 });
+        assert_eq!(p.elems, 16);
+    }
+
+    #[test]
+    fn program_no_merge_for_tall_blocks() {
+        let block = BlockShape::new(4, 4);
+        let p = RowProgram::compile(&[0, 1, 2], block);
+        assert_eq!(p.runs.len(), 3);
+        assert_eq!(p.runs[1].rel_offset, 16);
+    }
+
+    #[test]
+    fn planned_matches_direct_across_shapes() {
+        propcheck::check(
+            "planned == direct",
+            20,
+            |rng| {
+                let shapes = [
+                    BlockShape::new(1, 1),
+                    BlockShape::new(1, 4),
+                    BlockShape::new(1, 16),
+                    BlockShape::new(2, 2),
+                    BlockShape::new(4, 8),
+                    BlockShape::new(8, 8),
+                ];
+                let block = shapes[rng.range(0, shapes.len())];
+                let rows = block.r * rng.range(2, 10);
+                let cols = block.c * rng.range(2, 10);
+                let sparsity = rng.f64() * 0.85;
+                let tokens = rng.range(1, 20);
+                let threads = rng.range(1, 5);
+                (rows, cols, block, sparsity, tokens, threads, rng.next_u64())
+            },
+            |&(rows, cols, block, sparsity, tokens, threads, seed)| {
+                let (_, bsr) = random_bsr(rows, cols, block, sparsity, seed);
+                let mut rng = Rng::new(seed ^ 0xabc);
+                let x = Matrix::randn(cols, tokens, 1.0, &mut rng);
+                let bias: Vec<f32> = (0..rows).map(|_| rng.f32()).collect();
+                let direct = bsr_linear(&bsr, &x, Some(&bias));
+                let plan = build_plan(&bsr, Default::default());
+                let planned = bsr_linear_planned(&bsr, &plan, &x, Some(&bias), threads);
+                let diff = propcheck::max_abs_diff(&direct.data, &planned.data);
+                if diff < 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("max diff {diff}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn planned_with_replicated_patterns_shares_programs() {
+        let block = BlockShape::new(1, 8);
+        let mut rng = Rng::new(7);
+        let mut w = Matrix::randn(128, 128, 1.0, &mut rng);
+        prune_structured_replicated(&mut w, 0.8, block, 4, &mut rng);
+        let bsr = BsrMatrix::from_dense(&w, block).unwrap();
+        let plan = build_plan(&bsr, Default::default());
+        assert!(plan.distinct_programs <= 4, "distinct {}", plan.distinct_programs);
+        let x = Matrix::randn(128, 16, 1.0, &mut rng);
+        let got = bsr_linear_planned(&bsr, &plan, &x, None, 2);
+        let want = w.matmul_ref(&x);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5, "replicated");
+    }
+
+    #[test]
+    fn empty_matrix_yields_bias_only() {
+        let block = BlockShape::new(1, 4);
+        let w = Matrix::zeros(4, 8);
+        let bsr = BsrMatrix::from_dense(&w, block).unwrap();
+        let x = Matrix::from_fn(8, 3, |i, j| (i + j) as f32);
+        let bias = vec![1.0, 2.0, 3.0, 4.0];
+        let y = bsr_linear(&bsr, &x, Some(&bias));
+        for o in 0..4 {
+            for j in 0..3 {
+                assert_eq!(y.at(o, j), bias[o]);
+            }
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Dense linear kernels in feature-major layout.
+//!
+//! `linear_dense` is the single-threaded compiled-dense reference;
+//! `linear_dense_parallel` adds row-band threading. Both use the axpy
+//! loop order (`Y[o,:] += W[o,i] * X[i,:]`), which LLVM auto-vectorizes
+//! over the contiguous token dimension — representative of what TVM's
+//! dense schedule (or XLA's Eigen backend) achieves on CPU, and the fair
+//! "compiled dense" baseline for the TVM⁺/Dense ratios when the PJRT
+//! artifact path is not in play.
+
+use crate::sparse::dense::Matrix;
+use crate::util::pool;
+
+/// `Y[O,T] = W[O,I] · X[I,T] (+ bias[O])`, single-threaded.
+pub fn linear_dense(w: &Matrix, x: &Matrix, bias: Option<&[f32]>) -> Matrix {
+    assert_eq!(w.cols, x.rows, "linear_dense: W cols {} != X rows {}", w.cols, x.rows);
+    let mut y = Matrix::zeros(w.rows, x.cols);
+    linear_dense_into(w, x, bias, 0..w.rows, &mut y);
+    y
+}
+
+/// Multi-threaded variant: output row bands are computed by the scoped
+/// pool. `threads == 1` falls back to the single-threaded path.
+pub fn linear_dense_parallel(w: &Matrix, x: &Matrix, bias: Option<&[f32]>, threads: usize) -> Matrix {
+    assert_eq!(w.cols, x.rows);
+    let mut y = Matrix::zeros(w.rows, x.cols);
+    if threads <= 1 {
+        linear_dense_into(w, x, bias, 0..w.rows, &mut y);
+        return y;
+    }
+    let t_cols = x.cols;
+    // Split Y into disjoint row bands; each worker writes only its band.
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    pool::parallel_chunks(w.rows, threads, |_, range| {
+        // SAFETY: bands are disjoint row ranges of Y; each worker writes
+        // only rows in `range`.
+        let band = unsafe {
+            std::slice::from_raw_parts_mut(y_ptr.get().add(range.start * t_cols), range.len() * t_cols)
+        };
+        let mut band_m = BandMut {
+            data: band,
+            cols: t_cols,
+            row0: range.start,
+        };
+        linear_dense_band(w, x, bias, range, &mut band_m);
+    });
+    y
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    /// Accessor: method call makes closures capture the whole struct
+    /// (edition-2021 disjoint capture would otherwise grab the raw
+    /// pointer field, which is not Sync).
+    #[inline]
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+struct BandMut<'a> {
+    data: &'a mut [f32],
+    cols: usize,
+    row0: usize,
+}
+
+impl<'a> BandMut<'a> {
+    #[inline]
+    fn row_mut(&mut self, o: usize) -> &mut [f32] {
+        let r = o - self.row0;
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+fn linear_dense_into(
+    w: &Matrix,
+    x: &Matrix,
+    bias: Option<&[f32]>,
+    rows: std::ops::Range<usize>,
+    y: &mut Matrix,
+) {
+    let cols = y.cols;
+    let mut band = BandMut {
+        data: &mut y.data[rows.start * cols..rows.end * cols],
+        cols,
+        row0: rows.start,
+    };
+    linear_dense_band(w, x, bias, rows, &mut band);
+}
+
+/// Register-tile width: 64 f32 = 4 AVX-512 (or 8 AVX2) accumulators held
+/// across the whole contraction, so Y is written once per tile instead of
+/// once per unrolled i-step (EXPERIMENTS.md §Perf L3-3).
+const JT: usize = 64;
+
+fn linear_dense_band(
+    w: &Matrix,
+    x: &Matrix,
+    bias: Option<&[f32]>,
+    rows: std::ops::Range<usize>,
+    y: &mut BandMut<'_>,
+) {
+    let t = x.cols;
+    let k = w.cols;
+    for o in rows {
+        let wrow = w.row(o);
+        let yrow = &mut y.row_mut(o)[..t];
+        let b = bias.map(|b| b[o]).unwrap_or(0.0);
+        // full 64-wide register tiles
+        let mut jt = 0;
+        while jt + JT <= t {
+            let mut acc = [0.0f32; JT];
+            for i in 0..k {
+                let a = wrow[i];
+                let xr = &x.row(i)[jt..jt + JT];
+                for u in 0..JT {
+                    acc[u] += a * xr[u];
+                }
+            }
+            let dst = &mut yrow[jt..jt + JT];
+            for u in 0..JT {
+                dst[u] = acc[u] + b;
+            }
+            jt += JT;
+        }
+        // ragged tail: same structure on the remaining columns
+        if jt < t {
+            let rem = t - jt;
+            let mut acc = [0.0f32; JT];
+            let acc = &mut acc[..rem];
+            for i in 0..k {
+                let a = wrow[i];
+                let xr = &x.row(i)[jt..jt + rem];
+                for u in 0..rem {
+                    acc[u] += a * xr[u];
+                }
+            }
+            for u in 0..rem {
+                yrow[jt + u] = acc[u] + b;
+            }
+        }
+    }
+}
+
+/// Transpose between token-major `[T,H]` and feature-major `[H,T]`
+/// (either direction — transposition is its own inverse). Cache-blocked.
+pub fn transpose(src: &Matrix) -> Matrix {
+    const B: usize = 32;
+    let mut out = Matrix::zeros(src.cols, src.rows);
+    for ib in (0..src.rows).step_by(B) {
+        for jb in (0..src.cols).step_by(B) {
+            for i in ib..(ib + B).min(src.rows) {
+                let row = src.row(i);
+                for j in jb..(jb + B).min(src.cols) {
+                    out.data[j * src.rows + i] = row[j];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, assert_allclose};
+    use crate::util::rng::Rng;
+
+    fn reference(w: &Matrix, x: &Matrix, bias: Option<&[f32]>) -> Matrix {
+        let mut y = w.matmul_ref(x);
+        if let Some(b) = bias {
+            for o in 0..y.rows {
+                for j in 0..y.cols {
+                    let v = y.at(o, j) + b[o];
+                    y.set(o, j, v);
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn matches_reference_no_bias() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(13, 29, 1.0, &mut rng);
+        let x = Matrix::randn(29, 7, 1.0, &mut rng);
+        let got = linear_dense(&w, &x, None);
+        let want = reference(&w, &x, None);
+        assert_allclose(&got.data, &want.data, 1e-5, 1e-6, "dense");
+    }
+
+    #[test]
+    fn matches_reference_with_bias() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(8, 16, 1.0, &mut rng);
+        let x = Matrix::randn(16, 5, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..8).map(|i| i as f32 * 0.5).collect();
+        let got = linear_dense(&w, &x, Some(&bias));
+        let want = reference(&w, &x, Some(&bias));
+        assert_allclose(&got.data, &want.data, 1e-5, 1e-6, "dense+bias");
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(64, 96, 1.0, &mut rng);
+        let x = Matrix::randn(96, 33, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..64).map(|_| rng.f32()).collect();
+        let serial = linear_dense(&w, &x, Some(&bias));
+        for threads in [2, 3, 8] {
+            let par = linear_dense_parallel(&w, &x, Some(&bias), threads);
+            assert_allclose(&par.data, &serial.data, 1e-6, 1e-7, "parallel");
+        }
+    }
+
+    #[test]
+    fn odd_contraction_tail_handled() {
+        // contraction dim not divisible by the unroll factor
+        let mut rng = Rng::new(4);
+        for k in [1usize, 2, 3, 5, 7] {
+            let w = Matrix::randn(3, k, 1.0, &mut rng);
+            let x = Matrix::randn(k, 4, 1.0, &mut rng);
+            let got = linear_dense(&w, &x, None);
+            let want = reference(&w, &x, None);
+            assert_allclose(&got.data, &want.data, 1e-5, 1e-6, &format!("k={k}"));
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip_property() {
+        propcheck::check(
+            "transpose involution",
+            16,
+            |rng| {
+                let r = rng.range(1, 70);
+                let c = rng.range(1, 70);
+                Matrix::randn(r, c, 1.0, &mut rng.fork(1))
+            },
+            |m| {
+                if transpose(&transpose(m)) == *m {
+                    Ok(())
+                } else {
+                    Err("t(t(m)) != m".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn transpose_matches_method() {
+        let mut rng = Rng::new(5);
+        let m = Matrix::randn(50, 41, 1.0, &mut rng);
+        assert_eq!(transpose(&m), m.transpose());
+    }
+}

@@ -1,0 +1,30 @@
+//! Compute kernels — the Rust analog of TVM's generated CPU code.
+//!
+//! ## Data layout convention: feature-major activations
+//!
+//! Activations flow through the encoder as `[features, tokens]` matrices
+//! (a column per token). This is the layout choice that makes both the
+//! dense and the BSR linear kernels stream:
+//!
+//! * dense `Y = W·X`: the inner loop is an axpy over the token dimension
+//!   (`Y[o,:] += W[o,i] · X[i,:]`), fully contiguous;
+//! * BSR `Y = W_bsr·X`: identical axpy structure but only over *stored*
+//!   blocks — FLOPs scale with `nnz`, and a `1×C` block touches `C`
+//!   *consecutive* X rows, which is exactly why the paper's linear blocks
+//!   win on CPU (§3, Table 1).
+//!
+//! Per-token reductions (layernorm statistics, softmax) become column
+//! operations; they are implemented as row sweeps accumulating per-column
+//! vectors, so they vectorize over tokens too.
+//!
+//! The eager "PyTorch"/"TensorFlow" baselines deliberately do *not* live
+//! here — they are in [`crate::interp`] with token-major layout and naive
+//! loop nests, because they model uncompiled framework execution.
+
+pub mod attention;
+pub mod bsr_spmm;
+pub mod dense_matmul;
+pub mod ops;
+
+pub use bsr_spmm::{bsr_linear, bsr_linear_planned};
+pub use dense_matmul::{linear_dense, linear_dense_parallel};

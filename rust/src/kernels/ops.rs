@@ -1,0 +1,207 @@
+//! Elementwise / normalization ops in feature-major layout.
+//!
+//! Per-token reductions (layernorm statistics, softmax denominators)
+//! become *column* reductions here; they are computed by sweeping rows and
+//! accumulating per-column vectors, so every inner loop runs over the
+//! contiguous token dimension.
+
+use crate::sparse::dense::Matrix;
+
+/// LayerNorm over the feature dimension, feature-major input `[H, T]`:
+/// each *column* (token) is normalized. `gamma`/`beta` are per-feature.
+pub fn layernorm_fm(x: &mut Matrix, gamma: &[f32], beta: &[f32], eps: f32) {
+    let (h, t) = (x.rows, x.cols);
+    assert_eq!(gamma.len(), h, "gamma length");
+    assert_eq!(beta.len(), h, "beta length");
+    // Pass 1: per-token mean and raw second moment, accumulated row-wise.
+    let mut mean = vec![0.0f32; t];
+    let mut sq = vec![0.0f32; t];
+    for i in 0..h {
+        let row = x.row(i);
+        for j in 0..t {
+            mean[j] += row[j];
+            sq[j] += row[j] * row[j];
+        }
+    }
+    let inv_h = 1.0 / h as f32;
+    let mut inv_std = vec![0.0f32; t];
+    for j in 0..t {
+        mean[j] *= inv_h;
+        let var = (sq[j] * inv_h - mean[j] * mean[j]).max(0.0);
+        inv_std[j] = 1.0 / (var + eps).sqrt();
+    }
+    // Pass 2: normalize + affine, row-wise.
+    for i in 0..h {
+        let (g, b) = (gamma[i], beta[i]);
+        let row = x.row_mut(i);
+        for j in 0..t {
+            row[j] = (row[j] - mean[j]) * inv_std[j] * g + b;
+        }
+    }
+}
+
+/// GELU activation (tanh approximation, the BERT convention), in place.
+pub fn gelu(x: &mut Matrix) {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    for v in x.data.iter_mut() {
+        let u = *v;
+        let inner = C * (u + 0.044715 * u * u * u);
+        *v = 0.5 * u * (1.0 + inner.tanh());
+    }
+}
+
+/// Exact GELU via erf, used as the oracle in tests (and matching jax.nn.gelu
+/// with approximate=False).
+pub fn gelu_exact(x: f32) -> f32 {
+    0.5 * x * (1.0 + erf(x / std::f32::consts::SQRT_2))
+}
+
+/// Abramowitz–Stegun 7.1.26 erf approximation (|err| < 1.5e-7).
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Row-wise softmax of a `[rows, cols]` matrix (token-major attention
+/// scores: one row per query position). Numerically stabilized.
+pub fn softmax_rows(x: &mut Matrix) {
+    for i in 0..x.rows {
+        let row = x.row_mut(i);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// `y += x` elementwise (residual connection).
+pub fn add_inplace(y: &mut Matrix, x: &Matrix) {
+    assert_eq!(y.rows, x.rows);
+    assert_eq!(y.cols, x.cols);
+    for (a, b) in y.data.iter_mut().zip(&x.data) {
+        *a += b;
+    }
+}
+
+/// Broadcast-add a per-feature bias to a feature-major matrix.
+pub fn bias_add_fm(y: &mut Matrix, bias: &[f32]) {
+    assert_eq!(y.rows, bias.len());
+    for i in 0..y.rows {
+        let b = bias[i];
+        for v in y.row_mut(i) {
+            *v += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::assert_allclose;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn layernorm_columns_are_standardized() {
+        let mut rng = Rng::new(1);
+        let mut x = Matrix::randn(64, 7, 2.0, &mut rng);
+        let gamma = vec![1.0; 64];
+        let beta = vec![0.0; 64];
+        layernorm_fm(&mut x, &gamma, &beta, 1e-5);
+        for j in 0..7 {
+            let mut mean = 0.0f64;
+            let mut var = 0.0f64;
+            for i in 0..64 {
+                mean += x.at(i, j) as f64;
+            }
+            mean /= 64.0;
+            for i in 0..64 {
+                let d = x.at(i, j) as f64 - mean;
+                var += d * d;
+            }
+            var /= 64.0;
+            assert!(mean.abs() < 1e-4, "col {j} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn layernorm_affine_applied() {
+        let mut x = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let gamma = vec![2.0, 2.0];
+        let beta = vec![10.0, -10.0];
+        layernorm_fm(&mut x, &gamma, &beta, 1e-6);
+        // each column was (±1) after standardization
+        assert!((x.at(0, 0) - (10.0 - 2.0)).abs() < 1e-3, "{}", x.at(0, 0));
+        assert!((x.at(1, 0) - (-10.0 + 2.0)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_matches_exact_within_tolerance() {
+        let vals: Vec<f32> = (-40..=40).map(|i| i as f32 * 0.1).collect();
+        let mut m = Matrix::from_vec(1, vals.len(), vals.clone());
+        gelu(&mut m);
+        let exact: Vec<f32> = vals.iter().map(|&v| gelu_exact(v)).collect();
+        assert_allclose(&m.data, &exact, 5e-3, 5e-3, "gelu tanh vs erf");
+    }
+
+    #[test]
+    fn gelu_fixed_points() {
+        let mut m = Matrix::from_vec(1, 3, vec![0.0, 10.0, -10.0]);
+        gelu(&mut m);
+        assert_eq!(m.data[0], 0.0);
+        assert!((m.data[1] - 10.0).abs() < 1e-4);
+        assert!(m.data[2].abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_order_preserved() {
+        let mut rng = Rng::new(2);
+        let mut x = Matrix::randn(5, 17, 3.0, &mut rng);
+        let before = x.clone();
+        softmax_rows(&mut x);
+        for i in 0..5 {
+            let s: f32 = x.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sum {s}");
+            // argmax preserved
+            let argmax_b = (0..17)
+                .max_by(|&a, &b| before.at(i, a).partial_cmp(&before.at(i, b)).unwrap())
+                .unwrap();
+            let argmax_a = (0..17)
+                .max_by(|&a, &b| x.at(i, a).partial_cmp(&x.at(i, b)).unwrap())
+                .unwrap();
+            assert_eq!(argmax_a, argmax_b);
+        }
+    }
+
+    #[test]
+    fn softmax_extreme_values_stable() {
+        let mut x = Matrix::from_vec(1, 3, vec![1000.0, 1001.0, -1000.0]);
+        softmax_rows(&mut x);
+        assert!(x.data.iter().all(|v| v.is_finite()));
+        assert!((x.data.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(x.data[1] > x.data[0]);
+    }
+
+    #[test]
+    fn residual_and_bias() {
+        let mut y = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let x = Matrix::from_vec(2, 2, vec![10.0, 10.0, 10.0, 10.0]);
+        add_inplace(&mut y, &x);
+        assert_eq!(y.data, vec![11.0, 12.0, 13.0, 14.0]);
+        bias_add_fm(&mut y, &[1.0, -1.0]);
+        assert_eq!(y.data, vec![12.0, 13.0, 12.0, 13.0]);
+    }
+}

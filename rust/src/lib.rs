@@ -1,0 +1,35 @@
+//! # SparseBERT — algorithm ↔ compilation co-design for block-sparse inference
+//!
+//! Reproduction of *"Algorithm to Compilation Co-design: An Integrated View
+//! of Neural Network Sparsity"* (Guo & Huang, 2021) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination + sparse-runtime contribution:
+//!   BSR sparse kernels, a structure-reusing task scheduler (the paper's
+//!   TVM⁺ analog), eager dense baselines (the PyTorch/TF analogs), a PJRT
+//!   runtime for AOT-compiled XLA artifacts, and a serving coordinator.
+//! * **L2 (python/compile/model.py)** — the BERT compute graph in JAX,
+//!   lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — the Pallas BSR×dense kernel.
+//!
+//! Python never runs on the request path; the binary is self-contained once
+//! `make artifacts` has produced `artifacts/*.hlo.txt`.
+//!
+//! See `DESIGN.md` for the full experiment index and `EXPERIMENTS.md` for
+//! measured-vs-paper results.
+
+pub mod util;
+pub mod sparse;
+pub mod kernels;
+pub mod scheduler;
+pub mod interp;
+pub mod model;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench_harness;
+
+/// Crate version string, reported by the CLI and the serving stats endpoint.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default location of AOT artifacts relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";

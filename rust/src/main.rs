@@ -1,0 +1,554 @@
+//! `sparsebert` — CLI for the algorithm↔compilation co-design stack.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §4):
+//!
+//! ```text
+//! sparsebert table1    # Table 1: engine × block-config inference sweep
+//! sparsebert figure2   # Figure 2: TVM+/Dense curve (CSV + ASCII)
+//! sparsebert table2    # Table 2: render accuracy table from artifacts
+//! sparsebert serve     # TCP serving coordinator (JSON-lines protocol)
+//! sparsebert client    # one-shot request against a running server
+//! sparsebert prune     # prune a weight bundle and report structure stats
+//! sparsebert inspect   # pattern/task-reuse introspection (follow-up #1)
+//! sparsebert selftest  # cross-engine numerical agreement check
+//! ```
+
+use anyhow::{bail, Context, Result};
+use sparsebert::bench_harness::figure2::build_figure2;
+use sparsebert::bench_harness::{report, run_table1, Table1Config};
+use sparsebert::coordinator::batcher::BatchPolicy;
+use sparsebert::coordinator::server::{Client, Server};
+use sparsebert::coordinator::Router;
+use sparsebert::interp::bert::InterpEngine;
+use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
+use sparsebert::model::engine::Engine;
+use sparsebert::model::{BertConfig, BertWeights, PruneMode, PruneSpec};
+use sparsebert::scheduler::{AutoScheduler, HwSpec};
+use sparsebert::sparse::pattern::PatternStats;
+use sparsebert::sparse::prune::BlockShape;
+use sparsebert::sparse::BsrMatrix;
+use sparsebert::util::argparse::Parser;
+use sparsebert::util::json::{self, Json};
+use sparsebert::util::pool::default_threads;
+use sparsebert::util::tensorfile::{artifacts_dir, TensorBundle};
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd {
+        "table1" => cmd_table1(rest),
+        "figure2" => cmd_figure2(rest),
+        "table2" => cmd_table2(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
+        "prune" => cmd_prune(rest),
+        "inspect" => cmd_inspect(rest),
+        "selftest" => cmd_selftest(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    format!(
+        "sparsebert {} — block-sparse BERT inference co-design (Guo & Huang 2021 reproduction)\n\n\
+         commands:\n\
+         \x20 table1     regenerate Table 1 (inference ms per engine × block config)\n\
+         \x20 figure2    regenerate Figure 2 (TVM+/Dense curve)\n\
+         \x20 table2     render Table 2 from artifacts/table2.json (run `make table2` first)\n\
+         \x20 serve      start the serving coordinator (TCP, JSON lines)\n\
+         \x20 client     send one request to a running server\n\
+         \x20 prune      prune synthetic/bundled weights, print structure stats\n\
+         \x20 inspect    sparsity-pattern & scheduler-reuse introspection\n\
+         \x20 selftest   cross-engine numerical agreement check\n\n\
+         run `sparsebert <command> --help` for options",
+        sparsebert::VERSION
+    )
+}
+
+// ---------------------------------------------------------------------------
+// table1 / figure2
+// ---------------------------------------------------------------------------
+
+fn sweep_parser(name: &str) -> Parser {
+    Parser::new(name, "Table 1 / Figure 2 sweep")
+        .opt("layers", "2", "encoder layers (12 = paper geometry)")
+        .opt("seq", "128", "sequence length")
+        .opt("sparsity", "0.8", "target sparsity ratio")
+        .opt("pool", "16", "structured-prune pattern pool size")
+        .opt("samples", "0", "timed samples per cell (0 = env default)")
+        .opt("threads", "0", "worker threads (0 = auto)")
+        .opt("blocks", "", "comma-separated block subset, e.g. 1x32,16x16")
+        .opt("out", "", "write JSON results to this path")
+        .flag("no-eager", "skip the slow PyTorch/TF baseline cells")
+}
+
+fn sweep_config(args: &sparsebert::util::argparse::Args) -> Result<Table1Config> {
+    let mut cfg = Table1Config::default();
+    cfg.layers = args.get_usize("layers")?;
+    cfg.seq = args.get_usize("seq")?;
+    cfg.sparsity = args.get_f64("sparsity")?;
+    cfg.pool = args.get_usize("pool")?;
+    let samples = args.get_usize("samples")?;
+    if samples > 0 {
+        cfg.bench.samples = samples;
+    }
+    let threads = args.get_usize("threads")?;
+    if threads > 0 {
+        cfg.threads = threads;
+    }
+    cfg.eager_baselines = !args.flag("no-eager");
+    let blocks = args.get("blocks");
+    if !blocks.is_empty() {
+        let parsed: std::result::Result<Vec<BlockShape>, String> =
+            blocks.split(',').map(BlockShape::parse).collect();
+        cfg.only_blocks = Some(parsed.map_err(|e| anyhow::anyhow!(e))?);
+    }
+    Ok(cfg)
+}
+
+fn cmd_table1(argv: Vec<String>) -> Result<()> {
+    let args = sweep_parser("sparsebert table1").parse(argv)?;
+    let cfg = sweep_config(&args)?;
+    eprintln!(
+        "table1: L={} seq={} sparsity={} threads={} samples={} ({})",
+        cfg.layers,
+        cfg.seq,
+        cfg.sparsity,
+        cfg.threads,
+        cfg.bench.samples,
+        HwSpec::detect()
+    );
+    let rows = run_table1(&cfg);
+    println!("{}", report::render_table1(&rows, "Table 1 — inference times"));
+    if let Some(best) = report::argmin_config(&rows) {
+        println!(
+            "optimal block: {} (TVM+/Dense = {:.3}); linear series non-monotone: {}",
+            best.label,
+            best.ratio_mean,
+            report::linear_series_nonmonotone(&rows)
+        );
+    }
+    maybe_write_json(&args, &rows, &cfg)
+}
+
+fn cmd_figure2(argv: Vec<String>) -> Result<()> {
+    let args = sweep_parser("sparsebert figure2").parse(argv)?;
+    let mut cfg = sweep_config(&args)?;
+    // the eager cells don't feed Figure 2
+    cfg.eager_baselines = false;
+    let fig = build_figure2(run_table1(&cfg));
+    println!("{}", fig.ascii);
+    println!(
+        "best: {} at ratio {:.3} (linear block: {}); non-monotone: {}",
+        fig.best_label, fig.best_ratio, fig.best_is_linear, fig.nonmonotone
+    );
+    let out = args.get("out");
+    if !out.is_empty() {
+        std::fs::write(out, &fig.csv)?;
+        eprintln!("wrote {out}");
+    } else {
+        print!("{}", fig.csv);
+    }
+    Ok(())
+}
+
+fn maybe_write_json(
+    args: &sparsebert::util::argparse::Args,
+    rows: &[sparsebert::bench_harness::Table1Row],
+    cfg: &Table1Config,
+) -> Result<()> {
+    let out = args.get("out");
+    if !out.is_empty() {
+        let j = report::table1_json(
+            rows,
+            &[
+                ("experiment", Json::Str("table1".into())),
+                ("layers", Json::Num(cfg.layers as f64)),
+                ("seq", Json::Num(cfg.seq as f64)),
+                ("sparsity", Json::Num(cfg.sparsity)),
+                ("hw", Json::Str(HwSpec::detect().to_string())),
+            ],
+        );
+        std::fs::write(out, j.to_string_pretty())?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// table2
+// ---------------------------------------------------------------------------
+
+fn cmd_table2(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new("sparsebert table2", "render Table 2 from artifacts/table2.json")
+        .opt("file", "", "path to table2.json (default artifacts/table2.json)")
+        .parse(argv)?;
+    let path = if args.get("file").is_empty() {
+        artifacts_dir().join("table2.json")
+    } else {
+        args.get("file").into()
+    };
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {path:?} — run `make table2` first"))?;
+    let j = json::parse(&text)?;
+    let columns: Vec<String> = j
+        .get("columns")
+        .and_then(Json::as_arr)
+        .context("table2.json missing columns")?
+        .iter()
+        .filter_map(|c| c.as_str().map(String::from))
+        .collect();
+    let rows = j.get("rows").context("table2.json missing rows")?;
+    println!("== Table 2 — task accuracy (synthetic probe suite) ==");
+    print!("{:<12}", "Sparsity");
+    for c in &columns {
+        print!(" {c:>9}");
+    }
+    println!();
+    for label in ["Dense", "50% Zeros", "80% Zeros"] {
+        let Some(row) = rows.get(label) else { continue };
+        print!("{label:<12}");
+        for c in &columns {
+            let v = row.get(c).and_then(Json::as_f64).unwrap_or(f64::NAN);
+            print!(" {v:>9.1}");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// serve / client
+// ---------------------------------------------------------------------------
+
+fn build_engines(
+    weights: Arc<BertWeights>,
+    block: BlockShape,
+    sparsity: f64,
+    threads: usize,
+) -> Result<Vec<(String, Arc<dyn Engine>, Arc<BertWeights>)>> {
+    let mut out: Vec<(String, Arc<dyn Engine>, Arc<BertWeights>)> = Vec::new();
+    out.push((
+        "pytorch".into(),
+        Arc::new(InterpEngine::new(Arc::clone(&weights), false, threads)),
+        Arc::clone(&weights),
+    ));
+    out.push((
+        "tvm".into(),
+        Arc::new(CompiledDenseEngine::new(Arc::clone(&weights), threads)),
+        Arc::clone(&weights),
+    ));
+    let mut pruned = (*weights).clone();
+    pruned.prune(
+        &PruneSpec {
+            mode: PruneMode::Structured { pool: 16 },
+            sparsity,
+            block,
+        },
+        7,
+    );
+    let pruned = Arc::new(pruned);
+    let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
+    out.push((
+        "tvm+".into(),
+        Arc::new(SparseBsrEngine::new(
+            Arc::clone(&pruned),
+            block,
+            sched,
+            threads,
+        )?),
+        Arc::clone(&pruned),
+    ));
+    Ok(out)
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new("sparsebert serve", "serving coordinator (TCP JSON-lines)")
+        .opt("addr", "127.0.0.1:7878", "bind address")
+        .opt("model", "tiny", "model config: tiny|micro|base")
+        .opt("weights", "", "weight bundle dir (default: synthetic init)")
+        .opt("block", "1x32", "block shape for the tvm+ variant")
+        .opt("sparsity", "0.8", "sparsity for the tvm+ variant")
+        .opt("max-batch", "8", "dynamic batch size cap")
+        .opt("batch-wait-ms", "2", "dynamic batch window")
+        .opt("workers", "0", "batch workers (0 = auto)")
+        .parse(argv)?;
+    let cfg = match args.get("model") {
+        "base" => BertConfig::base(),
+        "micro" => BertConfig::micro(),
+        _ => BertConfig::tiny(),
+    };
+    let weights = if args.get("weights").is_empty() {
+        Arc::new(BertWeights::synthetic(&cfg, 1234))
+    } else {
+        let bundle = TensorBundle::load(std::path::Path::new(args.get("weights")))?;
+        Arc::new(BertWeights::from_bundle(&bundle)?)
+    };
+    let block = BlockShape::parse(args.get("block")).map_err(|e| anyhow::anyhow!(e))?;
+    let threads = match args.get_usize("workers")? {
+        0 => default_threads(),
+        n => n,
+    };
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch")?,
+        max_wait: std::time::Duration::from_millis(args.get_usize("batch-wait-ms")? as u64),
+    };
+    let mut router = Router::new();
+    for (name, engine, w) in build_engines(weights, block, args.get_f64("sparsity")?, threads)? {
+        router.register(&name, engine, w, policy, threads);
+    }
+    let router = Arc::new(router);
+    eprintln!(
+        "serving variants {:?} on {} (model={}, block={block}, hw: {})",
+        router.variants(),
+        args.get("addr"),
+        args.get("model"),
+        HwSpec::detect()
+    );
+    let server = Server::new(Arc::clone(&router));
+    server.serve(args.get("addr"), |addr| eprintln!("listening on {addr}"))?;
+    router.shutdown();
+    eprintln!("server stopped");
+    Ok(())
+}
+
+fn cmd_client(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new("sparsebert client", "one-shot request to a running server")
+        .opt("addr", "127.0.0.1:7878", "server address")
+        .opt("variant", "tvm+", "engine variant")
+        .opt("tokens", "", "comma-separated token ids (default: random 32)")
+        .flag("stats", "fetch server stats instead of inferring")
+        .parse(argv)?;
+    let mut client = Client::connect(args.get("addr"))?;
+    if args.flag("stats") {
+        let mut req = Json::obj();
+        req.set("cmd", "stats");
+        println!("{}", client.call(&req)?.to_string_pretty());
+        return Ok(());
+    }
+    let tokens: Vec<u32> = if args.get("tokens").is_empty() {
+        let mut rng = sparsebert::util::rng::Rng::new(9);
+        (0..32).map(|_| rng.range(10, 8000) as u32).collect()
+    } else {
+        args.get("tokens")
+            .split(',')
+            .map(|t| t.trim().parse::<u32>().context("bad token id"))
+            .collect::<Result<_>>()?
+    };
+    let resp = client.infer(args.get("variant"), &tokens)?;
+    if let Some(err) = resp.get("error") {
+        bail!("server error: {}", err.to_string_compact());
+    }
+    println!(
+        "id={} latency={}us queue={}us compute={}us batch={} cls[0..4]={:?}",
+        resp.get("id").unwrap().to_string_compact(),
+        resp.get("latency_us").unwrap().to_string_compact(),
+        resp.get("queue_us").unwrap().to_string_compact(),
+        resp.get("compute_us").unwrap().to_string_compact(),
+        resp.get("batch").unwrap().to_string_compact(),
+        resp.get("cls")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().take(4).filter_map(Json::as_f64).collect::<Vec<_>>())
+            .unwrap_or_default()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// prune / inspect / selftest
+// ---------------------------------------------------------------------------
+
+fn cmd_prune(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new("sparsebert prune", "prune weights, report structure, save bundle")
+        .opt("model", "tiny", "model config: tiny|micro|base")
+        .opt("sparsity", "0.8", "target sparsity")
+        .opt("block", "1x32", "block shape (1x1 = irregular)")
+        .opt("pool", "16", "pattern pool size")
+        .opt("seed", "42", "weight seed")
+        .opt("out", "", "save pruned bundle to this directory")
+        .parse(argv)?;
+    let cfg = match args.get("model") {
+        "base" => BertConfig::base(),
+        "micro" => BertConfig::micro(),
+        _ => BertConfig::tiny(),
+    };
+    let block = BlockShape::parse(args.get("block")).map_err(|e| anyhow::anyhow!(e))?;
+    let sparsity = args.get_f64("sparsity")?;
+    let mut w = BertWeights::synthetic(&cfg, args.get_usize("seed")? as u64);
+    let spec = if block == BlockShape::new(1, 1) {
+        PruneSpec::irregular(sparsity)
+    } else {
+        PruneSpec {
+            mode: PruneMode::Structured {
+                pool: args.get_usize("pool")?,
+            },
+            sparsity,
+            block,
+        }
+    };
+    let achieved = w.prune(&spec, 7);
+    println!(
+        "pruned {} ({} params) to {:.1}% zeros (target {:.1}%), block {block}",
+        args.get("model"),
+        cfg.param_count(),
+        achieved * 100.0,
+        sparsity * 100.0
+    );
+    let lw = &w.layers[0];
+    for (name, m) in lw.prunable() {
+        let bsr = BsrMatrix::from_dense(m, block)?;
+        let stats = PatternStats::of(&bsr);
+        println!(
+            "  layer0.{name}: {} nnz blocks / {} rows, {} distinct patterns, reuse {:.2}, footprint {}KB (dense {}KB)",
+            bsr.nnz_blocks(),
+            bsr.block_rows(),
+            stats.distinct,
+            stats.reuse_rate,
+            bsr.footprint_bytes() / 1024,
+            m.data.len() * 4 / 1024
+        );
+    }
+    if !args.get("out").is_empty() {
+        w.to_bundle().save(std::path::Path::new(args.get("out")))?;
+        println!("saved bundle to {}", args.get("out"));
+    }
+    Ok(())
+}
+
+fn cmd_inspect(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new(
+        "sparsebert inspect",
+        "pattern cardinality & scheduler reuse across the block sweep (paper follow-up #1)",
+    )
+    .opt("model", "tiny", "model config")
+    .opt("sparsity", "0.8", "sparsity ratio")
+    .opt("pool", "16", "pattern pool")
+    .opt("seed", "42", "weight seed")
+    .parse(argv)?;
+    let cfg = match args.get("model") {
+        "base" => BertConfig::base(),
+        "micro" => BertConfig::micro(),
+        _ => BertConfig::tiny(),
+    };
+    let sparsity = args.get_f64("sparsity")?;
+    let pool = args.get_usize("pool")?;
+    println!(
+        "{:<10} {:>8} {:>10} {:>10} {:>10} {:>12} {:>10}",
+        "block", "nnzb", "patterns", "reuse", "imbalance", "runs/row", "task-hits"
+    );
+    for block in BlockShape::paper_sweep() {
+        if !block.divides(cfg.hidden, cfg.hidden) {
+            continue;
+        }
+        let mut w = BertWeights::synthetic(&cfg, args.get_usize("seed")? as u64);
+        w.prune(
+            &PruneSpec {
+                mode: PruneMode::Structured { pool },
+                sparsity,
+                block,
+            },
+            7,
+        );
+        let sched = AutoScheduler::new(HwSpec::detect());
+        let mut nnzb = 0usize;
+        let mut distinct = 0usize;
+        let mut reuse = 0.0;
+        let mut imbalance: f64 = 0.0;
+        let mut runs = 0usize;
+        let mut rows = 0usize;
+        for (li, lw) in w.layers.iter().enumerate() {
+            for (name, m) in lw.prunable() {
+                let bsr = BsrMatrix::from_dense(m, block)?;
+                let stats = PatternStats::of(&bsr);
+                nnzb += bsr.nnz_blocks();
+                distinct += stats.distinct;
+                reuse += stats.reuse_rate;
+                imbalance = imbalance.max(stats.imbalance());
+                let plan = sched.plan(&format!("l{li}.{name}"), &bsr);
+                runs += plan
+                    .rows
+                    .iter()
+                    .map(|(p, _)| p.run_count())
+                    .sum::<usize>();
+                rows += plan.rows.len();
+            }
+        }
+        let n = (w.layers.len() * 6) as f64;
+        let snap = sched.buffer.stats.snapshot();
+        println!(
+            "{:<10} {:>8} {:>10} {:>10.3} {:>10.2} {:>12.2} {:>10}",
+            block.to_string(),
+            nnzb,
+            distinct,
+            reuse / n,
+            imbalance,
+            runs as f64 / rows.max(1) as f64,
+            snap.plan_hits
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selftest(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new("sparsebert selftest", "cross-engine numerical agreement")
+        .opt("seq", "16", "sequence length")
+        .flag("xla", "include the PJRT artifact engine (needs `make artifacts`)")
+        .parse(argv)?;
+    let cfg = BertConfig::micro();
+    let w = Arc::new(BertWeights::synthetic(&cfg, 77));
+    let mut pruned = (*w).clone();
+    let block = BlockShape::new(2, 4);
+    pruned.prune(&PruneSpec::structured(0.6, block), 3);
+    let pruned = Arc::new(pruned);
+    let tokens: Vec<u32> = (0..args.get_usize("seq")? as u32).collect();
+    let x = pruned.embed(&tokens);
+    let eager = InterpEngine::new(Arc::clone(&pruned), false, 1);
+    let compiled = CompiledDenseEngine::new(Arc::clone(&pruned), 2);
+    let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
+    let sparse = SparseBsrEngine::new(Arc::clone(&pruned), block, sched, 2)?;
+    let ye = eager.forward(&x);
+    let yc = compiled.forward(&x);
+    let ys = sparse.forward(&x);
+    let d_ec = sparsebert::util::propcheck::max_abs_diff(&ye.data, &yc.data);
+    let d_cs = sparsebert::util::propcheck::max_abs_diff(&yc.data, &ys.data);
+    println!("eager vs compiled   max|Δ| = {d_ec:.2e}");
+    println!("compiled vs sparse  max|Δ| = {d_cs:.2e}");
+    let mut ok = d_ec < 1e-3 && d_cs < 1e-3;
+    if args.flag("xla") {
+        let svc = sparsebert::runtime::service::RuntimeService::start(artifacts_dir())?;
+        let dense_micro = Arc::new(BertWeights::synthetic(&cfg, 77));
+        let xla =
+            sparsebert::runtime::XlaEngine::new(svc.handle.clone(), "encoder_micro", &dense_micro)?;
+        let toks: Vec<u32> = (0..xla.tokens() as u32).collect();
+        let x8 = dense_micro.embed(&toks);
+        let yx = xla.forward(&x8);
+        let yc8 = CompiledDenseEngine::new(Arc::clone(&dense_micro), 1).forward(&x8);
+        let d_xc = sparsebert::util::propcheck::max_abs_diff(&yx.data, &yc8.data);
+        println!("xla vs compiled     max|Δ| = {d_xc:.2e}");
+        ok &= d_xc < 5e-3;
+    }
+    if ok {
+        println!("selftest OK");
+        Ok(())
+    } else {
+        bail!("selftest FAILED: engines disagree beyond tolerance")
+    }
+}

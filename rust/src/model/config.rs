@@ -1,0 +1,162 @@
+//! Model configuration, following Devlin et al.'s notation: `L` layers,
+//! hidden size `H`, `A` attention heads.
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// BERT-family encoder configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BertConfig {
+    /// Number of transformer blocks (L).
+    pub layers: usize,
+    /// Hidden size (H).
+    pub hidden: usize,
+    /// Attention heads (A).
+    pub heads: usize,
+    /// FFN intermediate size (4·H for BERT).
+    pub intermediate: usize,
+    /// WordPiece vocabulary size.
+    pub vocab: usize,
+    /// Maximum sequence length (position embedding table size).
+    pub max_seq: usize,
+}
+
+impl BertConfig {
+    /// BERT_BASE: L=12, H=768, A=12 — the paper's pruning target
+    /// (110M parameters). Used for the Table 1 / Figure 2 perf sweeps.
+    pub fn base() -> BertConfig {
+        BertConfig {
+            layers: 12,
+            hidden: 768,
+            heads: 12,
+            intermediate: 3072,
+            vocab: 30_522,
+            max_seq: 512,
+        }
+    }
+
+    /// Tiny config actually *trained* in this repo (Table 2 pipeline and
+    /// the end-to-end training example): L=4, H=256, A=4, ~13M params
+    /// with an 8k vocab.
+    pub fn tiny() -> BertConfig {
+        BertConfig {
+            layers: 4,
+            hidden: 256,
+            heads: 4,
+            intermediate: 1024,
+            vocab: 8192,
+            max_seq: 128,
+        }
+    }
+
+    /// Single-layer micro config for fast unit tests.
+    pub fn micro() -> BertConfig {
+        BertConfig {
+            layers: 1,
+            hidden: 32,
+            heads: 2,
+            intermediate: 64,
+            vocab: 101,
+            max_seq: 16,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.hidden % self.heads != 0 {
+            bail!("hidden {} not divisible by heads {}", self.hidden, self.heads);
+        }
+        if self.layers == 0 || self.hidden == 0 || self.vocab == 0 || self.max_seq == 0 {
+            bail!("degenerate config: {self:?}");
+        }
+        Ok(())
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Total parameter count (embeddings + encoder), matching the usual
+    /// BERT accounting (no pooler/MLM head).
+    pub fn param_count(&self) -> usize {
+        let h = self.hidden;
+        let i = self.intermediate;
+        let emb = self.vocab * h + self.max_seq * h + 2 * h; // tok + pos + emb LN
+        let per_layer = 4 * (h * h + h)      // q,k,v,o + biases
+            + (i * h + i) + (h * i + h)      // ffn up/down + biases
+            + 4 * h; // two layernorms
+        emb + self.layers * per_layer
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("layers", self.layers)
+            .set("hidden", self.hidden)
+            .set("heads", self.heads)
+            .set("intermediate", self.intermediate)
+            .set("vocab", self.vocab)
+            .set("max_seq", self.max_seq);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<BertConfig> {
+        let field = |name: &str| -> Result<usize> {
+            j.get(name)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("config missing field '{name}'"))
+        };
+        let cfg = BertConfig {
+            layers: field("layers")?,
+            hidden: field("hidden")?,
+            heads: field("heads")?,
+            intermediate: field("intermediate")?,
+            vocab: field("vocab")?,
+            max_seq: field("max_seq")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_matches_paper() {
+        let c = BertConfig::base();
+        assert_eq!(c.layers, 12);
+        assert_eq!(c.hidden, 768);
+        assert_eq!(c.heads, 12);
+        c.validate().unwrap();
+        // "total parameters = 110M"
+        let m = c.param_count() as f64 / 1e6;
+        assert!((100.0..120.0).contains(&m), "param count {m}M");
+    }
+
+    #[test]
+    fn tiny_is_trainable_scale() {
+        let c = BertConfig::tiny();
+        c.validate().unwrap();
+        let m = c.param_count() as f64 / 1e6;
+        assert!(m < 20.0, "tiny should be <20M params, got {m}M");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = BertConfig::micro();
+        c.heads = 3; // 32 % 3 != 0
+        assert!(c.validate().is_err());
+        let mut c2 = BertConfig::micro();
+        c2.layers = 0;
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = BertConfig::tiny();
+        let j = c.to_json();
+        let back = BertConfig::from_json(&j).unwrap();
+        assert_eq!(c, back);
+        assert!(BertConfig::from_json(&Json::obj()).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! The engine abstraction: one trait, five implementations — the five
+//! columns of the paper's Table 1.
+
+use crate::sparse::dense::Matrix;
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// An inference engine over embedded activations.
+///
+/// Input/output are token-major `[T, H]`; embedding lookup is common to
+/// all engines ([`super::weights::BertWeights::embed`]) and excluded from
+/// engine timing, mirroring the paper's focus on transformer-block
+/// execution.
+pub trait Engine: Send + Sync {
+    /// Engine label as it appears in reports (`"pytorch"`, `"tvm+"`, …).
+    fn name(&self) -> &str;
+
+    /// Run the full encoder stack.
+    fn forward(&self, x: &Matrix) -> Matrix;
+
+    /// Bytes of weight storage actually touched by the hot path
+    /// (footprint reporting; dense engines = dense bytes, BSR engines =
+    /// data+indices+indptr).
+    fn weight_footprint_bytes(&self) -> usize;
+}
+
+/// Engine selector used by the CLI, benches, and the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Eager dot-product interpreter — "PyTorch ms".
+    PyTorch,
+    /// Eager blocked interpreter — "Tensorflow ms".
+    TensorFlow,
+    /// Compiled-style dense kernels — "TVM ms" (and the negative-control
+    /// sparse rows: pruned weights executed dense).
+    TvmStd,
+    /// BSR kernels + task-reuse scheduler — "TVM⁺ ms".
+    TvmPlus,
+    /// XLA/PJRT executing the AOT JAX artifact (requires `make artifacts`).
+    XlaDense,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "pytorch" | "torch" | "interp" => EngineKind::PyTorch,
+            "tensorflow" | "tf" => EngineKind::TensorFlow,
+            "tvm" | "tvm-std" | "dense" => EngineKind::TvmStd,
+            "tvm+" | "tvmplus" | "tvm-plus" | "bsr" | "sparse" => EngineKind::TvmPlus,
+            "xla" | "xla-dense" => EngineKind::XlaDense,
+            other => bail!(
+                "unknown engine '{other}' (expected pytorch|tensorflow|tvm|tvm+|xla)"
+            ),
+        })
+    }
+
+    pub fn all() -> [EngineKind; 5] {
+        [
+            EngineKind::PyTorch,
+            EngineKind::TensorFlow,
+            EngineKind::TvmStd,
+            EngineKind::TvmPlus,
+            EngineKind::XlaDense,
+        ]
+    }
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            EngineKind::PyTorch => "pytorch",
+            EngineKind::TensorFlow => "tensorflow",
+            EngineKind::TvmStd => "tvm",
+            EngineKind::TvmPlus => "tvm+",
+            EngineKind::XlaDense => "xla",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in EngineKind::all() {
+            assert_eq!(EngineKind::parse(&kind.to_string()).unwrap(), kind);
+        }
+        assert_eq!(EngineKind::parse("BSR").unwrap(), EngineKind::TvmPlus);
+        assert_eq!(EngineKind::parse("torch").unwrap(), EngineKind::PyTorch);
+        assert!(EngineKind::parse("onnx").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! BERT model layer: configuration, weights, pruning application, and the
+//! inference engines that realize the five Table-1 columns.
+//!
+//! | engine | Table 1 column | implementation |
+//! |---|---|---|
+//! | [`interp::bert::InterpEngine`] (dot) | PyTorch ms | eager token-major, dot matmul |
+//! | [`interp::bert::InterpEngine`] (blocked) | Tensorflow ms | eager token-major, blocked matmul |
+//! | [`bert::CompiledDenseEngine`] | TVM ms | fused feature-major compiled-style kernels; pruned weights stay dense → no benefit (the negative control) |
+//! | [`bert::SparseBsrEngine`] | TVM⁺ ms | BSR kernels + task-buffer scheduler |
+//! | [`crate::runtime::XlaEngine`] | TVM ms (AOT variant) | XLA/PJRT executing the L2 JAX artifact |
+//!
+//! [`interp`]: crate::interp
+
+pub mod config;
+pub mod engine;
+pub mod weights;
+pub mod bert;
+
+pub use config::BertConfig;
+pub use engine::{Engine, EngineKind};
+pub use weights::{BertWeights, LayerWeights, PruneMode, PruneSpec};

@@ -1,0 +1,396 @@
+//! Model weights: storage, synthetic initialization, pruning application,
+//! and Python↔Rust interchange.
+//!
+//! The perf experiments (Table 1 / Figure 2) use *synthetic* weights at
+//! BERT_BASE geometry — inference latency depends only on shapes and
+//! sparsity structure, not learned values (DESIGN.md §3). The accuracy
+//! experiments (Table 2) load weights actually trained by
+//! `python/compile/train.py` through [`BertWeights::from_bundle`].
+
+use super::config::BertConfig;
+use crate::sparse::convert::{dense_from_bundle, dense_to_bundle};
+use crate::sparse::dense::Matrix;
+use crate::sparse::prune::{
+    prune_structured_replicated, prune_unstructured, BlockShape,
+};
+use crate::util::rng::Rng;
+use crate::util::tensorfile::{NpyTensor, TensorBundle};
+use anyhow::{Context, Result};
+
+/// One transformer block's parameters. Weight matrices are `[out, in]`
+/// (PyTorch `nn.Linear` convention).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub bq: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub bv: Vec<f32>,
+    pub bo: Vec<f32>,
+    /// FFN up-projection `[I, H]`.
+    pub w_up: Matrix,
+    pub b_up: Vec<f32>,
+    /// FFN down-projection `[H, I]`.
+    pub w_down: Matrix,
+    pub b_down: Vec<f32>,
+    pub ln1_gamma: Vec<f32>,
+    pub ln1_beta: Vec<f32>,
+    pub ln2_gamma: Vec<f32>,
+    pub ln2_beta: Vec<f32>,
+}
+
+/// Full encoder weights.
+#[derive(Debug, Clone)]
+pub struct BertWeights {
+    pub config: BertConfig,
+    /// Token embedding `[V, H]`.
+    pub tok_emb: Matrix,
+    /// Position embedding `[max_seq, H]`.
+    pub pos_emb: Matrix,
+    pub emb_ln_gamma: Vec<f32>,
+    pub emb_ln_beta: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+}
+
+/// Which pruning algorithm to apply (paper §2.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PruneMode {
+    /// No pruning (dense baseline row).
+    None,
+    /// Irregular ℓ1 magnitude pruning (Table 1 "Irregular Sparsity").
+    Unstructured,
+    /// Group/block pruning with a bounded pattern pool — the pool models
+    /// the pattern replication group-lasso training produces (DESIGN.md
+    /// §6). `pool = usize::MAX` means independent per-row patterns.
+    Structured { pool: usize },
+}
+
+/// A full pruning prescription.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PruneSpec {
+    pub mode: PruneMode,
+    pub sparsity: f64,
+    pub block: BlockShape,
+}
+
+impl PruneSpec {
+    pub fn dense() -> PruneSpec {
+        PruneSpec {
+            mode: PruneMode::None,
+            sparsity: 0.0,
+            block: BlockShape::new(1, 1),
+        }
+    }
+
+    pub fn irregular(sparsity: f64) -> PruneSpec {
+        PruneSpec {
+            mode: PruneMode::Unstructured,
+            sparsity,
+            block: BlockShape::new(1, 1),
+        }
+    }
+
+    /// The paper's default experimental setting: structured pruning with
+    /// a pattern pool sized to `rows/8` (heavy-but-not-degenerate reuse).
+    pub fn structured(sparsity: f64, block: BlockShape) -> PruneSpec {
+        PruneSpec {
+            mode: PruneMode::Structured { pool: 16 },
+            sparsity,
+            block,
+        }
+    }
+}
+
+impl LayerWeights {
+    fn synthetic(cfg: &BertConfig, rng: &mut Rng) -> LayerWeights {
+        let h = cfg.hidden;
+        let i = cfg.intermediate;
+        let std = 0.02;
+        LayerWeights {
+            wq: Matrix::randn(h, h, std, rng),
+            wk: Matrix::randn(h, h, std, rng),
+            wv: Matrix::randn(h, h, std, rng),
+            wo: Matrix::randn(h, h, std, rng),
+            bq: vec![0.0; h],
+            bk: vec![0.0; h],
+            bv: vec![0.0; h],
+            bo: vec![0.0; h],
+            w_up: Matrix::randn(i, h, std, rng),
+            b_up: vec![0.0; i],
+            w_down: Matrix::randn(h, i, std, rng),
+            b_down: vec![0.0; h],
+            ln1_gamma: vec![1.0; h],
+            ln1_beta: vec![0.0; h],
+            ln2_gamma: vec![1.0; h],
+            ln2_beta: vec![0.0; h],
+        }
+    }
+
+    /// The prunable matrices with their conventional labels — "the
+    /// weights of these transformer blocks are our pruning target".
+    pub fn prunable_mut(&mut self) -> [(&'static str, &mut Matrix); 6] {
+        [
+            ("attn.wq", &mut self.wq),
+            ("attn.wk", &mut self.wk),
+            ("attn.wv", &mut self.wv),
+            ("attn.wo", &mut self.wo),
+            ("ffn.up", &mut self.w_up),
+            ("ffn.down", &mut self.w_down),
+        ]
+    }
+
+    pub fn prunable(&self) -> [(&'static str, &Matrix); 6] {
+        [
+            ("attn.wq", &self.wq),
+            ("attn.wk", &self.wk),
+            ("attn.wv", &self.wv),
+            ("attn.wo", &self.wo),
+            ("ffn.up", &self.w_up),
+            ("ffn.down", &self.w_down),
+        ]
+    }
+}
+
+impl BertWeights {
+    /// Deterministic synthetic weights at the given config.
+    pub fn synthetic(config: &BertConfig, seed: u64) -> BertWeights {
+        config.validate().expect("invalid config");
+        let mut rng = Rng::new(seed);
+        let layers = (0..config.layers)
+            .map(|l| LayerWeights::synthetic(config, &mut rng.fork(l as u64 + 1)))
+            .collect();
+        BertWeights {
+            tok_emb: Matrix::randn(config.vocab, config.hidden, 0.02, &mut rng),
+            pos_emb: Matrix::randn(config.max_seq, config.hidden, 0.02, &mut rng),
+            emb_ln_gamma: vec![1.0; config.hidden],
+            emb_ln_beta: vec![0.0; config.hidden],
+            layers,
+            config: config.clone(),
+        }
+    }
+
+    /// Embed a token sequence → token-major activations `[T, H]`
+    /// (token + position embeddings, then embedding layernorm).
+    pub fn embed(&self, tokens: &[u32]) -> Matrix {
+        let h = self.config.hidden;
+        assert!(
+            tokens.len() <= self.config.max_seq,
+            "sequence {} exceeds max_seq {}",
+            tokens.len(),
+            self.config.max_seq
+        );
+        let mut x = Matrix::zeros(tokens.len(), h);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let tok = (tok as usize).min(self.config.vocab - 1);
+            let erow = self.tok_emb.row(tok);
+            let prow = self.pos_emb.row(t);
+            let xrow = x.row_mut(t);
+            for j in 0..h {
+                xrow[j] = erow[j] + prow[j];
+            }
+        }
+        crate::interp::ops::layernorm_tm(&x, &self.emb_ln_gamma, &self.emb_ln_beta, 1e-5)
+    }
+
+    /// Apply a pruning prescription to every transformer block (the
+    /// embeddings are never pruned, matching the paper: transformer
+    /// blocks are the target). Returns achieved sparsity over pruned
+    /// parameters.
+    pub fn prune(&mut self, spec: &PruneSpec, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for (li, layer) in self.layers.iter_mut().enumerate() {
+            for (mi, (_, m)) in layer.prunable_mut().into_iter().enumerate() {
+                match spec.mode {
+                    PruneMode::None => {}
+                    PruneMode::Unstructured => {
+                        prune_unstructured(m, spec.sparsity);
+                    }
+                    PruneMode::Structured { pool } => {
+                        let mut stream = rng.fork((li * 16 + mi) as u64);
+                        prune_structured_replicated(m, spec.sparsity, spec.block, pool, &mut stream);
+                    }
+                }
+                total += m.data.len();
+                zeros += m.data.len() - m.count_nonzero();
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zeros as f64 / total as f64
+        }
+    }
+
+    /// Serialize to a tensor bundle (inverse of [`BertWeights::from_bundle`]).
+    pub fn to_bundle(&self) -> TensorBundle {
+        let mut b = TensorBundle::new();
+        b.meta.insert("format".into(), "sparsebert-weights-v1".into());
+        b.meta
+            .insert("config".into(), self.config.to_json().to_string_compact());
+        dense_to_bundle(&mut b, "emb.tok", &self.tok_emb);
+        dense_to_bundle(&mut b, "emb.pos", &self.pos_emb);
+        vec_to_bundle(&mut b, "emb.ln.gamma", &self.emb_ln_gamma);
+        vec_to_bundle(&mut b, "emb.ln.beta", &self.emb_ln_beta);
+        for (l, lw) in self.layers.iter().enumerate() {
+            let p = format!("layer{l}");
+            for (name, m) in lw.prunable() {
+                dense_to_bundle(&mut b, &format!("{p}.{name}"), m);
+            }
+            vec_to_bundle(&mut b, &format!("{p}.attn.bq"), &lw.bq);
+            vec_to_bundle(&mut b, &format!("{p}.attn.bk"), &lw.bk);
+            vec_to_bundle(&mut b, &format!("{p}.attn.bv"), &lw.bv);
+            vec_to_bundle(&mut b, &format!("{p}.attn.bo"), &lw.bo);
+            vec_to_bundle(&mut b, &format!("{p}.ffn.b_up"), &lw.b_up);
+            vec_to_bundle(&mut b, &format!("{p}.ffn.b_down"), &lw.b_down);
+            vec_to_bundle(&mut b, &format!("{p}.ln1.gamma"), &lw.ln1_gamma);
+            vec_to_bundle(&mut b, &format!("{p}.ln1.beta"), &lw.ln1_beta);
+            vec_to_bundle(&mut b, &format!("{p}.ln2.gamma"), &lw.ln2_gamma);
+            vec_to_bundle(&mut b, &format!("{p}.ln2.beta"), &lw.ln2_beta);
+        }
+        b
+    }
+
+    /// Load from a tensor bundle written by [`BertWeights::to_bundle`] or
+    /// by the Python trainer (`python/compile/io_utils.py` uses the same
+    /// naming).
+    pub fn from_bundle(b: &TensorBundle) -> Result<BertWeights> {
+        let cfg_text = b
+            .meta
+            .get("config")
+            .context("weights bundle missing 'config' meta")?;
+        let config = BertConfig::from_json(&crate::util::json::parse(cfg_text)?)?;
+        let vec_of = |name: &str| -> Result<Vec<f32>> {
+            Ok(b.get(name)?.f32_data.clone())
+        };
+        let mut layers = Vec::with_capacity(config.layers);
+        for l in 0..config.layers {
+            let p = format!("layer{l}");
+            layers.push(LayerWeights {
+                wq: dense_from_bundle(b, &format!("{p}.attn.wq"))?,
+                wk: dense_from_bundle(b, &format!("{p}.attn.wk"))?,
+                wv: dense_from_bundle(b, &format!("{p}.attn.wv"))?,
+                wo: dense_from_bundle(b, &format!("{p}.attn.wo"))?,
+                bq: vec_of(&format!("{p}.attn.bq"))?,
+                bk: vec_of(&format!("{p}.attn.bk"))?,
+                bv: vec_of(&format!("{p}.attn.bv"))?,
+                bo: vec_of(&format!("{p}.attn.bo"))?,
+                w_up: dense_from_bundle(b, &format!("{p}.ffn.up"))?,
+                b_up: vec_of(&format!("{p}.ffn.b_up"))?,
+                w_down: dense_from_bundle(b, &format!("{p}.ffn.down"))?,
+                b_down: vec_of(&format!("{p}.ffn.b_down"))?,
+                ln1_gamma: vec_of(&format!("{p}.ln1.gamma"))?,
+                ln1_beta: vec_of(&format!("{p}.ln1.beta"))?,
+                ln2_gamma: vec_of(&format!("{p}.ln2.gamma"))?,
+                ln2_beta: vec_of(&format!("{p}.ln2.beta"))?,
+            });
+        }
+        Ok(BertWeights {
+            tok_emb: dense_from_bundle(b, "emb.tok")?,
+            pos_emb: dense_from_bundle(b, "emb.pos")?,
+            emb_ln_gamma: vec_of("emb.ln.gamma")?,
+            emb_ln_beta: vec_of("emb.ln.beta")?,
+            layers,
+            config,
+        })
+    }
+
+    /// Overall sparsity across prunable matrices.
+    pub fn pruned_sparsity(&self) -> f64 {
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for layer in &self.layers {
+            for (_, m) in layer.prunable() {
+                total += m.data.len();
+                zeros += m.data.len() - m.count_nonzero();
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zeros as f64 / total as f64
+        }
+    }
+}
+
+fn vec_to_bundle(b: &mut TensorBundle, name: &str, v: &[f32]) {
+    b.insert(name, NpyTensor::from_f32(vec![v.len()], v.to_vec()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let cfg = BertConfig::micro();
+        let a = BertWeights::synthetic(&cfg, 42);
+        let b = BertWeights::synthetic(&cfg, 42);
+        assert_eq!(a.layers[0].wq.data, b.layers[0].wq.data);
+        let c = BertWeights::synthetic(&cfg, 43);
+        assert_ne!(a.layers[0].wq.data, c.layers[0].wq.data);
+    }
+
+    #[test]
+    fn embed_shapes_and_determinism() {
+        let cfg = BertConfig::micro();
+        let w = BertWeights::synthetic(&cfg, 1);
+        let x = w.embed(&[5, 17, 3]);
+        assert_eq!(x.rows, 3);
+        assert_eq!(x.cols, cfg.hidden);
+        // position matters
+        let y = w.embed(&[17, 5, 3]);
+        assert_ne!(x.data, y.data);
+    }
+
+    #[test]
+    fn prune_structured_hits_target() {
+        let cfg = BertConfig::micro();
+        let mut w = BertWeights::synthetic(&cfg, 2);
+        let spec = PruneSpec::structured(0.8, BlockShape::new(1, 4));
+        let achieved = w.prune(&spec, 7);
+        assert!((achieved - 0.8).abs() < 0.05, "achieved {achieved}");
+        assert!((w.pruned_sparsity() - achieved).abs() < 1e-12);
+        // embeddings untouched
+        assert_eq!(w.tok_emb.count_nonzero(), w.tok_emb.data.len());
+    }
+
+    #[test]
+    fn prune_unstructured_hits_target() {
+        let cfg = BertConfig::micro();
+        let mut w = BertWeights::synthetic(&cfg, 3);
+        let achieved = w.prune(&PruneSpec::irregular(0.5), 7);
+        assert!((achieved - 0.5).abs() < 0.02, "achieved {achieved}");
+    }
+
+    #[test]
+    fn prune_none_changes_nothing() {
+        let cfg = BertConfig::micro();
+        let mut w = BertWeights::synthetic(&cfg, 4);
+        let orig = w.layers[0].wq.data.clone();
+        let achieved = w.prune(&PruneSpec::dense(), 7);
+        assert_eq!(achieved, 0.0);
+        assert_eq!(w.layers[0].wq.data, orig);
+    }
+
+    #[test]
+    fn bundle_roundtrip() {
+        let cfg = BertConfig::micro();
+        let mut w = BertWeights::synthetic(&cfg, 5);
+        w.prune(&PruneSpec::structured(0.5, BlockShape::new(2, 2)), 9);
+        let bundle = w.to_bundle();
+        let back = BertWeights::from_bundle(&bundle).unwrap();
+        assert_eq!(back.config, cfg);
+        assert_eq!(back.layers.len(), cfg.layers);
+        assert_eq!(back.layers[0].wq.data, w.layers[0].wq.data);
+        assert_eq!(back.layers[0].b_up, w.layers[0].b_up);
+        assert_eq!(back.tok_emb.data, w.tok_emb.data);
+    }
+
+    #[test]
+    fn bundle_missing_config_rejected() {
+        let b = TensorBundle::new();
+        assert!(BertWeights::from_bundle(&b).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Artifact manifests: the `.json` files `aot.py` writes next to each
+//! `.hlo.txt`, describing the module's positional input/output tensors
+//! and static attributes. The Rust side never guesses an input ordering —
+//! it always assembles literals from the manifest.
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One declared tensor (input or output).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDecl {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `"f32"` or `"i32"`.
+    pub dtype: String,
+}
+
+impl TensorDecl {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// `encoder_dense`, `bsr_spmm`, or `train_step_mlm`.
+    pub kind: String,
+    pub inputs: Vec<TensorDecl>,
+    pub outputs: Vec<TensorDecl>,
+    /// Full manifest JSON for kind-specific extras (config, block, …).
+    pub raw: Json,
+    /// Path of the sibling `.hlo.txt`.
+    pub hlo_path: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/<name>.json` (expects `<dir>/<name>.hlo.txt` beside it).
+    pub fn load(dir: &Path, name: &str) -> Result<ArtifactManifest> {
+        let json_path = dir.join(format!("{name}.json"));
+        let hlo_path = dir.join(format!("{name}.hlo.txt"));
+        if !hlo_path.exists() {
+            bail!(
+                "artifact '{name}' missing {hlo_path:?} — run `make artifacts` first"
+            );
+        }
+        let text = std::fs::read_to_string(&json_path)
+            .with_context(|| format!("read {json_path:?}"))?;
+        let raw = json::parse(&text).with_context(|| format!("parse {json_path:?}"))?;
+        let kind = raw
+            .get("kind")
+            .and_then(Json::as_str)
+            .context("manifest missing 'kind'")?
+            .to_string();
+        Ok(ArtifactManifest {
+            kind,
+            inputs: parse_decls(&raw, "inputs")?,
+            outputs: parse_decls(&raw, "outputs")?,
+            raw,
+            hlo_path,
+        })
+    }
+
+    /// Kind-specific static attribute lookup, e.g. `usize_attr("tokens")`.
+    pub fn usize_attr(&self, name: &str) -> Result<usize> {
+        self.raw
+            .get(name)
+            .and_then(Json::as_usize)
+            .with_context(|| format!("manifest missing usize attr '{name}'"))
+    }
+
+    /// Config sub-object field (encoder/train manifests).
+    pub fn config_field(&self, name: &str) -> Result<usize> {
+        self.raw
+            .at(&["config", name])
+            .and_then(Json::as_usize)
+            .with_context(|| format!("manifest missing config.{name}"))
+    }
+
+    /// Validate that supplied tensor shapes match the declared inputs.
+    pub fn check_inputs(&self, shapes: &[Vec<usize>]) -> Result<()> {
+        if shapes.len() != self.inputs.len() {
+            bail!(
+                "artifact expects {} inputs, got {}",
+                self.inputs.len(),
+                shapes.len()
+            );
+        }
+        for (decl, got) in self.inputs.iter().zip(shapes) {
+            if &decl.shape != got {
+                bail!(
+                    "input '{}' shape mismatch: manifest {:?}, got {:?}",
+                    decl.name,
+                    decl.shape,
+                    got
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_decls(raw: &Json, key: &str) -> Result<Vec<TensorDecl>> {
+    let arr = raw
+        .get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("manifest missing '{key}'"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for entry in arr {
+        let name = entry
+            .get("name")
+            .and_then(Json::as_str)
+            .context("tensor decl missing name")?
+            .to_string();
+        let shape = entry
+            .get("shape")
+            .and_then(Json::as_arr)
+            .with_context(|| format!("tensor '{name}' missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().context("bad shape dim"))
+            .collect::<Result<Vec<usize>>>()?;
+        let dtype = entry
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f32")
+            .to_string();
+        if dtype != "f32" && dtype != "i32" {
+            bail!("tensor '{name}': unsupported dtype {dtype}");
+        }
+        out.push(TensorDecl { name, shape, dtype });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensorfile::artifacts_dir;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("encoder_micro.json").exists()
+    }
+
+    #[test]
+    fn load_encoder_micro_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&artifacts_dir(), "encoder_micro").unwrap();
+        assert_eq!(m.kind, "encoder_dense");
+        assert_eq!(m.inputs[0].name, "x");
+        assert_eq!(m.inputs[0].shape, vec![8, 32]); // tokens × hidden (micro)
+        assert_eq!(m.outputs.len(), 1);
+        assert_eq!(m.config_field("hidden").unwrap(), 32);
+        // 1 + 16 per layer × 1 layer
+        assert_eq!(m.inputs.len(), 17);
+    }
+
+    #[test]
+    fn load_bsr_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&artifacts_dir(), "bsr_micro").unwrap();
+        assert_eq!(m.kind, "bsr_spmm");
+        assert_eq!(m.inputs.len(), 4);
+        assert_eq!(m.inputs[2].dtype, "i32");
+        assert!(m.usize_attr("nnz_blocks").unwrap() > 0);
+    }
+
+    #[test]
+    fn check_inputs_validates() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = ArtifactManifest::load(&artifacts_dir(), "bsr_micro").unwrap();
+        let good: Vec<Vec<usize>> = m.inputs.iter().map(|d| d.shape.clone()).collect();
+        assert!(m.check_inputs(&good).is_ok());
+        let mut bad = good.clone();
+        bad[0][0] += 1;
+        assert!(m.check_inputs(&bad).is_err());
+        assert!(m.check_inputs(&good[1..]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let err = ArtifactManifest::load(&artifacts_dir(), "no_such_artifact");
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! PJRT runtime: load and execute the AOT artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`).
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (`!Send`), so all PJRT
+//! state lives on one dedicated **runtime thread** ([`service`]); the
+//! rest of the system talks to it through a cloneable, thread-safe
+//! [`service::RuntimeHandle`] sending plain tensors. This matches the
+//! production layout anyway: one execution context, many request
+//! producers.
+//!
+//! * [`manifest`] — parses the `.json` manifests describing each
+//!   artifact's positional inputs/outputs;
+//! * [`service`] — the runtime thread: compile-once executable cache
+//!   (keyed by artifact name), weight-resident *sessions*, execute calls;
+//! * [`engine`] — [`engine::XlaEngine`], the [`crate::model::Engine`]
+//!   implementation backed by the dense-encoder artifact.
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+
+pub use engine::XlaEngine;
+pub use manifest::ArtifactManifest;
+pub use service::{RuntimeHandle, RuntimeService};

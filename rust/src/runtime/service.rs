@@ -1,0 +1,508 @@
+//! The runtime thread: owns the PJRT client, the compiled-executable
+//! cache, and weight-resident sessions.
+//!
+//! Protocol: callers clone a [`RuntimeHandle`] and issue blocking calls;
+//! each call sends a request plus a one-shot reply channel to the runtime
+//! thread. Tensors cross the boundary as [`NpyTensor`] (plain `Vec`s) —
+//! `xla::Literal`s never leave the runtime thread because the underlying
+//! types are `Rc`-based.
+//!
+//! The executable cache is the runtime half of the paper's task-reuse
+//! story: an artifact is compiled once per process and reused for every
+//! session/request that names it (`compile` is by far the most expensive
+//! step — see EXPERIMENTS.md §Perf-L2).
+
+use super::manifest::ArtifactManifest;
+use crate::util::tensorfile::{Dtype, NpyTensor};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+enum Request {
+    /// Compile (or fetch from cache) an artifact.
+    Load { name: String },
+    /// Create a session: artifact + resident bound inputs (suffix of the
+    /// input list, typically the weights). Returns a session id.
+    CreateSession {
+        artifact: String,
+        bound: Vec<NpyTensor>,
+    },
+    /// Execute a session with per-call inputs (prefix of the input list).
+    Execute {
+        session: usize,
+        inputs: Vec<NpyTensor>,
+    },
+    /// Execute an artifact statelessly with the full input list.
+    ExecuteRaw {
+        artifact: String,
+        inputs: Vec<NpyTensor>,
+    },
+    Stats,
+    Shutdown,
+}
+
+enum Reply {
+    Loaded { inputs: usize, outputs: usize },
+    Session(usize),
+    Outputs(Vec<NpyTensor>),
+    Stats(RuntimeStats),
+    Done,
+}
+
+/// Counters exposed by [`RuntimeHandle::stats`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RuntimeStats {
+    pub artifacts_compiled: usize,
+    pub compile_cache_hits: usize,
+    pub sessions: usize,
+    pub executions: u64,
+}
+
+type Envelope = (Request, mpsc::Sender<Result<Reply>>);
+
+/// Cloneable, `Send + Sync` handle to the runtime thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Arc<Mutex<mpsc::Sender<Envelope>>>,
+}
+
+/// The runtime service; dropping the last handle shuts the thread down.
+pub struct RuntimeService {
+    pub handle: RuntimeHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Spawn the runtime thread over the given artifacts directory.
+    /// Fails fast if PJRT cannot initialize.
+    pub fn start(artifacts_dir: PathBuf) -> Result<RuntimeService> {
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("sparsebert-pjrt".to_string())
+            .spawn(move || runtime_main(artifacts_dir, rx, ready_tx))
+            .context("spawn runtime thread")?;
+        ready_rx
+            .recv()
+            .context("runtime thread died during init")??;
+        Ok(RuntimeService {
+            handle: RuntimeHandle {
+                tx: Arc::new(Mutex::new(tx)),
+            },
+            thread: Some(thread),
+        })
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.handle.call(Request::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    fn call(&self, req: Request) -> Result<Reply> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().map_err(|_| anyhow!("runtime handle poisoned"))?;
+            tx.send((req, reply_tx))
+                .map_err(|_| anyhow!("runtime thread has shut down"))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread dropped the reply"))?
+    }
+
+    /// Compile (or fetch) an artifact; returns (inputs, outputs) arity.
+    pub fn load(&self, name: &str) -> Result<(usize, usize)> {
+        match self.call(Request::Load {
+            name: name.to_string(),
+        })? {
+            Reply::Loaded { inputs, outputs } => Ok((inputs, outputs)),
+            _ => bail!("unexpected reply"),
+        }
+    }
+
+    /// Create a weight-resident session. `bound` tensors are bound to the
+    /// *last* `bound.len()` inputs of the artifact.
+    pub fn create_session(&self, artifact: &str, bound: Vec<NpyTensor>) -> Result<usize> {
+        match self.call(Request::CreateSession {
+            artifact: artifact.to_string(),
+            bound,
+        })? {
+            Reply::Session(id) => Ok(id),
+            _ => bail!("unexpected reply"),
+        }
+    }
+
+    /// Execute a session with the per-call (prefix) inputs.
+    pub fn execute(&self, session: usize, inputs: Vec<NpyTensor>) -> Result<Vec<NpyTensor>> {
+        match self.call(Request::Execute { session, inputs })? {
+            Reply::Outputs(o) => Ok(o),
+            _ => bail!("unexpected reply"),
+        }
+    }
+
+    /// One-shot execution with the full input list.
+    pub fn execute_raw(&self, artifact: &str, inputs: Vec<NpyTensor>) -> Result<Vec<NpyTensor>> {
+        match self.call(Request::ExecuteRaw {
+            artifact: artifact.to_string(),
+            inputs,
+        })? {
+            Reply::Outputs(o) => Ok(o),
+            _ => bail!("unexpected reply"),
+        }
+    }
+
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        match self.call(Request::Stats)? {
+            Reply::Stats(s) => Ok(s),
+            _ => bail!("unexpected reply"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime thread internals (the only code that touches xla:: types)
+// ---------------------------------------------------------------------------
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    manifest: ArtifactManifest,
+}
+
+struct Session {
+    artifact: String,
+    bound: Vec<xla::Literal>,
+}
+
+struct RuntimeState {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    compiled: HashMap<String, Compiled>,
+    sessions: Vec<Session>,
+    stats: RuntimeStats,
+}
+
+fn runtime_main(
+    dir: PathBuf,
+    rx: mpsc::Receiver<Envelope>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PJRT CPU client init failed: {e}")));
+            return;
+        }
+    };
+    let mut st = RuntimeState {
+        dir,
+        client,
+        compiled: HashMap::new(),
+        sessions: Vec::new(),
+        stats: RuntimeStats::default(),
+    };
+    while let Ok((req, reply)) = rx.recv() {
+        let shutdown = matches!(req, Request::Shutdown);
+        let _ = reply.send(handle(&mut st, req));
+        if shutdown {
+            break;
+        }
+    }
+}
+
+fn handle(st: &mut RuntimeState, req: Request) -> Result<Reply> {
+    match req {
+        Request::Shutdown => Ok(Reply::Done),
+        Request::Stats => Ok(Reply::Stats(st.stats.clone())),
+        Request::Load { name } => {
+            let c = load_artifact(st, &name)?;
+            Ok(Reply::Loaded {
+                inputs: c.manifest.inputs.len(),
+                outputs: c.manifest.outputs.len(),
+            })
+        }
+        Request::CreateSession { artifact, bound } => {
+            load_artifact(st, &artifact)?;
+            let c = &st.compiled[&artifact];
+            let n_in = c.manifest.inputs.len();
+            if bound.len() > n_in {
+                bail!("bound {} tensors onto {}-input artifact", bound.len(), n_in);
+            }
+            // validate bound suffix shapes
+            for (decl, t) in c.manifest.inputs[n_in - bound.len()..].iter().zip(&bound) {
+                if decl.shape != t.shape && !(decl.shape.is_empty() && t.len() == 1) {
+                    bail!(
+                        "bound input '{}' shape mismatch: manifest {:?} got {:?}",
+                        decl.name,
+                        decl.shape,
+                        t.shape
+                    );
+                }
+            }
+            let literals = bound
+                .iter()
+                .map(to_literal)
+                .collect::<Result<Vec<_>>>()?;
+            st.sessions.push(Session {
+                artifact,
+                bound: literals,
+            });
+            st.stats.sessions += 1;
+            Ok(Reply::Session(st.sessions.len() - 1))
+        }
+        Request::Execute { session, inputs } => {
+            let sess = st
+                .sessions
+                .get(session)
+                .with_context(|| format!("unknown session {session}"))?;
+            let artifact = sess.artifact.clone();
+            let c = &st.compiled[&artifact];
+            let prefix = inputs
+                .iter()
+                .map(to_literal)
+                .collect::<Result<Vec<_>>>()?;
+            let sess = &st.sessions[session];
+            let mut refs: Vec<&xla::Literal> = Vec::with_capacity(prefix.len() + sess.bound.len());
+            refs.extend(prefix.iter());
+            refs.extend(sess.bound.iter());
+            let out = run(c, &refs)?;
+            st.stats.executions += 1;
+            Ok(Reply::Outputs(out))
+        }
+        Request::ExecuteRaw { artifact, inputs } => {
+            load_artifact(st, &artifact)?;
+            let c = &st.compiled[&artifact];
+            c.manifest
+                .check_inputs(&inputs.iter().map(|t| t.shape.clone()).collect::<Vec<_>>())
+                .or_else(|e| {
+                    // scalars: manifest [] vs tensor [1]
+                    let ok = c.manifest.inputs.len() == inputs.len()
+                        && c.manifest.inputs.iter().zip(&inputs).all(|(d, t)| {
+                            d.shape == t.shape || (d.shape.is_empty() && t.len() == 1)
+                        });
+                    if ok {
+                        Ok(())
+                    } else {
+                        Err(e)
+                    }
+                })?;
+            let lits = inputs
+                .iter()
+                .map(to_literal)
+                .collect::<Result<Vec<_>>>()?;
+            let refs: Vec<&xla::Literal> = lits.iter().collect();
+            let out = run(c, &refs)?;
+            st.stats.executions += 1;
+            Ok(Reply::Outputs(out))
+        }
+    }
+}
+
+fn load_artifact<'a>(st: &'a mut RuntimeState, name: &str) -> Result<&'a Compiled> {
+    if st.compiled.contains_key(name) {
+        st.stats.compile_cache_hits += 1;
+    } else {
+        let manifest = ArtifactManifest::load(&st.dir, name)?;
+        let proto = xla::HloModuleProto::from_text_file(&manifest.hlo_path)
+            .map_err(|e| anyhow!("parse {:?}: {e}", manifest.hlo_path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = st
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("XLA compile of '{name}' failed: {e}"))?;
+        st.stats.artifacts_compiled += 1;
+        st.compiled
+            .insert(name.to_string(), Compiled { exe, manifest });
+    }
+    Ok(&st.compiled[name])
+}
+
+fn run(c: &Compiled, refs: &[&xla::Literal]) -> Result<Vec<NpyTensor>> {
+    // `&Literal: Borrow<Literal>` — no copy of the host buffers here.
+    let result = c
+        .exe
+        .execute::<&xla::Literal>(refs)
+        .map_err(|e| anyhow!("execute failed: {e}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch result: {e}"))?;
+    // aot.py lowers with return_tuple=True
+    let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+    let mut out = Vec::with_capacity(parts.len());
+    for (decl, part) in c.manifest.outputs.iter().zip(parts) {
+        out.push(from_literal(&part, &decl.shape, &decl.dtype)?);
+    }
+    Ok(out)
+}
+
+fn to_literal(t: &NpyTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match t.dtype {
+        Dtype::F32 => xla::Literal::vec1(&t.f32_data),
+        Dtype::I32 => xla::Literal::vec1(&t.i32_data),
+    };
+    // scalars (shape []) stay rank-1 [1]? No: reshape to [] is allowed.
+    lit.reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape to {dims:?}: {e}"))
+}
+
+fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: &str) -> Result<NpyTensor> {
+    let shape = if shape.is_empty() {
+        vec![1]
+    } else {
+        shape.to_vec()
+    };
+    Ok(match dtype {
+        "i32" => NpyTensor::from_i32(
+            shape,
+            lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?,
+        ),
+        _ => NpyTensor::from_f32(
+            shape,
+            lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?,
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::bsr::BsrMatrix;
+    use crate::sparse::dense::Matrix;
+    use crate::sparse::prune::BlockShape;
+    use crate::util::propcheck::assert_allclose;
+    use crate::util::rng::Rng;
+    use crate::util::tensorfile::artifacts_dir;
+
+    fn service() -> Option<RuntimeService> {
+        if !artifacts_dir().join("bsr_micro.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(RuntimeService::start(artifacts_dir()).expect("runtime start"))
+    }
+
+    #[test]
+    fn load_and_cache() {
+        let Some(svc) = service() else { return };
+        let (i1, o1) = svc.handle.load("bsr_micro").unwrap();
+        assert_eq!((i1, o1), (4, 1));
+        svc.handle.load("bsr_micro").unwrap();
+        let stats = svc.handle.stats().unwrap();
+        assert_eq!(stats.artifacts_compiled, 1);
+        assert!(stats.compile_cache_hits >= 1);
+    }
+
+    #[test]
+    fn pallas_bsr_artifact_matches_rust_kernel() {
+        // The cross-language check: the SAME BSR structure+values run
+        // through (a) the AOT-lowered Pallas kernel via PJRT and (b) the
+        // native Rust BSR kernel must agree.
+        let Some(svc) = service() else { return };
+        let m = ArtifactManifest::load(&artifacts_dir(), "bsr_micro").unwrap();
+        let nnzb = m.usize_attr("nnz_blocks").unwrap();
+        let t = m.usize_attr("tokens").unwrap();
+        let block = BlockShape::new(2, 4);
+        let (o, i) = (32usize, 48usize);
+        // Build a random BSR with exactly nnzb blocks.
+        let mut rng = Rng::new(99);
+        let brows = o / block.r;
+        let bcols = i / block.c;
+        let mut per_row = vec![0usize; brows];
+        for _ in 0..nnzb {
+            loop {
+                let r = rng.range(0, brows);
+                if per_row[r] < bcols {
+                    per_row[r] += 1;
+                    break;
+                }
+            }
+        }
+        let mut indices = Vec::new();
+        let mut indptr = vec![0u32];
+        for &n in &per_row {
+            let mut cols = rng.sample_indices(bcols, n);
+            cols.sort_unstable();
+            indices.extend(cols.iter().map(|&c| c as u32));
+            indptr.push(indices.len() as u32);
+        }
+        let data: Vec<f32> = (0..nnzb * block.elems()).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let bsr = BsrMatrix::from_parts(o, i, block, data.clone(), indices.clone(), indptr.clone())
+            .unwrap();
+        let x = Matrix::randn(i, t, 1.0, &mut rng); // feature-major [I, T]
+        // Rust result: Y = W·X → [O, T]
+        let y_rust = crate::kernels::bsr_spmm::bsr_linear(&bsr, &x, None);
+        // Artifact expects token-major x [T, I] and returns [T, O].
+        let x_tm = crate::kernels::dense_matmul::transpose(&x);
+        let out = svc
+            .handle
+            .execute_raw(
+                "bsr_micro",
+                vec![
+                    NpyTensor::from_f32(vec![t, i], x_tm.data.clone()),
+                    NpyTensor::from_f32(vec![nnzb, block.r, block.c], data),
+                    NpyTensor::from_i32(
+                        vec![nnzb],
+                        indices.iter().map(|&v| v as i32).collect(),
+                    ),
+                    NpyTensor::from_i32(
+                        vec![brows + 1],
+                        indptr.iter().map(|&v| v as i32).collect(),
+                    ),
+                ],
+            )
+            .unwrap();
+        let y_pallas_tm = Matrix::from_vec(t, o, out[0].f32_data.clone());
+        let y_pallas = crate::kernels::dense_matmul::transpose(&y_pallas_tm);
+        assert_allclose(
+            &y_pallas.data,
+            &y_rust.data,
+            1e-4,
+            1e-5,
+            "pallas artifact vs rust kernel",
+        );
+    }
+
+    #[test]
+    fn session_binding_and_shape_validation() {
+        let Some(svc) = service() else { return };
+        // bind everything but x as session state
+        let m = ArtifactManifest::load(&artifacts_dir(), "bsr_micro").unwrap();
+        let mk = |d: &crate::runtime::manifest::TensorDecl| -> NpyTensor {
+            if d.dtype == "i32" {
+                // a valid trivial structure: all zeros indptr/indices won't
+                // validate as BSR but the kernel tolerates empty rows; use
+                // zeros.
+                NpyTensor::from_i32(d.shape.clone(), vec![0; d.elems()])
+            } else {
+                NpyTensor::from_f32(d.shape.clone(), vec![0.0; d.elems()])
+            }
+        };
+        let bound: Vec<NpyTensor> = m.inputs[1..].iter().map(mk).collect();
+        let sess = svc.handle.create_session("bsr_micro", bound).unwrap();
+        let x = mk(&m.inputs[0]);
+        let out = svc.handle.execute(sess, vec![x]).unwrap();
+        assert_eq!(out[0].shape, m.outputs[0].shape);
+        // zero structure → zero output
+        assert!(out[0].f32_data.iter().all(|&v| v == 0.0));
+        // wrong session id errors
+        assert!(svc.handle.execute(999, vec![mk(&m.inputs[0])]).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(svc) = service() else { return };
+        assert!(svc.handle.load("nonexistent").is_err());
+        assert!(svc.handle.execute_raw("nonexistent", vec![]).is_err());
+    }
+}

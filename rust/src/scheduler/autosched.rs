@@ -1,0 +1,160 @@
+//! Auto-scheduler: derives execution parameters from the hardware spec
+//! and owns the task buffer — the component that makes TVM⁺ "attend to
+//! hardware specifications in the task searching stage".
+//!
+//! Decisions made here (and their rationale):
+//!
+//! * **threads** — one worker per core, capped by the number of block
+//!   rows (no point spawning more bands than rows);
+//! * **grain** — how many block rows a worker claims at once under
+//!   dynamic scheduling: sized so one grain's working set (Y band + the
+//!   X panels its blocks touch) fits the L2 budget, clamped to [1, 16];
+//! * **ordering policy** — similarity-adjacent when the structure has
+//!   exploitable repetition (row reuse ≥ 10%), sequential otherwise
+//!   (reordering pure-random structure only costs icache).
+
+use super::buffer::TaskBuffer;
+use super::hwspec::HwSpec;
+use super::plan::{OrderPolicy, PlanOptions};
+use crate::kernels::bsr_spmm::SpmmPlan;
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::pattern::PatternStats;
+use std::sync::Arc;
+
+/// Per-matrix execution parameters chosen by the auto-scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecParams {
+    pub threads: usize,
+    pub grain: usize,
+}
+
+pub struct AutoScheduler {
+    pub hw: HwSpec,
+    pub buffer: TaskBuffer,
+}
+
+impl AutoScheduler {
+    /// Full TVM⁺ behaviour: reuse + similarity ordering.
+    pub fn new(hw: HwSpec) -> AutoScheduler {
+        AutoScheduler {
+            hw,
+            buffer: TaskBuffer::new(PlanOptions::tvm_plus()),
+        }
+    }
+
+    /// Ablated scheduler (A1): no dedup, no reordering.
+    pub fn without_reuse(hw: HwSpec) -> AutoScheduler {
+        AutoScheduler {
+            hw,
+            buffer: TaskBuffer::new(PlanOptions::no_reuse()),
+        }
+    }
+
+    /// With explicit options (ablation sweeps).
+    pub fn with_options(hw: HwSpec, opts: PlanOptions) -> AutoScheduler {
+        AutoScheduler {
+            hw,
+            buffer: TaskBuffer::new(opts),
+        }
+    }
+
+    /// Plan (or fetch) the execution plan for a matrix.
+    pub fn plan(&self, label: &str, m: &BsrMatrix) -> Arc<SpmmPlan> {
+        self.buffer.plan_for(label, m)
+    }
+
+    /// Choose threads/grain for one spmm over `tokens` activation columns.
+    pub fn exec_params(&self, m: &BsrMatrix, tokens: usize) -> ExecParams {
+        let brows = m.block_rows().max(1);
+        let threads = self.hw.cores.min(brows);
+        // Working set of one grain of g block rows:
+        //   Y band: g * r * tokens floats
+        //   X panels: ~ mean_blocks_per_row * c * tokens floats per row
+        // Solve g so the sum stays within the L2 budget.
+        let stats = PatternStats::of(m);
+        let y_per_row = m.block.r * tokens;
+        let x_per_row = (stats.mean_blocks_per_row.ceil() as usize).max(1) * m.block.c * tokens;
+        let per_row = y_per_row + x_per_row;
+        let grain = (self.hw.l2_f32_budget() / per_row.max(1)).clamp(1, 16);
+        ExecParams { threads, grain }
+    }
+
+    /// Decide the ordering policy for a structure (exposed for tests and
+    /// `inspect`; `PlanOptions::tvm_plus` applies it unconditionally since
+    /// similarity ordering of structure *without* repetition is a no-op
+    /// permutation cost-wise).
+    pub fn recommended_order(&self, m: &BsrMatrix) -> OrderPolicy {
+        let stats = PatternStats::of(m);
+        if stats.reuse_rate >= 0.10 {
+            OrderPolicy::SimilarityAdjacent
+        } else {
+            OrderPolicy::Sequential
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense::Matrix;
+    use crate::sparse::prune::{prune_structured, prune_structured_replicated, BlockShape};
+    use crate::util::rng::Rng;
+
+    fn bsr(block: BlockShape, rows: usize, cols: usize, pool: usize, seed: u64) -> BsrMatrix {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(rows, cols, 1.0, &mut rng);
+        prune_structured_replicated(&mut w, 0.8, block, pool, &mut rng);
+        BsrMatrix::from_dense(&w, block).unwrap()
+    }
+
+    #[test]
+    fn threads_capped_by_rows() {
+        let hw = HwSpec::haswell_reference();
+        let sched = AutoScheduler::new(hw);
+        let m = bsr(BlockShape::new(32, 32), 64, 64, 4, 1); // 2 block rows
+        let p = sched.exec_params(&m, 128);
+        assert!(p.threads <= 2);
+    }
+
+    #[test]
+    fn grain_respects_l2_budget() {
+        let hw = HwSpec::haswell_reference();
+        let sched = AutoScheduler::new(hw);
+        // small rows → large grain; huge rows → grain 1
+        let small = bsr(BlockShape::new(1, 4), 256, 64, 8, 2);
+        let big = bsr(BlockShape::new(64, 64), 768, 768, 4, 3);
+        let ps = sched.exec_params(&small, 32);
+        let pb = sched.exec_params(&big, 512);
+        assert!(ps.grain >= pb.grain, "{} < {}", ps.grain, pb.grain);
+        assert!(pb.grain >= 1 && ps.grain <= 16);
+    }
+
+    #[test]
+    fn order_recommendation_tracks_repetition() {
+        let hw = HwSpec::haswell_reference();
+        let sched = AutoScheduler::new(hw);
+        let replicated = bsr(BlockShape::new(1, 8), 128, 128, 4, 4);
+        assert_eq!(
+            sched.recommended_order(&replicated),
+            OrderPolicy::SimilarityAdjacent
+        );
+        // near-unique patterns: huge pool
+        let mut rng = Rng::new(5);
+        let mut w = Matrix::randn(128, 512, 1.0, &mut rng);
+        prune_structured(&mut w, 0.5, BlockShape::new(1, 4));
+        let unique = BsrMatrix::from_dense(&w, BlockShape::new(1, 4)).unwrap();
+        assert_eq!(sched.recommended_order(&unique), OrderPolicy::Sequential);
+    }
+
+    #[test]
+    fn reuse_flag_controls_buffer_options() {
+        let hw = HwSpec::haswell_reference();
+        let with = AutoScheduler::new(hw.clone());
+        let without = AutoScheduler::without_reuse(hw);
+        let m = bsr(BlockShape::new(1, 8), 64, 64, 2, 6);
+        let p_with = with.plan("x", &m);
+        let p_without = without.plan("x", &m);
+        assert!(p_with.distinct_programs <= 2);
+        assert_eq!(p_without.distinct_programs, m.block_rows());
+    }
+}

@@ -1,0 +1,162 @@
+//! The task buffer: structure-keyed plan cache.
+//!
+//! "The BSR representations are stored in a task buffer together with
+//! corresponding operators in TVM. ... If two tasks in the task buffer
+//! are the same, TVM treats them as identical and reuses them." (§2.2)
+//!
+//! Keyed by [`TaskKey`] (op + shape + block + structure signature), the
+//! buffer returns an `Arc<SpmmPlan>` — compile once per structure, reuse
+//! everywhere that structure recurs (e.g. Q/K/V projections pruned with
+//! a shared pattern pool, or the same layer re-served across requests).
+
+use super::plan::{build_plan, PlanOptions};
+use super::stats::SchedulerStats;
+use super::task::{SparseTask, TaskKey};
+use crate::kernels::bsr_spmm::SpmmPlan;
+use crate::sparse::bsr::BsrMatrix;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Thread-safe plan cache with reuse instrumentation.
+pub struct TaskBuffer {
+    opts: PlanOptions,
+    plans: Mutex<HashMap<TaskKey, Arc<SpmmPlan>>>,
+    /// Registered task descriptions (for `inspect` listings).
+    tasks: Mutex<Vec<SparseTask>>,
+    pub stats: SchedulerStats,
+}
+
+impl TaskBuffer {
+    pub fn new(opts: PlanOptions) -> TaskBuffer {
+        TaskBuffer {
+            opts,
+            plans: Mutex::new(HashMap::new()),
+            tasks: Mutex::new(Vec::new()),
+            stats: SchedulerStats::new(),
+        }
+    }
+
+    pub fn options(&self) -> PlanOptions {
+        self.opts
+    }
+
+    /// Get (or compile) the plan for a BSR matrix. Records hit/miss and,
+    /// on compilation, plan-level reuse stats.
+    pub fn plan_for(&self, label: &str, m: &BsrMatrix) -> Arc<SpmmPlan> {
+        let task = SparseTask::for_bsr(label, m);
+        let key = task.key;
+        {
+            let plans = self.plans.lock().expect("task buffer poisoned");
+            if let Some(plan) = plans.get(&key) {
+                self.stats.record_task(true);
+                return Arc::clone(plan);
+            }
+        }
+        // Compile outside the lock (plans for distinct structures can
+        // compile concurrently); insert-if-absent afterwards.
+        let compiled = Arc::new(build_plan(m, self.opts));
+        let mut plans = self.plans.lock().expect("task buffer poisoned");
+        let entry = plans.entry(key).or_insert_with(|| {
+            self.stats
+                .record_plan(compiled.rows.len(), compiled.distinct_programs);
+            self.tasks.lock().expect("tasks poisoned").push(task);
+            Arc::clone(&compiled)
+        });
+        self.stats.record_task(!Arc::ptr_eq(entry, &compiled));
+        Arc::clone(entry)
+    }
+
+    /// Number of distinct cached plans.
+    pub fn len(&self) -> usize {
+        self.plans.lock().expect("task buffer poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of registered tasks (distinct structures), for inspection.
+    pub fn tasks(&self) -> Vec<SparseTask> {
+        self.tasks.lock().expect("tasks poisoned").clone()
+    }
+
+    /// Drop all cached plans (used between ablation runs).
+    pub fn clear(&self) {
+        self.plans.lock().expect("task buffer poisoned").clear();
+        self.tasks.lock().expect("tasks poisoned").clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense::Matrix;
+    use crate::sparse::prune::{prune_structured, BlockShape};
+    use crate::util::rng::Rng;
+
+    fn bsr(seed: u64) -> BsrMatrix {
+        let block = BlockShape::new(2, 2);
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(16, 16, 1.0, &mut rng);
+        prune_structured(&mut w, 0.5, block);
+        BsrMatrix::from_dense(&w, block).unwrap()
+    }
+
+    #[test]
+    fn identical_structure_hits_cache() {
+        let buf = TaskBuffer::new(PlanOptions::default());
+        let m = bsr(1);
+        let p1 = buf.plan_for("layer0.q", &m);
+        let mut m2 = m.clone();
+        for v in m2.data.iter_mut() {
+            *v *= 3.0; // same structure, new values
+        }
+        let p2 = buf.plan_for("layer1.q", &m2);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(buf.len(), 1);
+        let snap = buf.stats.snapshot();
+        assert_eq!(snap.plan_hits, 1);
+        assert_eq!(snap.plan_misses, 1);
+    }
+
+    #[test]
+    fn different_structures_compile_separately() {
+        let buf = TaskBuffer::new(PlanOptions::default());
+        let p1 = buf.plan_for("a", &bsr(1));
+        let p2 = buf.plan_for("b", &bsr(2));
+        assert!(!Arc::ptr_eq(&p1, &p2));
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.tasks().len(), 2);
+    }
+
+    #[test]
+    fn clear_resets_cache() {
+        let buf = TaskBuffer::new(PlanOptions::default());
+        buf.plan_for("a", &bsr(1));
+        assert_eq!(buf.len(), 1);
+        buf.clear();
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn concurrent_access_single_compile_survives() {
+        let buf = Arc::new(TaskBuffer::new(PlanOptions::default()));
+        let m = Arc::new(bsr(7));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let buf = Arc::clone(&buf);
+                let m = Arc::clone(&m);
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let _ = buf.plan_for("x", &m);
+                    }
+                });
+            }
+        });
+        assert_eq!(buf.len(), 1);
+        let snap = buf.stats.snapshot();
+        assert_eq!(snap.tasks_seen, 160);
+        // every access but the cached-insert one is a hit
+        assert!(snap.plan_hits >= 159 - 7, "hits {}", snap.plan_hits);
+    }
+}

@@ -1,0 +1,147 @@
+//! Hardware specification — the parameters the paper says the task
+//! search stage attends to: "number of cores, cache size, instruction set
+//! architecture (ISA), max memory per block, and max thread per block".
+//!
+//! Detected from `/proc/cpuinfo` and sysfs on Linux with conservative
+//! fallbacks, and overridable for tests/ablations.
+
+use std::fmt;
+
+/// CPU execution resources the auto-scheduler tunes against.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HwSpec {
+    /// Logical cores available to the process.
+    pub cores: usize,
+    /// Per-core L1 data cache in bytes.
+    pub l1d_bytes: usize,
+    /// Per-core L2 cache in bytes.
+    pub l2_bytes: usize,
+    /// Shared L3 cache in bytes.
+    pub l3_bytes: usize,
+    /// SIMD register width in f32 lanes (8 = AVX2, 16 = AVX-512, 4 = NEON/SSE).
+    pub simd_f32_lanes: usize,
+    /// Human-readable ISA summary, e.g. `"x86_64+avx2"`.
+    pub isa: String,
+}
+
+impl HwSpec {
+    /// Probe the running machine. Never fails — falls back to a modest
+    /// Haswell-like profile (the paper's own testbed class) on any error.
+    pub fn detect() -> HwSpec {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let cpuinfo = std::fs::read_to_string("/proc/cpuinfo").unwrap_or_default();
+        let has = |feat: &str| {
+            cpuinfo
+                .lines()
+                .find(|l| l.starts_with("flags") || l.starts_with("Features"))
+                .map(|l| l.split_whitespace().any(|f| f == feat))
+                .unwrap_or(false)
+        };
+        let (lanes, isa_ext) = if has("avx512f") {
+            (16, "avx512")
+        } else if has("avx2") {
+            (8, "avx2")
+        } else if has("avx") {
+            (8, "avx")
+        } else if has("sse2") {
+            (4, "sse2")
+        } else if cfg!(target_arch = "aarch64") {
+            (4, "neon")
+        } else {
+            (4, "scalar")
+        };
+        HwSpec {
+            cores,
+            l1d_bytes: read_cache_size("index0").unwrap_or(32 * 1024),
+            l2_bytes: read_cache_size("index2").unwrap_or(256 * 1024),
+            l3_bytes: read_cache_size("index3").unwrap_or(8 * 1024 * 1024),
+            simd_f32_lanes: lanes,
+            isa: format!("{}+{}", std::env::consts::ARCH, isa_ext),
+        }
+    }
+
+    /// The paper's reference testbed class: a Haswell-era commodity server
+    /// core. Used by deterministic unit tests and documented ablations.
+    pub fn haswell_reference() -> HwSpec {
+        HwSpec {
+            cores: 4,
+            l1d_bytes: 32 * 1024,
+            l2_bytes: 256 * 1024,
+            l3_bytes: 8 * 1024 * 1024,
+            simd_f32_lanes: 8,
+            isa: "x86_64+avx2".to_string(),
+        }
+    }
+
+    /// How many f32s fit in half of L2 — the budget the auto-scheduler
+    /// allows one worker's streaming working set (Y band + X panels)
+    /// before shrinking its grain.
+    pub fn l2_f32_budget(&self) -> usize {
+        self.l2_bytes / 2 / 4
+    }
+}
+
+fn read_cache_size(index: &str) -> Option<usize> {
+    let path = format!("/sys/devices/system/cpu/cpu0/cache/{index}/size");
+    let text = std::fs::read_to_string(path).ok()?;
+    parse_cache_size(text.trim())
+}
+
+/// Parse sysfs cache-size strings: `"32K"`, `"8192K"`, `"12M"`, `"65536"`.
+pub fn parse_cache_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    if let Some(num) = s.strip_suffix(['K', 'k']) {
+        return num.trim().parse::<usize>().ok().map(|n| n * 1024);
+    }
+    if let Some(num) = s.strip_suffix(['M', 'm']) {
+        return num.trim().parse::<usize>().ok().map(|n| n * 1024 * 1024);
+    }
+    s.parse::<usize>().ok()
+}
+
+impl fmt::Display for HwSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} cores, L1d {}K, L2 {}K, L3 {}M, {} f32 lanes ({})",
+            self.cores,
+            self.l1d_bytes / 1024,
+            self.l2_bytes / 1024,
+            self.l3_bytes / (1024 * 1024),
+            self.simd_f32_lanes,
+            self.isa
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_sane() {
+        let hw = HwSpec::detect();
+        assert!(hw.cores >= 1);
+        assert!(hw.l1d_bytes >= 8 * 1024);
+        assert!(hw.l2_bytes >= hw.l1d_bytes);
+        assert!([4usize, 8, 16].contains(&hw.simd_f32_lanes), "{}", hw.simd_f32_lanes);
+        assert!(!hw.isa.is_empty());
+    }
+
+    #[test]
+    fn parse_cache_sizes() {
+        assert_eq!(parse_cache_size("32K"), Some(32 * 1024));
+        assert_eq!(parse_cache_size("12M"), Some(12 * 1024 * 1024));
+        assert_eq!(parse_cache_size("65536"), Some(65536));
+        assert_eq!(parse_cache_size("8192K\n"), Some(8192 * 1024));
+        assert_eq!(parse_cache_size("abc"), None);
+    }
+
+    #[test]
+    fn reference_profile_is_haswell_class() {
+        let hw = HwSpec::haswell_reference();
+        assert_eq!(hw.simd_f32_lanes, 8);
+        assert_eq!(hw.l2_bytes, 256 * 1024);
+        assert!(hw.l2_f32_budget() > 0);
+    }
+}

@@ -1,0 +1,38 @@
+//! The task scheduler — our analog of the paper's TVM⁺ auto-scheduler
+//! augmentation (§2.2, third bullet).
+//!
+//! The paper's mechanism, restated: BSR `indices`/`indptr` "intrinsically
+//! reflect the characteristics of sparse matrices"; tasks (operator +
+//! structure) are stored in a **task buffer**; the scheduler, "attending
+//! to different hardware specifications", **reuses identical tasks** and
+//! schedules **similar tasks adjacent** in the execution path.
+//!
+//! Mapping here:
+//!
+//! * a *task* ([`task::SparseTask`]) is one sparse operator application:
+//!   op kind + dense shape + block shape + structure signature;
+//! * the *task buffer* ([`buffer::TaskBuffer`]) caches the compiled
+//!   execution plan per structure signature — identical structure ⇒ the
+//!   plan (and its row programs) is reused, not recompiled;
+//! * *plan compilation* ([`plan::build_plan`]) dedups row programs by
+//!   pattern and optionally orders block rows so similar patterns execute
+//!   adjacently (temporal locality on the X panels they share);
+//! * the *hardware spec* ([`hwspec::HwSpec`]) — cores, cache sizes, SIMD
+//!   width — parameterizes grain sizes and thread counts
+//!   ([`autosched::AutoScheduler`]);
+//! * everything is instrumented ([`stats::SchedulerStats`]) because the
+//!   paper's follow-up #1 asks for task-reuse introspection tooling, and
+//!   our ablation A2 reports it.
+
+pub mod autosched;
+pub mod buffer;
+pub mod hwspec;
+pub mod plan;
+pub mod stats;
+pub mod task;
+
+pub use autosched::AutoScheduler;
+pub use buffer::TaskBuffer;
+pub use hwspec::HwSpec;
+pub use plan::{build_plan, OrderPolicy, PlanOptions};
+pub use stats::SchedulerStats;

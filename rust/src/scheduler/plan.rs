@@ -1,0 +1,292 @@
+//! Plan compilation: BSR structure → executable [`SpmmPlan`].
+//!
+//! This is where the paper's two scheduler behaviours are implemented:
+//!
+//! 1. **Reuse of identical tasks** — row programs are compiled once per
+//!    *distinct* pattern signature and shared (`Arc`) across all block
+//!    rows with that pattern. Group-regularized models have few distinct
+//!    patterns (DESIGN.md §6), so compilation cost collapses and the hot
+//!    loop executes already-fused programs.
+//! 2. **Adjacent scheduling of similar tasks** — with
+//!    [`OrderPolicy::SimilarityAdjacent`], block rows are reordered so
+//!    rows with identical patterns run back-to-back (perfect X-panel
+//!    reuse) and distinct patterns follow a greedy max-Jaccard chain
+//!    (partial X-panel reuse).
+
+use crate::kernels::bsr_spmm::{RowProgram, SpmmPlan};
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::pattern::{jaccard, row_signature};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Block-row execution ordering policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OrderPolicy {
+    /// Natural (row-index) order — what a scheduler without similarity
+    /// analysis does.
+    #[default]
+    Sequential,
+    /// Group identical patterns, chain groups by structure similarity.
+    SimilarityAdjacent,
+}
+
+/// Plan-compilation options.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOptions {
+    /// Dedup row programs by pattern signature (the reuse mechanism).
+    /// Disabling compiles one program per row — ablation A1.
+    pub dedup: bool,
+    pub order: OrderPolicy,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions {
+            dedup: true,
+            order: OrderPolicy::Sequential,
+        }
+    }
+}
+
+impl PlanOptions {
+    pub fn tvm_plus() -> Self {
+        PlanOptions {
+            dedup: true,
+            order: OrderPolicy::SimilarityAdjacent,
+        }
+    }
+
+    pub fn no_reuse() -> Self {
+        PlanOptions {
+            dedup: false,
+            order: OrderPolicy::Sequential,
+        }
+    }
+}
+
+/// Compile an execution plan for a BSR matrix.
+pub fn build_plan(m: &BsrMatrix, opts: PlanOptions) -> SpmmPlan {
+    let brows = m.block_rows();
+    let elems = m.block.elems() as u32;
+    let mut cache: HashMap<u64, Arc<RowProgram>> = HashMap::new();
+    let mut rows = Vec::with_capacity(brows);
+    let mut sigs = Vec::with_capacity(brows);
+    let mut distinct = 0usize;
+    for bi in 0..brows {
+        let cols = &m.indices[m.row_range(bi)];
+        let base = m.indptr[bi] * elems;
+        let sig = row_signature(cols);
+        sigs.push(sig);
+        let program = if opts.dedup {
+            cache
+                .entry(sig)
+                .or_insert_with(|| {
+                    distinct += 1;
+                    Arc::new(RowProgram::compile(cols, m.block))
+                })
+                .clone()
+        } else {
+            distinct += 1;
+            Arc::new(RowProgram::compile(cols, m.block))
+        };
+        rows.push((program, base));
+    }
+    let order = match opts.order {
+        OrderPolicy::Sequential => (0..brows as u32).collect(),
+        OrderPolicy::SimilarityAdjacent => similarity_order(m, &sigs),
+    };
+    debug_assert!(is_permutation(&order, brows));
+    SpmmPlan {
+        block: m.block,
+        rows,
+        order,
+        distinct_programs: if opts.dedup { cache.len() } else { distinct },
+    }
+}
+
+/// Group rows by identical pattern, then chain the groups greedily by
+/// Jaccard similarity of their column sets (nearest-neighbor heuristic,
+/// O(P²) in *distinct* patterns — cheap because regularization keeps P
+/// small; for pathological P we cap pairwise work and fall back to
+/// frequency order).
+fn similarity_order(m: &BsrMatrix, sigs: &[u64]) -> Vec<u32> {
+    let brows = sigs.len();
+    // signature → (representative row, member rows)
+    let mut groups: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut group_order: Vec<u64> = Vec::new(); // first-seen order for determinism
+    for (bi, &sig) in sigs.iter().enumerate() {
+        let entry = groups.entry(sig).or_default();
+        if entry.is_empty() {
+            group_order.push(sig);
+        }
+        entry.push(bi as u32);
+    }
+    let p = group_order.len();
+    const PAIRWISE_CAP: usize = 512;
+    let chained: Vec<u64> = if p <= 1 {
+        group_order
+    } else if p > PAIRWISE_CAP {
+        // too many distinct patterns for O(P²): order groups by size desc
+        let mut gs = group_order;
+        gs.sort_by_key(|s| std::cmp::Reverse(groups[s].len()));
+        gs
+    } else {
+        // greedy nearest-neighbor chain starting from the largest group
+        let reps: HashMap<u64, &[u32]> = group_order
+            .iter()
+            .map(|&s| {
+                let bi = groups[&s][0] as usize;
+                (s, &m.indices[m.row_range(bi)])
+            })
+            .collect();
+        let mut remaining = group_order.clone();
+        remaining.sort_by_key(|s| std::cmp::Reverse(groups[s].len()));
+        let mut chain = vec![remaining.remove(0)];
+        while !remaining.is_empty() {
+            let cur = *chain.last().unwrap();
+            let (best_idx, _) = remaining
+                .iter()
+                .enumerate()
+                .map(|(i, s)| (i, jaccard(reps[&cur], reps[s])))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(b.0.cmp(&a.0)))
+                .unwrap();
+            chain.push(remaining.remove(best_idx));
+        }
+        chain
+    };
+    let mut order = Vec::with_capacity(brows);
+    for sig in chained {
+        order.extend_from_slice(&groups[&sig]);
+    }
+    order
+}
+
+fn is_permutation(order: &[u32], n: usize) -> bool {
+    if order.len() != n {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    for &i in order {
+        let i = i as usize;
+        if i >= n || seen[i] {
+            return false;
+        }
+        seen[i] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense::Matrix;
+    use crate::sparse::prune::{prune_structured, prune_structured_replicated, BlockShape};
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    fn replicated_bsr(pool: usize, seed: u64) -> BsrMatrix {
+        let block = BlockShape::new(1, 8);
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(64, 64, 1.0, &mut rng);
+        prune_structured_replicated(&mut w, 0.75, block, pool, &mut rng);
+        BsrMatrix::from_dense(&w, block).unwrap()
+    }
+
+    #[test]
+    fn dedup_collapses_programs() {
+        let m = replicated_bsr(3, 1);
+        let plan = build_plan(&m, PlanOptions::default());
+        assert!(plan.distinct_programs <= 3);
+        assert_eq!(plan.rows.len(), 64);
+        // shared Arc: rows with equal pattern point at the same program
+        let p0 = &plan.rows[0].0;
+        let same = plan
+            .rows
+            .iter()
+            .filter(|(p, _)| Arc::ptr_eq(p, p0))
+            .count();
+        assert!(same >= 64 / 3, "expected sharing, got {same}");
+    }
+
+    #[test]
+    fn no_reuse_compiles_per_row() {
+        let m = replicated_bsr(3, 2);
+        let plan = build_plan(&m, PlanOptions::no_reuse());
+        assert_eq!(plan.distinct_programs, 64);
+    }
+
+    #[test]
+    fn similarity_order_groups_identical_patterns() {
+        let m = replicated_bsr(4, 3);
+        let plan = build_plan(&m, PlanOptions::tvm_plus());
+        // walk the order; signature changes should be ≤ distinct groups
+        let mut changes = 0;
+        let mut last: Option<u64> = None;
+        for &bi in &plan.order {
+            let cols = &m.indices[m.row_range(bi as usize)];
+            let sig = crate::sparse::pattern::row_signature(cols);
+            if last != Some(sig) {
+                changes += 1;
+                last = Some(sig);
+            }
+        }
+        assert!(changes <= 4, "pattern switches {changes} > groups");
+    }
+
+    #[test]
+    fn order_is_always_permutation() {
+        propcheck::check(
+            "plan order permutation",
+            24,
+            |rng| {
+                let shapes = [BlockShape::new(1, 4), BlockShape::new(2, 2), BlockShape::new(4, 4)];
+                let block = shapes[rng.range(0, shapes.len())];
+                let rows = block.r * rng.range(1, 20);
+                let cols = block.c * rng.range(1, 20);
+                let sparsity = rng.f64() * 0.9;
+                let seed = rng.next_u64();
+                let policy = if rng.chance(0.5) {
+                    OrderPolicy::Sequential
+                } else {
+                    OrderPolicy::SimilarityAdjacent
+                };
+                (rows, cols, block, sparsity, seed, policy)
+            },
+            |&(rows, cols, block, sparsity, seed, policy)| {
+                let mut rng = Rng::new(seed);
+                let mut w = Matrix::randn(rows, cols, 1.0, &mut rng);
+                prune_structured(&mut w, sparsity, block);
+                let m = BsrMatrix::from_dense(&w, block).unwrap();
+                let plan = build_plan(
+                    &m,
+                    PlanOptions {
+                        dedup: true,
+                        order: policy,
+                    },
+                );
+                if is_permutation(&plan.order, m.block_rows()) {
+                    Ok(())
+                } else {
+                    Err(format!("order not a permutation: {:?}", plan.order))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn empty_matrix_plans() {
+        let m = BsrMatrix::from_dense(&Matrix::zeros(8, 8), BlockShape::new(2, 2)).unwrap();
+        let plan = build_plan(&m, PlanOptions::tvm_plus());
+        assert_eq!(plan.rows.len(), 4);
+        assert_eq!(plan.distinct_programs, 1); // the empty pattern
+    }
+
+    #[test]
+    fn base_offsets_match_indptr() {
+        let m = replicated_bsr(2, 5);
+        let plan = build_plan(&m, PlanOptions::default());
+        for (bi, (_, base)) in plan.rows.iter().enumerate() {
+            assert_eq!(*base, m.indptr[bi] * m.block.elems() as u32);
+        }
+    }
+}

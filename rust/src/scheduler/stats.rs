@@ -1,0 +1,141 @@
+//! Scheduler instrumentation — the introspection tooling the paper's
+//! follow-up #1 calls for ("create instrumentation tools for introspection
+//! of task reuse by the scheduler").
+//!
+//! Thread-safe counters; snapshot rendered by `sparsebert inspect` and by
+//! ablation bench A2.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cumulative scheduler counters.
+#[derive(Debug, Default)]
+pub struct SchedulerStats {
+    /// Tasks submitted to the buffer.
+    pub tasks_seen: AtomicU64,
+    /// Buffer hits: an identical task's plan was reused.
+    pub plan_hits: AtomicU64,
+    /// Buffer misses: a plan had to be compiled.
+    pub plan_misses: AtomicU64,
+    /// Row programs compiled (post-dedup).
+    pub programs_compiled: AtomicU64,
+    /// Block rows covered by shared (deduped) programs.
+    pub rows_shared: AtomicU64,
+    /// Total block rows planned.
+    pub rows_total: AtomicU64,
+}
+
+/// Plain-data snapshot of [`SchedulerStats`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsSnapshot {
+    pub tasks_seen: u64,
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub programs_compiled: u64,
+    pub rows_shared: u64,
+    pub rows_total: u64,
+}
+
+impl SchedulerStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_task(&self, hit: bool) {
+        self.tasks_seen.fetch_add(1, Ordering::Relaxed);
+        if hit {
+            self.plan_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.plan_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_plan(&self, rows: usize, distinct_programs: usize) {
+        self.programs_compiled
+            .fetch_add(distinct_programs as u64, Ordering::Relaxed);
+        self.rows_total.fetch_add(rows as u64, Ordering::Relaxed);
+        self.rows_shared
+            .fetch_add((rows - distinct_programs.min(rows)) as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            tasks_seen: self.tasks_seen.load(Ordering::Relaxed),
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            programs_compiled: self.programs_compiled.load(Ordering::Relaxed),
+            rows_shared: self.rows_shared.load(Ordering::Relaxed),
+            rows_total: self.rows_total.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl StatsSnapshot {
+    /// Task-level reuse: identical-task hits / tasks seen.
+    pub fn task_reuse_rate(&self) -> f64 {
+        if self.tasks_seen == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / self.tasks_seen as f64
+        }
+    }
+
+    /// Row-level reuse: rows served by a shared program / rows planned.
+    pub fn row_reuse_rate(&self) -> f64 {
+        if self.rows_total == 0 {
+            0.0
+        } else {
+            self.rows_shared as f64 / self.rows_total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("tasks_seen", self.tasks_seen)
+            .set("plan_hits", self.plan_hits)
+            .set("plan_misses", self.plan_misses)
+            .set("programs_compiled", self.programs_compiled)
+            .set("rows_shared", self.rows_shared)
+            .set("rows_total", self.rows_total)
+            .set("task_reuse_rate", self.task_reuse_rate())
+            .set("row_reuse_rate", self.row_reuse_rate());
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let s = SchedulerStats::new();
+        s.record_task(false);
+        s.record_task(true);
+        s.record_task(true);
+        s.record_plan(64, 4);
+        let snap = s.snapshot();
+        assert_eq!(snap.tasks_seen, 3);
+        assert!((snap.task_reuse_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((snap.row_reuse_rate() - 60.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_rates_are_zero() {
+        let snap = SchedulerStats::new().snapshot();
+        assert_eq!(snap.task_reuse_rate(), 0.0);
+        assert_eq!(snap.row_reuse_rate(), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let s = SchedulerStats::new();
+        s.record_task(false);
+        s.record_plan(10, 2);
+        let j = s.snapshot().to_json();
+        assert_eq!(j.get("plan_misses").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("programs_compiled").unwrap().as_f64(), Some(2.0));
+        let text = j.to_string_pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+}

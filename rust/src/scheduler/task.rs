@@ -1,0 +1,135 @@
+//! Task model: one entry of the paper's task buffer.
+//!
+//! A task is an *operator application over a sparsity structure*. Two
+//! tasks are **identical** when every field including the structure
+//! signature matches — the scheduler then reuses the compiled plan
+//! outright. Two tasks are **similar** when the static fields match but
+//! structures differ — the scheduler orders them adjacently.
+
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::pattern::matrix_signature;
+use crate::sparse::prune::BlockShape;
+use std::fmt;
+
+/// Operator kinds that flow through the sparse runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Sparse weight × dense activation (attention projections, FFN).
+    SpmmBsr,
+    /// Dense fallback (negative-control path).
+    DenseLinear,
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpKind::SpmmBsr => write!(f, "spmm_bsr"),
+            OpKind::DenseLinear => write!(f, "dense_linear"),
+        }
+    }
+}
+
+/// Key identifying a task for reuse. Hash/Eq are derived: equal key ⇒
+/// the cached plan applies verbatim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TaskKey {
+    pub op: OpKind,
+    pub rows: usize,
+    pub cols: usize,
+    pub block: BlockShape,
+    /// Structure signature over all rows ([`matrix_signature`]): equal ⇒
+    /// identical sparsity structure (values may differ — plans are
+    /// value-independent).
+    pub structure: u64,
+}
+
+/// A task-buffer entry.
+#[derive(Debug, Clone)]
+pub struct SparseTask {
+    pub key: TaskKey,
+    /// Stored nonzero blocks (cost model input).
+    pub nnz_blocks: usize,
+    /// Human label for introspection output (`layer3.ffn.up` etc.).
+    pub label: String,
+}
+
+impl SparseTask {
+    pub fn for_bsr(label: &str, m: &BsrMatrix) -> SparseTask {
+        SparseTask {
+            key: TaskKey {
+                op: OpKind::SpmmBsr,
+                rows: m.rows,
+                cols: m.cols,
+                block: m.block,
+                structure: matrix_signature(m),
+            },
+            nnz_blocks: m.nnz_blocks(),
+            label: label.to_string(),
+        }
+    }
+
+    /// FLOP count of one application at `tokens` activation columns
+    /// (multiply+add = 2 FLOPs per stored element per token).
+    pub fn flops(&self, tokens: usize) -> u64 {
+        2 * self.nnz_blocks as u64 * self.key.block.elems() as u64 * tokens as u64
+    }
+
+    /// Whether another task is *similar*: same op/shape/block, different
+    /// structure (candidates for adjacent scheduling).
+    pub fn similar_to(&self, other: &SparseTask) -> bool {
+        self.key.op == other.key.op
+            && self.key.rows == other.key.rows
+            && self.key.cols == other.key.cols
+            && self.key.block == other.key.block
+            && self.key.structure != other.key.structure
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense::Matrix;
+    use crate::sparse::prune::prune_structured;
+    use crate::util::rng::Rng;
+
+    fn bsr(seed: u64, sparsity: f64) -> BsrMatrix {
+        let block = BlockShape::new(2, 2);
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(16, 16, 1.0, &mut rng);
+        prune_structured(&mut w, sparsity, block);
+        BsrMatrix::from_dense(&w, block).unwrap()
+    }
+
+    #[test]
+    fn identical_structure_same_key() {
+        let m = bsr(1, 0.5);
+        let mut m2 = m.clone();
+        for v in m2.data.iter_mut() {
+            *v += 1.0; // values differ, structure identical
+        }
+        let a = SparseTask::for_bsr("a", &m);
+        let b = SparseTask::for_bsr("b", &m2);
+        assert_eq!(a.key, b.key);
+        assert!(!a.similar_to(&b)); // identical, not merely similar
+    }
+
+    #[test]
+    fn different_structure_is_similar() {
+        let a = SparseTask::for_bsr("a", &bsr(1, 0.5));
+        let b = SparseTask::for_bsr("b", &bsr(2, 0.75));
+        assert_ne!(a.key, b.key);
+        assert!(a.similar_to(&b));
+    }
+
+    #[test]
+    fn flops_scale_with_nnz() {
+        let dense_ish = SparseTask::for_bsr("d", &bsr(1, 0.25));
+        let sparse = SparseTask::for_bsr("s", &bsr(1, 0.75));
+        assert!(dense_ish.flops(128) > sparse.flops(128));
+        // exact: nnz_blocks * 4 elems * 2 * tokens
+        assert_eq!(
+            sparse.flops(10),
+            2 * sparse.nnz_blocks as u64 * 4 * 10
+        );
+    }
+}

@@ -1,0 +1,351 @@
+//! Block Sparse Row (BSR) matrix — the representation the paper adds to
+//! TVM (§2.2), in SciPy's exact layout so tensors written by
+//! `scipy.sparse.bsr_matrix` / our Python pipeline load unchanged:
+//!
+//! * `data`   — `nnz_blocks × R × C` values, blocks stored in block-row
+//!   order, each block row-major;
+//! * `indices` — block-column index of each stored block;
+//! * `indptr` — `n_block_rows + 1` offsets into `indices`/blocks.
+
+use super::dense::Matrix;
+use super::prune::BlockShape;
+use anyhow::{bail, Result};
+
+/// SciPy-layout BSR matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BsrMatrix {
+    /// Logical dense dimensions.
+    pub rows: usize,
+    pub cols: usize,
+    /// Block shape; `block.r` divides `rows`, `block.c` divides `cols`.
+    pub block: BlockShape,
+    /// Stored block values, `indices.len() * block.elems()` long.
+    pub data: Vec<f32>,
+    /// Block-column index per stored block.
+    pub indices: Vec<u32>,
+    /// Offsets: blocks of block-row `i` are `indices[indptr[i]..indptr[i+1]]`.
+    pub indptr: Vec<u32>,
+}
+
+impl BsrMatrix {
+    /// Number of block rows.
+    #[inline]
+    pub fn block_rows(&self) -> usize {
+        self.rows / self.block.r
+    }
+
+    /// Number of block columns.
+    #[inline]
+    pub fn block_cols(&self) -> usize {
+        self.cols / self.block.c
+    }
+
+    /// Number of stored (nonzero) blocks.
+    #[inline]
+    pub fn nnz_blocks(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Stored element count (including explicit zeros inside kept blocks).
+    #[inline]
+    pub fn stored_elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Fraction of blocks that are *not* stored.
+    pub fn block_sparsity(&self) -> f64 {
+        let total = self.block_rows() * self.block_cols();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz_blocks() as f64 / total as f64
+    }
+
+    /// Slice of one stored block's values.
+    #[inline]
+    pub fn block_data(&self, block_idx: usize) -> &[f32] {
+        let e = self.block.elems();
+        &self.data[block_idx * e..(block_idx + 1) * e]
+    }
+
+    /// Range of stored-block positions for block-row `bi`.
+    #[inline]
+    pub fn row_range(&self, bi: usize) -> std::ops::Range<usize> {
+        self.indptr[bi] as usize..self.indptr[bi + 1] as usize
+    }
+
+    /// Construct from dense, storing every block that contains at least
+    /// one nonzero. The inverse of [`BsrMatrix::to_dense`] up to dropped
+    /// all-zero blocks.
+    pub fn from_dense(w: &Matrix, block: BlockShape) -> Result<BsrMatrix> {
+        if !block.divides(w.rows, w.cols) {
+            bail!("block {block} does not divide {}x{}", w.rows, w.cols);
+        }
+        let brows = w.rows / block.r;
+        let bcols = w.cols / block.c;
+        let mut data = Vec::new();
+        let mut indices = Vec::new();
+        let mut indptr = Vec::with_capacity(brows + 1);
+        indptr.push(0u32);
+        let mut blockbuf = vec![0.0f32; block.elems()];
+        for bi in 0..brows {
+            for bj in 0..bcols {
+                let mut any = false;
+                for i in 0..block.r {
+                    let src = &w.row(bi * block.r + i)[bj * block.c..(bj + 1) * block.c];
+                    blockbuf[i * block.c..(i + 1) * block.c].copy_from_slice(src);
+                    any |= src.iter().any(|&x| x != 0.0);
+                }
+                if any {
+                    data.extend_from_slice(&blockbuf);
+                    indices.push(bj as u32);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        Ok(BsrMatrix {
+            rows: w.rows,
+            cols: w.cols,
+            block,
+            data,
+            indices,
+            indptr,
+        })
+    }
+
+    /// Construct directly from SciPy-layout arrays (the Python interchange
+    /// path). Validates all invariants.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        block: BlockShape,
+        data: Vec<f32>,
+        indices: Vec<u32>,
+        indptr: Vec<u32>,
+    ) -> Result<BsrMatrix> {
+        if !block.divides(rows, cols) {
+            bail!("block {block} does not divide {rows}x{cols}");
+        }
+        let m = BsrMatrix {
+            rows,
+            cols,
+            block,
+            data,
+            indices,
+            indptr,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Check structural invariants (used by `from_parts`, property tests,
+    /// and the artifact loader on untrusted input).
+    pub fn validate(&self) -> Result<()> {
+        let brows = self.block_rows();
+        let bcols = self.block_cols();
+        if self.indptr.len() != brows + 1 {
+            bail!("indptr length {} != block_rows+1 {}", self.indptr.len(), brows + 1);
+        }
+        if self.indptr[0] != 0 {
+            bail!("indptr[0] must be 0");
+        }
+        if *self.indptr.last().unwrap() as usize != self.indices.len() {
+            bail!(
+                "indptr[-1] {} != nnz_blocks {}",
+                self.indptr.last().unwrap(),
+                self.indices.len()
+            );
+        }
+        for wnd in self.indptr.windows(2) {
+            if wnd[1] < wnd[0] {
+                bail!("indptr not monotone");
+            }
+        }
+        if self.data.len() != self.indices.len() * self.block.elems() {
+            bail!(
+                "data length {} != nnz_blocks {} * block elems {}",
+                self.data.len(),
+                self.indices.len(),
+                self.block.elems()
+            );
+        }
+        for bi in 0..brows {
+            let r = self.row_range(bi);
+            let row = &self.indices[r];
+            for w in row.windows(2) {
+                if w[1] <= w[0] {
+                    bail!("block row {bi}: indices not strictly increasing");
+                }
+            }
+            if let Some(&last) = row.last() {
+                if last as usize >= bcols {
+                    bail!("block row {bi}: column index {last} out of range {bcols}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Densify (oracle for tests and the TVM-std negative-control path).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for bi in 0..self.block_rows() {
+            for pos in self.row_range(bi) {
+                let bj = self.indices[pos] as usize;
+                let blk = self.block_data(pos);
+                for i in 0..self.block.r {
+                    let dst = &mut out.row_mut(bi * self.block.r + i)
+                        [bj * self.block.c..(bj + 1) * self.block.c];
+                    dst.copy_from_slice(&blk[i * self.block.c..(i + 1) * self.block.c]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Memory footprint in bytes (values + indices + indptr) — the
+    /// "reduces the sparse neural network memory footprint" claim of §2.2,
+    /// reported by `sparsebert inspect`.
+    pub fn footprint_bytes(&self) -> usize {
+        self.data.len() * 4 + self.indices.len() * 4 + self.indptr.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune::{prune_structured, BlockShape};
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    fn pruned_random(rows: usize, cols: usize, block: BlockShape, sparsity: f64, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(rows, cols, 1.0, &mut rng);
+        prune_structured(&mut w, sparsity, block);
+        w
+    }
+
+    #[test]
+    fn dense_roundtrip_exact() {
+        let block = BlockShape::new(2, 4);
+        let w = pruned_random(8, 16, block, 0.5, 1);
+        let bsr = BsrMatrix::from_dense(&w, block).unwrap();
+        bsr.validate().unwrap();
+        assert_eq!(bsr.to_dense(), w);
+    }
+
+    #[test]
+    fn nnz_blocks_match_prune_report() {
+        let block = BlockShape::new(4, 4);
+        let mut rng = Rng::new(2);
+        let mut w = Matrix::randn(16, 16, 1.0, &mut rng);
+        let rep = prune_structured(&mut w, 0.75, block);
+        let bsr = BsrMatrix::from_dense(&w, block).unwrap();
+        assert_eq!(bsr.nnz_blocks(), rep.blocks_kept);
+        assert!((bsr.block_sparsity() - 0.75).abs() < 0.05);
+    }
+
+    #[test]
+    fn empty_matrix_has_zero_blocks() {
+        let w = Matrix::zeros(8, 8);
+        let bsr = BsrMatrix::from_dense(&w, BlockShape::new(2, 2)).unwrap();
+        assert_eq!(bsr.nnz_blocks(), 0);
+        assert_eq!(bsr.indptr, vec![0; 5]);
+        assert_eq!(bsr.to_dense(), w);
+    }
+
+    #[test]
+    fn scipy_layout_block_order() {
+        // 4x4 matrix, 2x2 blocks; nonzeros in blocks (0,1) and (1,0)
+        let mut w = Matrix::zeros(4, 4);
+        w.set(0, 2, 1.0);
+        w.set(1, 3, 2.0);
+        w.set(2, 0, 3.0);
+        let bsr = BsrMatrix::from_dense(&w, BlockShape::new(2, 2)).unwrap();
+        assert_eq!(bsr.indices, vec![1, 0]);
+        assert_eq!(bsr.indptr, vec![0, 1, 2]);
+        // block (0,1) row-major: [w(0,2), w(0,3), w(1,2), w(1,3)]
+        assert_eq!(bsr.block_data(0), &[1.0, 0.0, 0.0, 2.0]);
+        assert_eq!(bsr.block_data(1), &[3.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        let block = BlockShape::new(1, 2);
+        // valid 2x4, one block per row
+        let ok = BsrMatrix::from_parts(
+            2,
+            4,
+            block,
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![0, 1],
+            vec![0, 1, 2],
+        );
+        assert!(ok.is_ok());
+        // bad: indptr not monotone
+        assert!(BsrMatrix::from_parts(2, 4, block, vec![1.0, 2.0], vec![0], vec![0, 1, 0]).is_err());
+        // bad: column out of range
+        assert!(
+            BsrMatrix::from_parts(2, 4, block, vec![1.0, 2.0], vec![7], vec![0, 1, 1]).is_err()
+        );
+        // bad: data length mismatch
+        assert!(BsrMatrix::from_parts(2, 4, block, vec![1.0], vec![0], vec![0, 1, 1]).is_err());
+        // bad: duplicate / unsorted indices in a row
+        assert!(BsrMatrix::from_parts(
+            1,
+            4,
+            block,
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![1, 0],
+            vec![0, 2]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn roundtrip_property_over_shapes_and_ratios() {
+        propcheck::check(
+            "bsr dense roundtrip",
+            32,
+            |rng| {
+                let shapes = [
+                    BlockShape::new(1, 1),
+                    BlockShape::new(1, 8),
+                    BlockShape::new(2, 2),
+                    BlockShape::new(4, 8),
+                    BlockShape::new(8, 4),
+                ];
+                let block = shapes[rng.range(0, shapes.len())];
+                let rows = block.r * rng.range(1, 9);
+                let cols = block.c * rng.range(1, 9);
+                let sparsity = rng.f64() * 0.9;
+                (rows, cols, block, sparsity, rng.next_u64())
+            },
+            |&(rows, cols, block, sparsity, seed)| {
+                let w = pruned_random(rows, cols, block, sparsity, seed);
+                let bsr = BsrMatrix::from_dense(&w, block)
+                    .map_err(|e| format!("from_dense: {e}"))?;
+                bsr.validate().map_err(|e| format!("validate: {e}"))?;
+                if bsr.to_dense() == w {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn footprint_smaller_than_dense_at_high_sparsity() {
+        let block = BlockShape::new(1, 32);
+        let w = pruned_random(128, 256, block, 0.8, 5);
+        let bsr = BsrMatrix::from_dense(&w, block).unwrap();
+        let dense_bytes = 128 * 256 * 4;
+        assert!(
+            bsr.footprint_bytes() < dense_bytes / 3,
+            "footprint {} vs dense {}",
+            bsr.footprint_bytes(),
+            dense_bytes
+        );
+    }
+}

@@ -1,0 +1,171 @@
+//! Conversions among dense / BSR / CSR plus the Python-interchange glue.
+//!
+//! The Python pipeline exports weights as `TensorBundle` directories
+//! (manifest + `.npy` files); [`bsr_from_bundle`] / [`bsr_to_bundle`]
+//! map those to [`BsrMatrix`] using SciPy's exact field names so either
+//! side can be swapped for `scipy.sparse.bsr_matrix` without translation.
+
+use super::bsr::BsrMatrix;
+use super::csr::CsrMatrix;
+use super::dense::Matrix;
+use super::prune::BlockShape;
+use crate::util::tensorfile::{NpyTensor, TensorBundle};
+use anyhow::{bail, Context, Result};
+
+/// CSR → BSR with an arbitrary block shape (gathers elements into blocks;
+/// a block is stored iff any member element is stored).
+pub fn csr_to_bsr(csr: &CsrMatrix, block: BlockShape) -> Result<BsrMatrix> {
+    BsrMatrix::from_dense(&csr.to_dense(), block)
+}
+
+/// BSR → CSR (drops explicit intra-block zeros).
+pub fn bsr_to_csr(bsr: &BsrMatrix) -> CsrMatrix {
+    CsrMatrix::from_dense(&bsr.to_dense())
+}
+
+/// Read a BSR matrix from a tensor bundle using SciPy naming:
+/// `{prefix}.data` (`[nnzb, r, c]` f32), `{prefix}.indices` (i32),
+/// `{prefix}.indptr` (i32), plus `{prefix}.shape` (`[rows, cols]` i32).
+pub fn bsr_from_bundle(bundle: &TensorBundle, prefix: &str) -> Result<BsrMatrix> {
+    let data_t = bundle.get(&format!("{prefix}.data"))?;
+    let indices_t = bundle.get(&format!("{prefix}.indices"))?;
+    let indptr_t = bundle.get(&format!("{prefix}.indptr"))?;
+    let shape_t = bundle.get(&format!("{prefix}.shape"))?;
+    if data_t.shape.len() != 3 {
+        bail!("{prefix}.data must be [nnzb, r, c], got {:?}", data_t.shape);
+    }
+    let block = BlockShape::new(data_t.shape[1], data_t.shape[2]);
+    if shape_t.i32_data.len() != 2 {
+        bail!("{prefix}.shape must have 2 entries");
+    }
+    let rows = shape_t.i32_data[0] as usize;
+    let cols = shape_t.i32_data[1] as usize;
+    let to_u32 = |v: &[i32], what: &str| -> Result<Vec<u32>> {
+        v.iter()
+            .map(|&x| u32::try_from(x).with_context(|| format!("negative {what} entry {x}")))
+            .collect()
+    };
+    BsrMatrix::from_parts(
+        rows,
+        cols,
+        block,
+        data_t.f32_data.clone(),
+        to_u32(&indices_t.i32_data, "indices")?,
+        to_u32(&indptr_t.i32_data, "indptr")?,
+    )
+}
+
+/// Write a BSR matrix into a bundle under `prefix` (SciPy naming, inverse
+/// of [`bsr_from_bundle`]).
+pub fn bsr_to_bundle(bundle: &mut TensorBundle, prefix: &str, m: &BsrMatrix) {
+    bundle.insert(
+        &format!("{prefix}.data"),
+        NpyTensor::from_f32(
+            vec![m.nnz_blocks(), m.block.r, m.block.c],
+            m.data.clone(),
+        ),
+    );
+    bundle.insert(
+        &format!("{prefix}.indices"),
+        NpyTensor::from_i32(
+            vec![m.indices.len()],
+            m.indices.iter().map(|&x| x as i32).collect(),
+        ),
+    );
+    bundle.insert(
+        &format!("{prefix}.indptr"),
+        NpyTensor::from_i32(
+            vec![m.indptr.len()],
+            m.indptr.iter().map(|&x| x as i32).collect(),
+        ),
+    );
+    bundle.insert(
+        &format!("{prefix}.shape"),
+        NpyTensor::from_i32(vec![2], vec![m.rows as i32, m.cols as i32]),
+    );
+}
+
+/// Dense matrix ↔ bundle helpers.
+pub fn dense_from_bundle(bundle: &TensorBundle, name: &str) -> Result<Matrix> {
+    let t = bundle.get(name)?;
+    match t.shape.len() {
+        2 => Ok(Matrix::from_vec(t.shape[0], t.shape[1], t.f32_data.clone())),
+        1 => Ok(Matrix::from_vec(1, t.shape[0], t.f32_data.clone())),
+        _ => bail!("tensor '{name}' has rank {} (want 1 or 2)", t.shape.len()),
+    }
+}
+
+pub fn dense_to_bundle(bundle: &mut TensorBundle, name: &str, m: &Matrix) {
+    bundle.insert(name, NpyTensor::from_f32(vec![m.rows, m.cols], m.data.clone()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune::{prune_structured, prune_unstructured};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn csr_bsr_roundtrip_preserves_values() {
+        let mut rng = Rng::new(1);
+        let mut w = Matrix::randn(16, 32, 1.0, &mut rng);
+        prune_unstructured(&mut w, 0.7);
+        let csr = CsrMatrix::from_dense(&w);
+        let bsr = csr_to_bsr(&csr, BlockShape::new(2, 4)).unwrap();
+        assert_eq!(bsr.to_dense(), w);
+        let back = bsr_to_csr(&bsr);
+        assert_eq!(back.to_dense(), w);
+        // CSR drops intra-block zeros, so nnz(back) == nnz(csr)
+        assert_eq!(back.nnz(), csr.nnz());
+    }
+
+    #[test]
+    fn bundle_roundtrip() {
+        let block = BlockShape::new(2, 2);
+        let mut rng = Rng::new(2);
+        let mut w = Matrix::randn(8, 8, 1.0, &mut rng);
+        prune_structured(&mut w, 0.5, block);
+        let m = BsrMatrix::from_dense(&w, block).unwrap();
+        let mut bundle = TensorBundle::new();
+        bsr_to_bundle(&mut bundle, "layer0.attn.query", &m);
+        let back = bsr_from_bundle(&bundle, "layer0.attn.query").unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn bundle_roundtrip_via_disk() {
+        let dir = std::env::temp_dir().join(format!("sparsebert-conv-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let block = BlockShape::new(1, 4);
+        let mut rng = Rng::new(3);
+        let mut w = Matrix::randn(4, 16, 1.0, &mut rng);
+        prune_structured(&mut w, 0.5, block);
+        let m = BsrMatrix::from_dense(&w, block).unwrap();
+        let mut bundle = TensorBundle::new();
+        bsr_to_bundle(&mut bundle, "w", &m);
+        dense_to_bundle(&mut bundle, "bias", &Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]));
+        bundle.save(&dir).unwrap();
+        let loaded = TensorBundle::load(&dir).unwrap();
+        let back = bsr_from_bundle(&loaded, "w").unwrap();
+        assert_eq!(m, back);
+        let bias = dense_from_bundle(&loaded, "bias").unwrap();
+        assert_eq!(bias.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn bundle_missing_fields_error() {
+        let bundle = TensorBundle::new();
+        assert!(bsr_from_bundle(&bundle, "nope").is_err());
+    }
+
+    #[test]
+    fn bundle_rejects_negative_indices() {
+        let block = BlockShape::new(1, 1);
+        let m = BsrMatrix::from_parts(1, 2, block, vec![1.0], vec![0], vec![0, 1]).unwrap();
+        let mut bundle = TensorBundle::new();
+        bsr_to_bundle(&mut bundle, "w", &m);
+        // corrupt indices
+        bundle.insert("w.indices", NpyTensor::from_i32(vec![1], vec![-1]));
+        assert!(bsr_from_bundle(&bundle, "w").is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Compressed Sparse Row (CSR) — element-granular storage for the paper's
+//! *irregular sparsity* rows (Table 1, "1×1"). Functionally equivalent to
+//! BSR with a 1×1 block but kept as its own type because the irregular
+//! path is the negative control: its per-element index traffic is exactly
+//! why unstructured pruning buys ~nothing at runtime (ratio 0.977).
+
+use super::dense::Matrix;
+use anyhow::{bail, Result};
+
+/// SciPy-layout CSR matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+    pub indices: Vec<u32>,
+    pub indptr: Vec<u32>,
+}
+
+impl CsrMatrix {
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    #[inline]
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.indptr[i] as usize..self.indptr[i + 1] as usize
+    }
+
+    pub fn from_dense(w: &Matrix) -> CsrMatrix {
+        let mut data = Vec::new();
+        let mut indices = Vec::new();
+        let mut indptr = Vec::with_capacity(w.rows + 1);
+        indptr.push(0u32);
+        for i in 0..w.rows {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    data.push(v);
+                    indices.push(j as u32);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        CsrMatrix {
+            rows: w.rows,
+            cols: w.cols,
+            data,
+            indices,
+            indptr,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.indptr.len() != self.rows + 1 {
+            bail!("indptr length {} != rows+1", self.indptr.len());
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() as usize != self.nnz() {
+            bail!("indptr endpoints invalid");
+        }
+        if self.data.len() != self.indices.len() {
+            bail!("data/indices length mismatch");
+        }
+        for i in 0..self.rows {
+            let r = self.row_range(i);
+            if r.start > r.end {
+                bail!("indptr not monotone at row {i}");
+            }
+            let row = &self.indices[r];
+            for w in row.windows(2) {
+                if w[1] <= w[0] {
+                    bail!("row {i}: indices not strictly increasing");
+                }
+            }
+            if let Some(&last) = row.last() {
+                if last as usize >= self.cols {
+                    bail!("row {i}: column {last} out of range");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for pos in self.row_range(i) {
+                out.set(i, self.indices[pos] as usize, self.data[pos]);
+            }
+        }
+        out
+    }
+
+    pub fn footprint_bytes(&self) -> usize {
+        self.data.len() * 4 + self.indices.len() * 4 + self.indptr.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune::prune_unstructured;
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
+        prune_unstructured(&mut w, 0.8);
+        let csr = CsrMatrix::from_dense(&w);
+        csr.validate().unwrap();
+        assert_eq!(csr.to_dense(), w);
+        assert!((csr.sparsity() - 0.8).abs() < 0.02);
+    }
+
+    #[test]
+    fn empty_and_full() {
+        let z = CsrMatrix::from_dense(&Matrix::zeros(3, 3));
+        assert_eq!(z.nnz(), 0);
+        z.validate().unwrap();
+        let f = CsrMatrix::from_dense(&Matrix::from_fn(2, 2, |_, _| 1.0));
+        assert_eq!(f.nnz(), 4);
+        assert_eq!(f.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        propcheck::check(
+            "csr roundtrip",
+            32,
+            |rng| {
+                let rows = rng.range(1, 20);
+                let cols = rng.range(1, 20);
+                let keep_p = rng.f64();
+                let mut w = Matrix::zeros(rows, cols);
+                for i in 0..rows {
+                    for j in 0..cols {
+                        if rng.chance(keep_p) {
+                            w.set(i, j, rng.f32_range(-2.0, 2.0));
+                        }
+                    }
+                }
+                w
+            },
+            |w| {
+                let csr = CsrMatrix::from_dense(w);
+                csr.validate().map_err(|e| e.to_string())?;
+                if csr.to_dense() == *w {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+}

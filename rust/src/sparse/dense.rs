@@ -1,0 +1,207 @@
+//! Row-major dense f32 matrix — the universal container for weights and
+//! activations on the Rust side.
+//!
+//! Deliberately *not* a general ndarray: two dimensions cover everything
+//! the BERT inference path needs (higher-rank tensors are carried as
+//! `[rows = batch·seq, cols = hidden]` panels, exactly how the paper's TVM
+//! kernels see them).
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "data length != rows*cols");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Gaussian-random matrix (weight-init convention: std = 0.02 like
+    /// BERT unless told otherwise).
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal_f32(0.0, std));
+        }
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Fraction of exactly-zero entries.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|&&x| x == 0.0).count();
+        zeros as f64 / self.data.len() as f64
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Elementwise ℓ1 norm — the unstructured regularizer of Eq. (1).
+    pub fn l1_norm(&self) -> f64 {
+        self.data.iter().map(|&x| x.abs() as f64).sum()
+    }
+
+    /// Naive reference matmul (used only by tests as an oracle; the real
+    /// baselines live in `kernels::dense_matmul`).
+    pub fn matmul_ref(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let rrow = rhs.row(k);
+                let orow = out.row_mut(i);
+                for j in 0..rhs.cols {
+                    orow[j] += a * rrow[j];
+                }
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Matrix[{}x{}, nnz={}, fro={:.3}]",
+            self.rows,
+            self.cols,
+            self.count_nonzero(),
+            self.fro_norm()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.at(0, 0), 0.0);
+        assert_eq!(m.at(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(3, 2), m.at(2, 3));
+    }
+
+    #[test]
+    fn sparsity_counts() {
+        let mut m = Matrix::zeros(2, 5);
+        m.set(0, 1, 3.0);
+        m.set(1, 4, -2.0);
+        assert_eq!(m.count_nonzero(), 2);
+        assert!((m.sparsity() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_ref_identity() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(4, 4, 1.0, &mut rng);
+        let eye = Matrix::from_fn(4, 4, |i, j| if i == j { 1.0 } else { 0.0 });
+        let prod = a.matmul_ref(&eye);
+        for (x, y) in prod.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_ref_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul_ref(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_vec(1, 3, vec![3.0, -4.0, 0.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        assert!((m.l1_norm() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_checked() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul_ref(&b);
+    }
+}

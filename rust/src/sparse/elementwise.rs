@@ -1,0 +1,237 @@
+//! Element-wise BSR operations — the paper's §2.2 second bullet:
+//! "To eliminate the operation on zeroed-out weights, we implement the
+//! element-wise matrix multiplication for the BSR format. Through
+//! `indices` and `indptr`, TVM picks only the non-zero weight … and
+//! executes element-wise multiplication with [the] input tensor."
+//!
+//! Three operators, all touching only stored blocks:
+//!
+//! * [`bsr_mul_dense`] — `W ⊙ D` for dense `D`: the masked-scaling
+//!   primitive (e.g. applying attention-head gates or per-weight
+//!   importance scores to a pruned matrix) — output keeps `W`'s
+//!   structure, cost `O(nnz)`;
+//! * [`bsr_mul_bsr`] — `A ⊙ B` over the *intersection* of structures
+//!   (zero anywhere either is zero, so only co-stored blocks survive);
+//! * [`bsr_add_bsr`] — `A + B` over the *union* of structures (the
+//!   accumulation op used when merging weight deltas, e.g. a sparse
+//!   fine-tuning update into a sparse base).
+
+use super::bsr::BsrMatrix;
+use super::dense::Matrix;
+use anyhow::{bail, Result};
+
+/// `out = w ⊙ d` with `d` dense; output has exactly `w`'s structure.
+pub fn bsr_mul_dense(w: &BsrMatrix, d: &Matrix) -> Result<BsrMatrix> {
+    if w.rows != d.rows || w.cols != d.cols {
+        bail!(
+            "bsr_mul_dense shape mismatch: {}x{} vs {}x{}",
+            w.rows, w.cols, d.rows, d.cols
+        );
+    }
+    let mut out = w.clone();
+    let (r, c) = (w.block.r, w.block.c);
+    for bi in 0..w.block_rows() {
+        for pos in w.row_range(bi) {
+            let bj = w.indices[pos] as usize;
+            let blk = &mut out.data[pos * r * c..(pos + 1) * r * c];
+            for i in 0..r {
+                let drow = &d.row(bi * r + i)[bj * c..(bj + 1) * c];
+                for j in 0..c {
+                    blk[i * c + j] *= drow[j];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Check two BSR matrices are conformable for element-wise combination.
+fn check_pair(a: &BsrMatrix, b: &BsrMatrix) -> Result<()> {
+    if a.rows != b.rows || a.cols != b.cols {
+        bail!("shape mismatch: {}x{} vs {}x{}", a.rows, a.cols, b.rows, b.cols);
+    }
+    if a.block != b.block {
+        bail!("block mismatch: {} vs {}", a.block, b.block);
+    }
+    Ok(())
+}
+
+/// `out = a ⊙ b`: structure = intersection of stored blocks.
+pub fn bsr_mul_bsr(a: &BsrMatrix, b: &BsrMatrix) -> Result<BsrMatrix> {
+    check_pair(a, b)?;
+    let e = a.block.elems();
+    let mut data = Vec::new();
+    let mut indices = Vec::new();
+    let mut indptr = Vec::with_capacity(a.block_rows() + 1);
+    indptr.push(0u32);
+    for bi in 0..a.block_rows() {
+        let (ra, rb) = (a.row_range(bi), b.row_range(bi));
+        let (mut ia, mut ib) = (ra.start, rb.start);
+        while ia < ra.end && ib < rb.end {
+            match a.indices[ia].cmp(&b.indices[ib]) {
+                std::cmp::Ordering::Less => ia += 1,
+                std::cmp::Ordering::Greater => ib += 1,
+                std::cmp::Ordering::Equal => {
+                    let blk_a = &a.data[ia * e..(ia + 1) * e];
+                    let blk_b = &b.data[ib * e..(ib + 1) * e];
+                    data.extend(blk_a.iter().zip(blk_b).map(|(x, y)| x * y));
+                    indices.push(a.indices[ia]);
+                    ia += 1;
+                    ib += 1;
+                }
+            }
+        }
+        indptr.push(indices.len() as u32);
+    }
+    BsrMatrix::from_parts(a.rows, a.cols, a.block, data, indices, indptr)
+}
+
+/// `out = a + b`: structure = union of stored blocks.
+pub fn bsr_add_bsr(a: &BsrMatrix, b: &BsrMatrix) -> Result<BsrMatrix> {
+    check_pair(a, b)?;
+    let e = a.block.elems();
+    let mut data = Vec::new();
+    let mut indices = Vec::new();
+    let mut indptr = Vec::with_capacity(a.block_rows() + 1);
+    indptr.push(0u32);
+    for bi in 0..a.block_rows() {
+        let (ra, rb) = (a.row_range(bi), b.row_range(bi));
+        let (mut ia, mut ib) = (ra.start, rb.start);
+        loop {
+            let next_a = (ia < ra.end).then(|| a.indices[ia]);
+            let next_b = (ib < rb.end).then(|| b.indices[ib]);
+            match (next_a, next_b) {
+                (None, None) => break,
+                (Some(ca), Some(cb)) if ca == cb => {
+                    let blk_a = &a.data[ia * e..(ia + 1) * e];
+                    let blk_b = &b.data[ib * e..(ib + 1) * e];
+                    data.extend(blk_a.iter().zip(blk_b).map(|(x, y)| x + y));
+                    indices.push(ca);
+                    ia += 1;
+                    ib += 1;
+                }
+                (Some(ca), cb) if cb.map(|cb| ca < cb).unwrap_or(true) => {
+                    data.extend_from_slice(&a.data[ia * e..(ia + 1) * e]);
+                    indices.push(ca);
+                    ia += 1;
+                }
+                (_, Some(cb)) => {
+                    data.extend_from_slice(&b.data[ib * e..(ib + 1) * e]);
+                    indices.push(cb);
+                    ib += 1;
+                }
+                _ => unreachable!(),
+            }
+        }
+        indptr.push(indices.len() as u32);
+    }
+    BsrMatrix::from_parts(a.rows, a.cols, a.block, data, indices, indptr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune::{prune_structured, BlockShape};
+    use crate::util::propcheck::{self, assert_allclose};
+    use crate::util::rng::Rng;
+
+    fn random_bsr(block: BlockShape, sparsity: f64, seed: u64) -> BsrMatrix {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(16, 24, 1.0, &mut rng);
+        prune_structured(&mut w, sparsity, block);
+        BsrMatrix::from_dense(&w, block).unwrap()
+    }
+
+    fn dense_mul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = a.clone();
+        for (x, y) in out.data.iter_mut().zip(&b.data) {
+            *x *= y;
+        }
+        out
+    }
+
+    #[test]
+    fn mul_dense_matches_oracle() {
+        let block = BlockShape::new(2, 4);
+        let w = random_bsr(block, 0.6, 1);
+        let mut rng = Rng::new(2);
+        let d = Matrix::randn(16, 24, 1.0, &mut rng);
+        let got = bsr_mul_dense(&w, &d).unwrap();
+        got.validate().unwrap();
+        let want = dense_mul(&w.to_dense(), &d);
+        assert_allclose(&got.to_dense().data, &want.data, 1e-6, 1e-7, "mul_dense");
+        // structure preserved
+        assert_eq!(got.indices, w.indices);
+        assert_eq!(got.indptr, w.indptr);
+    }
+
+    #[test]
+    fn mul_bsr_is_intersection() {
+        let block = BlockShape::new(2, 4);
+        let a = random_bsr(block, 0.5, 3);
+        let b = random_bsr(block, 0.5, 4);
+        let got = bsr_mul_bsr(&a, &b).unwrap();
+        got.validate().unwrap();
+        let want = dense_mul(&a.to_dense(), &b.to_dense());
+        assert_allclose(&got.to_dense().data, &want.data, 1e-6, 1e-7, "mul_bsr");
+        assert!(got.nnz_blocks() <= a.nnz_blocks().min(b.nnz_blocks()));
+    }
+
+    #[test]
+    fn add_bsr_is_union() {
+        let block = BlockShape::new(1, 4);
+        let a = random_bsr(block, 0.7, 5);
+        let b = random_bsr(block, 0.7, 6);
+        let got = bsr_add_bsr(&a, &b).unwrap();
+        got.validate().unwrap();
+        let mut want = a.to_dense();
+        for (x, y) in want.data.iter_mut().zip(&b.to_dense().data) {
+            *x += y;
+        }
+        assert_allclose(&got.to_dense().data, &want.data, 1e-6, 1e-7, "add_bsr");
+        assert!(got.nnz_blocks() >= a.nnz_blocks().max(b.nnz_blocks()));
+    }
+
+    #[test]
+    fn shape_and_block_mismatches_rejected() {
+        let a = random_bsr(BlockShape::new(2, 4), 0.5, 7);
+        let b = random_bsr(BlockShape::new(1, 4), 0.5, 8);
+        assert!(bsr_mul_bsr(&a, &b).is_err());
+        let mut rng = Rng::new(9);
+        let d = Matrix::randn(8, 8, 1.0, &mut rng);
+        assert!(bsr_mul_dense(&a, &d).is_err());
+    }
+
+    #[test]
+    fn elementwise_properties() {
+        propcheck::check(
+            "bsr elementwise algebra",
+            24,
+            |rng| {
+                let block = BlockShape::new(2, 2);
+                (random_bsr(block, rng.f64() * 0.9, rng.next_u64()),
+                 random_bsr(block, rng.f64() * 0.9, rng.next_u64()))
+            },
+            |(a, b)| {
+                // commutativity of both ops at the dense level
+                let ab = bsr_mul_bsr(a, b).map_err(|e| e.to_string())?;
+                let ba = bsr_mul_bsr(b, a).map_err(|e| e.to_string())?;
+                if ab.to_dense() != ba.to_dense() {
+                    return Err("mul not commutative".into());
+                }
+                let s1 = bsr_add_bsr(a, b).map_err(|e| e.to_string())?;
+                let s2 = bsr_add_bsr(b, a).map_err(|e| e.to_string())?;
+                if s1.to_dense() != s2.to_dense() {
+                    return Err("add not commutative".into());
+                }
+                // identity: a ⊙ ones == a on a's structure
+                let ones = Matrix::from_fn(a.rows, a.cols, |_, _| 1.0);
+                let same = bsr_mul_dense(a, &ones).map_err(|e| e.to_string())?;
+                if same.to_dense() != a.to_dense() {
+                    return Err("mul by ones != identity".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

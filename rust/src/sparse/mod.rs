@@ -1,0 +1,34 @@
+//! Sparse-matrix substrate: dense storage, BSR/CSR formats, pruning, and
+//! sparsity-pattern analysis.
+//!
+//! This is the data layer the paper's TVM⁺ augmentation builds on:
+//! * [`dense::Matrix`] — row-major f32 matrices (weights & activations);
+//! * [`bsr::BsrMatrix`] — SciPy-layout Block Sparse Row storage
+//!   (`data` / `indices` / `indptr`), the representation the paper adds to
+//!   TVM;
+//! * [`csr::CsrMatrix`] — element-granular CSR for the *irregular sparsity*
+//!   negative-control rows of Table 1;
+//! * [`elementwise`] — the paper's §2.2 element-wise BSR multiplication
+//!   (structure-intersection ⊙, structure-union +, masked scaling by a
+//!   dense operand), all `O(nnz)`;
+//! * [`prune`] — the ℓ0-projection forms of the paper's Eq. (1)–(3):
+//!   unstructured magnitude pruning and structured *group* (block)
+//!   pruning, plus the group-lasso proximal operator used by the Python
+//!   training pipeline's Rust-side mirror;
+//! * [`pattern`] — block-row structure signatures and pattern-cardinality
+//!   statistics: the quantity the paper's Discussion uses to explain the
+//!   non-monotonic block-size curve, and the instrumentation its
+//!   follow-up #1 asks for.
+
+pub mod bsr;
+pub mod csr;
+pub mod convert;
+pub mod dense;
+pub mod elementwise;
+pub mod pattern;
+pub mod prune;
+
+pub use bsr::BsrMatrix;
+pub use csr::CsrMatrix;
+pub use dense::Matrix;
+pub use prune::BlockShape;

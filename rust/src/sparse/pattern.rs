@@ -1,0 +1,243 @@
+//! Sparsity-structure signatures and pattern statistics.
+//!
+//! The paper's TVM⁺ scheduler "analyzes the similarity of tasks in the
+//! buffer": identical structures are *reused*, similar ones scheduled
+//! adjacently (§2.2). Its Discussion then explains the non-monotonic
+//! block-size curve through *pattern cardinality* — small blocks yield
+//! many repeated intra-layer patterns, large blocks few. This module
+//! provides exactly those primitives:
+//!
+//! * [`row_signature`] — a stable 64-bit hash of one block-row's structure
+//!   (its sorted block-column indices), the task-dedup key;
+//! * [`PatternStats`] — cardinality / reuse-rate instrumentation, i.e. the
+//!   introspection tooling the paper's follow-up #1 asks for;
+//! * [`jaccard`] — structure similarity used for adjacent scheduling.
+
+use super::bsr::BsrMatrix;
+use std::collections::HashMap;
+
+/// FNV-1a over a block-row's column indices. Stable across runs (no
+/// RandomState), so task caches can be persisted/compared.
+pub fn row_signature(cols: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &c in cols {
+        for b in c.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    // length guard: distinguishes [] from [0]-with-unlucky-hash
+    h ^= (cols.len() as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    h
+}
+
+/// Signature of a whole BSR structure (all rows), used to key compiled
+/// executables for entire layers.
+pub fn matrix_signature(m: &BsrMatrix) -> u64 {
+    let mut h: u64 = 0x100001b3;
+    h ^= (m.rows as u64) << 32 | m.cols as u64;
+    h = h.wrapping_mul(0x100000001b3);
+    h ^= (m.block.r as u64) << 32 | m.block.c as u64;
+    h = h.wrapping_mul(0x100000001b3);
+    for bi in 0..m.block_rows() {
+        let sig = row_signature(&m.indices[m.row_range(bi)]);
+        h ^= sig;
+        h = h.rotate_left(13).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Pattern-cardinality statistics over the block rows of a BSR matrix.
+#[derive(Debug, Clone)]
+pub struct PatternStats {
+    /// Total block rows examined.
+    pub rows: usize,
+    /// Number of *distinct* row patterns.
+    pub distinct: usize,
+    /// Fraction of rows whose pattern was already seen — the reuse
+    /// opportunity available to the scheduler. `1 - distinct/rows`.
+    pub reuse_rate: f64,
+    /// Histogram: pattern signature → occurrence count (top patterns
+    /// first when iterated via [`PatternStats::top_patterns`]).
+    pub counts: HashMap<u64, usize>,
+    /// Mean nonzero blocks per row (load-balance indicator).
+    pub mean_blocks_per_row: f64,
+    /// Max/min nonzero blocks per row.
+    pub max_blocks_per_row: usize,
+    pub min_blocks_per_row: usize,
+}
+
+impl PatternStats {
+    pub fn of(m: &BsrMatrix) -> PatternStats {
+        let rows = m.block_rows();
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        let mut total_blocks = 0usize;
+        let mut maxb = 0usize;
+        let mut minb = usize::MAX;
+        for bi in 0..rows {
+            let cols = &m.indices[m.row_range(bi)];
+            *counts.entry(row_signature(cols)).or_insert(0) += 1;
+            total_blocks += cols.len();
+            maxb = maxb.max(cols.len());
+            minb = minb.min(cols.len());
+        }
+        let distinct = counts.len();
+        PatternStats {
+            rows,
+            distinct,
+            reuse_rate: if rows == 0 {
+                0.0
+            } else {
+                1.0 - distinct as f64 / rows as f64
+            },
+            counts,
+            mean_blocks_per_row: if rows == 0 {
+                0.0
+            } else {
+                total_blocks as f64 / rows as f64
+            },
+            max_blocks_per_row: maxb,
+            min_blocks_per_row: if minb == usize::MAX { 0 } else { minb },
+        }
+    }
+
+    /// Patterns sorted by descending frequency.
+    pub fn top_patterns(&self) -> Vec<(u64, usize)> {
+        let mut v: Vec<(u64, usize)> = self.counts.iter().map(|(&k, &c)| (k, c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v
+    }
+
+    /// Load imbalance: max/mean blocks per row (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        if self.mean_blocks_per_row == 0.0 {
+            1.0
+        } else {
+            self.max_blocks_per_row as f64 / self.mean_blocks_per_row
+        }
+    }
+}
+
+/// Jaccard similarity of two block-rows' column sets (inputs must be
+/// sorted, as BSR guarantees). Used by the auto-scheduler to order
+/// *similar* tasks adjacently.
+pub fn jaccard(a: &[u32], b: &[u32]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let (mut i, mut j, mut inter) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let union = a.len() + b.len() - inter;
+    inter as f64 / union as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense::Matrix;
+    use crate::sparse::prune::{prune_structured_replicated, BlockShape};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn signature_distinguishes_and_matches() {
+        assert_eq!(row_signature(&[0, 3, 7]), row_signature(&[0, 3, 7]));
+        assert_ne!(row_signature(&[0, 3, 7]), row_signature(&[0, 3, 8]));
+        assert_ne!(row_signature(&[]), row_signature(&[0]));
+        assert_ne!(row_signature(&[1, 2]), row_signature(&[2, 1])); // order-sensitive (BSR rows are sorted)
+    }
+
+    #[test]
+    fn jaccard_cases() {
+        assert_eq!(jaccard(&[], &[]), 1.0);
+        assert_eq!(jaccard(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(jaccard(&[1, 2], &[3, 4]), 0.0);
+        assert!((jaccard(&[1, 2, 3], &[2, 3, 4]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replicated_pruning_raises_reuse_rate() {
+        let block = BlockShape::new(1, 8);
+        let mut rng = Rng::new(11);
+        // independent pruning: patterns mostly unique
+        let mut w_ind = Matrix::randn(128, 128, 1.0, &mut rng);
+        prune_structured_replicated(&mut w_ind, 0.8, block, usize::MAX, &mut rng);
+        let s_ind = PatternStats::of(&BsrMatrix::from_dense(&w_ind, block).unwrap());
+        // pool-of-8 pruning: heavy reuse
+        let mut w_rep = Matrix::randn(128, 128, 1.0, &mut rng);
+        prune_structured_replicated(&mut w_rep, 0.8, block, 8, &mut rng);
+        let s_rep = PatternStats::of(&BsrMatrix::from_dense(&w_rep, block).unwrap());
+        assert!(
+            s_rep.reuse_rate > s_ind.reuse_rate + 0.3,
+            "rep {} vs ind {}",
+            s_rep.reuse_rate,
+            s_ind.reuse_rate
+        );
+        assert!(s_rep.distinct <= 8);
+    }
+
+    #[test]
+    fn pattern_cardinality_drops_with_block_size() {
+        // The paper's Discussion mechanism: at fixed sparsity, bigger
+        // blocks → fewer blocks per row → fewer possible patterns.
+        let mut rng = Rng::new(13);
+        let mut distincts = Vec::new();
+        for &c in &[4usize, 32, 128] {
+            let block = BlockShape::new(1, c);
+            let mut w = Matrix::randn(256, 256, 1.0, &mut rng);
+            prune_structured_replicated(&mut w, 0.8, block, 64, &mut rng);
+            let stats = PatternStats::of(&BsrMatrix::from_dense(&w, block).unwrap());
+            distincts.push(stats.distinct);
+        }
+        assert!(
+            distincts[0] >= distincts[1] && distincts[1] >= distincts[2],
+            "cardinality should fall with block size: {distincts:?}"
+        );
+    }
+
+    #[test]
+    fn matrix_signature_stable_and_structural() {
+        let block = BlockShape::new(2, 2);
+        let mut rng = Rng::new(17);
+        let mut w = Matrix::randn(8, 8, 1.0, &mut rng);
+        crate::sparse::prune::prune_structured(&mut w, 0.5, block);
+        let a = BsrMatrix::from_dense(&w, block).unwrap();
+        let sig1 = matrix_signature(&a);
+        // same structure, different values → same signature
+        let mut b = a.clone();
+        for v in b.data.iter_mut() {
+            *v *= 2.0;
+        }
+        assert_eq!(sig1, matrix_signature(&b));
+        // different structure → different signature
+        let mut w2 = w.clone();
+        crate::sparse::prune::prune_structured(&mut w2, 0.75, block);
+        let c = BsrMatrix::from_dense(&w2, block).unwrap();
+        assert_ne!(sig1, matrix_signature(&c));
+    }
+
+    #[test]
+    fn stats_row_block_counts() {
+        let block = BlockShape::new(1, 2);
+        let mut w = Matrix::zeros(3, 8);
+        w.set(0, 0, 1.0); // row 0: 1 block
+        w.set(1, 0, 1.0);
+        w.set(1, 4, 1.0); // row 1: 2 blocks
+        // row 2: 0 blocks
+        let stats = PatternStats::of(&BsrMatrix::from_dense(&w, block).unwrap());
+        assert_eq!(stats.rows, 3);
+        assert_eq!(stats.max_blocks_per_row, 2);
+        assert_eq!(stats.min_blocks_per_row, 0);
+        assert!((stats.mean_blocks_per_row - 1.0).abs() < 1e-12);
+        assert_eq!(stats.distinct, 3);
+    }
+}

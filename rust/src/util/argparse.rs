@@ -1,0 +1,276 @@
+//! Tiny declarative CLI parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands (handled by the caller via [`Args::positional`]), defaults,
+//! and auto-generated `--help`. Deliberately minimal: the `sparsebert`
+//! binary needs exactly this surface and nothing more.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option specification.
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative parser: declare options, then [`Parser::parse`].
+#[derive(Debug, Default)]
+pub struct Parser {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+}
+
+/// Parse result: typed accessors over the matched options.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+/// Error carrying the rendered usage text.
+#[derive(Debug)]
+pub struct UsageError(pub String);
+
+impl std::fmt::Display for UsageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for UsageError {}
+
+impl Parser {
+    pub fn new(program: &str, about: &str) -> Parser {
+        Parser {
+            program: program.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>` (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\noptions:");
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <value>", spec.name)
+            };
+            let default = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_else(|| {
+                    if spec.is_flag {
+                        String::new()
+                    } else {
+                        " [required]".to_string()
+                    }
+                });
+            let _ = writeln!(s, "{head:<28} {}{default}", spec.help);
+        }
+        s
+    }
+
+    /// Parse a token stream (excluding argv[0] / the subcommand name).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, UsageError> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positionals = Vec::new();
+        for spec in &self.specs {
+            if spec.is_flag {
+                flags.insert(spec.name.clone(), false);
+            } else if let Some(d) = &spec.default {
+                values.insert(spec.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(UsageError(self.usage()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| UsageError(format!("unknown option --{name}\n\n{}", self.usage())))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(UsageError(format!("flag --{name} takes no value")));
+                    }
+                    flags.insert(name, true);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| {
+                            UsageError(format!("option --{name} expects a value"))
+                        })?,
+                    };
+                    values.insert(name, value);
+                }
+            } else {
+                positionals.push(tok);
+            }
+        }
+        for spec in &self.specs {
+            if !spec.is_flag && !values.contains_key(&spec.name) {
+                return Err(UsageError(format!(
+                    "missing required option --{}\n\n{}",
+                    spec.name,
+                    self.usage()
+                )));
+            }
+        }
+        Ok(Args {
+            values,
+            flags,
+            positionals,
+        })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, UsageError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| UsageError(format!("--{name} expects an integer, got '{}'", self.get(name))))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, UsageError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| UsageError(format!("--{name} expects a number, got '{}'", self.get(name))))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    fn parser() -> Parser {
+        Parser::new("test", "test tool")
+            .opt("block", "1x32", "block shape")
+            .opt("sparsity", "0.8", "target sparsity")
+            .req("model", "model path")
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parser().parse(argv("--model m.bin")).unwrap();
+        assert_eq!(a.get("block"), "1x32");
+        assert_eq!(a.get_f64("sparsity").unwrap(), 0.8);
+        assert_eq!(a.get("model"), "m.bin");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let a = parser()
+            .parse(argv("--model=m --block 16x16 --verbose"))
+            .unwrap();
+        assert_eq!(a.get("block"), "16x16");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        assert!(parser().parse(argv("--block 4x4")).is_err());
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(parser().parse(argv("--model m --nope 1")).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parser().parse(argv("--model m extra1 extra2")).unwrap();
+        assert_eq!(a.positional(), &["extra1".to_string(), "extra2".to_string()]);
+    }
+
+    #[test]
+    fn help_is_usage_error() {
+        let err = parser().parse(argv("--help")).unwrap_err();
+        assert!(err.0.contains("--block"));
+        assert!(err.0.contains("[default: 1x32]"));
+        assert!(err.0.contains("[required]"));
+    }
+
+    #[test]
+    fn bad_number_reports() {
+        let a = parser().parse(argv("--model m --sparsity abc")).unwrap();
+        assert!(a.get_f64("sparsity").is_err());
+    }
+
+    #[test]
+    fn flag_rejects_value() {
+        assert!(parser().parse(argv("--model m --verbose=1")).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Timing harness (criterion substitute).
+//!
+//! The paper's Table 1 reports `mean (std)` inference times over repeated
+//! runs after warmup; this module reproduces that protocol: a fixed warmup
+//! phase, then `samples` timed iterations, summarized via [`Summary`].
+//! Used both by `cargo bench` targets (with `harness = false`) and by the
+//! CLI's `table1`/`figure2` subcommands so the paper tables can be
+//! regenerated either way.
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Configuration for one measurement.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Timed samples collected (paper uses repeated runs; we default to 10).
+    pub samples: usize,
+    /// Warmup iterations discarded before sampling.
+    pub warmup: usize,
+    /// Hard cap on total measurement time; sampling stops early (with at
+    /// least 3 samples) when exceeded, so slow baselines don't stall CI.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            samples: 10,
+            warmup: 3,
+            max_seconds: 120.0,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast profile for tests / smoke runs.
+    pub fn quick() -> Self {
+        BenchConfig {
+            samples: 3,
+            warmup: 1,
+            max_seconds: 30.0,
+        }
+    }
+
+    /// Honor `SPARSEBERT_BENCH_SAMPLES` / `SPARSEBERT_BENCH_QUICK` env vars
+    /// so `cargo bench` runs can be scaled without editing code.
+    pub fn from_env() -> Self {
+        let mut cfg = if std::env::var("SPARSEBERT_BENCH_QUICK").is_ok() {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        };
+        if let Ok(v) = std::env::var("SPARSEBERT_BENCH_SAMPLES") {
+            if let Ok(n) = v.parse::<usize>() {
+                cfg.samples = n.max(1);
+            }
+        }
+        cfg
+    }
+}
+
+/// One measured result, in milliseconds.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+/// Measure `f` per [`BenchConfig`] protocol. `f` is the complete unit of
+/// work (one end-to-end inference for Table 1 rows).
+pub fn measure<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> Measurement {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut samples_ms = Vec::with_capacity(cfg.samples);
+    let started = Instant::now();
+    for i in 0..cfg.samples {
+        let t0 = Instant::now();
+        f();
+        samples_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        if started.elapsed().as_secs_f64() > cfg.max_seconds && i + 1 >= 3 {
+            break;
+        }
+    }
+    Measurement {
+        name: name.to_string(),
+        summary: Summary::of(&samples_ms),
+    }
+}
+
+/// Measure, but let the closure report its own duration (for cases where
+/// setup must be excluded from the timed region).
+pub fn measure_custom<F: FnMut() -> f64>(name: &str, cfg: &BenchConfig, mut f: F) -> Measurement {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut samples_ms = Vec::with_capacity(cfg.samples);
+    let started = Instant::now();
+    for i in 0..cfg.samples {
+        samples_ms.push(f());
+        if started.elapsed().as_secs_f64() > cfg.max_seconds && i + 1 >= 3 {
+            break;
+        }
+    }
+    Measurement {
+        name: name.to_string(),
+        summary: Summary::of(&samples_ms),
+    }
+}
+
+/// Render a set of measurements as an aligned text table, with optional
+/// ratio column relative to a named baseline (the paper's `TVM⁺/Dense`).
+pub fn render_table(title: &str, rows: &[Measurement], baseline: Option<&str>) -> String {
+    let base_mean = baseline
+        .and_then(|b| rows.iter().find(|m| m.name == b))
+        .map(|m| m.summary.mean);
+    let name_w = rows
+        .iter()
+        .map(|m| m.name.len())
+        .chain(std::iter::once(12))
+        .max()
+        .unwrap();
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<name_w$}  {:>14}  {:>10}  {:>10}{}\n",
+        "config",
+        "mean ms (std)",
+        "median",
+        "p95",
+        if base_mean.is_some() { "  ratio/base" } else { "" },
+    ));
+    for m in rows {
+        let ratio = base_mean
+            .map(|b| format!("  {:>10.3}", m.summary.mean / b))
+            .unwrap_or_default();
+        out.push_str(&format!(
+            "{:<name_w$}  {:>14}  {:>10.1}  {:>10.1}{}\n",
+            m.name,
+            m.summary.paper_cell_ms(),
+            m.summary.median,
+            m.summary.p95,
+            ratio,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut calls = 0usize;
+        let cfg = BenchConfig {
+            samples: 5,
+            warmup: 2,
+            max_seconds: 60.0,
+        };
+        let m = measure("noop", &cfg, || {
+            calls += 1;
+        });
+        assert_eq!(calls, 7); // warmup + samples
+        assert_eq!(m.summary.count, 5);
+    }
+
+    #[test]
+    fn measure_times_are_positive_and_ordered() {
+        let cfg = BenchConfig::quick();
+        let m = measure("sleep", &cfg, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(m.summary.min >= 1.5, "min {:?}", m.summary);
+        assert!(m.summary.min <= m.summary.median);
+        assert!(m.summary.median <= m.summary.max);
+    }
+
+    #[test]
+    fn measure_custom_uses_reported_values() {
+        let cfg = BenchConfig {
+            samples: 4,
+            warmup: 0,
+            max_seconds: 60.0,
+        };
+        let mut v = 0.0;
+        let m = measure_custom("fixed", &cfg, || {
+            v += 1.0;
+            v
+        });
+        assert_eq!(m.summary.count, 4);
+        assert!((m.summary.mean - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_cap_stops_early_but_keeps_three() {
+        let cfg = BenchConfig {
+            samples: 1000,
+            warmup: 0,
+            max_seconds: 0.02,
+        };
+        let m = measure("slowish", &cfg, || {
+            std::thread::sleep(std::time::Duration::from_millis(15));
+        });
+        assert!(m.summary.count >= 3);
+        assert!(m.summary.count < 1000);
+    }
+
+    #[test]
+    fn render_table_includes_ratio() {
+        let cfg = BenchConfig {
+            samples: 3,
+            warmup: 0,
+            max_seconds: 60.0,
+        };
+        let a = measure_custom("dense", &cfg, || 100.0);
+        let b = measure_custom("bsr-1x32", &cfg, || 45.0);
+        let table = render_table("t", &[a, b], Some("dense"));
+        assert!(table.contains("bsr-1x32"), "{table}");
+        assert!(table.contains("0.450"), "{table}");
+    }
+}

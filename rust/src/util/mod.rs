@@ -1,0 +1,26 @@
+//! Self-contained substrate utilities.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (serde, clap, rayon, criterion, rand,
+//! proptest) are unavailable. Everything the rest of the library needs from
+//! them is implemented here from scratch:
+//!
+//! | module        | replaces    | used for                                   |
+//! |---------------|-------------|--------------------------------------------|
+//! | [`json`]      | serde_json  | configs, reports, `artifacts/table2.json`  |
+//! | [`rng`]       | rand        | deterministic synthetic weights/workloads  |
+//! | [`argparse`]  | clap        | the `sparsebert` CLI                       |
+//! | [`pool`]      | rayon       | parallel row-panel execution of kernels    |
+//! | [`stats`]     | —           | mean/std/percentile aggregation            |
+//! | [`bench`]     | criterion   | warmup+sample timing harness (paper-style `mean (std)` rows) |
+//! | [`propcheck`] | proptest    | property-based tests on invariants         |
+//! | [`tensorfile`]| npy/safetensors | Python↔Rust weight interchange         |
+
+pub mod argparse;
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod tensorfile;

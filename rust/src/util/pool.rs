@@ -1,0 +1,265 @@
+//! Scoped data-parallel execution (rayon substitute).
+//!
+//! The BSR spmm hot path partitions output row-blocks across cores. We use
+//! `std::thread::scope` so worker closures can borrow the input/output
+//! buffers directly — no `Arc`, no allocation per call beyond the thread
+//! spawn itself. For the genuinely hot per-request path the engine keeps a
+//! [`Pool`] of persistent workers fed through channels, so steady-state
+//! dispatch cost is two atomic hops rather than thread creation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Number of worker threads to use by default: the physical parallelism the
+/// paper's TVM runtime would also see. Overridable via `SPARSEBERT_THREADS`.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SPARSEBERT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(chunk_index, range)` over `0..n` split into contiguous chunks on
+/// scoped threads. Blocking; returns when all chunks complete.
+///
+/// Chunks are contiguous (not strided) so each worker touches a contiguous
+/// band of the output matrix — the same partitioning TVM's CPU schedule
+/// uses for the outer row loop.
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, 0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fref = &f;
+            scope.spawn(move || fref(t, lo..hi));
+        }
+    });
+}
+
+/// Dynamic work-stealing variant: workers pull indices from a shared atomic
+/// counter in grains of `grain`. Used when per-item cost is irregular —
+/// exactly the load-imbalance situation large sparse blocks create (see
+/// DESIGN.md §6).
+pub fn parallel_dynamic<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1);
+    let grain = grain.max(1);
+    if threads == 1 || n <= grain {
+        f(0..n);
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let fref = &f;
+            let nref = &next;
+            scope.spawn(move || loop {
+                let lo = nref.fetch_add(grain, Ordering::Relaxed);
+                if lo >= n {
+                    break;
+                }
+                let hi = (lo + grain).min(n);
+                fref(lo..hi);
+            });
+        }
+    });
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent worker pool for the serving path. Jobs are `FnOnce`
+/// closures; [`Pool::join`] blocks until all submitted jobs complete.
+///
+/// Invariants (exercised by `propcheck` tests below):
+/// * every submitted job runs exactly once;
+/// * `join` returns only after all jobs submitted before it have finished;
+/// * dropping the pool joins and shuts down all workers.
+pub struct Pool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("sparsebert-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool rx poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cvar) = &*pending;
+                                let mut p = lock.lock().expect("pending poisoned");
+                                *p -= 1;
+                                if *p == 0 {
+                                    cvar.notify_all();
+                                }
+                            }
+                            Err(_) => break, // sender dropped: shutdown
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        Pool {
+            tx: Some(tx),
+            workers,
+            pending,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job. Never blocks.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().expect("pending poisoned") += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Block until every job submitted so far has completed.
+    pub fn join(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut p = lock.lock().expect("pending poisoned");
+        while *p > 0 {
+            p = cvar.wait(p).expect("pending poisoned");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.join();
+        self.tx.take(); // closes the channel, workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_chunks_covers_all_indices_once() {
+        let n = 1003;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(n, 7, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_chunks_single_thread_and_empty() {
+        let count = AtomicUsize::new(0);
+        parallel_chunks(10, 1, |_, r| {
+            count.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 10);
+        parallel_chunks(0, 4, |_, r| assert!(r.is_empty()));
+    }
+
+    #[test]
+    fn parallel_dynamic_covers_all_indices_once() {
+        let n = 997; // prime: exercises ragged grains
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_dynamic(n, 5, 16, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn pool_runs_every_job_exactly_once() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn pool_join_waits_for_slow_jobs() {
+        let pool = Pool::new(2);
+        let done = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let d = Arc::clone(&done);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                d.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(done.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn pool_reusable_after_join() {
+        let pool = Pool::new(3);
+        let c = Arc::new(AtomicU64::new(0));
+        for round in 0..5 {
+            for _ in 0..20 {
+                let c = Arc::clone(&c);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.join();
+            assert_eq!(c.load(Ordering::Relaxed), (round + 1) * 20);
+        }
+    }
+}

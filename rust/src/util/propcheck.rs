@@ -1,0 +1,144 @@
+//! Miniature property-based testing framework (proptest substitute).
+//!
+//! Provides seeded case generation with shrinking-by-halving for integer
+//! parameters. Used by the sparse substrate and coordinator tests to check
+//! invariants over hundreds of random configurations while staying fully
+//! deterministic (the failing seed is printed so a failure reproduces).
+
+use super::rng::Rng;
+
+/// Number of cases per property; override with `SPARSEBERT_PROP_CASES`.
+pub fn default_cases() -> usize {
+    std::env::var("SPARSEBERT_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` against `cases` generated inputs. `gen` builds an input from
+/// an [`Rng`]; `prop` returns `Err(reason)` on violation. On failure the
+/// case is re-generated and reported with its seed; panics with a
+/// reproducible message.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let base_seed = 0x5eed_0000u64;
+    for case in 0..cases {
+        let seed = base_seed + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}):\n  input: {input:?}\n  reason: {reason}"
+            );
+        }
+    }
+}
+
+/// Convenience: property over a single usize drawn from `[lo, hi)`.
+pub fn check_usize<P>(name: &str, lo: usize, hi: usize, cases: usize, mut prop: P)
+where
+    P: FnMut(usize) -> Result<(), String>,
+{
+    check(name, cases, |rng| rng.range(lo, hi), |&n| prop(n));
+}
+
+/// Assert two f32 slices are elementwise close with combined abs/rel
+/// tolerance — the same comparison `numpy.testing.assert_allclose` uses,
+/// so Rust-side kernel tests match the Python-side pytest oracle checks.
+pub fn assert_allclose(actual: &[f32], expected: &[f32], rtol: f32, atol: f32, ctx: &str) {
+    assert_eq!(
+        actual.len(),
+        expected.len(),
+        "{ctx}: length mismatch {} vs {}",
+        actual.len(),
+        expected.len()
+    );
+    let mut worst: Option<(usize, f32, f32, f32)> = None;
+    for (i, (&a, &e)) in actual.iter().zip(expected).enumerate() {
+        let tol = atol + rtol * e.abs();
+        let diff = (a - e).abs();
+        if !(diff <= tol) {
+            // NaN also lands here
+            let excess = diff - tol;
+            if worst.map(|(_, _, _, w)| excess > w).unwrap_or(true) {
+                worst = Some((i, a, e, excess));
+            }
+        }
+    }
+    if let Some((i, a, e, excess)) = worst {
+        panic!("{ctx}: allclose failed at [{i}]: actual={a} expected={e} (excess {excess}, rtol={rtol}, atol={atol})");
+    }
+}
+
+/// Max |a-e| over a pair of slices (diagnostic helper used in perf logs).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_valid_property() {
+        check(
+            "reverse-reverse",
+            32,
+            |rng| (0..rng.range(0, 20)).map(|_| rng.next_u32()).collect::<Vec<_>>(),
+            |v| {
+                let mut r = v.clone();
+                r.reverse();
+                r.reverse();
+                if r == *v {
+                    Ok(())
+                } else {
+                    Err("reverse twice != identity".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failures() {
+        check("always-fails", 4, |rng| rng.range(0, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mut first = Vec::new();
+        check("collect", 8, |rng| rng.next_u64(), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("collect", 8, |rng| rng.next_u64(), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn allclose_accepts_within_tolerance() {
+        assert_allclose(&[1.0, 2.0, 3.0], &[1.0 + 1e-6, 2.0, 3.0 - 1e-6], 1e-4, 1e-5, "t");
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_rejects_outside_tolerance() {
+        assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6, "t");
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_rejects_nan() {
+        assert_allclose(&[f32::NAN], &[1.0], 1e-3, 1e-3, "t");
+    }
+}

@@ -1,0 +1,286 @@
+//! Summary statistics for benchmark samples and serving metrics.
+//!
+//! Table 1 of the paper reports `mean (std)` per configuration; the serving
+//! coordinator reports p50/p95/p99 latency. Both are computed here.
+
+/// Online mean/variance accumulator (Welford). Numerically stable for the
+/// long-running serving counters where we cannot keep every sample.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator); 0 for fewer than two samples.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+    }
+}
+
+/// Full-sample summary, used by the bench harness where sample counts are
+/// small enough to keep everything.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Summarize a sample set. Panics on an empty slice (a bench with zero
+    /// samples is a harness bug, not a data condition).
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of(empty)");
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("non-finite sample"));
+        let mut w = Welford::new();
+        for &x in samples {
+            w.push(x);
+        }
+        Summary {
+            count: samples.len(),
+            mean: w.mean(),
+            std: w.std(),
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+        }
+    }
+
+    /// Paper-style cell: `764 (19)` — mean with std in parentheses, both
+    /// rounded to integers when the scale warrants it.
+    pub fn paper_cell_ms(&self) -> String {
+        format!("{:.0} ({:.0})", self.mean, self.std.max(0.0))
+    }
+
+    /// Ratio-style cell: `0.451 (0.006)`.
+    pub fn paper_cell_ratio(&self) -> String {
+        format!("{:.3} ({:.3})", self.mean, self.std.max(0.0))
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, `q` in `[0,100]`.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&q), "percentile {q}");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Percentile of an unsorted slice.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("non-finite sample"));
+    percentile_sorted(&s, q)
+}
+
+/// Fixed-bucket latency histogram for the serving metrics endpoint. Buckets
+/// are exponential from `base_us` so tail latencies keep resolution without
+/// unbounded memory.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    base_us: f64,
+    growth: f64,
+    counts: Vec<u64>,
+    welford: Welford,
+    max_us: f64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // 64 buckets, 10us base, ×1.35 growth → covers 10us .. ~1900s.
+        LatencyHistogram {
+            base_us: 10.0,
+            growth: 1.35,
+            counts: vec![0; 64],
+            welford: Welford::new(),
+            max_us: 0.0,
+        }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.welford.push(us);
+        self.max_us = self.max_us.max(us);
+        let idx = if us <= self.base_us {
+            0
+        } else {
+            ((us / self.base_us).ln() / self.growth.ln()).floor() as usize
+        };
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.welford.count()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.welford.mean()
+    }
+
+    /// Approximate percentile from bucket boundaries (upper edge of the
+    /// bucket containing the q-th sample).
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q / 100.0 * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return (self.base_us * self.growth.powi(i as i32 + 1)).min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // direct sample variance
+        let var: f64 = xs.iter().map(|x| (x - 5.0) * (x - 5.0)).sum::<f64>() / 7.0;
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_equals_concat() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [10.0, 20.0, 30.0, 40.0];
+        let mut wa = Welford::new();
+        let mut wb = Welford::new();
+        let mut wall = Welford::new();
+        for &x in &a {
+            wa.push(x);
+            wall.push(x);
+        }
+        for &x in &b {
+            wb.push(x);
+            wall.push(x);
+        }
+        wa.merge(&wb);
+        assert_eq!(wa.count(), wall.count());
+        assert!((wa.mean() - wall.mean()).abs() < 1e-9);
+        assert!((wa.variance() - wall.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&sorted, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile_sorted(&sorted, 100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_cells_format() {
+        let s = Summary::of(&[764.0, 745.0, 783.0]);
+        let cell = s.paper_cell_ms();
+        assert!(cell.contains('('), "{cell}");
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        let mut x = 50.0;
+        for _ in 0..1000 {
+            h.record_us(x);
+            x = (x * 1.01) % 40_000.0 + 20.0;
+        }
+        let p50 = h.percentile_us(50.0);
+        let p95 = h.percentile_us(95.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_single_value() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(1234.0);
+        assert!(h.percentile_us(50.0) <= 1234.0 + 1e-9);
+        assert!(h.percentile_us(99.0) <= 1234.0 + 1e-9);
+    }
+}

@@ -1,0 +1,407 @@
+//! Tensor interchange between the Python compile path and the Rust runtime.
+//!
+//! Python (numpy) writes standard `.npy` v1.0 files plus a `manifest.json`
+//! naming each tensor; Rust reads them here without any numpy/serde
+//! dependency. Supports the two dtypes the pipeline uses: little-endian
+//! `f32` (`<f4`) and `i32` (`<i4`), C-contiguous. A writer is included so
+//! Rust↔Rust round-trips are testable and so Rust can export pruned
+//! weights back to Python tooling.
+
+use super::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Supported element types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn descr(self) -> &'static str {
+        match self {
+            Dtype::F32 => "<f4",
+            Dtype::I32 => "<i4",
+        }
+    }
+
+    fn from_descr(d: &str) -> Result<Dtype> {
+        match d {
+            "<f4" | "|f4" | "=f4" => Ok(Dtype::F32),
+            "<i4" | "|i4" | "=i4" => Ok(Dtype::I32),
+            other => bail!("unsupported npy dtype descr '{other}' (only <f4 / <i4)"),
+        }
+    }
+}
+
+/// An n-d tensor of f32 or i32 with shape metadata. Data is flat C-order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpyTensor {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub f32_data: Vec<f32>,
+    pub i32_data: Vec<i32>,
+}
+
+impl NpyTensor {
+    pub fn from_f32(shape: Vec<usize>, data: Vec<f32>) -> NpyTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        NpyTensor {
+            shape,
+            dtype: Dtype::F32,
+            f32_data: data,
+            i32_data: Vec::new(),
+        }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: Vec<i32>) -> NpyTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        NpyTensor {
+            shape,
+            dtype: Dtype::I32,
+            f32_data: Vec::new(),
+            i32_data: data,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Read one `.npy` file (format version 1.0/2.0, C-order).
+pub fn read_npy(path: &Path) -> Result<NpyTensor> {
+    let mut file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 8];
+    file.read_exact(&mut magic).context("npy magic")?;
+    if &magic[0..6] != b"\x93NUMPY" {
+        bail!("{path:?}: not an npy file");
+    }
+    let major = magic[6];
+    let header_len = match major {
+        1 => {
+            let mut b = [0u8; 2];
+            file.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 | 3 => {
+            let mut b = [0u8; 4];
+            file.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => bail!("{path:?}: unsupported npy version {v}"),
+    };
+    let mut header = vec![0u8; header_len];
+    file.read_exact(&mut header)?;
+    let header = String::from_utf8(header).context("npy header utf8")?;
+    let (descr, fortran, shape) = parse_npy_header(&header)
+        .with_context(|| format!("{path:?}: bad npy header: {header}"))?;
+    if fortran {
+        bail!("{path:?}: fortran_order npy not supported");
+    }
+    let dtype = Dtype::from_descr(&descr)?;
+    let count: usize = shape.iter().product();
+    let mut raw = vec![0u8; count * 4];
+    file.read_exact(&mut raw)
+        .with_context(|| format!("{path:?}: truncated data (want {count} elems)"))?;
+    Ok(match dtype {
+        Dtype::F32 => {
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            NpyTensor::from_f32(shape, data)
+        }
+        Dtype::I32 => {
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            NpyTensor::from_i32(shape, data)
+        }
+    })
+}
+
+/// Parse the python-dict-literal npy header:
+/// `{'descr': '<f4', 'fortran_order': False, 'shape': (3, 4), }`
+fn parse_npy_header(h: &str) -> Result<(String, bool, Vec<usize>)> {
+    let descr = extract_quoted(h, "descr").context("descr")?;
+    let fortran = h
+        .split("'fortran_order'")
+        .nth(1)
+        .map(|rest| rest.trim_start_matches([':', ' ']).starts_with("True"))
+        .unwrap_or(false);
+    let shape_part = h.split("'shape'").nth(1).context("shape key")?;
+    let open = shape_part.find('(').context("shape open paren")?;
+    let close = shape_part[open..].find(')').context("shape close paren")? + open;
+    let inner = &shape_part[open + 1..close];
+    let mut shape = Vec::new();
+    for tok in inner.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        shape.push(tok.parse::<usize>().with_context(|| format!("shape dim '{tok}'"))?);
+    }
+    if shape.is_empty() {
+        shape.push(1); // 0-d scalar: treat as shape [1]
+    }
+    Ok((descr, fortran, shape))
+}
+
+fn extract_quoted(h: &str, key: &str) -> Option<String> {
+    let rest = h.split(&format!("'{key}'")).nth(1)?;
+    let rest = rest.trim_start_matches([':', ' ']);
+    let rest = rest.strip_prefix('\'')?;
+    let end = rest.find('\'')?;
+    Some(rest[..end].to_string())
+}
+
+/// Write a `.npy` v1.0 file.
+pub fn write_npy(path: &Path, t: &NpyTensor) -> Result<()> {
+    let shape_str = match t.shape.len() {
+        1 => format!("({},)", t.shape[0]),
+        _ => format!(
+            "({})",
+            t.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        t.dtype.descr(),
+        shape_str
+    );
+    // pad so magic(6)+ver(2)+len(2)+header is a multiple of 64, ending in \n
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    file.write_all(b"\x93NUMPY\x01\x00")?;
+    file.write_all(&(header.len() as u16).to_le_bytes())?;
+    file.write_all(header.as_bytes())?;
+    match t.dtype {
+        Dtype::F32 => {
+            let mut raw = Vec::with_capacity(t.f32_data.len() * 4);
+            for &x in &t.f32_data {
+                raw.extend_from_slice(&x.to_le_bytes());
+            }
+            file.write_all(&raw)?;
+        }
+        Dtype::I32 => {
+            let mut raw = Vec::with_capacity(t.i32_data.len() * 4);
+            for &x in &t.i32_data {
+                raw.extend_from_slice(&x.to_le_bytes());
+            }
+            file.write_all(&raw)?;
+        }
+    }
+    Ok(())
+}
+
+/// A named bundle of tensors backed by a directory:
+/// `dir/manifest.json` + one `.npy` per tensor.
+#[derive(Debug, Default)]
+pub struct TensorBundle {
+    pub tensors: BTreeMap<String, NpyTensor>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl TensorBundle {
+    pub fn new() -> TensorBundle {
+        TensorBundle::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: NpyTensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&NpyTensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("bundle missing tensor '{name}'"))
+    }
+
+    /// Load from a manifest directory written by Python (`save_bundle` in
+    /// `python/compile/io_utils.py`) or by [`TensorBundle::save`].
+    pub fn load(dir: &Path) -> Result<TensorBundle> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?}"))?;
+        let manifest = json::parse(&text).with_context(|| format!("parse {manifest_path:?}"))?;
+        let mut bundle = TensorBundle::new();
+        if let Some(Json::Obj(meta)) = manifest.get("meta") {
+            for (k, v) in meta {
+                let vs = match v {
+                    Json::Str(s) => s.clone(),
+                    other => other.to_string_compact(),
+                };
+                bundle.meta.insert(k.clone(), vs);
+            }
+        }
+        let tensors = manifest
+            .get("tensors")
+            .context("manifest missing 'tensors'")?;
+        let Json::Obj(entries) = tensors else {
+            bail!("manifest 'tensors' is not an object");
+        };
+        for (name, entry) in entries {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .with_context(|| format!("tensor '{name}' missing file"))?;
+            let t = read_npy(&dir.join(file))?;
+            if let Some(shape) = entry.get("shape").and_then(Json::as_arr) {
+                let want: Vec<usize> = shape.iter().filter_map(Json::as_usize).collect();
+                if want != t.shape {
+                    bail!("tensor '{name}': manifest shape {want:?} != npy shape {:?}", t.shape);
+                }
+            }
+            bundle.tensors.insert(name.clone(), t);
+        }
+        Ok(bundle)
+    }
+
+    /// Save to a manifest directory (creates it).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut tensors = Json::obj();
+        for (i, (name, t)) in self.tensors.iter().enumerate() {
+            let file = format!("t{i:04}.npy");
+            write_npy(&dir.join(&file), t)?;
+            let mut entry = Json::obj();
+            entry
+                .set("file", file.as_str())
+                .set("shape", t.shape.clone())
+                .set(
+                    "dtype",
+                    match t.dtype {
+                        Dtype::F32 => "f32",
+                        Dtype::I32 => "i32",
+                    },
+                );
+            tensors.set(name, entry);
+        }
+        let mut meta = Json::obj();
+        for (k, v) in &self.meta {
+            meta.set(k, v.as_str());
+        }
+        let mut manifest = Json::obj();
+        manifest.set("tensors", tensors).set("meta", meta);
+        std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Resolve the artifacts directory: `SPARSEBERT_ARTIFACTS` env var, else
+/// `./artifacts` relative to cwd, else relative to the manifest dir of the
+/// crate (so tests work from any cwd).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SPARSEBERT_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("sparsebert-tf-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn npy_roundtrip_f32() {
+        let d = tmpdir("f32");
+        let t = NpyTensor::from_f32(vec![2, 3], vec![1.0, -2.5, 3.25, 0.0, 5.0, -6.125]);
+        let p = d.join("a.npy");
+        write_npy(&p, &t).unwrap();
+        let back = read_npy(&p).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn npy_roundtrip_i32_1d() {
+        let d = tmpdir("i32");
+        let t = NpyTensor::from_i32(vec![5], vec![0, -1, 2, 3, i32::MAX]);
+        let p = d.join("b.npy");
+        write_npy(&p, &t).unwrap();
+        let back = read_npy(&p).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.shape, vec![5]);
+    }
+
+    #[test]
+    fn npy_header_variants_parse() {
+        let (d, f, s) =
+            parse_npy_header("{'descr': '<f4', 'fortran_order': False, 'shape': (3, 4), }")
+                .unwrap();
+        assert_eq!(d, "<f4");
+        assert!(!f);
+        assert_eq!(s, vec![3, 4]);
+        let (_, _, s1) =
+            parse_npy_header("{'descr': '<i4', 'fortran_order': False, 'shape': (7,), }").unwrap();
+        assert_eq!(s1, vec![7]);
+        let (_, _, s0) =
+            parse_npy_header("{'descr': '<f4', 'fortran_order': False, 'shape': (), }").unwrap();
+        assert_eq!(s0, vec![1]);
+    }
+
+    #[test]
+    fn fortran_order_rejected() {
+        let d = tmpdir("fort");
+        let p = d.join("f.npy");
+        // hand-craft a fortran_order=True header
+        let header = "{'descr': '<f4', 'fortran_order': True, 'shape': (1,), }\n";
+        let mut bytes: Vec<u8> = b"\x93NUMPY\x01\x00".to_vec();
+        bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        assert!(read_npy(&p).is_err());
+    }
+
+    #[test]
+    fn bundle_roundtrip_with_meta() {
+        let d = tmpdir("bundle");
+        let mut b = TensorBundle::new();
+        b.insert("w.query", NpyTensor::from_f32(vec![4, 4], (0..16).map(|i| i as f32).collect()));
+        b.insert("indices", NpyTensor::from_i32(vec![3], vec![0, 2, 5]));
+        b.meta.insert("block".into(), "1x32".into());
+        b.save(&d).unwrap();
+        let back = TensorBundle::load(&d).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.get("w.query").unwrap().shape, vec![4, 4]);
+        assert_eq!(back.get("indices").unwrap().i32_data, vec![0, 2, 5]);
+        assert_eq!(back.meta.get("block").map(String::as_str), Some("1x32"));
+        assert!(back.get("nope").is_err());
+    }
+
+    #[test]
+    fn bundle_shape_mismatch_detected() {
+        let d = tmpdir("mismatch");
+        let mut b = TensorBundle::new();
+        b.insert("x", NpyTensor::from_f32(vec![2, 2], vec![1.0; 4]));
+        b.save(&d).unwrap();
+        // corrupt the manifest shape
+        let m = d.join("manifest.json");
+        let text = std::fs::read_to_string(&m).unwrap();
+        std::fs::write(&m, text.replace("2", "3")).unwrap();
+        assert!(TensorBundle::load(&d).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Integration over the AOT artifact path: JAX-lowered HLO executed via
+//! PJRT must agree with the native engines (the L1/L2 ↔ L3 contract).
+//! These tests skip (with a notice) when `make artifacts` hasn't run.
+
+use sparsebert::model::bert::CompiledDenseEngine;
+use sparsebert::model::config::BertConfig;
+use sparsebert::model::engine::Engine;
+use sparsebert::model::weights::BertWeights;
+use sparsebert::runtime::manifest::ArtifactManifest;
+use sparsebert::runtime::service::RuntimeService;
+use sparsebert::runtime::XlaEngine;
+use sparsebert::util::propcheck::assert_allclose;
+use sparsebert::util::tensorfile::{artifacts_dir, NpyTensor};
+use std::sync::Arc;
+
+fn artifacts_ready() -> bool {
+    artifacts_dir().join("encoder_micro.hlo.txt").exists()
+}
+
+#[test]
+fn xla_encoder_matches_native_across_weights() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let svc = RuntimeService::start(artifacts_dir()).unwrap();
+    let cfg = BertConfig::micro();
+    // several weight draws — the artifact takes weights as inputs, so one
+    // compiled module must serve them all
+    for seed in [1u64, 2, 3] {
+        let w = Arc::new(BertWeights::synthetic(&cfg, seed));
+        let xla = XlaEngine::new(svc.handle.clone(), "encoder_micro", &w).unwrap();
+        let tokens: Vec<u32> = (0..xla.tokens() as u32).map(|i| i * 3 + 1).collect();
+        let x = w.embed(&tokens);
+        let y_xla = xla.forward(&x);
+        let y_native = CompiledDenseEngine::new(Arc::clone(&w), 1).forward(&x);
+        assert_allclose(&y_xla.data, &y_native.data, 2e-3, 2e-4, &format!("seed {seed}"));
+    }
+    let stats = svc.handle.stats().unwrap();
+    assert_eq!(stats.artifacts_compiled, 1, "compile cache must dedup");
+    assert_eq!(stats.sessions, 3);
+}
+
+#[test]
+fn train_step_artifact_decreases_loss() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let svc = RuntimeService::start(artifacts_dir()).unwrap();
+    let manifest = ArtifactManifest::load(&artifacts_dir(), "train_step_micro").unwrap();
+    let tokens = manifest.usize_attr("tokens").unwrap();
+    let hidden = manifest.config_field("hidden").unwrap();
+    let mut rng = sparsebert::util::rng::Rng::new(11);
+    let mut params: Vec<NpyTensor> = manifest.inputs[3..]
+        .iter()
+        .map(|d| {
+            let n = d.elems();
+            let data = if d.name.contains("gamma") {
+                vec![1.0; n]
+            } else if d.name.contains("beta") || d.name.contains(".b") {
+                vec![0.0; n]
+            } else {
+                (0..n).map(|_| rng.normal_f32(0.0, 0.02)).collect()
+            };
+            NpyTensor::from_f32(d.shape.clone(), data)
+        })
+        .collect();
+    // learnable batch: fixed x, fixed labels → loss must fall monotonic-ish
+    let x = NpyTensor::from_f32(
+        vec![tokens, hidden],
+        (0..tokens * hidden).map(|_| rng.normal_f32(0.0, 0.5)).collect(),
+    );
+    let labels = NpyTensor::from_i32(vec![tokens], (0..tokens as i32).collect());
+    let lr = NpyTensor::from_f32(vec![], vec![0.1]);
+    let mut losses = Vec::new();
+    for _ in 0..15 {
+        let mut inputs = vec![x.clone(), labels.clone(), lr.clone()];
+        inputs.extend(params.iter().cloned());
+        let out = svc.handle.execute_raw("train_step_micro", inputs).unwrap();
+        losses.push(out[0].f32_data[0]);
+        params = out[1..].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.5),
+        "loss did not halve on a memorizable batch: {losses:?}"
+    );
+}
+
+#[test]
+fn bsr_artifact_empty_structure_is_zero() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let svc = RuntimeService::start(artifacts_dir()).unwrap();
+    let m = ArtifactManifest::load(&artifacts_dir(), "bsr_micro").unwrap();
+    let inputs: Vec<NpyTensor> = m
+        .inputs
+        .iter()
+        .map(|d| {
+            if d.dtype == "i32" {
+                NpyTensor::from_i32(d.shape.clone(), vec![0; d.elems()])
+            } else {
+                NpyTensor::from_f32(d.shape.clone(), vec![1.0; d.elems()])
+            }
+        })
+        .collect();
+    let out = svc.handle.execute_raw("bsr_micro", inputs).unwrap();
+    assert!(out[0].f32_data.iter().all(|&v| v == 0.0));
+}
