@@ -5,7 +5,14 @@
 //!   * plan/program **reuse** (dedup by structure signature) — measured as
 //!     engine *construction* time (plan compilation is the reused work);
 //!   * **similarity-adjacent ordering** — measured on the execution path.
+//!
+//! A fourth section (A4) sweeps the *parallel plan-cached engine*:
+//! threads × grain × block shape — including the paper's 32x1 vs 32x32
+//! comparison at 90% sparsity — over the persistent worker pool, and
+//! verifies the plan cache performs zero re-planning on repeated
+//! same-structure calls.
 
+use sparsebert::bench_harness::{render_sched_sweep, run_scheduler_sweep, SchedSweepConfig};
 use sparsebert::model::bert::SparseBsrEngine;
 use sparsebert::model::config::BertConfig;
 use sparsebert::model::engine::Engine;
@@ -85,4 +92,37 @@ fn main() {
     }
     println!("\nexpected: reuse cuts build time in proportion to the row-reuse rate;");
     println!("ordering effects are bounded by cache pressure (weak when the working set fits L2).");
+
+    // ---- A4: parallel plan-cached engine sweep ----------------------------
+    let sweep_cfg = SchedSweepConfig {
+        bench,
+        ..SchedSweepConfig::default()
+    };
+    println!(
+        "\nA4 parallel engine: {}x{} @ {:.0}% sparsity, tokens={}, pool=global({} workers)",
+        sweep_cfg.rows,
+        sweep_cfg.cols,
+        sweep_cfg.sparsity * 100.0,
+        sweep_cfg.tokens,
+        threads
+    );
+    let report = run_scheduler_sweep(&sweep_cfg);
+    println!(
+        "{}",
+        render_sched_sweep(&report, "A4 — threads × grain × block (32x1 vs 32x32)")
+    );
+    let best_32x1 = report
+        .rows
+        .iter()
+        .filter(|r| r.block == BlockShape::new(32, 1) && r.threads > 1)
+        .map(|r| r.speedup_vs_serial)
+        .fold(0.0f64, f64::max);
+    println!(
+        "best 32x1 parallel speedup vs single-thread: {best_32x1:.2}x \
+         (acceptance: ≥2x on a multi-core runner)"
+    );
+    println!(
+        "plan cache re-plans on repeated same-structure calls: {} (must be 0)",
+        report.replans_on_repeat
+    );
 }

@@ -6,6 +6,9 @@
 //!   sparsity, plus the TVM⁺/Dense ratio column;
 //! * [`figure2`] — Figure 2: the same sweep as a series (CSV + ASCII
 //!   plot), with non-monotonicity and argmin checks;
+//! * [`table1::run_scheduler_sweep`] — the scheduler-interaction sweep
+//!   (threads × grain × block shape, 32x1 vs 32x32 included) over the
+//!   parallel plan-cached BSR engine, with zero-re-planning verification;
 //! * [`report`] — paper-style rendering + JSON export.
 //!
 //! Geometry: the full paper setting is BERT_BASE (L=12) at seq 128. On
@@ -19,4 +22,7 @@ pub mod figure2;
 pub mod report;
 pub mod table1;
 
-pub use table1::{run_table1, Table1Config, Table1Row};
+pub use table1::{
+    render_sched_sweep, run_scheduler_sweep, run_table1, SchedSweepConfig, SchedSweepReport,
+    SchedSweepRow, Table1Config, Table1Row,
+};

@@ -1,14 +1,19 @@
-//! Table 1 regeneration: the full engine × sparsity-configuration sweep.
+//! Table 1 regeneration: the full engine × sparsity-configuration sweep,
+//! plus the scheduler-interaction sweep (threads × grain × block shape)
+//! behind the paper's 32x1-vs-32x32 finding.
 
 use crate::interp::bert::InterpEngine;
+use crate::kernels::bsr_spmm::bsr_linear_planned_on;
 use crate::model::bert::{CompiledDenseEngine, SparseBsrEngine};
 use crate::model::config::BertConfig;
 use crate::model::engine::Engine;
 use crate::model::weights::{BertWeights, PruneMode, PruneSpec};
-use crate::scheduler::{AutoScheduler, HwSpec};
-use crate::sparse::prune::BlockShape;
+use crate::scheduler::{AutoScheduler, CacheStats, HwSpec};
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::dense::Matrix;
+use crate::sparse::prune::{prune_structured_replicated, BlockShape};
 use crate::util::bench::{measure, BenchConfig, Measurement};
-use crate::util::pool::default_threads;
+use crate::util::pool::{self, default_threads};
 use std::sync::Arc;
 
 /// Sweep configuration.
@@ -213,9 +218,208 @@ pub fn run_table1(cfg: &Table1Config) -> Vec<Table1Row> {
     rows
 }
 
+// ---------------------------------------------------------------------------
+// Scheduler-interaction sweep: threads × grain × block shape
+// ---------------------------------------------------------------------------
+
+/// Configuration of the threads × grain × block sweep over one
+/// BERT-geometry projection matrix.
+#[derive(Debug, Clone)]
+pub struct SchedSweepConfig {
+    /// Dense matrix geometry (BERT_BASE projection by default).
+    pub rows: usize,
+    pub cols: usize,
+    /// Activation columns per spmm.
+    pub tokens: usize,
+    pub sparsity: f64,
+    /// Pattern-pool size for structured pruning.
+    pub pool: usize,
+    pub blocks: Vec<BlockShape>,
+    pub threads: Vec<usize>,
+    pub grains: Vec<usize>,
+    pub bench: BenchConfig,
+    pub seed: u64,
+}
+
+impl Default for SchedSweepConfig {
+    fn default() -> Self {
+        let cores = default_threads();
+        let mut threads = vec![1usize, 2, cores];
+        threads.sort_unstable();
+        threads.dedup();
+        SchedSweepConfig {
+            rows: 768,
+            cols: 768,
+            tokens: 128,
+            sparsity: 0.9,
+            pool: 16,
+            // the paper's 32x1-vs-32x32 comparison plus the 1x32 optimum
+            blocks: vec![
+                BlockShape::new(32, 1),
+                BlockShape::new(32, 32),
+                BlockShape::new(1, 32),
+                BlockShape::new(16, 16),
+            ],
+            threads,
+            grains: vec![1, 4, 16],
+            bench: BenchConfig::from_env(),
+            seed: 42,
+        }
+    }
+}
+
+impl SchedSweepConfig {
+    /// Tiny profile for unit/integration tests.
+    pub fn smoke() -> SchedSweepConfig {
+        SchedSweepConfig {
+            rows: 64,
+            cols: 64,
+            tokens: 8,
+            sparsity: 0.9,
+            pool: 4,
+            blocks: vec![BlockShape::new(32, 1), BlockShape::new(1, 32)],
+            threads: vec![1, 2],
+            grains: vec![1, 4],
+            bench: BenchConfig {
+                samples: 1,
+                warmup: 0,
+                max_seconds: 30.0,
+            },
+            seed: 42,
+        }
+    }
+}
+
+/// One cell of the scheduler sweep.
+#[derive(Debug, Clone)]
+pub struct SchedSweepRow {
+    pub block: BlockShape,
+    pub threads: usize,
+    pub grain: usize,
+    pub ms: f64,
+    /// Speedup of this (threads, grain) cell over the single-thread run of
+    /// the same block shape — the parallel-engine headline number.
+    pub speedup_vs_serial: f64,
+}
+
+/// Sweep result: cells plus plan-cache instrumentation.
+#[derive(Debug, Clone)]
+pub struct SchedSweepReport {
+    pub rows: Vec<SchedSweepRow>,
+    pub cache: CacheStats,
+    /// Plan-cache misses incurred when every structure was requested a
+    /// second time after the sweep. Must be zero: repeated inference over
+    /// the same pruned weights never re-plans.
+    pub replans_on_repeat: u64,
+}
+
+/// Run the threads × grain × block sweep on the persistent global pool,
+/// planning through one shared auto-scheduler (so the sweep also
+/// exercises the plan cache the serving path uses).
+pub fn run_scheduler_sweep(cfg: &SchedSweepConfig) -> SchedSweepReport {
+    let sched = AutoScheduler::new(HwSpec::detect());
+    let mut rng = crate::util::rng::Rng::new(cfg.seed);
+    let x = Matrix::randn(cfg.cols, cfg.tokens, 1.0, &mut rng);
+    let mut rows = Vec::new();
+    let mut structures: Vec<(BlockShape, BsrMatrix)> = Vec::new();
+    for &block in &cfg.blocks {
+        let mut w = Matrix::randn(cfg.rows, cfg.cols, 1.0, &mut rng);
+        prune_structured_replicated(&mut w, cfg.sparsity, block, cfg.pool, &mut rng);
+        let bsr = BsrMatrix::from_dense(&w, block).expect("block divides geometry");
+        let ep = sched.exec_plan(&format!("sweep.{block}"), &bsr);
+        let serial = measure(&format!("serial-{block}"), &cfg.bench, || {
+            std::hint::black_box(bsr_linear_planned_on(
+                &bsr,
+                &ep.plan,
+                &x,
+                None,
+                pool::global(),
+                1,
+                1,
+            ));
+        });
+        for &threads in &cfg.threads {
+            for &grain in &cfg.grains {
+                let m = measure(&format!("{block}-t{threads}-g{grain}"), &cfg.bench, || {
+                    std::hint::black_box(bsr_linear_planned_on(
+                        &bsr,
+                        &ep.plan,
+                        &x,
+                        None,
+                        pool::global(),
+                        threads,
+                        grain,
+                    ));
+                });
+                rows.push(SchedSweepRow {
+                    block,
+                    threads,
+                    grain,
+                    ms: m.summary.mean,
+                    speedup_vs_serial: serial.summary.mean / m.summary.mean.max(1e-9),
+                });
+            }
+        }
+        structures.push((block, bsr));
+    }
+    // Zero-re-planning check: requesting every structure again must be
+    // all cache hits.
+    let misses_before = sched.cache.stats().misses;
+    for (block, bsr) in &structures {
+        let _ = sched.exec_plan(&format!("sweep.{block}"), bsr);
+    }
+    let replans_on_repeat = sched.cache.stats().misses - misses_before;
+    SchedSweepReport {
+        rows,
+        cache: sched.cache.stats(),
+        replans_on_repeat,
+    }
+}
+
+/// Render the sweep as an aligned text table.
+pub fn render_sched_sweep(report: &SchedSweepReport, title: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<10} {:>8} {:>7} {:>12} {:>14}\n",
+        "block", "threads", "grain", "ms", "speedup vs 1t"
+    ));
+    for r in &report.rows {
+        out.push_str(&format!(
+            "{:<10} {:>8} {:>7} {:>12.2} {:>14.2}\n",
+            r.block.to_string(),
+            r.threads,
+            r.grain,
+            r.ms,
+            r.speedup_vs_serial
+        ));
+    }
+    out.push_str(&format!(
+        "plan cache: {} entries, {} hits, {} misses; re-plans on repeat: {}\n",
+        report.cache.entries, report.cache.hits, report.cache.misses, report.replans_on_repeat
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scheduler_sweep_smoke_and_zero_replanning() {
+        let cfg = SchedSweepConfig::smoke();
+        let report = run_scheduler_sweep(&cfg);
+        assert_eq!(
+            report.rows.len(),
+            cfg.blocks.len() * cfg.threads.len() * cfg.grains.len()
+        );
+        assert!(report.rows.iter().all(|r| r.ms > 0.0 && r.speedup_vs_serial > 0.0));
+        assert_eq!(report.replans_on_repeat, 0, "plan cache re-planned: {report:?}");
+        assert_eq!(report.cache.entries, cfg.blocks.len());
+        let text = render_sched_sweep(&report, "smoke");
+        assert!(text.contains("32x1"), "{text}");
+        assert!(text.contains("re-plans on repeat: 0"), "{text}");
+    }
 
     #[test]
     fn smoke_sweep_produces_ordered_rows() {

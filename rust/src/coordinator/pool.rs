@@ -1,16 +1,21 @@
 //! Per-variant execution pool: a batcher thread feeding engine workers.
 //!
 //! One `VariantPool` per registered engine. Its dispatcher thread pulls
-//! batches from the [`Batcher`]; batch members execute concurrently on
-//! the pool's worker threads (each worker runs `Engine::forward` on one
-//! sequence — sequence-level parallelism complements each engine's
-//! internal row-band threading, which is tuned to stay below core count).
+//! batches from the [`Batcher`]; batch members execute concurrently on a
+//! **persistent** [`crate::util::pool::Pool`] owned by the dispatcher
+//! (each worker runs `Engine::forward` on one sequence — sequence-level
+//! parallelism complements each engine's internal row-band threading,
+//! which fans out on the shared global kernel pool). Keeping the workers
+//! alive across batches removes a thread-spawn per batch from the
+//! request path; the pool's drain-then-join shutdown ordering guarantees
+//! in-flight work finishes before the dispatcher exits.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse};
 use crate::model::engine::Engine;
 use crate::model::weights::BertWeights;
+use crate::util::pool::Pool as WorkerPool;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
@@ -117,54 +122,41 @@ fn dispatch_loop(
             })
             .expect("spawn intake");
     }
+    // Long-lived batch workers: spawned once per variant, reused for every
+    // batch. Dropped (drain + join) when the dispatcher exits.
+    let exec_pool = WorkerPool::new(workers.max(1));
     let mut batcher = Batcher::new(breq_rx, policy);
     while let Some(batch) = batcher.next_batch() {
         let picked_up = Instant::now();
         let size = batch.len();
         metrics.record_batch(&variant, size);
         let workers_now = workers.max(1).min(size);
-        std::thread::scope(|scope| {
-            let batch_ref = &batch;
-            let engine = &engine;
-            let weights = &weights;
-            let metrics = &metrics;
-            let replies = &replies;
-            let variant = &variant;
-            let chunk = size.div_ceil(workers_now);
-            for w in 0..workers_now {
-                let lo = w * chunk;
-                let hi = ((w + 1) * chunk).min(size);
-                if lo >= hi {
-                    break;
+        let handle_span = |_w: usize, span: std::ops::Range<usize>| {
+            for req in &batch[span] {
+                let t0 = Instant::now();
+                let x = weights.embed(&req.tokens);
+                let y = engine.forward(&x);
+                let compute_us = t0.elapsed().as_micros() as u64;
+                let queue_us = picked_up.duration_since(req.enqueued).as_micros() as u64;
+                let total_us = req.enqueued.elapsed().as_micros() as u64;
+                metrics.record(&variant, total_us, queue_us, compute_us);
+                let reply = replies
+                    .lock()
+                    .expect("replies poisoned")
+                    .remove(&req.id);
+                if let Some(tx) = reply {
+                    let _ = tx.send(InferenceResponse {
+                        id: req.id,
+                        cls: y.row(0).to_vec(),
+                        queue_us,
+                        compute_us,
+                        total_us,
+                        batch_size: size,
+                    });
                 }
-                scope.spawn(move || {
-                    for req in &batch_ref[lo..hi] {
-                        let t0 = Instant::now();
-                        let x = weights.embed(&req.tokens);
-                        let y = engine.forward(&x);
-                        let compute_us = t0.elapsed().as_micros() as u64;
-                        let queue_us =
-                            picked_up.duration_since(req.enqueued).as_micros() as u64;
-                        let total_us = req.enqueued.elapsed().as_micros() as u64;
-                        metrics.record(variant, total_us, queue_us, compute_us);
-                        let reply = replies
-                            .lock()
-                            .expect("replies poisoned")
-                            .remove(&req.id);
-                        if let Some(tx) = reply {
-                            let _ = tx.send(InferenceResponse {
-                                id: req.id,
-                                cls: y.row(0).to_vec(),
-                                queue_us,
-                                compute_us,
-                                total_us,
-                                batch_size: size,
-                            });
-                        }
-                    }
-                });
             }
-        });
+        };
+        exec_pool.run_chunks(size, workers_now, &handle_span);
     }
 }
 

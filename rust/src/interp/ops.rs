@@ -2,6 +2,12 @@
 //!
 //! Convention: activations `[T, H]` (a row per token), weights `[O, I]`
 //! (PyTorch `nn.Linear` layout), `y = x · Wᵀ + b`.
+//!
+//! Threading note: these ops fan out through [`pool::parallel_chunks`],
+//! which since the parallel-engine rework executes on the persistent
+//! process-wide worker pool — the eager tier keeps its naive *kernels*
+//! (that is what it models) but no longer pays a thread spawn per
+//! operator, mirroring the frameworks' persistent BLAS thread pools.
 
 use crate::sparse::dense::Matrix;
 use crate::util::pool;

@@ -9,7 +9,10 @@
 //!
 //! * [`bsr_linear`] — direct: walk `indptr`/`indices` as stored. This is
 //!   what a sparse runtime without scheduling support does.
-//! * [`bsr_linear_planned`] — execute a pre-compiled [`SpmmPlan`]. A
+//! * [`bsr_linear_planned`] / [`bsr_linear_planned_on`] — execute a
+//!   pre-compiled [`SpmmPlan`] as band-parallel tasks over a persistent
+//!   worker pool (dynamic grain-sized work stealing, parameters from the
+//!   auto-scheduler's plan cache). A
 //!   [`RowProgram`] is compiled per *distinct row pattern* (adjacent
 //!   stored blocks are merged into longer runs; offsets are precomputed
 //!   relative so rows sharing a pattern share one program). Plan
@@ -127,15 +130,39 @@ pub fn bsr_linear(w: &BsrMatrix, x: &Matrix, bias: Option<&[f32]>) -> Matrix {
     y
 }
 
-/// Planned + threaded BSR linear. Block rows are distributed dynamically
-/// (grain of a few rows) because per-row cost is pattern-dependent —
-/// exactly the load imbalance large blocks induce.
+/// Default dynamic grain (block rows per steal) when no auto-scheduler
+/// parameters are supplied.
+pub const DEFAULT_GRAIN: usize = 4;
+
+/// Planned + threaded BSR linear on the shared global worker pool.
+/// Block rows are distributed dynamically (grain of a few rows) because
+/// per-row cost is pattern-dependent — exactly the load imbalance large
+/// blocks induce. See [`bsr_linear_planned_on`] for explicit pool/grain
+/// control (the auto-scheduled engine path).
 pub fn bsr_linear_planned(
     w: &BsrMatrix,
     plan: &SpmmPlan,
     x: &Matrix,
     bias: Option<&[f32]>,
     threads: usize,
+) -> Matrix {
+    bsr_linear_planned_on(w, plan, x, bias, pool::global(), threads, DEFAULT_GRAIN)
+}
+
+/// Planned BSR linear executed as band-parallel tasks on an explicit
+/// persistent [`pool::Pool`], with the thread count and work-stealing
+/// grain chosen by the caller (normally the auto-scheduler's
+/// [`ExecParams`][crate::scheduler::autosched::ExecParams], via the plan
+/// cache). Workers claim `grain` block rows at a time from a shared
+/// cursor; each band of Y is written by exactly one worker.
+pub fn bsr_linear_planned_on(
+    w: &BsrMatrix,
+    plan: &SpmmPlan,
+    x: &Matrix,
+    bias: Option<&[f32]>,
+    exec_pool: &pool::Pool,
+    threads: usize,
+    grain: usize,
 ) -> Matrix {
     assert_eq!(w.cols, x.rows);
     assert_eq!(plan.rows.len(), w.block_rows(), "plan/matrix row mismatch");
@@ -164,7 +191,7 @@ pub fn bsr_linear_planned(
     if threads <= 1 {
         exec_range(0..plan.order.len());
     } else {
-        pool::parallel_dynamic(plan.order.len(), threads, 4, exec_range);
+        exec_pool.run_dynamic(plan.order.len(), threads, grain.max(1), &exec_range);
     }
     y
 }
@@ -379,6 +406,49 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn pool_parity_across_paper_shapes_and_sparsities() {
+        // The parallel-engine acceptance grid: dense↔BSR parity for the
+        // pool-executed path across the paper's tall/linear/square shapes
+        // (including the 32x1 optimum) at moderate and high sparsity.
+        let shapes = [
+            BlockShape::new(1, 1),
+            BlockShape::new(16, 16),
+            BlockShape::new(32, 32),
+            BlockShape::new(32, 1),
+            BlockShape::new(1, 32),
+        ];
+        let exec_pool = crate::util::pool::Pool::new(4);
+        for &block in &shapes {
+            for &sparsity in &[0.5f64, 0.9] {
+                let (w, bsr) = random_bsr(64, 64, block, sparsity, 77);
+                let mut rng = Rng::new(0x517 ^ block.r as u64 ^ (sparsity.to_bits()));
+                let x = Matrix::randn(64, 9, 1.0, &mut rng);
+                let bias: Vec<f32> = (0..64).map(|_| rng.f32()).collect();
+                let mut want = w.matmul_ref(&x);
+                for o in 0..64 {
+                    for j in 0..9 {
+                        let v = want.at(o, j) + bias[o];
+                        want.set(o, j, v);
+                    }
+                }
+                let plan = build_plan(&bsr, Default::default());
+                for &(threads, grain) in &[(1usize, 1usize), (4, 1), (4, 3), (3, 16)] {
+                    let got = bsr_linear_planned_on(
+                        &bsr, &plan, &x, Some(&bias), &exec_pool, threads, grain,
+                    );
+                    assert_allclose(
+                        &got.data,
+                        &want.data,
+                        1e-4,
+                        1e-5,
+                        &format!("pool parity {block} s={sparsity} t={threads} g={grain}"),
+                    );
+                }
+            }
+        }
     }
 
     #[test]

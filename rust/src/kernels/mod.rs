@@ -26,5 +26,5 @@ pub mod bsr_spmm;
 pub mod dense_matmul;
 pub mod ops;
 
-pub use bsr_spmm::{bsr_linear, bsr_linear_planned};
+pub use bsr_spmm::{bsr_linear, bsr_linear_planned, bsr_linear_planned_on};
 pub use dense_matmul::{linear_dense, linear_dense_parallel};

@@ -15,6 +15,32 @@
 //! Python never runs on the request path; the binary is self-contained once
 //! `make artifacts` has produced `artifacts/*.hlo.txt`.
 //!
+//! ## Parallel plan-cached execution engine
+//!
+//! The BSR hot path executes compiled [`SpmmPlan`]s as **band-parallel
+//! tasks over a persistent worker pool** ([`util::pool`]): workers steal
+//! `grain`-sized runs of block rows from a shared cursor, where `grain`
+//! and the thread count come from the auto-scheduler's hardware model
+//! ([`scheduler::autosched::ExecParams`]). Scoped thread spawns are gone
+//! from the request path — every operator (sparse, dense, attention, and
+//! the eager baselines) fans out on the shared [`util::pool::global`]
+//! pool, and the serving coordinator keeps a long-lived pool per engine
+//! variant.
+//!
+//! ## Plan cache
+//!
+//! Plans are cached in [`scheduler::cache::PlanCache`], keyed by
+//! *(structure signature, dense shape, block shape, hardware
+//! fingerprint)*. A hit returns an [`scheduler::cache::ExecPlan`] — the
+//! shared plan plus precomputed pattern statistics — so repeated
+//! inference over the same pruned weights performs **zero re-planning**
+//! and chooses threads/grain in O(1) per call. `sparsebert schedsweep`
+//! and bench A4 (`benches/ablation_scheduler.rs`) sweep threads × grain ×
+//! block shape (including the paper's 32x1 vs 32x32 comparison) over
+//! this engine and verify the zero-re-planning property.
+//!
+//! [`SpmmPlan`]: kernels::bsr_spmm::SpmmPlan
+//!
 //! See `DESIGN.md` for the full experiment index and `EXPERIMENTS.md` for
 //! measured-vs-paper results.
 

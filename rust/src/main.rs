@@ -15,7 +15,9 @@
 
 use anyhow::{bail, Context, Result};
 use sparsebert::bench_harness::figure2::build_figure2;
-use sparsebert::bench_harness::{report, run_table1, Table1Config};
+use sparsebert::bench_harness::{
+    render_sched_sweep, report, run_scheduler_sweep, run_table1, SchedSweepConfig, Table1Config,
+};
 use sparsebert::coordinator::batcher::BatchPolicy;
 use sparsebert::coordinator::server::{Client, Server};
 use sparsebert::coordinator::Router;
@@ -44,6 +46,7 @@ fn main() {
     };
     let result = match cmd {
         "table1" => cmd_table1(rest),
+        "schedsweep" => cmd_schedsweep(rest),
         "figure2" => cmd_figure2(rest),
         "table2" => cmd_table2(rest),
         "serve" => cmd_serve(rest),
@@ -71,6 +74,7 @@ fn usage() -> String {
         "sparsebert {} — block-sparse BERT inference co-design (Guo & Huang 2021 reproduction)\n\n\
          commands:\n\
          \x20 table1     regenerate Table 1 (inference ms per engine × block config)\n\
+         \x20 schedsweep threads × grain × block sweep of the parallel plan-cached engine\n\
          \x20 figure2    regenerate Figure 2 (TVM+/Dense curve)\n\
          \x20 table2     render Table 2 from artifacts/table2.json (run `make table2` first)\n\
          \x20 serve      start the serving coordinator (TCP, JSON lines)\n\
@@ -147,6 +151,61 @@ fn cmd_table1(argv: Vec<String>) -> Result<()> {
         );
     }
     maybe_write_json(&args, &rows, &cfg)
+}
+
+fn cmd_schedsweep(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new(
+        "sparsebert schedsweep",
+        "threads × grain × block-shape sweep of the parallel plan-cached BSR engine",
+    )
+    .opt("sparsity", "0.9", "target sparsity ratio")
+    .opt("tokens", "128", "activation columns per spmm")
+    .opt("pool", "16", "structured-prune pattern pool size")
+    .opt("samples", "0", "timed samples per cell (0 = env default)")
+    .opt("blocks", "", "comma-separated block subset, e.g. 32x1,32x32")
+    .parse(argv)?;
+    let mut cfg = SchedSweepConfig {
+        sparsity: args.get_f64("sparsity")?,
+        tokens: args.get_usize("tokens")?,
+        pool: args.get_usize("pool")?,
+        ..SchedSweepConfig::default()
+    };
+    let samples = args.get_usize("samples")?;
+    if samples > 0 {
+        cfg.bench.samples = samples;
+    }
+    let blocks = args.get("blocks");
+    if !blocks.is_empty() {
+        let parsed: std::result::Result<Vec<BlockShape>, String> =
+            blocks.split(',').map(BlockShape::parse).collect();
+        cfg.blocks = parsed.map_err(|e| anyhow::anyhow!(e))?;
+    }
+    for block in &cfg.blocks {
+        if !block.divides(cfg.rows, cfg.cols) {
+            bail!(
+                "block {block} does not divide the sweep geometry {}x{}",
+                cfg.rows,
+                cfg.cols
+            );
+        }
+    }
+    eprintln!(
+        "schedsweep: {}x{} sparsity={} tokens={} ({})",
+        cfg.rows,
+        cfg.cols,
+        cfg.sparsity,
+        cfg.tokens,
+        HwSpec::detect()
+    );
+    let rep = run_scheduler_sweep(&cfg);
+    println!(
+        "{}",
+        render_sched_sweep(&rep, "Scheduler sweep — parallel plan-cached BSR engine")
+    );
+    if rep.replans_on_repeat != 0 {
+        bail!("plan cache re-planned {} structures on repeat", rep.replans_on_repeat);
+    }
+    Ok(())
 }
 
 fn cmd_figure2(argv: Vec<String>) -> Result<()> {

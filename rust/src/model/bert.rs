@@ -15,13 +15,14 @@
 use super::engine::Engine;
 use super::weights::BertWeights;
 use crate::kernels::attention::multi_head_attention;
-use crate::kernels::bsr_spmm::{bsr_linear_planned, SpmmPlan};
+use crate::kernels::bsr_spmm::bsr_linear_planned_on;
 use crate::kernels::dense_matmul::{linear_dense_parallel, transpose};
 use crate::kernels::ops::{add_inplace, gelu, layernorm_fm};
-use crate::scheduler::AutoScheduler;
+use crate::scheduler::{AutoScheduler, ExecPlan};
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::dense::Matrix;
 use crate::sparse::prune::BlockShape;
+use crate::util::pool::{self, Pool};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -88,39 +89,59 @@ impl Engine for CompiledDenseEngine {
     }
 }
 
-/// One layer's projections in BSR form with their scheduled plans.
+/// One layer's projections in BSR form with their cached execution plans
+/// (shared `SpmmPlan` + structure stats for O(1) thread/grain choice).
 struct SparseLayer {
-    wq: (BsrMatrix, Arc<SpmmPlan>),
-    wk: (BsrMatrix, Arc<SpmmPlan>),
-    wv: (BsrMatrix, Arc<SpmmPlan>),
-    wo: (BsrMatrix, Arc<SpmmPlan>),
-    w_up: (BsrMatrix, Arc<SpmmPlan>),
-    w_down: (BsrMatrix, Arc<SpmmPlan>),
+    wq: (BsrMatrix, Arc<ExecPlan>),
+    wk: (BsrMatrix, Arc<ExecPlan>),
+    wv: (BsrMatrix, Arc<ExecPlan>),
+    wo: (BsrMatrix, Arc<ExecPlan>),
+    w_up: (BsrMatrix, Arc<ExecPlan>),
+    w_down: (BsrMatrix, Arc<ExecPlan>),
 }
 
-/// Sparse BSR engine ("TVM⁺" column).
+/// Sparse BSR engine ("TVM⁺" column): plans fetched once from the
+/// scheduler's structure×hardware plan cache at construction, executed as
+/// band-parallel tasks on a persistent worker pool at inference time.
 pub struct SparseBsrEngine {
     weights: Arc<BertWeights>,
     sparse_layers: Vec<SparseLayer>,
     pub sched: Arc<AutoScheduler>,
     threads: usize,
     block: BlockShape,
+    /// Dedicated worker pool (the serving coordinator passes one); `None`
+    /// executes on the process-wide [`pool::global`] pool.
+    exec_pool: Option<Arc<Pool>>,
 }
 
 impl SparseBsrEngine {
     /// Convert pruned weights to BSR at `block` granularity and compile
-    /// (or fetch) plans through the scheduler's task buffer.
+    /// (or fetch) execution plans through the scheduler's plan cache.
+    /// Kernels run on the shared global worker pool.
     pub fn new(
         weights: Arc<BertWeights>,
         block: BlockShape,
         sched: Arc<AutoScheduler>,
         threads: usize,
     ) -> Result<SparseBsrEngine> {
+        Self::with_pool(weights, block, sched, threads, None)
+    }
+
+    /// As [`SparseBsrEngine::new`], but with an explicit persistent pool
+    /// for kernel execution (used when the caller owns a long-lived pool,
+    /// e.g. the serving coordinator).
+    pub fn with_pool(
+        weights: Arc<BertWeights>,
+        block: BlockShape,
+        sched: Arc<AutoScheduler>,
+        threads: usize,
+        exec_pool: Option<Arc<Pool>>,
+    ) -> Result<SparseBsrEngine> {
         let mut sparse_layers = Vec::with_capacity(weights.layers.len());
         for (li, lw) in weights.layers.iter().enumerate() {
-            let conv = |label: &str, m: &Matrix| -> Result<(BsrMatrix, Arc<SpmmPlan>)> {
+            let conv = |label: &str, m: &Matrix| -> Result<(BsrMatrix, Arc<ExecPlan>)> {
                 let bsr = BsrMatrix::from_dense(m, block)?;
-                let plan = sched.plan(&format!("layer{li}.{label}"), &bsr);
+                let plan = sched.exec_plan(&format!("layer{li}.{label}"), &bsr);
                 Ok((bsr, plan))
             };
             sparse_layers.push(SparseLayer {
@@ -138,11 +159,24 @@ impl SparseBsrEngine {
             sched,
             threads,
             block,
+            exec_pool,
         })
     }
 
     pub fn block(&self) -> BlockShape {
         self.block
+    }
+
+    fn pool(&self) -> &Pool {
+        self.exec_pool.as_deref().unwrap_or_else(pool::global)
+    }
+
+    /// One planned projection: auto-scheduled threads/grain (O(1) from the
+    /// cached stats), capped by the engine's thread budget, executed on
+    /// the persistent pool.
+    fn project(&self, m: &(BsrMatrix, Arc<ExecPlan>), x: &Matrix, bias: &[f32]) -> Matrix {
+        let p = m.1.params_for(x.cols, &self.sched.hw).capped(self.threads);
+        bsr_linear_planned_on(&m.0, &m.1.plan, x, Some(bias), self.pool(), p.threads, p.grain)
     }
 
     /// Stored-block sparsity of the converted model (diagnostics).
@@ -173,16 +207,16 @@ impl Engine for SparseBsrEngine {
         let th = self.threads;
         let mut x = transpose(x_tm);
         for (lw, sl) in self.weights.layers.iter().zip(&self.sparse_layers) {
-            let q = bsr_linear_planned(&sl.wq.0, &sl.wq.1, &x, Some(&lw.bq), th);
-            let k = bsr_linear_planned(&sl.wk.0, &sl.wk.1, &x, Some(&lw.bk), th);
-            let v = bsr_linear_planned(&sl.wv.0, &sl.wv.1, &x, Some(&lw.bv), th);
+            let q = self.project(&sl.wq, &x, &lw.bq);
+            let k = self.project(&sl.wk, &x, &lw.bk);
+            let v = self.project(&sl.wv, &x, &lw.bv);
             let ctx = multi_head_attention(&q, &k, &v, cfg.heads, th);
-            let attn_out = bsr_linear_planned(&sl.wo.0, &sl.wo.1, &ctx, Some(&lw.bo), th);
+            let attn_out = self.project(&sl.wo, &ctx, &lw.bo);
             add_inplace(&mut x, &attn_out);
             layernorm_fm(&mut x, &lw.ln1_gamma, &lw.ln1_beta, LN_EPS);
-            let mut ff = bsr_linear_planned(&sl.w_up.0, &sl.w_up.1, &x, Some(&lw.b_up), th);
+            let mut ff = self.project(&sl.w_up, &x, &lw.b_up);
             gelu(&mut ff);
-            let ff_out = bsr_linear_planned(&sl.w_down.0, &sl.w_down.1, &ff, Some(&lw.b_down), th);
+            let ff_out = self.project(&sl.w_down, &ff, &lw.b_down);
             add_inplace(&mut x, &ff_out);
             layernorm_fm(&mut x, &lw.ln2_gamma, &lw.ln2_beta, LN_EPS);
         }
@@ -282,6 +316,44 @@ mod tests {
             snap.row_reuse_rate() > 0.9,
             "expected heavy row-program reuse, stats {snap:?}"
         );
+    }
+
+    #[test]
+    fn second_engine_with_same_structures_never_replans() {
+        let block = BlockShape::new(2, 4);
+        let (w, x) = setup(0.6, block);
+        let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
+        let e1 = SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched), 2).unwrap();
+        let misses_after_first = sched.cache.stats().misses;
+        assert!(misses_after_first >= 1);
+        // Same weights → identical structures: the second engine (a second
+        // serving replica, or the same model re-registered) must be all
+        // cache hits — zero re-planning.
+        let e2 = SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched), 2).unwrap();
+        let s = sched.cache.stats();
+        assert_eq!(s.misses, misses_after_first, "re-planned on repeat: {s:?}");
+        assert!(s.hits >= 6, "expected per-projection hits, got {s:?}");
+        // and they still agree numerically, pool path included
+        let y1 = e1.forward(&x);
+        let y2 = e2.forward(&x);
+        assert_eq!(y1.data, y2.data);
+    }
+
+    #[test]
+    fn dedicated_pool_engine_matches_global_pool_engine() {
+        let block = BlockShape::new(1, 4);
+        let (w, x) = setup(0.7, block);
+        let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
+        let shared = SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched), 3).unwrap();
+        let dedicated = SparseBsrEngine::with_pool(
+            Arc::clone(&w),
+            block,
+            Arc::clone(&sched),
+            3,
+            Some(Arc::new(crate::util::pool::Pool::new(3))),
+        )
+        .unwrap();
+        assert_eq!(shared.forward(&x).data, dedicated.forward(&x).data);
     }
 
     #[test]

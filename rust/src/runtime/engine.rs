@@ -153,8 +153,8 @@ mod tests {
 
     #[test]
     fn xla_engine_matches_native_dense() {
-        if !artifacts_dir().join("encoder_micro.hlo.txt").exists() {
-            eprintln!("skipping: artifacts not built");
+        if cfg!(not(feature = "xla")) || !artifacts_dir().join("encoder_micro.hlo.txt").exists() {
+            eprintln!("skipping: xla feature off or artifacts not built");
             return;
         }
         let svc = RuntimeService::start(artifacts_dir()).unwrap();
@@ -174,7 +174,7 @@ mod tests {
 
     #[test]
     fn config_mismatch_rejected() {
-        if !artifacts_dir().join("encoder_micro.hlo.txt").exists() {
+        if cfg!(not(feature = "xla")) || !artifacts_dir().join("encoder_micro.hlo.txt").exists() {
             return;
         }
         let svc = RuntimeService::start(artifacts_dir()).unwrap();

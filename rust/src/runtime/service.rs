@@ -12,14 +12,21 @@
 //! session/request that names it (`compile` is by far the most expensive
 //! step — see EXPERIMENTS.md §Perf-L2).
 
-use super::manifest::ArtifactManifest;
-use crate::util::tensorfile::{Dtype, NpyTensor};
+//! Backend availability: the PJRT path needs the vendored `xla` crate,
+//! which is not part of the offline build. It is gated behind the `xla`
+//! cargo feature; without it this module compiles a stub whose
+//! [`RuntimeService::start`] returns an error, and every artifact-driven
+//! test/example skips gracefully.
+
+use crate::util::tensorfile::NpyTensor;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
+// Without the `xla` feature the request fields are never consumed (the
+// stub fails at init before any dispatch), hence the conditional allow.
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 enum Request {
     /// Compile (or fetch from cache) an artifact.
     Load { name: String },
@@ -43,6 +50,9 @@ enum Request {
     Shutdown,
 }
 
+// Without the `xla` feature no reply is ever constructed (the stub fails
+// at init), but the protocol surface stays identical.
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 enum Reply {
     Loaded { inputs: usize, outputs: usize },
     Session(usize),
@@ -168,8 +178,39 @@ impl RuntimeHandle {
 }
 
 // ---------------------------------------------------------------------------
-// Runtime thread internals (the only code that touches xla:: types)
+// Runtime thread internals (the only code that touches xla:: types),
+// compiled only with the `xla` feature.
 // ---------------------------------------------------------------------------
+
+/// Stub runtime thread for builds without the `xla` feature: report the
+/// missing backend during init so [`RuntimeService::start`] fails fast
+/// with an actionable message.
+#[cfg(not(feature = "xla"))]
+fn runtime_main(
+    _dir: PathBuf,
+    _rx: mpsc::Receiver<Envelope>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let _ = ready.send(Err(anyhow!(
+        "PJRT runtime unavailable: sparsebert was built without the 'xla' feature \
+         (enable it with a vendored xla crate to execute AOT artifacts)"
+    )));
+}
+
+#[cfg(feature = "xla")]
+use backend::runtime_main;
+
+#[cfg(feature = "xla")]
+mod backend {
+    use super::{Envelope, Reply, RuntimeStats};
+    use super::super::manifest::ArtifactManifest;
+    use crate::util::tensorfile::{Dtype, NpyTensor};
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::sync::mpsc;
+
+    use super::Request;
 
 struct Compiled {
     exe: xla::PjRtLoadedExecutable,
@@ -189,7 +230,7 @@ struct RuntimeState {
     stats: RuntimeStats,
 }
 
-fn runtime_main(
+pub(super) fn runtime_main(
     dir: PathBuf,
     rx: mpsc::Receiver<Envelope>,
     ready: mpsc::Sender<Result<()>>,
@@ -373,10 +414,12 @@ fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: &str) -> Result<NpyT
         ),
     })
 }
+} // mod backend
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::manifest::ArtifactManifest;
     use crate::sparse::bsr::BsrMatrix;
     use crate::sparse::dense::Matrix;
     use crate::sparse::prune::BlockShape;
@@ -385,6 +428,10 @@ mod tests {
     use crate::util::tensorfile::artifacts_dir;
 
     fn service() -> Option<RuntimeService> {
+        if cfg!(not(feature = "xla")) {
+            eprintln!("skipping: built without the 'xla' feature");
+            return None;
+        }
         if !artifacts_dir().join("bsr_micro.hlo.txt").exists() {
             eprintln!("skipping: artifacts not built");
             return None;
@@ -504,5 +551,12 @@ mod tests {
         let Some(svc) = service() else { return };
         assert!(svc.handle.load("nonexistent").is_err());
         assert!(svc.handle.execute_raw("nonexistent", vec![]).is_err());
+    }
+
+    #[test]
+    #[cfg(not(feature = "xla"))]
+    fn start_without_backend_fails_with_actionable_error() {
+        let err = RuntimeService::start(std::env::temp_dir()).unwrap_err();
+        assert!(format!("{err:#}").contains("xla"), "{err:#}");
     }
 }

@@ -14,11 +14,13 @@
 //!   (reordering pure-random structure only costs icache).
 
 use super::buffer::TaskBuffer;
+use super::cache::{ExecPlan, PlanCache};
 use super::hwspec::HwSpec;
 use super::plan::{OrderPolicy, PlanOptions};
 use crate::kernels::bsr_spmm::SpmmPlan;
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::pattern::PatternStats;
+use crate::sparse::prune::BlockShape;
 use std::sync::Arc;
 
 /// Per-matrix execution parameters chosen by the auto-scheduler.
@@ -28,9 +30,47 @@ pub struct ExecParams {
     pub grain: usize,
 }
 
+impl ExecParams {
+    /// Cap the thread count (engine- or request-level concurrency limits).
+    pub fn capped(self, max_threads: usize) -> ExecParams {
+        ExecParams {
+            threads: self.threads.min(max_threads.max(1)),
+            grain: self.grain,
+        }
+    }
+}
+
+/// The threads/grain derivation shared by the uncached
+/// [`AutoScheduler::exec_params`] walk and the cached
+/// [`ExecPlan::params_for`] path — one formula, two entry points.
+///
+/// * **threads** — one worker per core, capped by the number of block
+///   rows;
+/// * **grain** — sized so one grain's working set (Y band + the X panels
+///   its blocks touch, estimated from `mean_blocks_per_row`) fits the L2
+///   budget, clamped to `[1, 16]`.
+pub fn derive_exec_params(
+    block: BlockShape,
+    block_rows: usize,
+    mean_blocks_per_row: f64,
+    tokens: usize,
+    hw: &HwSpec,
+) -> ExecParams {
+    let brows = block_rows.max(1);
+    let threads = hw.cores.min(brows);
+    let y_per_row = block.r * tokens;
+    let x_per_row = (mean_blocks_per_row.ceil() as usize).max(1) * block.c * tokens;
+    let per_row = y_per_row + x_per_row;
+    let grain = (hw.l2_f32_budget() / per_row.max(1)).clamp(1, 16);
+    ExecParams { threads, grain }
+}
+
 pub struct AutoScheduler {
     pub hw: HwSpec,
     pub buffer: TaskBuffer,
+    /// Structure×hardware-keyed execution-plan cache: repeated inference
+    /// over the same pruned weights never re-plans (see [`PlanCache`]).
+    pub cache: PlanCache,
 }
 
 impl AutoScheduler {
@@ -39,6 +79,7 @@ impl AutoScheduler {
         AutoScheduler {
             hw,
             buffer: TaskBuffer::new(PlanOptions::tvm_plus()),
+            cache: PlanCache::new(),
         }
     }
 
@@ -47,6 +88,7 @@ impl AutoScheduler {
         AutoScheduler {
             hw,
             buffer: TaskBuffer::new(PlanOptions::no_reuse()),
+            cache: PlanCache::new(),
         }
     }
 
@@ -55,6 +97,7 @@ impl AutoScheduler {
         AutoScheduler {
             hw,
             buffer: TaskBuffer::new(opts),
+            cache: PlanCache::new(),
         }
     }
 
@@ -63,20 +106,27 @@ impl AutoScheduler {
         self.buffer.plan_for(label, m)
     }
 
+    /// Cached hot path: plan + precomputed structure statistics in one
+    /// lookup keyed by (structure, shape, hardware). A hit performs zero
+    /// re-planning and zero structure walks; [`ExecPlan::params_for`]
+    /// then derives threads/grain in O(1) per call.
+    pub fn exec_plan(&self, label: &str, m: &BsrMatrix) -> Arc<ExecPlan> {
+        self.cache.get_or_compile(label, m, &self.hw, &self.buffer)
+    }
+
     /// Choose threads/grain for one spmm over `tokens` activation columns.
+    /// Walks the structure each call; the cached path
+    /// ([`AutoScheduler::exec_plan`] → [`ExecPlan::params_for`]) reuses
+    /// the same [`derive_exec_params`] formula from captured stats.
     pub fn exec_params(&self, m: &BsrMatrix, tokens: usize) -> ExecParams {
-        let brows = m.block_rows().max(1);
-        let threads = self.hw.cores.min(brows);
-        // Working set of one grain of g block rows:
-        //   Y band: g * r * tokens floats
-        //   X panels: ~ mean_blocks_per_row * c * tokens floats per row
-        // Solve g so the sum stays within the L2 budget.
         let stats = PatternStats::of(m);
-        let y_per_row = m.block.r * tokens;
-        let x_per_row = (stats.mean_blocks_per_row.ceil() as usize).max(1) * m.block.c * tokens;
-        let per_row = y_per_row + x_per_row;
-        let grain = (self.hw.l2_f32_budget() / per_row.max(1)).clamp(1, 16);
-        ExecParams { threads, grain }
+        derive_exec_params(
+            m.block,
+            m.block_rows(),
+            stats.mean_blocks_per_row,
+            tokens,
+            &self.hw,
+        )
     }
 
     /// Decide the ordering policy for a structure (exposed for tests and
@@ -144,6 +194,19 @@ mod tests {
         prune_structured(&mut w, 0.5, BlockShape::new(1, 4));
         let unique = BsrMatrix::from_dense(&w, BlockShape::new(1, 4)).unwrap();
         assert_eq!(sched.recommended_order(&unique), OrderPolicy::Sequential);
+    }
+
+    #[test]
+    fn exec_plan_caches_and_matches_uncached_params() {
+        let hw = HwSpec::haswell_reference();
+        let sched = AutoScheduler::new(hw.clone());
+        let m = bsr(BlockShape::new(1, 8), 64, 64, 2, 9);
+        let a = sched.exec_plan("l0.q", &m);
+        let b = sched.exec_plan("l5.v", &m); // same structure, other label
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = sched.cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(a.params_for(32, &hw), sched.exec_params(&m, 32));
     }
 
     #[test]

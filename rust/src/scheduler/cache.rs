@@ -1,0 +1,245 @@
+//! Structure-keyed execution-plan cache.
+//!
+//! The hot serving loop must never re-derive a plan for weights it has
+//! already seen: repeated inference over the same pruned model reuses
+//! both the compiled [`SpmmPlan`] *and* the pattern statistics that the
+//! auto-scheduler's thread/grain choice depends on. The cache key is
+//! `(TaskKey, HwSpec fingerprint)` — operator, dense shape, block shape,
+//! structure signature, and the hardware the plan was tuned for — so one
+//! cache can safely serve heterogeneous schedulers.
+//!
+//! A hit returns an [`ExecPlan`]: the shared plan plus the precomputed
+//! per-row statistics, from which [`ExecPlan::params_for`] derives
+//! [`ExecParams`] in O(1) per call (the uncached
+//! [`AutoScheduler::exec_params`][super::AutoScheduler::exec_params]
+//! walks the whole BSR structure each time).
+
+use super::autosched::ExecParams;
+use super::buffer::TaskBuffer;
+use super::hwspec::HwSpec;
+use super::task::{SparseTask, TaskKey};
+use crate::kernels::bsr_spmm::SpmmPlan;
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::pattern::PatternStats;
+use crate::sparse::prune::BlockShape;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A compiled plan bundled with the structure statistics needed to pick
+/// execution parameters without re-walking the matrix.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    pub plan: Arc<SpmmPlan>,
+    pub block: BlockShape,
+    pub block_rows: usize,
+    /// Mean stored blocks per block-row (drives the L2 grain budget).
+    pub mean_blocks_per_row: f64,
+}
+
+impl ExecPlan {
+    /// Choose threads/grain for one spmm over `tokens` activation columns.
+    /// O(1): all structure-dependent inputs were captured at plan time;
+    /// the formula itself is shared with the uncached scheduler walk via
+    /// [`derive_exec_params`][super::autosched::derive_exec_params].
+    pub fn params_for(&self, tokens: usize, hw: &HwSpec) -> ExecParams {
+        super::autosched::derive_exec_params(
+            self.block,
+            self.block_rows,
+            self.mean_blocks_per_row,
+            tokens,
+            hw,
+        )
+    }
+}
+
+/// Counter snapshot for instrumentation and tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// Thread-safe `(structure, shape, hardware) → ExecPlan` cache.
+pub struct PlanCache {
+    entries: Mutex<HashMap<(TaskKey, u64), Arc<ExecPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache {
+            entries: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the cached execution plan for `m` on `hw`, compiling through
+    /// `buffer` on the first sighting of the structure. A hit touches
+    /// nothing but the key hash — zero re-planning.
+    pub fn get_or_compile(
+        &self,
+        label: &str,
+        m: &BsrMatrix,
+        hw: &HwSpec,
+        buffer: &TaskBuffer,
+    ) -> Arc<ExecPlan> {
+        let key = (SparseTask::for_bsr(label, m).key, hw.fingerprint());
+        {
+            let entries = self.entries.lock().expect("plan cache poisoned");
+            if let Some(hit) = entries.get(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(hit);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Compile outside the lock; the task buffer dedups the underlying
+        // SpmmPlan, so a racing compile of the same structure is cheap.
+        let plan = buffer.plan_for(label, m);
+        let stats = PatternStats::of(m);
+        let built = Arc::new(ExecPlan {
+            plan,
+            block: m.block,
+            block_rows: m.block_rows(),
+            mean_blocks_per_row: stats.mean_blocks_per_row,
+        });
+        let mut entries = self.entries.lock().expect("plan cache poisoned");
+        Arc::clone(entries.entry(key).or_insert(built))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.entries.lock().expect("plan cache poisoned").len(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().expect("plan cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all cached plans (between ablation runs).
+    pub fn clear(&self) {
+        self.entries.lock().expect("plan cache poisoned").clear();
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::plan::PlanOptions;
+    use crate::sparse::dense::Matrix;
+    use crate::sparse::prune::prune_structured;
+    use crate::util::rng::Rng;
+
+    fn bsr(seed: u64, sparsity: f64) -> BsrMatrix {
+        let block = BlockShape::new(2, 2);
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(16, 16, 1.0, &mut rng);
+        prune_structured(&mut w, sparsity, block);
+        BsrMatrix::from_dense(&w, block).unwrap()
+    }
+
+    #[test]
+    fn second_lookup_is_a_hit_with_shared_plan() {
+        let cache = PlanCache::new();
+        let buffer = TaskBuffer::new(PlanOptions::default());
+        let hw = HwSpec::haswell_reference();
+        let m = bsr(1, 0.5);
+        let a = cache.get_or_compile("layer0.q", &m, &hw, &buffer);
+        // same structure, different values, different label
+        let mut m2 = m.clone();
+        for v in m2.data.iter_mut() {
+            *v *= 2.0;
+        }
+        let b = cache.get_or_compile("layer3.k", &m2, &hw, &buffer);
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        // the underlying task buffer compiled exactly once
+        assert_eq!(buffer.len(), 1);
+    }
+
+    #[test]
+    fn different_structure_or_hardware_means_new_entry() {
+        let cache = PlanCache::new();
+        let buffer = TaskBuffer::new(PlanOptions::default());
+        let hw = HwSpec::haswell_reference();
+        let mut other_hw = HwSpec::haswell_reference();
+        other_hw.cores = 32;
+        other_hw.l2_bytes = 1024 * 1024;
+        let m = bsr(1, 0.5);
+        let a = cache.get_or_compile("a", &m, &hw, &buffer);
+        let b = cache.get_or_compile("a", &m, &other_hw, &buffer);
+        assert!(!Arc::ptr_eq(&a, &b));
+        // same SpmmPlan underneath (structure identical), distinct entries
+        assert!(Arc::ptr_eq(&a.plan, &b.plan));
+        let c = cache.get_or_compile("b", &bsr(2, 0.75), &hw, &buffer);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.stats().entries, 3);
+    }
+
+    #[test]
+    fn params_match_uncached_scheduler_formula() {
+        let cache = PlanCache::new();
+        let buffer = TaskBuffer::new(PlanOptions::default());
+        let hw = HwSpec::haswell_reference();
+        let m = bsr(3, 0.5);
+        let ep = cache.get_or_compile("x", &m, &hw, &buffer);
+        let sched = crate::scheduler::AutoScheduler::new(hw.clone());
+        for tokens in [1usize, 16, 128] {
+            assert_eq!(ep.params_for(tokens, &hw), sched.exec_params(&m, tokens));
+        }
+    }
+
+    #[test]
+    fn clear_resets_entries_but_not_counters() {
+        let cache = PlanCache::new();
+        let buffer = TaskBuffer::new(PlanOptions::default());
+        let hw = HwSpec::haswell_reference();
+        cache.get_or_compile("a", &bsr(1, 0.5), &hw, &buffer);
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn concurrent_lookups_single_entry() {
+        let cache = Arc::new(PlanCache::new());
+        let buffer = Arc::new(TaskBuffer::new(PlanOptions::default()));
+        let hw = HwSpec::haswell_reference();
+        let m = Arc::new(bsr(7, 0.5));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let cache = Arc::clone(&cache);
+                let buffer = Arc::clone(&buffer);
+                let m = Arc::clone(&m);
+                let hw = hw.clone();
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let _ = cache.get_or_compile("x", &m, &hw, &buffer);
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.hits + s.misses, 160);
+        assert!(s.hits >= 160 - 8, "hits {}", s.hits);
+    }
+}

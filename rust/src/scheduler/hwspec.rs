@@ -79,6 +79,25 @@ impl HwSpec {
     pub fn l2_f32_budget(&self) -> usize {
         self.l2_bytes / 2 / 4
     }
+
+    /// Stable 64-bit digest of every field (FNV-1a). Part of the plan-cache
+    /// key so plans tuned for one machine are never replayed on another.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        mix(self.cores as u64);
+        mix(self.l1d_bytes as u64);
+        mix(self.l2_bytes as u64);
+        mix(self.l3_bytes as u64);
+        mix(self.simd_f32_lanes as u64);
+        for b in self.isa.bytes() {
+            mix(b as u64);
+        }
+        h
+    }
 }
 
 fn read_cache_size(index: &str) -> Option<usize> {
@@ -135,6 +154,19 @@ mod tests {
         assert_eq!(parse_cache_size("65536"), Some(65536));
         assert_eq!(parse_cache_size("8192K\n"), Some(8192 * 1024));
         assert_eq!(parse_cache_size("abc"), None);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_field_sensitive() {
+        let a = HwSpec::haswell_reference();
+        let b = HwSpec::haswell_reference();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = HwSpec::haswell_reference();
+        c.cores = 16;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let mut d = HwSpec::haswell_reference();
+        d.isa = "x86_64+avx512".to_string();
+        assert_ne!(a.fingerprint(), d.fingerprint());
     }
 
     #[test]

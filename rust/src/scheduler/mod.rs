@@ -20,19 +20,26 @@
 //! * the *hardware spec* ([`hwspec::HwSpec`]) — cores, cache sizes, SIMD
 //!   width — parameterizes grain sizes and thread counts
 //!   ([`autosched::AutoScheduler`]);
-//! * everything is instrumented ([`stats::SchedulerStats`]) because the
-//!   paper's follow-up #1 asks for task-reuse introspection tooling, and
-//!   our ablation A2 reports it.
+//! * the *plan cache* ([`cache::PlanCache`]) keys compiled plans by
+//!   structure signature × dense shape × hardware fingerprint, bundling
+//!   the pattern statistics the thread/grain choice needs so the serving
+//!   hot path performs **zero re-planning** and O(1) parameter selection
+//!   on repeated structures ([`cache::ExecPlan::params_for`]);
+//! * everything is instrumented ([`stats::SchedulerStats`],
+//!   [`cache::PlanCache::stats`]) because the paper's follow-up #1 asks
+//!   for task-reuse introspection tooling, and our ablation A2 reports it.
 
 pub mod autosched;
 pub mod buffer;
+pub mod cache;
 pub mod hwspec;
 pub mod plan;
 pub mod stats;
 pub mod task;
 
-pub use autosched::AutoScheduler;
+pub use autosched::{AutoScheduler, ExecParams};
 pub use buffer::TaskBuffer;
+pub use cache::{CacheStats, ExecPlan, PlanCache};
 pub use hwspec::HwSpec;
 pub use plan::{build_plan, OrderPolicy, PlanOptions};
 pub use stats::SchedulerStats;

@@ -1,15 +1,32 @@
-//! Scoped data-parallel execution (rayon substitute).
+//! Persistent data-parallel execution (rayon substitute).
 //!
-//! The BSR spmm hot path partitions output row-blocks across cores. We use
-//! `std::thread::scope` so worker closures can borrow the input/output
-//! buffers directly — no `Arc`, no allocation per call beyond the thread
-//! spawn itself. For the genuinely hot per-request path the engine keeps a
-//! [`Pool`] of persistent workers fed through channels, so steady-state
-//! dispatch cost is two atomic hops rather than thread creation.
+//! The BSR spmm hot path partitions output row-blocks across cores. Two
+//! layers provide that parallelism:
+//!
+//! * [`Pool`] — a persistent worker pool fed through a channel. Besides
+//!   fire-and-forget [`Pool::submit`] jobs it supports *scoped* blocking
+//!   loops ([`Pool::run_chunks`], [`Pool::run_dynamic`]) that borrow the
+//!   caller's data directly — the calling thread blocks until every grain
+//!   has executed, so worker closures may capture non-`'static`
+//!   references exactly as with `std::thread::scope`, but without paying
+//!   a thread spawn per call. Steady-state dispatch is two atomic hops.
+//! * [`parallel_chunks`] / [`parallel_dynamic`] — module-level helpers
+//!   used by the kernels and the eager baselines. They execute on the
+//!   shared [`global`] pool, so *every* operator in the process reuses
+//!   one set of persistent workers instead of spawning scoped threads
+//!   per call (the pre-parallel-engine behavior).
+//!
+//! Re-entrancy: a scoped run issued *from inside a job of the same pool*
+//! executes inline on that worker. This makes nested parallelism safe by
+//! construction (no worker ever blocks waiting for grains that only it
+//! could run) while still allowing cross-pool nesting — e.g. the serving
+//! coordinator's per-variant pool runs `Engine::forward`, whose kernels
+//! fan out on the global pool.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use by default: the physical parallelism the
 /// paper's TVM runtime would also see. Overridable via `SPARSEBERT_THREADS`.
@@ -26,12 +43,25 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// The process-wide worker pool backing [`parallel_chunks`] and
+/// [`parallel_dynamic`]. Created lazily with [`default_threads`] workers.
+pub fn global() -> &'static Pool {
+    static GLOBAL: OnceLock<Pool> = OnceLock::new();
+    GLOBAL.get_or_init(|| Pool::new(default_threads()))
+}
+
 /// Run `f(chunk_index, range)` over `0..n` split into contiguous chunks on
-/// scoped threads. Blocking; returns when all chunks complete.
+/// the global pool. Blocking; returns when all chunks complete.
 ///
 /// Chunks are contiguous (not strided) so each worker touches a contiguous
 /// band of the output matrix — the same partitioning TVM's CPU schedule
 /// uses for the outer row loop.
+///
+/// Effective parallelism is `min(threads, global pool width)`: the pool is
+/// sized once at first use from [`default_threads`] (`SPARSEBERT_THREADS`
+/// overrides it), so a `threads` argument larger than the pool does not
+/// oversubscribe — it is capped. Raise `SPARSEBERT_THREADS` before first
+/// use to widen the pool.
 pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
 where
     F: Fn(usize, std::ops::Range<usize>) + Sync,
@@ -41,24 +71,14 @@ where
         f(0, 0..n);
         return;
     }
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for t in 0..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let fref = &f;
-            scope.spawn(move || fref(t, lo..hi));
-        }
-    });
+    global().run_chunks(n, threads, &f);
 }
 
-/// Dynamic work-stealing variant: workers pull indices from a shared atomic
-/// counter in grains of `grain`. Used when per-item cost is irregular —
-/// exactly the load-imbalance situation large sparse blocks create (see
-/// DESIGN.md §6).
+/// Dynamic work-stealing variant on the global pool: workers pull indices
+/// from a shared atomic counter in grains of `grain`. Used when per-item
+/// cost is irregular — exactly the load-imbalance situation large sparse
+/// blocks create (see DESIGN.md §6). As with [`parallel_chunks`],
+/// `threads` is capped at the global pool width.
 pub fn parallel_dynamic<F>(n: usize, threads: usize, grain: usize, f: F)
 where
     F: Fn(std::ops::Range<usize>) + Sync,
@@ -69,73 +89,92 @@ where
         f(0..n);
         return;
     }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let fref = &f;
-            let nref = &next;
-            scope.spawn(move || loop {
-                let lo = nref.fetch_add(grain, Ordering::Relaxed);
-                if lo >= n {
-                    break;
-                }
-                let hi = (lo + grain).min(n);
-                fref(lo..hi);
-            });
-        }
-    });
+    global().run_dynamic(n, threads, grain, &f);
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// A persistent worker pool for the serving path. Jobs are `FnOnce`
-/// closures; [`Pool::join`] blocks until all submitted jobs complete.
+static POOL_IDS: AtomicUsize = AtomicUsize::new(1);
+
+thread_local! {
+    /// Id of the pool whose worker is running on this thread (0 = none).
+    static CURRENT_POOL: Cell<usize> = const { Cell::new(0) };
+}
+
+/// A persistent worker pool. Jobs are `FnOnce` closures; [`Pool::join`]
+/// blocks until all submitted jobs complete, and the scoped runners
+/// ([`Pool::run_chunks`], [`Pool::run_dynamic`]) block until their own
+/// grains complete.
 ///
-/// Invariants (exercised by `propcheck` tests below):
-/// * every submitted job runs exactly once;
+/// Invariants (exercised by the tests below):
+/// * every submitted job runs exactly once, even jobs still queued when
+///   the pool is dropped;
 /// * `join` returns only after all jobs submitted before it have finished;
-/// * dropping the pool joins and shuts down all workers.
+/// * a panicking job neither kills its worker nor wedges `join`/`drop`;
+/// * dropping the pool drains the queue, then joins all workers.
 pub struct Pool {
+    id: usize,
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+/// Decrements the pending-jobs counter when a job finishes, *including* by
+/// panic: the guard drops during unwinding, so `join` never wedges.
+struct PendingGuard<'a>(&'a (Mutex<usize>, Condvar));
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let (lock, cvar) = self.0;
+        let mut p = lock.lock().expect("pending poisoned");
+        *p -= 1;
+        if *p == 0 {
+            cvar.notify_all();
+        }
+    }
 }
 
 impl Pool {
     pub fn new(threads: usize) -> Pool {
         let threads = threads.max(1);
+        let id = POOL_IDS.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
         let mut workers = Vec::with_capacity(threads);
         for i in 0..threads {
             let rx = Arc::clone(&rx);
             let pending = Arc::clone(&pending);
             workers.push(
                 std::thread::Builder::new()
-                    .name(format!("sparsebert-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().expect("pool rx poisoned");
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => {
-                                job();
-                                let (lock, cvar) = &*pending;
-                                let mut p = lock.lock().expect("pending poisoned");
-                                *p -= 1;
-                                if *p == 0 {
-                                    cvar.notify_all();
+                    .name(format!("sparsebert-worker-{id}-{i}"))
+                    .spawn(move || {
+                        CURRENT_POOL.with(|c| c.set(id));
+                        loop {
+                            let job = {
+                                let guard = rx.lock().expect("pool rx poisoned");
+                                guard.recv()
+                            };
+                            match job {
+                                Ok(job) => {
+                                    let _done = PendingGuard(&pending);
+                                    // A panicking job must not take the worker
+                                    // down; scoped runs observe the panic via
+                                    // their own flag and re-raise it on the
+                                    // submitting thread.
+                                    let _ = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(job),
+                                    );
                                 }
+                                Err(_) => break, // sender dropped: shutdown
                             }
-                            Err(_) => break, // sender dropped: shutdown
                         }
                     })
                     .expect("spawn pool worker"),
             );
         }
         Pool {
+            id,
             tx: Some(tx),
             workers,
             pending,
@@ -167,14 +206,176 @@ impl Pool {
             p = cvar.wait(p).expect("pending poisoned");
         }
     }
+
+    /// Run `f` over `0..n` in dynamic grain-sized slices on this pool's
+    /// workers, blocking until every slice has executed. At most
+    /// `max_workers` jobs are enqueued. Called from inside one of this
+    /// pool's own jobs, the loop executes inline (see module docs).
+    pub fn run_dynamic<F>(&self, n: usize, max_workers: usize, grain: usize, f: &F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let grain = grain.max(1);
+        let workers = max_workers
+            .min(self.threads())
+            .min(n.div_ceil(grain))
+            .max(1);
+        if workers <= 1 || CURRENT_POOL.with(|c| c.get()) == self.id {
+            f(0..n);
+            return;
+        }
+        let run = Arc::new(ScopedRun::new(workers));
+        // SAFETY: `run.finish()` below does not return until every submitted
+        // job has dropped its RunGuard, which happens strictly after the
+        // job's final call through `f`. The borrow therefore outlives all
+        // uses — the same argument `std::thread::scope` makes.
+        let f_obj: &(dyn Fn(std::ops::Range<usize>) + Sync) = f;
+        let f_static: &'static (dyn Fn(std::ops::Range<usize>) + Sync) =
+            unsafe { std::mem::transmute(f_obj) };
+        for _ in 0..workers {
+            let run = Arc::clone(&run);
+            self.submit(move || {
+                let _g = RunGuard(&run);
+                loop {
+                    let lo = run.next.fetch_add(grain, Ordering::Relaxed);
+                    if lo >= n {
+                        break;
+                    }
+                    let span = lo..(lo + grain).min(n);
+                    if let Err(payload) =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            f_static(span)
+                        }))
+                    {
+                        run.store_panic(payload);
+                        break;
+                    }
+                }
+            });
+        }
+        run.finish();
+    }
+
+    /// Run `f(chunk_index, range)` over `0..n` split into contiguous
+    /// chunks on this pool's workers, blocking until all chunks complete.
+    /// Called from inside one of this pool's own jobs, the loop executes
+    /// inline (see module docs).
+    pub fn run_chunks<F>(&self, n: usize, max_workers: usize, f: &F)
+    where
+        F: Fn(usize, std::ops::Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let workers = max_workers.min(self.threads()).min(n).max(1);
+        if workers <= 1 || CURRENT_POOL.with(|c| c.get()) == self.id {
+            f(0, 0..n);
+            return;
+        }
+        let chunk = n.div_ceil(workers);
+        let mut spans = Vec::with_capacity(workers);
+        for t in 0..workers {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            spans.push((t, lo..hi));
+        }
+        let run = Arc::new(ScopedRun::new(spans.len()));
+        // SAFETY: as in `run_dynamic` — `run.finish()` blocks until every
+        // job has dropped its RunGuard, after its only call through `f`.
+        let f_obj: &(dyn Fn(usize, std::ops::Range<usize>) + Sync) = f;
+        let f_static: &'static (dyn Fn(usize, std::ops::Range<usize>) + Sync) =
+            unsafe { std::mem::transmute(f_obj) };
+        for (t, span) in spans {
+            let run = Arc::clone(&run);
+            self.submit(move || {
+                let _g = RunGuard(&run);
+                if let Err(payload) =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f_static(t, span)))
+                {
+                    run.store_panic(payload);
+                }
+            });
+        }
+        run.finish();
+    }
 }
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        self.join();
-        self.tx.take(); // closes the channel, workers exit
+        // Shutdown ordering: close the channel FIRST, then join the
+        // workers. Each worker keeps draining queued jobs until the queue
+        // is empty and the sender is gone, so every submitted job still
+        // runs; joining the worker handles then guarantees completion
+        // without consulting the pending counter (which is what the old
+        // join-first ordering deadlocked on when a queued job panicked).
+        self.tx.take();
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+/// Completion state for one scoped run ([`Pool::run_chunks`] /
+/// [`Pool::run_dynamic`]).
+struct ScopedRun {
+    /// Work-stealing cursor (dynamic runs only).
+    next: AtomicUsize,
+    /// Jobs not yet finished.
+    live: Mutex<usize>,
+    done: Condvar,
+    /// First panic payload raised inside the borrowed closure; re-raised
+    /// on the submitting thread so the original message and location
+    /// survive (as they would with `std::thread::scope`).
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+impl ScopedRun {
+    fn new(jobs: usize) -> ScopedRun {
+        ScopedRun {
+            next: AtomicUsize::new(0),
+            live: Mutex::new(jobs),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+
+    fn store_panic(&self, payload: Box<dyn std::any::Any + Send + 'static>) {
+        let mut slot = self.panic.lock().expect("scoped run poisoned");
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+
+    /// Block until every job has finished, then re-raise the first panic
+    /// (if any) on the calling thread.
+    fn finish(&self) {
+        {
+            let mut live = self.live.lock().expect("scoped run poisoned");
+            while *live > 0 {
+                live = self.done.wait(live).expect("scoped run poisoned");
+            }
+        }
+        if let Some(payload) = self.panic.lock().expect("scoped run poisoned").take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Signals job completion on drop, waking the waiting submitter.
+struct RunGuard<'a>(&'a ScopedRun);
+
+impl Drop for RunGuard<'_> {
+    fn drop(&mut self) {
+        let mut live = self.0.live.lock().expect("scoped run poisoned");
+        *live -= 1;
+        if *live == 0 {
+            self.0.done.notify_all();
         }
     }
 }
@@ -216,6 +417,58 @@ mod tests {
             }
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn run_dynamic_on_private_pool_covers_all_indices_once() {
+        let pool = Pool::new(4);
+        let n = 513;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let f = |range: std::ops::Range<usize>| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        };
+        pool.run_dynamic(n, 4, 7, &f);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn run_chunks_indices_are_disjoint_and_ordered() {
+        let pool = Pool::new(3);
+        let seen = Mutex::new(Vec::new());
+        let f = |t: usize, r: std::ops::Range<usize>| {
+            seen.lock().unwrap().push((t, r));
+        };
+        pool.run_chunks(10, 3, &f);
+        let mut chunks = seen.into_inner().unwrap();
+        chunks.sort_by_key(|(t, _)| *t);
+        let flat: Vec<usize> = chunks.iter().flat_map(|(_, r)| r.clone()).collect();
+        assert_eq!(flat, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_scoped_runs_execute_inline_without_deadlock() {
+        // A scoped run issued from inside a pool job of the same pool must
+        // run inline rather than deadlocking on its own workers.
+        let pool = Pool::new(2);
+        let total = AtomicUsize::new(0);
+        let outer = |_range: std::ops::Range<usize>| {
+            let inner = |r: std::ops::Range<usize>| {
+                total.fetch_add(r.len(), Ordering::Relaxed);
+            };
+            pool.run_dynamic(5, 2, 1, &inner);
+        };
+        pool.run_dynamic(4, 2, 1, &outer);
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 5);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_parallel_helpers_route_through_it() {
+        let a = global() as *const Pool;
+        let b = global() as *const Pool;
+        assert_eq!(a, b);
+        assert!(global().threads() >= 1);
     }
 
     #[test]
@@ -261,5 +514,60 @@ mod tests {
             pool.join();
             assert_eq!(c.load(Ordering::Relaxed), (round + 1) * 20);
         }
+    }
+
+    #[test]
+    fn drop_drains_queued_jobs_before_shutdown() {
+        // Slow jobs keep all workers busy so the fast jobs are still
+        // queued when drop begins; the new shutdown ordering must run
+        // them anyway.
+        let c = Arc::new(AtomicU64::new(0));
+        {
+            let pool = Pool::new(2);
+            for _ in 0..2 {
+                let c = Arc::clone(&c);
+                pool.submit(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            for _ in 0..50 {
+                let c = Arc::clone(&c);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop here, with most jobs still queued
+        assert_eq!(c.load(Ordering::Relaxed), 52);
+    }
+
+    #[test]
+    fn panicking_job_does_not_wedge_join_or_drop() {
+        let pool = Pool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        pool.submit(|| panic!("job panic (expected in test output)"));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join(); // must not hang
+        assert_eq!(c.load(Ordering::Relaxed), 10);
+        drop(pool); // must not hang either
+    }
+
+    #[test]
+    #[should_panic(expected = "boom (expected in test output)")]
+    fn scoped_run_propagates_original_panic_payload() {
+        // The submitting thread must re-raise the worker's actual panic
+        // message, not a generic wrapper.
+        let pool = Pool::new(2);
+        let f = |r: std::ops::Range<usize>| {
+            if r.contains(&3) {
+                panic!("boom (expected in test output)");
+            }
+        };
+        pool.run_dynamic(8, 2, 1, &f);
     }
 }

@@ -14,7 +14,7 @@ use sparsebert::util::tensorfile::{artifacts_dir, NpyTensor};
 use std::sync::Arc;
 
 fn artifacts_ready() -> bool {
-    artifacts_dir().join("encoder_micro.hlo.txt").exists()
+    cfg!(feature = "xla") && artifacts_dir().join("encoder_micro.hlo.txt").exists()
 }
 
 #[test]
