@@ -57,6 +57,7 @@ fn main() -> anyhow::Result<()> {
     let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
 
     let mut router = Router::new();
+    let exec_pool = router.exec_pool();
     router.register(
         "tvm",
         Arc::new(CompiledDenseEngine::new(Arc::clone(&weights), threads)) as Arc<dyn Engine>,
@@ -64,13 +65,16 @@ fn main() -> anyhow::Result<()> {
         BatchPolicy::default(),
         threads,
     );
+    // The sparse engine shares the router's engine-side pool: batches
+    // and kernels fan out on one set of workers (the serve wiring).
     router.register(
         "tvm+",
-        Arc::new(SparseBsrEngine::new(
+        Arc::new(SparseBsrEngine::with_pool(
             Arc::clone(&pruned),
             block,
             Arc::clone(&sched),
             threads,
+            Some(exec_pool),
         )?) as Arc<dyn Engine>,
         Arc::clone(&pruned),
         BatchPolicy::default(),

@@ -9,6 +9,9 @@
 //! * [`table1::run_scheduler_sweep`] — the scheduler-interaction sweep
 //!   (threads × grain × block shape, 32x1 vs 32x32 included) over the
 //!   parallel plan-cached BSR engine, with zero-re-planning verification;
+//! * [`serving`] — the A3 serving sweep: pipelined vs barrier
+//!   coordinator mode across batch-size caps (also behind `sparsebert
+//!   cibench`, whose JSON becomes the CI `BENCH_ci.json` artifact);
 //! * [`report`] — paper-style rendering + JSON export.
 //!
 //! Geometry: the full paper setting is BERT_BASE (L=12) at seq 128. On
@@ -20,8 +23,13 @@
 
 pub mod figure2;
 pub mod report;
+pub mod serving;
 pub mod table1;
 
+pub use serving::{
+    pipelined_speedup, render_serving_sweep, run_serving_sweep, serving_sweep_json,
+    ServingSweepConfig, ServingSweepRow,
+};
 pub use table1::{
     render_sched_sweep, run_scheduler_sweep, run_table1, SchedSweepConfig, SchedSweepReport,
     SchedSweepRow, Table1Config, Table1Row,

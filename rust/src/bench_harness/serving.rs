@@ -1,0 +1,267 @@
+//! Serving-pipeline sweep (ablation A3): pipelined vs barrier
+//! coordinator mode across dynamic-batch size caps, measured as
+//! closed-loop burst throughput through the full serving path (intake →
+//! batcher → prepare → execute on the shared engine-side pool).
+//!
+//! Used by `cargo bench --bench ablation_batching` and by `sparsebert
+//! cibench`, which emits the rows as `BENCH_ci.json` so CI tracks the
+//! perf trajectory per PR.
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::pool::PipelineMode;
+use crate::coordinator::request::WorkloadTrace;
+use crate::coordinator::Router;
+use crate::model::bert::SparseBsrEngine;
+use crate::model::config::BertConfig;
+use crate::model::engine::Engine;
+use crate::model::weights::{BertWeights, PruneMode, PruneSpec};
+use crate::scheduler::{AutoScheduler, HwSpec};
+use crate::sparse::prune::BlockShape;
+use crate::util::json::Json;
+use crate::util::pool::{default_threads, Pool};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct ServingSweepConfig {
+    pub model: BertConfig,
+    pub sparsity: f64,
+    pub block: BlockShape,
+    /// Pattern-pool size for structured pruning.
+    pub pool: usize,
+    pub threads: usize,
+    /// Dynamic-batch size caps to sweep.
+    pub batch_sizes: Vec<usize>,
+    pub modes: Vec<PipelineMode>,
+    /// Requests per cell (closed-loop burst).
+    pub requests: usize,
+    pub seq: usize,
+    pub max_wait: Duration,
+    pub seed: u64,
+}
+
+impl Default for ServingSweepConfig {
+    fn default() -> Self {
+        let quick = std::env::var("SPARSEBERT_BENCH_QUICK").is_ok();
+        ServingSweepConfig {
+            model: BertConfig::tiny(),
+            sparsity: 0.8,
+            block: BlockShape::new(1, 32),
+            pool: 16,
+            threads: default_threads(),
+            batch_sizes: vec![1, 4, 8, 16],
+            modes: vec![PipelineMode::Barrier, PipelineMode::Pipelined],
+            requests: if quick { 40 } else { 120 },
+            seq: 48,
+            max_wait: Duration::from_millis(2),
+            seed: 99,
+        }
+    }
+}
+
+impl ServingSweepConfig {
+    /// Tiny profile for unit/integration tests and the CI smoke job.
+    pub fn smoke() -> ServingSweepConfig {
+        ServingSweepConfig {
+            model: BertConfig::micro(),
+            sparsity: 0.6,
+            block: BlockShape::new(2, 4),
+            pool: 4,
+            threads: 2,
+            batch_sizes: vec![1, 4],
+            modes: vec![PipelineMode::Barrier, PipelineMode::Pipelined],
+            requests: 8,
+            seq: 6,
+            max_wait: Duration::from_millis(1),
+            seed: 7,
+        }
+    }
+}
+
+/// One cell of the serving sweep.
+#[derive(Debug, Clone)]
+pub struct ServingSweepRow {
+    pub mode: PipelineMode,
+    pub max_batch: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+    /// Concurrent prepare/execute span pairs observed (0 in barrier
+    /// mode; positive once the pipeline overlaps).
+    pub stage_overlaps: usize,
+}
+
+/// Run the mode × batch-size sweep. One shared engine-side pool and one
+/// TVM⁺ engine serve every cell (exactly the `sparsebert serve` wiring);
+/// each cell gets a fresh router so its metrics are isolated.
+pub fn run_serving_sweep(cfg: &ServingSweepConfig) -> Vec<ServingSweepRow> {
+    let mut w = BertWeights::synthetic(&cfg.model, 1234);
+    w.prune(
+        &PruneSpec {
+            mode: PruneMode::Structured { pool: cfg.pool },
+            sparsity: cfg.sparsity,
+            block: cfg.block,
+        },
+        7,
+    );
+    let w = Arc::new(w);
+    let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
+    let shared = Arc::new(Pool::new(cfg.threads));
+    let engine: Arc<dyn Engine> = Arc::new(
+        SparseBsrEngine::with_pool(
+            Arc::clone(&w),
+            cfg.block,
+            Arc::clone(&sched),
+            cfg.threads,
+            Some(Arc::clone(&shared)),
+        )
+        .expect("block shape must divide the model geometry"),
+    );
+    let mut rows = Vec::new();
+    for &mode in &cfg.modes {
+        for &max_batch in &cfg.batch_sizes {
+            let mut router = Router::with_exec_pool(Arc::clone(&shared));
+            let policy = BatchPolicy {
+                max_batch,
+                max_wait: cfg.max_wait,
+            };
+            router.register_with_mode(
+                "tvm+",
+                Arc::clone(&engine),
+                Arc::clone(&w),
+                policy,
+                cfg.threads,
+                mode,
+            );
+            let trace = WorkloadTrace::burst(cfg.requests, cfg.seq, cfg.model.vocab, cfg.seed);
+            let report = router.run_trace("tvm+", &trace).expect("trace replay");
+            // Shutdown joins the stage threads, so the final batch's
+            // execute span is recorded before we read the overlap count.
+            router.shutdown();
+            rows.push(ServingSweepRow {
+                mode,
+                max_batch,
+                p50_ms: report.p50_ms,
+                p95_ms: report.p95_ms,
+                p99_ms: report.p99_ms,
+                throughput_rps: report.throughput_rps,
+                mean_batch: report.mean_batch,
+                stage_overlaps: router.metrics.stage_overlaps("tvm+"),
+            });
+        }
+    }
+    rows
+}
+
+/// Pipelined/barrier throughput ratio at one batch-size cap (the
+/// acceptance headline: ≥ 1.0 at max_batch=8 means the pipeline never
+/// loses to the barrier).
+pub fn pipelined_speedup(rows: &[ServingSweepRow], max_batch: usize) -> Option<f64> {
+    let mut pipelined = None;
+    let mut barrier = None;
+    for r in rows.iter().filter(|r| r.max_batch == max_batch) {
+        match r.mode {
+            PipelineMode::Pipelined => pipelined = Some(r.throughput_rps),
+            PipelineMode::Barrier => barrier = Some(r.throughput_rps),
+        }
+    }
+    Some(pipelined? / barrier?.max(1e-9))
+}
+
+/// Render the sweep as an aligned text table plus the speedup summary.
+pub fn render_serving_sweep(rows: &[ServingSweepRow], title: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>11} {:>9}\n",
+        "mode", "batch", "p50 ms", "p95 ms", "p99 ms", "rps", "mean batch", "overlaps"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<10} {:>9} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>11.2} {:>9}\n",
+            r.mode.as_str(),
+            r.max_batch,
+            r.p50_ms,
+            r.p95_ms,
+            r.p99_ms,
+            r.throughput_rps,
+            r.mean_batch,
+            r.stage_overlaps
+        ));
+    }
+    let mut caps: Vec<usize> = rows.iter().map(|r| r.max_batch).collect();
+    caps.sort_unstable();
+    caps.dedup();
+    for cap in caps {
+        if let Some(s) = pipelined_speedup(rows, cap) {
+            out.push_str(&format!(
+                "pipelined/barrier throughput at batch={cap}: {s:.2}x\n"
+            ));
+        }
+    }
+    out
+}
+
+/// JSON export (`BENCH_ci.json` serving section).
+pub fn serving_sweep_json(rows: &[ServingSweepRow], meta: &[(&str, Json)]) -> Json {
+    let mut root = Json::obj();
+    for (k, v) in meta {
+        root.set(k, v.clone());
+    }
+    let cells: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut j = Json::obj();
+            j.set("mode", r.mode.as_str())
+                .set("max_batch", r.max_batch)
+                .set("p50_ms", r.p50_ms)
+                .set("p95_ms", r.p95_ms)
+                .set("p99_ms", r.p99_ms)
+                .set("throughput_rps", r.throughput_rps)
+                .set("mean_batch", r.mean_batch)
+                .set("stage_overlaps", r.stage_overlaps);
+            j
+        })
+        .collect();
+    root.set("rows", cells);
+    if let Some(s) = pipelined_speedup(rows, 8) {
+        root.set("pipelined_speedup_at_batch8", s);
+    }
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serving_sweep_smoke() {
+        let cfg = ServingSweepConfig::smoke();
+        let rows = run_serving_sweep(&cfg);
+        assert_eq!(rows.len(), cfg.modes.len() * cfg.batch_sizes.len());
+        assert!(rows.iter().all(|r| r.throughput_rps > 0.0));
+        assert!(rows.iter().all(|r| r.p50_ms <= r.p99_ms));
+        // every mode × cap cell present exactly once
+        for &mode in &cfg.modes {
+            for &cap in &cfg.batch_sizes {
+                assert_eq!(
+                    rows.iter()
+                        .filter(|r| r.mode == mode && r.max_batch == cap)
+                        .count(),
+                    1
+                );
+            }
+        }
+        assert!(pipelined_speedup(&rows, cfg.batch_sizes[0]).unwrap() > 0.0);
+        let text = render_serving_sweep(&rows, "smoke");
+        assert!(text.contains("pipelined") && text.contains("barrier"), "{text}");
+        let j = serving_sweep_json(&rows, &[("experiment", Json::Str("smoke".into()))]);
+        assert_eq!(
+            j.get("rows").and_then(Json::as_arr).map(|a| a.len()),
+            Some(rows.len())
+        );
+    }
+}

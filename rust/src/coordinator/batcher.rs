@@ -36,9 +36,33 @@ impl BatchPolicy {
     }
 }
 
+/// A closed batch plus metadata about when and why it closed — the unit
+/// the pipeline's prepare stage consumes. `closed_at` is the boundary
+/// between a request's queue time and its prepare time.
+#[derive(Debug)]
+pub struct ClosedBatch {
+    pub requests: Vec<InferenceRequest>,
+    /// Instant the batch closed (size cap reached or window expired).
+    pub closed_at: Instant,
+    /// True when the size cap (not the deadline/disconnect) closed it —
+    /// sustained `full` batches mean the window never limits throughput.
+    pub full: bool,
+}
+
+impl ClosedBatch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
 /// Pull-based batcher over an mpsc receiver of requests. The worker loop
-/// calls [`Batcher::next_batch`], which blocks until it can return a
-/// non-empty batch, or `None` once the channel is closed and drained.
+/// calls [`Batcher::next_batch`] (or [`Batcher::next_closed_batch`] for
+/// close metadata), which blocks until it can return a non-empty batch,
+/// or `None` once the channel is closed and drained.
 pub struct Batcher {
     rx: mpsc::Receiver<InferenceRequest>,
     policy: BatchPolicy,
@@ -56,6 +80,10 @@ impl Batcher {
     }
 
     pub fn next_batch(&mut self) -> Option<Vec<InferenceRequest>> {
+        self.next_closed_batch().map(|b| b.requests)
+    }
+
+    pub fn next_closed_batch(&mut self) -> Option<ClosedBatch> {
         let mut batch = Vec::with_capacity(self.policy.max_batch);
         if let Some(first) = self.pending.take() {
             batch.push(first);
@@ -77,7 +105,12 @@ impl Batcher {
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        Some(batch)
+        let full = batch.len() >= self.policy.max_batch;
+        Some(ClosedBatch {
+            requests: batch,
+            closed_at: Instant::now(),
+            full,
+        })
     }
 }
 
@@ -143,6 +176,34 @@ mod tests {
         assert_eq!(b.next_batch().unwrap().len(), 1);
         assert_eq!(b.next_batch().unwrap().len(), 1);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn closed_batch_reports_close_reason_and_time() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..4 {
+            tx.send(req(i)).unwrap();
+        }
+        let mut b = Batcher::new(
+            rx,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(50),
+            },
+        );
+        let before = Instant::now();
+        let full = b.next_closed_batch().unwrap();
+        assert_eq!(full.len(), 4);
+        assert!(full.full, "size cap should have closed the batch");
+        assert!(full.closed_at >= before);
+        assert!(!full.is_empty());
+        // one leftover request: window expiry closes a partial batch
+        tx.send(req(9)).unwrap();
+        drop(tx);
+        let partial = b.next_closed_batch().unwrap();
+        assert_eq!(partial.len(), 1);
+        assert!(!partial.full);
+        assert!(b.next_closed_batch().is_none());
     }
 
     #[test]

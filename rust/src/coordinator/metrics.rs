@@ -1,6 +1,13 @@
-//! Serving metrics: per-variant latency histograms and throughput
-//! counters, exported as JSON for `sparsebert serve --stats` and the
-//! examples' reports.
+//! Serving metrics: per-variant latency histograms, throughput counters,
+//! and pipeline-stage spans, exported as JSON for `sparsebert serve
+//! --stats` and the examples' reports.
+//!
+//! Stage spans are the pipeline's instrumentation: every batch records a
+//! *prepare* span (decode + embedding + batch assembly) and an *execute*
+//! span (engine forward on the shared pool). Overlapping spans from
+//! different batches are direct evidence the two stages ran concurrently
+//! — [`Metrics::stage_overlaps`] counts them, and the pipeline tests
+//! assert the count is non-zero.
 
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
@@ -8,14 +15,59 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// Pipeline stage a [`StageSpan`] belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Request decode, embedding lookup, batch tensor assembly.
+    Prepare,
+    /// Engine forward over the assembled batch.
+    Execute,
+}
+
+/// One stage execution interval, in µs since the metrics registry was
+/// created. `batch` is the per-variant batch sequence number, so spans of
+/// the *same* batch (prepare then execute, inherently ordered) can be
+/// told apart from cross-batch overlap (the pipeline win).
+#[derive(Debug, Clone, Copy)]
+pub struct StageSpan {
+    pub batch: u64,
+    pub stage: Stage,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+impl StageSpan {
+    /// Open-interval overlap: the spans must share interior time, not
+    /// just a boundary microsecond — barrier mode's back-to-back stages
+    /// (prepare N+1 starting the instant execute N ends) must not count.
+    fn overlaps(&self, other: &StageSpan) -> bool {
+        self.start_us < other.end_us && other.start_us < self.end_us
+    }
+}
+
+/// Bound on retained spans per variant (oldest dropped first); keeps the
+/// registry O(1) in memory under sustained traffic.
+const MAX_SPANS: usize = 512;
+
 #[derive(Debug, Default)]
 struct VariantMetrics {
     total: LatencyHistogram,
     queue: LatencyHistogram,
     compute: LatencyHistogram,
+    prepare: LatencyHistogram,
+    execute: LatencyHistogram,
     requests: u64,
     batches: u64,
     batched_requests: u64,
+    /// Batches closed by the size cap (vs the deadline) — a sustained
+    /// ratio near 1.0 means the window never limits throughput.
+    full_batches: u64,
+    spans: Vec<StageSpan>,
+    /// Monotonic count of cross-batch prepare/execute overlaps,
+    /// maintained incrementally as spans are recorded (each new span is
+    /// compared against the retained opposite-stage spans once, so stats
+    /// queries are O(1) and never hold the lock for a quadratic scan).
+    overlaps: u64,
 }
 
 /// Thread-safe metrics registry.
@@ -32,13 +84,7 @@ impl Metrics {
         }
     }
 
-    pub fn record(
-        &self,
-        variant: &str,
-        total_us: u64,
-        queue_us: u64,
-        compute_us: u64,
-    ) {
+    pub fn record(&self, variant: &str, total_us: u64, queue_us: u64, compute_us: u64) {
         let mut m = self.variants.lock().expect("metrics poisoned");
         let v = m.entry(variant.to_string()).or_default();
         v.total.record_us(total_us as f64);
@@ -47,11 +93,68 @@ impl Metrics {
         v.requests += 1;
     }
 
-    pub fn record_batch(&self, variant: &str, size: usize) {
+    /// Record one executed batch; `full` marks batches closed by the
+    /// size cap rather than the deadline.
+    pub fn record_batch(&self, variant: &str, size: usize, full: bool) {
         let mut m = self.variants.lock().expect("metrics poisoned");
         let v = m.entry(variant.to_string()).or_default();
         v.batches += 1;
         v.batched_requests += size as u64;
+        if full {
+            v.full_batches += 1;
+        }
+    }
+
+    /// Record one pipeline-stage interval for `batch` of `variant`.
+    pub fn record_stage(
+        &self,
+        variant: &str,
+        batch: u64,
+        stage: Stage,
+        start: Instant,
+        end: Instant,
+    ) {
+        let start_us = start.saturating_duration_since(self.started).as_micros() as u64;
+        let end_us = end.saturating_duration_since(self.started).as_micros() as u64;
+        let mut m = self.variants.lock().expect("metrics poisoned");
+        let v = m.entry(variant.to_string()).or_default();
+        match stage {
+            Stage::Prepare => v.prepare.record_us(end_us.saturating_sub(start_us) as f64),
+            Stage::Execute => v.execute.record_us(end_us.saturating_sub(start_us) as f64),
+        }
+        let span = StageSpan {
+            batch,
+            stage,
+            start_us,
+            end_us,
+        };
+        for s in &v.spans {
+            if s.stage != stage && s.batch != batch && span.overlaps(s) {
+                v.overlaps += 1;
+            }
+        }
+        if v.spans.len() >= MAX_SPANS {
+            let excess = v.spans.len() + 1 - MAX_SPANS;
+            v.spans.drain(..excess);
+        }
+        v.spans.push(span);
+    }
+
+    /// Retained stage spans for `variant` (bounded to the most recent
+    /// [`MAX_SPANS`]).
+    pub fn stage_spans(&self, variant: &str) -> Vec<StageSpan> {
+        let m = self.variants.lock().expect("metrics poisoned");
+        m.get(variant).map(|v| v.spans.clone()).unwrap_or_default()
+    }
+
+    /// Count of (prepare, execute) span pairs from *different* batches
+    /// whose intervals overlapped in time — the pipeline-concurrency
+    /// witness, accumulated as spans are recorded. Zero under barrier
+    /// mode (stages strictly alternate on one thread); positive once
+    /// prepare of batch N+1 runs during execute of batch N.
+    pub fn stage_overlaps(&self, variant: &str) -> usize {
+        let m = self.variants.lock().expect("metrics poisoned");
+        m.get(variant).map(|v| v.overlaps as usize).unwrap_or(0)
     }
 
     /// Requests per second since startup, per variant.
@@ -99,13 +202,24 @@ impl Metrics {
                         v.batched_requests as f64 / v.batches as f64
                     },
                 )
+                .set(
+                    "full_batch_ratio",
+                    if v.batches == 0 {
+                        0.0
+                    } else {
+                        v.full_batches as f64 / v.batches as f64
+                    },
+                )
                 .set("throughput_rps", v.requests as f64 / elapsed.max(1e-9))
                 .set("latency_p50_us", v.total.percentile_us(50.0))
                 .set("latency_p95_us", v.total.percentile_us(95.0))
                 .set("latency_p99_us", v.total.percentile_us(99.0))
                 .set("latency_mean_us", v.total.mean_us())
                 .set("queue_p95_us", v.queue.percentile_us(95.0))
-                .set("compute_p50_us", v.compute.percentile_us(50.0));
+                .set("compute_p50_us", v.compute.percentile_us(50.0))
+                .set("prepare_p50_us", v.prepare.percentile_us(50.0))
+                .set("execute_p50_us", v.execute.percentile_us(50.0))
+                .set("stage_overlaps", v.overlaps);
             variants.set(name, j);
         }
         root.set("variants", variants);
@@ -122,6 +236,7 @@ impl Default for Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn record_and_export() {
@@ -129,17 +244,19 @@ mod tests {
         for i in 0..100 {
             m.record("tvm+", 1000 + i * 10, 100, 900 + i * 10);
         }
-        m.record_batch("tvm+", 4);
-        m.record_batch("tvm+", 8);
+        m.record_batch("tvm+", 4, false);
+        m.record_batch("tvm+", 8, true);
         assert_eq!(m.requests("tvm+"), 100);
         assert!((m.mean_batch_size("tvm+") - 6.0).abs() < 1e-9);
         assert!(m.throughput_rps("tvm+") > 0.0);
         let j = m.to_json();
         let v = j.at(&["variants", "tvm+"]).unwrap();
         assert_eq!(v.get("requests").unwrap().as_f64(), Some(100.0));
+        assert_eq!(v.get("full_batch_ratio").unwrap().as_f64(), Some(0.5));
         let p50 = v.get("latency_p50_us").unwrap().as_f64().unwrap();
         let p99 = v.get("latency_p99_us").unwrap().as_f64().unwrap();
         assert!(p50 <= p99);
+        assert_eq!(v.get("stage_overlaps").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]
@@ -147,6 +264,8 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.requests("nope"), 0);
         assert_eq!(m.throughput_rps("nope"), 0.0);
+        assert_eq!(m.stage_overlaps("nope"), 0);
+        assert!(m.stage_spans("nope").is_empty());
     }
 
     #[test]
@@ -163,5 +282,70 @@ mod tests {
             }
         });
         assert_eq!(m.requests("x"), 4000);
+    }
+
+    #[test]
+    fn stage_overlap_detection() {
+        let m = Metrics::new();
+        let t0 = m.started;
+        // batch 0: execute [10ms, 40ms); batch 1: prepare [15ms, 18ms)
+        // overlaps it; batch 1 execute [40ms, 60ms) does not overlap
+        // batch 1 prepare (same batch is excluded anyway).
+        m.record_stage(
+            "v",
+            0,
+            Stage::Execute,
+            t0 + Duration::from_millis(10),
+            t0 + Duration::from_millis(40),
+        );
+        m.record_stage(
+            "v",
+            1,
+            Stage::Prepare,
+            t0 + Duration::from_millis(15),
+            t0 + Duration::from_millis(18),
+        );
+        m.record_stage(
+            "v",
+            1,
+            Stage::Execute,
+            t0 + Duration::from_millis(40),
+            t0 + Duration::from_millis(60),
+        );
+        assert_eq!(m.stage_overlaps("v"), 1);
+        assert_eq!(m.stage_spans("v").len(), 3);
+        // disjoint prepare: batch 2 prepared strictly after everything
+        m.record_stage(
+            "v",
+            2,
+            Stage::Prepare,
+            t0 + Duration::from_millis(90),
+            t0 + Duration::from_millis(95),
+        );
+        assert_eq!(m.stage_overlaps("v"), 1);
+        let j = m.to_json();
+        assert_eq!(
+            j.at(&["variants", "v", "stage_overlaps"]).unwrap().as_f64(),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn spans_bounded() {
+        let m = Metrics::new();
+        let t0 = m.started;
+        for i in 0..(MAX_SPANS as u64 + 100) {
+            m.record_stage(
+                "v",
+                i,
+                Stage::Prepare,
+                t0 + Duration::from_micros(i),
+                t0 + Duration::from_micros(i + 1),
+            );
+        }
+        let spans = m.stage_spans("v");
+        assert_eq!(spans.len(), MAX_SPANS);
+        // oldest were dropped
+        assert_eq!(spans[0].batch, 100);
     }
 }

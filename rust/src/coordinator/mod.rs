@@ -3,18 +3,28 @@
 //! Architecture (vLLM-router-like, scaled to this system's needs):
 //!
 //! ```text
-//!  clients ──submit()──► Router ──► DynamicBatcher ──► EnginePool workers
-//!     ▲                    │   (per engine variant)         │
-//!     └──── oneshot reply ◄┴──────────── Metrics ◄──────────┘
+//!  clients ──submit()──► Router ──► Batcher ─► prepare ─► execute ─┐
+//!     ▲                    │    (per variant)   (embed)  (forward  │
+//!     │                    │                      ║       on the   │
+//!     │                    │                      ║    shared pool)│
+//!     └──── oneshot reply ◄┴───── Metrics ◄═══ stage spans ◄───────┘
 //! ```
+//!
+//! Each variant's request path is a **two-stage pipeline**: a prepare
+//! stage (request decode, embedding lookup, batch tensor assembly) runs
+//! concurrently with the execute stage (engine forward), double-buffered
+//! so batch N+1 assembles while batch N computes. All variants execute
+//! on **one shared engine-side worker pool** owned by the router.
 //!
 //! * [`request`] — request/response types and synthetic workload traces;
 //! * [`batcher`] — size-or-deadline dynamic batching (the A3 ablation
 //!   sweeps the window);
-//! * [`pool`] — per-variant worker threads executing an
-//!   [`crate::model::Engine`];
-//! * [`router`] — variant registry + dispatch;
-//! * [`metrics`] — latency histograms / throughput counters, JSON export;
+//! * [`pool`] — the per-variant stage threads
+//!   ([`pool::PipelineMode::Pipelined`] / barrier) executing an
+//!   [`crate::model::Engine`] on the shared pool;
+//! * [`router`] — variant registry + dispatch + the shared pool;
+//! * [`metrics`] — latency histograms / throughput counters / pipeline
+//!   stage spans, JSON export;
 //! * [`server`] — the blocking TCP front-end (JSON-lines protocol) used
 //!   by `sparsebert serve`.
 //!
@@ -28,5 +38,6 @@ pub mod request;
 pub mod router;
 pub mod server;
 
+pub use pool::PipelineMode;
 pub use request::{InferenceRequest, InferenceResponse, WorkloadTrace};
 pub use router::Router;

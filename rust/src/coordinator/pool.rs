@@ -1,21 +1,39 @@
-//! Per-variant execution pool: a batcher thread feeding engine workers.
+//! Per-variant execution pipeline: prepare and execute stages sharing
+//! one engine-side worker pool.
 //!
-//! One `VariantPool` per registered engine. Its dispatcher thread pulls
-//! batches from the [`Batcher`]; batch members execute concurrently on a
-//! **persistent** [`crate::util::pool::Pool`] owned by the dispatcher
-//! (each worker runs `Engine::forward` on one sequence — sequence-level
-//! parallelism complements each engine's internal row-band threading,
-//! which fans out on the shared global kernel pool). Keeping the workers
-//! alive across batches removes a thread-spawn per batch from the
-//! request path; the pool's drain-then-join shutdown ordering guarantees
-//! in-flight work finishes before the dispatcher exits.
+//! One `VariantPool` per registered engine. In the default
+//! [`PipelineMode::Pipelined`] mode the request path is a two-stage
+//! pipeline:
+//!
+//! ```text
+//!  intake ─► Batcher ─► prepare (decode + embed + assemble) ─┐
+//!                                            sync_channel(1) ─┴─► execute
+//!                                                                 (engine
+//!                                                                  forward)
+//! ```
+//!
+//! The stages run on their own threads, double-buffered through a
+//! depth-[`PIPELINE_DEPTH`] channel: batch N+1 is being assembled while
+//! batch N runs, so embedding/batch assembly no longer serializes with
+//! kernel execution ([`PipelineMode::Barrier`] keeps the old
+//! batch-then-compute loop for the A3 ablation). Batch members execute
+//! concurrently on a **shared** engine-side [`crate::util::pool::Pool`]
+//! owned by the [`super::router::Router`] — one pool for *all* variants,
+//! so M registered engines no longer oversubscribe cores M-fold the way
+//! the old pool-per-variant layout did. Sequence-level parallelism
+//! complements each engine's internal row-band threading: an engine
+//! sharing the same pool executes its kernels inline on the batch worker
+//! (the pool's re-entrancy rule), while a single-sequence batch runs on
+//! the execute-stage thread with full kernel fan-out.
 
-use super::batcher::{BatchPolicy, Batcher};
-use super::metrics::Metrics;
+use super::batcher::{BatchPolicy, Batcher, ClosedBatch};
+use super::metrics::{Metrics, Stage};
 use super::request::{InferenceRequest, InferenceResponse};
 use crate::model::engine::Engine;
 use crate::model::weights::BertWeights;
+use crate::sparse::dense::Matrix;
 use crate::util::pool::Pool as WorkerPool;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
@@ -23,44 +41,197 @@ use std::time::Instant;
 /// Reply channel plumbed through with each request.
 pub type ReplyTx = mpsc::Sender<InferenceResponse>;
 
+/// Prepared batches buffered between the stages. Depth 1 + the batch
+/// inside the execute stage = classic double buffering; deeper queues
+/// only add memory pressure and queue latency without more overlap.
+pub const PIPELINE_DEPTH: usize = 1;
+
+/// Coordinator execution mode (the A3 ablation's pipeline dimension).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PipelineMode {
+    /// Two-stage pipeline: prepare (decode + embedding + batch assembly)
+    /// overlaps execute (engine forward on the shared pool).
+    #[default]
+    Pipelined,
+    /// PR-1 behavior: one dispatcher thread prepares, then executes,
+    /// then picks up the next batch (no stage overlap).
+    Barrier,
+}
+
+impl PipelineMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PipelineMode::Pipelined => "pipelined",
+            PipelineMode::Barrier => "barrier",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<PipelineMode, String> {
+        match s {
+            "pipelined" | "pipeline" | "async" => Ok(PipelineMode::Pipelined),
+            "barrier" | "sync" => Ok(PipelineMode::Barrier),
+            other => Err(format!("unknown pipeline mode '{other}' (pipelined|barrier)")),
+        }
+    }
+}
+
+impl std::fmt::Display for PipelineMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-variant batching/execution configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct VariantConfig {
+    pub policy: BatchPolicy,
+    pub mode: PipelineMode,
+    /// Concurrent sequences per batch on the shared pool (capped by the
+    /// batch size and the pool width).
+    pub workers: usize,
+}
+
+impl VariantConfig {
+    pub fn new(policy: BatchPolicy, workers: usize) -> VariantConfig {
+        VariantConfig {
+            policy,
+            mode: PipelineMode::default(),
+            workers,
+        }
+    }
+
+    pub fn with_mode(mut self, mode: PipelineMode) -> VariantConfig {
+        self.mode = mode;
+        self
+    }
+}
+
 struct Job {
     request: InferenceRequest,
     reply: ReplyTx,
 }
 
+/// A batch with its input tensors assembled — the unit handed from the
+/// prepare stage to the execute stage.
+struct PreparedBatch {
+    /// Per-variant batch sequence number (keys the stage spans).
+    seq: u64,
+    /// Whether the size cap (vs the deadline) closed the batch.
+    full: bool,
+    requests: Vec<InferenceRequest>,
+    inputs: Vec<Matrix>,
+}
+
+/// Everything the execute stage needs, shared across its invocations.
+struct ExecCtx {
+    variant: String,
+    engine: Arc<dyn Engine>,
+    workers: usize,
+    exec_pool: Arc<WorkerPool>,
+    metrics: Arc<Metrics>,
+    replies: Arc<Mutex<HashMap<u64, ReplyTx>>>,
+}
+
 /// Handle for submitting to one engine variant.
 pub struct VariantPool {
     pub name: String,
+    mode: PipelineMode,
     tx: Mutex<Option<mpsc::Sender<Job>>>,
-    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    stages: Mutex<Vec<std::thread::JoinHandle<()>>>,
     accepting: AtomicBool,
 }
 
 impl VariantPool {
-    /// Spawn the dispatcher for `engine`. `workers` = concurrent
-    /// sequences per batch.
+    /// Spawn the stage threads for `engine` on the shared `exec_pool`.
     pub fn start(
         name: &str,
         engine: Arc<dyn Engine>,
         weights: Arc<BertWeights>,
-        policy: BatchPolicy,
-        workers: usize,
+        cfg: VariantConfig,
+        exec_pool: Arc<WorkerPool>,
         metrics: Arc<Metrics>,
     ) -> Arc<VariantPool> {
         let (tx, rx) = mpsc::channel::<Job>();
-        let vname = name.to_string();
-        let dispatcher = std::thread::Builder::new()
-            .name(format!("dispatch-{name}"))
-            .spawn(move || {
-                dispatch_loop(vname, engine, weights, rx, policy, workers, metrics)
-            })
-            .expect("spawn dispatcher");
+        let replies: Arc<Mutex<HashMap<u64, ReplyTx>>> = Arc::new(Mutex::new(HashMap::new()));
+        let (breq_tx, breq_rx) = mpsc::channel::<InferenceRequest>();
+        let mut stages = Vec::with_capacity(3);
+        // Intake: register the reply route *before* forwarding the
+        // request, so a response can never race its reply channel.
+        {
+            let replies = Arc::clone(&replies);
+            stages.push(
+                std::thread::Builder::new()
+                    .name(format!("intake-{name}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            replies
+                                .lock()
+                                .expect("replies poisoned")
+                                .insert(job.request.id, job.reply);
+                            if breq_tx.send(job.request).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn intake"),
+            );
+        }
+        let ctx = Arc::new(ExecCtx {
+            variant: name.to_string(),
+            engine,
+            workers: cfg.workers.max(1),
+            exec_pool,
+            metrics,
+            replies,
+        });
+        match cfg.mode {
+            PipelineMode::Pipelined => {
+                let (prep_tx, prep_rx) = mpsc::sync_channel::<PreparedBatch>(PIPELINE_DEPTH);
+                {
+                    let vname = name.to_string();
+                    let metrics = Arc::clone(&ctx.metrics);
+                    let policy = cfg.policy;
+                    stages.push(
+                        std::thread::Builder::new()
+                            .name(format!("prepare-{name}"))
+                            .spawn(move || {
+                                prepare_loop(&vname, &weights, breq_rx, policy, &metrics, prep_tx)
+                            })
+                            .expect("spawn prepare stage"),
+                    );
+                }
+                {
+                    let ctx = Arc::clone(&ctx);
+                    stages.push(
+                        std::thread::Builder::new()
+                            .name(format!("execute-{name}"))
+                            .spawn(move || execute_loop(&ctx, prep_rx))
+                            .expect("spawn execute stage"),
+                    );
+                }
+            }
+            PipelineMode::Barrier => {
+                let ctx = Arc::clone(&ctx);
+                let policy = cfg.policy;
+                stages.push(
+                    std::thread::Builder::new()
+                        .name(format!("dispatch-{name}"))
+                        .spawn(move || barrier_loop(&ctx, &weights, breq_rx, policy))
+                        .expect("spawn dispatcher"),
+                );
+            }
+        }
         Arc::new(VariantPool {
             name: name.to_string(),
+            mode: cfg.mode,
             tx: Mutex::new(Some(tx)),
-            dispatcher: Mutex::new(Some(dispatcher)),
+            stages: Mutex::new(stages),
             accepting: AtomicBool::new(true),
         })
+    }
+
+    pub fn mode(&self) -> PipelineMode {
+        self.mode
     }
 
     /// Submit a request; the response arrives on `reply`.
@@ -75,11 +246,16 @@ impl VariantPool {
         }
     }
 
-    /// Stop accepting, drain, and join the dispatcher.
+    /// Stop accepting, drain every stage (batches already prepared or in
+    /// flight still produce responses), and join the stage threads.
     pub fn shutdown(&self) {
         self.accepting.store(false, Ordering::Release);
         self.tx.lock().expect("pool tx poisoned").take();
-        if let Some(t) = self.dispatcher.lock().expect("dispatcher poisoned").take() {
+        let handles: Vec<_> = {
+            let mut stages = self.stages.lock().expect("stages poisoned");
+            stages.drain(..).collect()
+        };
+        for t in handles {
             let _ = t.join();
         }
     }
@@ -91,72 +267,108 @@ impl Drop for VariantPool {
     }
 }
 
-fn dispatch_loop(
-    variant: String,
-    engine: Arc<dyn Engine>,
-    weights: Arc<BertWeights>,
-    rx: mpsc::Receiver<Job>,
-    policy: BatchPolicy,
-    workers: usize,
-    metrics: Arc<Metrics>,
-) {
-    // Adapter: mpsc<Job> → mpsc<InferenceRequest> for the Batcher, with a
-    // side map id → reply channel. Ids are unique per coordinator.
-    let (breq_tx, breq_rx) = mpsc::channel::<InferenceRequest>();
-    let replies: Arc<Mutex<std::collections::HashMap<u64, ReplyTx>>> =
-        Arc::new(Mutex::new(std::collections::HashMap::new()));
-    {
-        let replies = Arc::clone(&replies);
-        std::thread::Builder::new()
-            .name(format!("intake-{variant}"))
-            .spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    replies
-                        .lock()
-                        .expect("replies poisoned")
-                        .insert(job.request.id, job.reply);
-                    if breq_tx.send(job.request).is_err() {
-                        break;
-                    }
-                }
-            })
-            .expect("spawn intake");
+/// Assemble one closed batch: embedding lookups + input tensors. Records
+/// the prepare-stage span, which starts at the batch-close instant (the
+/// boundary between a request's queue time and its prepare time).
+fn prepare_batch(
+    variant: &str,
+    weights: &BertWeights,
+    metrics: &Metrics,
+    seq: u64,
+    closed: ClosedBatch,
+) -> PreparedBatch {
+    let mut inputs = Vec::with_capacity(closed.requests.len());
+    for r in &closed.requests {
+        inputs.push(weights.embed(&r.tokens));
     }
-    // Long-lived batch workers: spawned once per variant, reused for every
-    // batch. Dropped (drain + join) when the dispatcher exits.
-    let exec_pool = WorkerPool::new(workers.max(1));
-    let mut batcher = Batcher::new(breq_rx, policy);
-    while let Some(batch) = batcher.next_batch() {
-        let picked_up = Instant::now();
-        let size = batch.len();
-        metrics.record_batch(&variant, size);
-        let workers_now = workers.max(1).min(size);
-        let handle_span = |_w: usize, span: std::ops::Range<usize>| {
-            for req in &batch[span] {
-                let t0 = Instant::now();
-                let x = weights.embed(&req.tokens);
-                let y = engine.forward(&x);
-                let compute_us = t0.elapsed().as_micros() as u64;
-                let queue_us = picked_up.duration_since(req.enqueued).as_micros() as u64;
-                let total_us = req.enqueued.elapsed().as_micros() as u64;
-                metrics.record(&variant, total_us, queue_us, compute_us);
-                let reply = replies
-                    .lock()
-                    .expect("replies poisoned")
-                    .remove(&req.id);
-                if let Some(tx) = reply {
-                    let _ = tx.send(InferenceResponse {
-                        id: req.id,
-                        cls: y.row(0).to_vec(),
-                        queue_us,
-                        compute_us,
-                        total_us,
-                        batch_size: size,
-                    });
-                }
+    metrics.record_stage(variant, seq, Stage::Prepare, closed.closed_at, Instant::now());
+    PreparedBatch {
+        seq,
+        full: closed.full,
+        requests: closed.requests,
+        inputs,
+    }
+}
+
+/// Run one prepared batch on the shared pool and send its responses.
+/// Records the execute-stage span.
+fn execute_batch(ctx: &ExecCtx, batch: &PreparedBatch) {
+    let picked_up = Instant::now();
+    let size = batch.requests.len();
+    ctx.metrics.record_batch(&ctx.variant, size, batch.full);
+    let workers_now = ctx.workers.min(size).max(1);
+    let handle_span = |_w: usize, span: std::ops::Range<usize>| {
+        let reqs = &batch.requests[span.clone()];
+        let inputs = &batch.inputs[span];
+        for (req, x) in reqs.iter().zip(inputs) {
+            let t0 = Instant::now();
+            let y = ctx.engine.forward(x);
+            let compute_us = t0.elapsed().as_micros() as u64;
+            let queue_us = picked_up.saturating_duration_since(req.enqueued).as_micros() as u64;
+            let total_us = req.enqueued.elapsed().as_micros() as u64;
+            ctx.metrics.record(&ctx.variant, total_us, queue_us, compute_us);
+            let reply = ctx.replies.lock().expect("replies poisoned").remove(&req.id);
+            if let Some(tx) = reply {
+                let _ = tx.send(InferenceResponse {
+                    id: req.id,
+                    cls: y.row(0).to_vec(),
+                    queue_us,
+                    compute_us,
+                    total_us,
+                    batch_size: size,
+                });
             }
-        };
-        exec_pool.run_chunks(size, workers_now, &handle_span);
+        }
+    };
+    ctx.exec_pool.run_chunks(size, workers_now, &handle_span);
+    let end = Instant::now();
+    ctx.metrics.record_stage(&ctx.variant, batch.seq, Stage::Execute, picked_up, end);
+}
+
+/// Prepare stage: pull closed batches, assemble tensors, hand off to the
+/// execute stage. Exits once the batcher drains (intake gone) or the
+/// execute stage disappears.
+fn prepare_loop(
+    variant: &str,
+    weights: &BertWeights,
+    rx: mpsc::Receiver<InferenceRequest>,
+    policy: BatchPolicy,
+    metrics: &Metrics,
+    tx: mpsc::SyncSender<PreparedBatch>,
+) {
+    let mut batcher = Batcher::new(rx, policy);
+    let mut seq = 0u64;
+    while let Some(closed) = batcher.next_closed_batch() {
+        let prepared = prepare_batch(variant, weights, metrics, seq, closed);
+        if tx.send(prepared).is_err() {
+            break;
+        }
+        seq += 1;
+    }
+}
+
+/// Execute stage: drain prepared batches until the prepare stage hangs
+/// up, so shutdown never drops an assembled batch.
+fn execute_loop(ctx: &ExecCtx, rx: mpsc::Receiver<PreparedBatch>) {
+    while let Ok(batch) = rx.recv() {
+        execute_batch(ctx, &batch);
+    }
+}
+
+/// Barrier mode: the PR-1 synchronous loop (prepare, then execute, on
+/// one thread) — kept as the A3 ablation baseline.
+fn barrier_loop(
+    ctx: &ExecCtx,
+    weights: &BertWeights,
+    rx: mpsc::Receiver<InferenceRequest>,
+    policy: BatchPolicy,
+) {
+    let mut batcher = Batcher::new(rx, policy);
+    let mut seq = 0u64;
+    while let Some(closed) = batcher.next_closed_batch() {
+        let prepared = prepare_batch(&ctx.variant, weights, &ctx.metrics, seq, closed);
+        execute_batch(ctx, &prepared);
+        seq += 1;
     }
 }
 
@@ -165,12 +377,40 @@ mod tests {
     use super::*;
     use crate::model::bert::CompiledDenseEngine;
     use crate::model::config::BertConfig;
+    use std::collections::BTreeMap;
+    use std::time::Duration;
 
     fn setup() -> (Arc<dyn Engine>, Arc<BertWeights>) {
         let cfg = BertConfig::micro();
         let w = Arc::new(BertWeights::synthetic(&cfg, 51));
         let e: Arc<dyn Engine> = Arc::new(CompiledDenseEngine::new(Arc::clone(&w), 1));
         (e, w)
+    }
+
+    fn exec_pool() -> Arc<WorkerPool> {
+        Arc::new(WorkerPool::new(2))
+    }
+
+    /// Engine wrapper with a fixed per-forward delay: makes execute spans
+    /// long enough that stage overlap is deterministic in tests.
+    struct SlowEngine {
+        inner: CompiledDenseEngine,
+        delay: Duration,
+    }
+
+    impl Engine for SlowEngine {
+        fn name(&self) -> &str {
+            "slow"
+        }
+
+        fn forward(&self, x: &Matrix) -> Matrix {
+            std::thread::sleep(self.delay);
+            self.inner.forward(x)
+        }
+
+        fn weight_footprint_bytes(&self) -> usize {
+            self.inner.weight_footprint_bytes()
+        }
     }
 
     #[test]
@@ -181,8 +421,8 @@ mod tests {
             "test",
             engine,
             weights,
-            BatchPolicy::default(),
-            2,
+            VariantConfig::new(BatchPolicy::default(), 2),
+            exec_pool(),
             Arc::clone(&metrics),
         );
         let (rtx, rrx) = mpsc::channel();
@@ -194,7 +434,7 @@ mod tests {
         }
         let mut got = Vec::new();
         for _ in 0..20 {
-            let resp = rrx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+            let resp = rrx.recv_timeout(Duration::from_secs(10)).unwrap();
             assert!(!resp.cls.is_empty());
             assert!(resp.total_us >= resp.compute_us);
             got.push(resp.id);
@@ -217,17 +457,158 @@ mod tests {
                 "d",
                 Arc::clone(&engine),
                 Arc::clone(&weights),
-                policy,
-                3,
+                VariantConfig::new(policy, 3),
+                exec_pool(),
                 Arc::clone(&metrics),
             );
             let (rtx, rrx) = mpsc::channel();
             pool.submit(InferenceRequest::new(7, vec![5, 6, 7], "d"), rtx);
-            let resp = rrx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+            let resp = rrx.recv_timeout(Duration::from_secs(10)).unwrap();
             answers.push(resp.cls);
             pool.shutdown();
         }
         assert_eq!(answers[0], answers[1]);
+    }
+
+    /// Satellite: pipelined responses must be byte-identical to barrier
+    /// responses across batch sizes 1, 8, and mixed-length sequences.
+    #[test]
+    fn pipelined_matches_barrier_byte_identical() {
+        let (engine, weights) = setup();
+        // (policy, token sequences) cases: single, size-8 batches of
+        // equal length, and mixed lengths batched together
+        let uniform: Vec<Vec<u32>> = (0..16).map(|i| vec![1, 2, 3, 4 + i as u32]).collect();
+        let mixed: Vec<Vec<u32>> = (0..12)
+            .map(|i| (0..(3 + i % 5)).map(|t| (t + i) as u32 + 1).collect())
+            .collect();
+        let cases: Vec<(BatchPolicy, Vec<Vec<u32>>)> = vec![
+            (BatchPolicy::immediate(), uniform.clone()),
+            (
+                BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(5),
+                },
+                uniform,
+            ),
+            (
+                BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(5),
+                },
+                mixed,
+            ),
+        ];
+        for (policy, seqs) in cases {
+            let mut by_mode: Vec<BTreeMap<u64, Vec<f32>>> = Vec::new();
+            for mode in [PipelineMode::Pipelined, PipelineMode::Barrier] {
+                let pool = VariantPool::start(
+                    "m",
+                    Arc::clone(&engine),
+                    Arc::clone(&weights),
+                    VariantConfig::new(policy, 2).with_mode(mode),
+                    exec_pool(),
+                    Arc::new(Metrics::new()),
+                );
+                assert_eq!(pool.mode(), mode);
+                let (rtx, rrx) = mpsc::channel();
+                for (i, tokens) in seqs.iter().enumerate() {
+                    assert!(pool.submit(
+                        InferenceRequest::new(i as u64, tokens.clone(), "m"),
+                        rtx.clone()
+                    ));
+                }
+                let mut got = BTreeMap::new();
+                for _ in 0..seqs.len() {
+                    let resp = rrx.recv_timeout(Duration::from_secs(10)).unwrap();
+                    got.insert(resp.id, resp.cls);
+                }
+                pool.shutdown();
+                by_mode.push(got);
+            }
+            assert_eq!(
+                by_mode[0], by_mode[1],
+                "pipelined and barrier responses diverged"
+            );
+        }
+    }
+
+    /// Satellite: shutdown must drain prepared/in-flight batches — every
+    /// accepted request still gets its response.
+    #[test]
+    fn shutdown_drains_inflight_batches() {
+        let cfg = BertConfig::micro();
+        let weights = Arc::new(BertWeights::synthetic(&cfg, 52));
+        let engine: Arc<dyn Engine> = Arc::new(SlowEngine {
+            inner: CompiledDenseEngine::new(Arc::clone(&weights), 1),
+            delay: Duration::from_millis(5),
+        });
+        let pool = VariantPool::start(
+            "drain",
+            engine,
+            weights,
+            VariantConfig::new(
+                BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                1,
+            ),
+            exec_pool(),
+            Arc::new(Metrics::new()),
+        );
+        let (rtx, rrx) = mpsc::channel();
+        for i in 0..10 {
+            assert!(pool.submit(InferenceRequest::new(i, vec![1, 2, 3], "drain"), rtx.clone()));
+        }
+        // Immediate shutdown: batches are still queued, prepared, or
+        // executing. shutdown() must block until all are answered.
+        pool.shutdown();
+        drop(rtx);
+        let got: Vec<u64> = rrx.iter().map(|r| r.id).collect();
+        assert_eq!(got.len(), 10, "shutdown dropped in-flight requests");
+    }
+
+    /// Acceptance: prepare of batch N+1 runs concurrently with execute of
+    /// batch N — witnessed by overlapping stage spans.
+    #[test]
+    fn pipelined_stages_overlap_concurrently() {
+        let cfg = BertConfig::micro();
+        let weights = Arc::new(BertWeights::synthetic(&cfg, 53));
+        let engine: Arc<dyn Engine> = Arc::new(SlowEngine {
+            inner: CompiledDenseEngine::new(Arc::clone(&weights), 1),
+            delay: Duration::from_millis(10),
+        });
+        let metrics = Arc::new(Metrics::new());
+        let pool = VariantPool::start(
+            "slow",
+            engine,
+            weights,
+            VariantConfig::new(
+                BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                1,
+            ),
+            exec_pool(),
+            Arc::clone(&metrics),
+        );
+        let (rtx, rrx) = mpsc::channel();
+        for i in 0..16 {
+            assert!(pool.submit(InferenceRequest::new(i, vec![2, 3, 4], "slow"), rtx.clone()));
+        }
+        for _ in 0..16 {
+            rrx.recv_timeout(Duration::from_secs(20)).unwrap();
+        }
+        pool.shutdown();
+        // With 4 batches of 40ms execute each and µs-scale prepares, the
+        // prepare of batch N+1 lands inside the execute span of batch N
+        // (the sync_channel send unblocks exactly when execute starts).
+        assert!(
+            metrics.stage_overlaps("slow") >= 1,
+            "no concurrent prepare/execute spans recorded: {:?}",
+            metrics.stage_spans("slow")
+        );
     }
 
     #[test]
@@ -237,8 +618,8 @@ mod tests {
             "s",
             engine,
             weights,
-            BatchPolicy::immediate(),
-            1,
+            VariantConfig::new(BatchPolicy::immediate(), 1),
+            exec_pool(),
             Arc::new(Metrics::new()),
         );
         pool.shutdown();

@@ -1,15 +1,19 @@
 //! Router: engine-variant registry + request dispatch + workload driver.
 //!
 //! The router is what `sparsebert serve` and the benches talk to. It owns
-//! one [`VariantPool`] per registered engine, a shared [`Metrics`]
-//! registry, and a monotone request-id source.
+//! one [`VariantPool`] per registered engine, **one shared engine-side
+//! worker pool** that every variant's batches execute on (replacing the
+//! old pool-per-variant layout that oversubscribed cores M-fold for M
+//! variants), a shared [`Metrics`] registry, and a monotone request-id
+//! source.
 
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
-use super::pool::VariantPool;
+use super::pool::{PipelineMode, VariantConfig, VariantPool};
 use super::request::{InferenceRequest, InferenceResponse, WorkloadTrace};
 use crate::model::engine::Engine;
 use crate::model::weights::BertWeights;
+use crate::util::pool::{default_threads, Pool as WorkerPool};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -18,6 +22,12 @@ use std::time::{Duration, Instant};
 
 pub struct Router {
     pools: BTreeMap<String, Arc<VariantPool>>,
+    /// The shared engine-side pool all variants execute batches on. Hand
+    /// the same handle to engines built with
+    /// [`crate::model::bert::SparseBsrEngine::with_pool`] so kernel
+    /// fan-out shares it too (total worker threads stay constant no
+    /// matter how many variants are registered).
+    exec_pool: Arc<WorkerPool>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
 }
@@ -37,14 +47,28 @@ pub struct TraceReport {
 
 impl Router {
     pub fn new() -> Router {
+        Self::with_exec_pool(Arc::new(WorkerPool::new(default_threads())))
+    }
+
+    /// Build a router around an existing shared pool (so the serving
+    /// binary can hand the *same* pool to the engines it registers).
+    pub fn with_exec_pool(exec_pool: Arc<WorkerPool>) -> Router {
         Router {
             pools: BTreeMap::new(),
+            exec_pool,
             metrics: Arc::new(Metrics::new()),
             next_id: AtomicU64::new(1),
         }
     }
 
-    /// Register an engine under `name` with its batching policy.
+    /// The shared engine-side pool (clone the handle to share it with
+    /// engine constructors).
+    pub fn exec_pool(&self) -> Arc<WorkerPool> {
+        Arc::clone(&self.exec_pool)
+    }
+
+    /// Register an engine under `name` with its batching policy, in the
+    /// default pipelined mode.
     pub fn register(
         &mut self,
         name: &str,
@@ -53,12 +77,26 @@ impl Router {
         policy: BatchPolicy,
         workers: usize,
     ) {
+        self.register_with_mode(name, engine, weights, policy, workers, PipelineMode::default());
+    }
+
+    /// Register an engine with an explicit [`PipelineMode`] (the A3
+    /// ablation registers barrier-mode variants for comparison).
+    pub fn register_with_mode(
+        &mut self,
+        name: &str,
+        engine: Arc<dyn Engine>,
+        weights: Arc<BertWeights>,
+        policy: BatchPolicy,
+        workers: usize,
+        mode: PipelineMode,
+    ) {
         let pool = VariantPool::start(
             name,
             engine,
             weights,
-            policy,
-            workers,
+            VariantConfig::new(policy, workers).with_mode(mode),
+            Arc::clone(&self.exec_pool),
             Arc::clone(&self.metrics),
         );
         self.pools.insert(name.to_string(), pool);
@@ -66,6 +104,11 @@ impl Router {
 
     pub fn variants(&self) -> Vec<String> {
         self.pools.keys().cloned().collect()
+    }
+
+    /// Pipeline mode of a registered variant.
+    pub fn mode_of(&self, variant: &str) -> Option<PipelineMode> {
+        self.pools.get(variant).map(|p| p.mode())
     }
 
     /// Submit asynchronously; the response arrives on the returned
@@ -170,6 +213,8 @@ mod tests {
         let resp = r.infer("dense", vec![1, 2, 3]).unwrap();
         assert_eq!(resp.cls.len(), BertConfig::micro().hidden);
         assert!(r.infer("nope", vec![1]).is_err());
+        assert_eq!(r.mode_of("dense"), Some(PipelineMode::Pipelined));
+        assert_eq!(r.mode_of("nope"), None);
         r.shutdown();
     }
 
@@ -202,6 +247,36 @@ mod tests {
             }
         });
         assert_eq!(ids.lock().unwrap().len(), 100);
+        r.shutdown();
+    }
+
+    #[test]
+    fn variants_share_one_exec_pool() {
+        let cfg = BertConfig::micro();
+        let w = Arc::new(BertWeights::synthetic(&cfg, 62));
+        let shared = Arc::new(WorkerPool::new(2));
+        let mut r = Router::with_exec_pool(Arc::clone(&shared));
+        assert!(Arc::ptr_eq(&r.exec_pool(), &shared));
+        for (name, mode) in [
+            ("a", PipelineMode::Pipelined),
+            ("b", PipelineMode::Barrier),
+        ] {
+            let e: Arc<dyn Engine> = Arc::new(CompiledDenseEngine::new(Arc::clone(&w), 1));
+            r.register_with_mode(
+                name,
+                e,
+                Arc::clone(&w),
+                BatchPolicy::default(),
+                2,
+                mode,
+            );
+        }
+        assert_eq!(r.mode_of("a"), Some(PipelineMode::Pipelined));
+        assert_eq!(r.mode_of("b"), Some(PipelineMode::Barrier));
+        // both variants answer on the shared pool, with identical results
+        let ra = r.infer("a", vec![5, 6, 7]).unwrap();
+        let rb = r.infer("b", vec![5, 6, 7]).unwrap();
+        assert_eq!(ra.cls, rb.cls);
         r.shutdown();
     }
 }

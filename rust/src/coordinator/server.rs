@@ -117,7 +117,14 @@ fn process_line(line: &str, router: &Router) -> Result<LineOutcome> {
             "stats" => Ok(LineOutcome::Reply(router.metrics.to_json())),
             "variants" => {
                 let mut j = Json::obj();
-                j.set("variants", router.variants());
+                let names = router.variants();
+                let mut modes = Json::obj();
+                for name in &names {
+                    if let Some(mode) = router.mode_of(name) {
+                        modes.set(name, mode.as_str());
+                    }
+                }
+                j.set("variants", names).set("pipeline", modes);
                 Ok(LineOutcome::Reply(j))
             }
             "shutdown" => Ok(LineOutcome::Shutdown),
@@ -230,6 +237,14 @@ mod tests {
         req.set("cmd", "stats");
         let stats = client.call(&req).unwrap();
         assert!(stats.at(&["variants", "dense"]).is_some());
+        // variants listing includes the pipeline mode per variant
+        let mut vq = Json::obj();
+        vq.set("cmd", "variants");
+        let vs = client.call(&vq).unwrap();
+        assert_eq!(
+            vs.at(&["pipeline", "dense"]).and_then(Json::as_str),
+            Some("pipelined")
+        );
         // bad input handled gracefully
         let mut bad = Json::obj();
         bad.set("tokens", Vec::<usize>::new());

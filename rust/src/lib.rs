@@ -34,10 +34,29 @@
 //! fingerprint)*. A hit returns an [`scheduler::cache::ExecPlan`] — the
 //! shared plan plus precomputed pattern statistics — so repeated
 //! inference over the same pruned weights performs **zero re-planning**
-//! and chooses threads/grain in O(1) per call. `sparsebert schedsweep`
+//! and chooses threads/grain in O(1) per call. The cache is bounded by
+//! an LRU cap (256 plans by default, configurable) with eviction counts
+//! exported next to hits/misses. `sparsebert schedsweep`
 //! and bench A4 (`benches/ablation_scheduler.rs`) sweep threads × grain ×
 //! block shape (including the paper's 32x1 vs 32x32 comparison) over
 //! this engine and verify the zero-re-planning property.
+//!
+//! ## Serving pipeline
+//!
+//! The coordinator's request path is a **two-stage pipeline**
+//! ([`coordinator::pool`]): a prepare stage (request decode, embedding
+//! lookup, batch tensor assembly) runs concurrently with an execute
+//! stage (planned BSR forward), double-buffered through a depth-1
+//! channel so batch N+1 assembles while batch N computes. All variants
+//! execute their batches on **one shared engine-side pool** owned by the
+//! [`coordinator::Router`] (M registered variants no longer oversubscribe
+//! cores M-fold), and `sparsebert serve` hands the same pool handle to
+//! the sparse engine so kernel fan-out shares it too. Per-batch
+//! queue/prepare/execute spans land in [`coordinator::metrics`];
+//! overlapping spans from different batches witness the concurrency.
+//! Barrier mode (the old batch-then-compute loop) survives as the A3
+//! ablation baseline (`benches/ablation_batching.rs`, `sparsebert
+//! cibench`).
 //!
 //! [`SpmmPlan`]: kernels::bsr_spmm::SpmmPlan
 //!

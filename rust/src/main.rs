@@ -16,11 +16,12 @@
 use anyhow::{bail, Context, Result};
 use sparsebert::bench_harness::figure2::build_figure2;
 use sparsebert::bench_harness::{
-    render_sched_sweep, report, run_scheduler_sweep, run_table1, SchedSweepConfig, Table1Config,
+    render_sched_sweep, render_serving_sweep, report, run_scheduler_sweep, run_serving_sweep,
+    run_table1, serving_sweep_json, SchedSweepConfig, ServingSweepConfig, Table1Config,
 };
 use sparsebert::coordinator::batcher::BatchPolicy;
 use sparsebert::coordinator::server::{Client, Server};
-use sparsebert::coordinator::Router;
+use sparsebert::coordinator::{PipelineMode, Router};
 use sparsebert::interp::bert::InterpEngine;
 use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
 use sparsebert::model::engine::Engine;
@@ -30,8 +31,9 @@ use sparsebert::sparse::pattern::PatternStats;
 use sparsebert::sparse::prune::BlockShape;
 use sparsebert::sparse::BsrMatrix;
 use sparsebert::util::argparse::Parser;
+use sparsebert::util::bench::BenchConfig;
 use sparsebert::util::json::{self, Json};
-use sparsebert::util::pool::default_threads;
+use sparsebert::util::pool::{default_threads, Pool};
 use sparsebert::util::tensorfile::{artifacts_dir, TensorBundle};
 use std::sync::Arc;
 
@@ -47,6 +49,7 @@ fn main() {
     let result = match cmd {
         "table1" => cmd_table1(rest),
         "schedsweep" => cmd_schedsweep(rest),
+        "cibench" => cmd_cibench(rest),
         "figure2" => cmd_figure2(rest),
         "table2" => cmd_table2(rest),
         "serve" => cmd_serve(rest),
@@ -75,6 +78,7 @@ fn usage() -> String {
          commands:\n\
          \x20 table1     regenerate Table 1 (inference ms per engine × block config)\n\
          \x20 schedsweep threads × grain × block sweep of the parallel plan-cached engine\n\
+         \x20 cibench    CI bench smoke: tiny schedsweep + A3 serving sweep → JSON\n\
          \x20 figure2    regenerate Figure 2 (TVM+/Dense curve)\n\
          \x20 table2     render Table 2 from artifacts/table2.json (run `make table2` first)\n\
          \x20 serve      start the serving coordinator (TCP, JSON lines)\n\
@@ -208,6 +212,86 @@ fn cmd_schedsweep(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_cibench(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new(
+        "sparsebert cibench",
+        "CI bench smoke: one tiny schedsweep + A3 serving sweep, exported as JSON",
+    )
+    .opt("out", "BENCH_ci.json", "output JSON path")
+    .parse(argv)?;
+    // Tiny but representative: the paper's 32x1-vs-32x32 scheduler
+    // comparison plus the serving pipeline's barrier-vs-pipelined sweep,
+    // sized to finish in seconds on a bare CI runner.
+    let sched_cfg = SchedSweepConfig {
+        rows: 256,
+        cols: 256,
+        tokens: 32,
+        sparsity: 0.9,
+        pool: 8,
+        blocks: vec![
+            BlockShape::new(32, 1),
+            BlockShape::new(32, 32),
+            BlockShape::new(1, 32),
+        ],
+        threads: vec![1, 2],
+        grains: vec![1, 4],
+        bench: BenchConfig {
+            samples: 3,
+            warmup: 1,
+            max_seconds: 120.0,
+        },
+        seed: 42,
+    };
+    eprintln!("cibench schedsweep: 256x256 @ 90%, 32x1/32x32/1x32 ({})", HwSpec::detect());
+    let sched_rep = run_scheduler_sweep(&sched_cfg);
+    println!("{}", render_sched_sweep(&sched_rep, "cibench — scheduler sweep"));
+    if sched_rep.replans_on_repeat != 0 {
+        bail!(
+            "plan cache re-planned {} structures on repeat",
+            sched_rep.replans_on_repeat
+        );
+    }
+    let serving_cfg = ServingSweepConfig {
+        batch_sizes: vec![1, 8],
+        requests: 32,
+        ..ServingSweepConfig::default()
+    };
+    let serving_rows = run_serving_sweep(&serving_cfg);
+    println!(
+        "{}",
+        render_serving_sweep(&serving_rows, "cibench — A3 serving sweep")
+    );
+    let mut root = Json::obj();
+    root.set("schema", "sparsebert-bench-ci/v1")
+        .set("version", sparsebert::VERSION)
+        .set("hw", HwSpec::detect().to_string());
+    let cells: Vec<Json> = sched_rep
+        .rows
+        .iter()
+        .map(|r| {
+            let mut j = Json::obj();
+            j.set("block", r.block.to_string())
+                .set("threads", r.threads)
+                .set("grain", r.grain)
+                .set("ms", r.ms)
+                .set("speedup_vs_serial", r.speedup_vs_serial);
+            j
+        })
+        .collect();
+    let mut ss = Json::obj();
+    ss.set("rows", cells)
+        .set("cache_entries", sched_rep.cache.entries)
+        .set("cache_evictions", sched_rep.cache.evictions)
+        .set("replans_on_repeat", sched_rep.replans_on_repeat);
+    root.set("schedsweep", ss).set(
+        "serving",
+        serving_sweep_json(&serving_rows, &[("experiment", Json::Str("A3-ci".into()))]),
+    );
+    std::fs::write(args.get("out"), root.to_string_pretty())?;
+    eprintln!("wrote {}", args.get("out"));
+    Ok(())
+}
+
 fn cmd_figure2(argv: Vec<String>) -> Result<()> {
     let args = sweep_parser("sparsebert figure2").parse(argv)?;
     let mut cfg = sweep_config(&args)?;
@@ -303,6 +387,7 @@ fn build_engines(
     block: BlockShape,
     sparsity: f64,
     threads: usize,
+    exec_pool: Arc<Pool>,
 ) -> Result<Vec<(String, Arc<dyn Engine>, Arc<BertWeights>)>> {
     let mut out: Vec<(String, Arc<dyn Engine>, Arc<BertWeights>)> = Vec::new();
     out.push((
@@ -326,13 +411,17 @@ fn build_engines(
     );
     let pruned = Arc::new(pruned);
     let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
+    // The sparse engine shares the coordinator's engine-side pool, so
+    // its kernel fan-out and the batch-level parallelism never
+    // oversubscribe each other (see coordinator::pool docs).
     out.push((
         "tvm+".into(),
-        Arc::new(SparseBsrEngine::new(
+        Arc::new(SparseBsrEngine::with_pool(
             Arc::clone(&pruned),
             block,
             sched,
             threads,
+            Some(exec_pool),
         )?),
         Arc::clone(&pruned),
     ));
@@ -349,6 +438,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .opt("max-batch", "8", "dynamic batch size cap")
         .opt("batch-wait-ms", "2", "dynamic batch window")
         .opt("workers", "0", "batch workers (0 = auto)")
+        .opt("mode", "pipelined", "coordinator mode: pipelined|barrier")
         .parse(argv)?;
     let cfg = match args.get("model") {
         "base" => BertConfig::base(),
@@ -370,13 +460,24 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         max_batch: args.get_usize("max-batch")?,
         max_wait: std::time::Duration::from_millis(args.get_usize("batch-wait-ms")? as u64),
     };
-    let mut router = Router::new();
-    for (name, engine, w) in build_engines(weights, block, args.get_f64("sparsity")?, threads)? {
-        router.register(&name, engine, w, policy, threads);
+    let mode = PipelineMode::parse(args.get("mode")).map_err(|e| anyhow::anyhow!(e))?;
+    // One shared engine-side pool: every variant's batches AND the
+    // sparse engine's kernels execute on it.
+    let exec_pool = Arc::new(Pool::new(threads));
+    let mut router = Router::with_exec_pool(Arc::clone(&exec_pool));
+    let engines = build_engines(
+        weights,
+        block,
+        args.get_f64("sparsity")?,
+        threads,
+        exec_pool,
+    )?;
+    for (name, engine, w) in engines {
+        router.register_with_mode(&name, engine, w, policy, threads, mode);
     }
     let router = Arc::new(router);
     eprintln!(
-        "serving variants {:?} on {} (model={}, block={block}, hw: {})",
+        "serving variants {:?} on {} (model={}, block={block}, mode={mode}, hw: {})",
         router.variants(),
         args.get("addr"),
         args.get("model"),

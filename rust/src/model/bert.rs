@@ -128,8 +128,13 @@ impl SparseBsrEngine {
     }
 
     /// As [`SparseBsrEngine::new`], but with an explicit persistent pool
-    /// for kernel execution (used when the caller owns a long-lived pool,
-    /// e.g. the serving coordinator).
+    /// for kernel execution. The serving coordinator passes its **shared
+    /// engine-side pool** (the same handle every variant's batches run
+    /// on): a multi-sequence batch then parallelizes across sequences
+    /// while each sequence's kernels execute inline on their batch
+    /// worker (the pool's re-entrancy rule), and a single-sequence batch
+    /// — dispatched from the execute-stage thread — keeps full kernel
+    /// fan-out. Either way the engine never oversubscribes the machine.
     pub fn with_pool(
         weights: Arc<BertWeights>,
         block: BlockShape,
@@ -354,6 +359,31 @@ mod tests {
         )
         .unwrap();
         assert_eq!(shared.forward(&x).data, dedicated.forward(&x).data);
+    }
+
+    #[test]
+    fn forward_from_inside_shared_pool_job_matches() {
+        // The pipelined coordinator runs multi-sequence batches as jobs
+        // on the same pool the engine's kernels target; the pool's
+        // re-entrancy rule then executes the kernels inline on the batch
+        // worker. Numerics must be identical to the direct path.
+        let block = BlockShape::new(1, 4);
+        let (w, x) = setup(0.7, block);
+        let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
+        let pool = Arc::new(crate::util::pool::Pool::new(3));
+        let engine = Arc::new(
+            SparseBsrEngine::with_pool(w, block, sched, 3, Some(Arc::clone(&pool))).unwrap(),
+        );
+        let y_direct = engine.forward(&x);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let e2 = Arc::clone(&engine);
+        let x2 = x.clone();
+        let stage = pool.submit_staged(move || {
+            let _ = tx.send(e2.forward(&x2));
+        });
+        stage.wait();
+        let y_nested = rx.recv().unwrap();
+        assert_eq!(y_direct.data, y_nested.data);
     }
 
     #[test]

@@ -124,16 +124,22 @@ impl Engine for XlaEngine {
             x_tm.cols
         );
         let _g = self.lock.lock().expect("xla engine poisoned");
-        let out = self
+        // Dispatch-then-join through the async runtime API: the request
+        // is queued on the runtime thread immediately, so a pipelined
+        // caller holding several engines can overlap its other work
+        // between dispatch and join (here they are adjacent — one engine
+        // instance is one execution stream).
+        let pending = self
             .handle
-            .execute(
+            .execute_async(
                 self.session,
                 vec![NpyTensor::from_f32(
                     vec![x_tm.rows, x_tm.cols],
                     x_tm.data.clone(),
                 )],
             )
-            .expect("XLA execution failed");
+            .expect("XLA dispatch failed");
+        let out = pending.wait().expect("XLA execution failed");
         Matrix::from_vec(self.tokens, self.hidden, out[0].f32_data.clone())
     }
 

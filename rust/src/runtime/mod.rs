@@ -21,4 +21,4 @@ pub mod service;
 
 pub use engine::XlaEngine;
 pub use manifest::ArtifactManifest;
-pub use service::{RuntimeHandle, RuntimeService};
+pub use service::{PendingExecute, RuntimeHandle, RuntimeService};

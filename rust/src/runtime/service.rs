@@ -115,15 +115,44 @@ impl Drop for RuntimeService {
     }
 }
 
+/// An in-flight runtime execution: the submit-without-join half of
+/// [`RuntimeHandle::execute_async`]. The request is already queued on
+/// the runtime thread; [`PendingExecute::wait`] joins it. The serving
+/// pipeline's execute stage uses this to dispatch PJRT work and keep
+/// assembling the next batch while the artifact runs.
+pub struct PendingExecute {
+    rx: mpsc::Receiver<Result<Reply>>,
+}
+
+impl PendingExecute {
+    /// Block until the runtime thread finishes this execution.
+    pub fn wait(self) -> Result<Vec<NpyTensor>> {
+        let reply = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread dropped the reply"))??;
+        match reply {
+            Reply::Outputs(o) => Ok(o),
+            _ => bail!("unexpected reply"),
+        }
+    }
+}
+
 impl RuntimeHandle {
-    fn call(&self, req: Request) -> Result<Reply> {
+    /// Queue a request on the runtime thread, returning the reply
+    /// receiver without waiting.
+    fn send(&self, req: Request) -> Result<mpsc::Receiver<Result<Reply>>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         {
             let tx = self.tx.lock().map_err(|_| anyhow!("runtime handle poisoned"))?;
             tx.send((req, reply_tx))
                 .map_err(|_| anyhow!("runtime thread has shut down"))?;
         }
-        reply_rx
+        Ok(reply_rx)
+    }
+
+    fn call(&self, req: Request) -> Result<Reply> {
+        self.send(req)?
             .recv()
             .map_err(|_| anyhow!("runtime thread dropped the reply"))?
     }
@@ -152,10 +181,20 @@ impl RuntimeHandle {
 
     /// Execute a session with the per-call (prefix) inputs.
     pub fn execute(&self, session: usize, inputs: Vec<NpyTensor>) -> Result<Vec<NpyTensor>> {
-        match self.call(Request::Execute { session, inputs })? {
-            Reply::Outputs(o) => Ok(o),
-            _ => bail!("unexpected reply"),
-        }
+        self.execute_async(session, inputs)?.wait()
+    }
+
+    /// Dispatch a session execution without joining it: the returned
+    /// [`PendingExecute`] resolves once the runtime thread has run the
+    /// artifact. The caller overlaps its own work in between.
+    pub fn execute_async(
+        &self,
+        session: usize,
+        inputs: Vec<NpyTensor>,
+    ) -> Result<PendingExecute> {
+        Ok(PendingExecute {
+            rx: self.send(Request::Execute { session, inputs })?,
+        })
     }
 
     /// One-shot execution with the full input list.

@@ -13,6 +13,14 @@
 //! [`ExecParams`] in O(1) per call (the uncached
 //! [`AutoScheduler::exec_params`][super::AutoScheduler::exec_params]
 //! walks the whole BSR structure each time).
+//!
+//! The cache is bounded: an LRU cap
+//! ([`DEFAULT_PLAN_CACHE_CAPACITY`] plans by default,
+//! [`PlanCache::with_capacity`] to configure) keeps a long-lived server
+//! facing unbounded structure churn from growing without limit, and
+//! eviction counts are exported through [`CacheStats`] alongside
+//! hits/misses. Persistence across restarts is the remaining ROADMAP
+//! half of this item.
 
 use super::autosched::ExecParams;
 use super::buffer::TaskBuffer;
@@ -59,27 +67,67 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub entries: usize,
+    /// Entries displaced by the LRU cap since construction.
+    pub evictions: u64,
+    pub capacity: usize,
 }
 
-/// Thread-safe `(structure, shape, hardware) → ExecPlan` cache.
+/// Default [`PlanCache`] capacity: comfortably above what a multi-layer
+/// model with per-layer structures plus a few hardware fingerprints
+/// needs, small enough to bound memory on a long-lived server.
+pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 256;
+
+/// One cached plan plus its recency tick (approximate LRU: the victim is
+/// the entry with the smallest `last_used`; an O(entries) scan at
+/// eviction time, which only runs once the cache is full).
+struct LruEntry {
+    plan: Arc<ExecPlan>,
+    last_used: u64,
+}
+
+struct LruState {
+    map: HashMap<(TaskKey, u64), LruEntry>,
+    /// Monotone access counter (bumped on every lookup).
+    tick: u64,
+}
+
+/// Thread-safe `(structure, shape, hardware) → ExecPlan` cache, bounded
+/// by an LRU capacity so a long-lived server facing unbounded structure
+/// churn (model reloads, per-tenant variants) cannot grow without limit.
 pub struct PlanCache {
-    entries: Mutex<HashMap<(TaskKey, u64), Arc<ExecPlan>>>,
+    entries: Mutex<LruState>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+    capacity: usize,
 }
 
 impl PlanCache {
     pub fn new() -> PlanCache {
+        Self::with_capacity(DEFAULT_PLAN_CACHE_CAPACITY)
+    }
+
+    /// Cache bounded to `capacity` plans (clamped to at least 1).
+    pub fn with_capacity(capacity: usize) -> PlanCache {
         PlanCache {
-            entries: Mutex::new(HashMap::new()),
+            entries: Mutex::new(LruState {
+                map: HashMap::new(),
+                tick: 0,
+            }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            capacity: capacity.max(1),
         }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     /// Fetch the cached execution plan for `m` on `hw`, compiling through
     /// `buffer` on the first sighting of the structure. A hit touches
-    /// nothing but the key hash — zero re-planning.
+    /// nothing but the key hash and the recency tick — zero re-planning.
     pub fn get_or_compile(
         &self,
         label: &str,
@@ -89,10 +137,13 @@ impl PlanCache {
     ) -> Arc<ExecPlan> {
         let key = (SparseTask::for_bsr(label, m).key, hw.fingerprint());
         {
-            let entries = self.entries.lock().expect("plan cache poisoned");
-            if let Some(hit) = entries.get(&key) {
+            let mut st = self.entries.lock().expect("plan cache poisoned");
+            st.tick += 1;
+            let tick = st.tick;
+            if let Some(hit) = st.map.get_mut(&key) {
+                hit.last_used = tick;
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                return Arc::clone(hit);
+                return Arc::clone(&hit.plan);
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -106,20 +157,47 @@ impl PlanCache {
             block_rows: m.block_rows(),
             mean_blocks_per_row: stats.mean_blocks_per_row,
         });
-        let mut entries = self.entries.lock().expect("plan cache poisoned");
-        Arc::clone(entries.entry(key).or_insert(built))
+        let mut st = self.entries.lock().expect("plan cache poisoned");
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(existing) = st.map.get_mut(&key) {
+            // a racing thread inserted first — keep its entry
+            existing.last_used = tick;
+            return Arc::clone(&existing.plan);
+        }
+        if st.map.len() >= self.capacity {
+            let victim = st
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            if let Some(v) = victim {
+                st.map.remove(&v);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        st.map.insert(
+            key,
+            LruEntry {
+                plan: Arc::clone(&built),
+                last_used: tick,
+            },
+        );
+        built
     }
 
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.entries.lock().expect("plan cache poisoned").len(),
+            entries: self.entries.lock().expect("plan cache poisoned").map.len(),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            capacity: self.capacity,
         }
     }
 
     pub fn len(&self) -> usize {
-        self.entries.lock().expect("plan cache poisoned").len()
+        self.entries.lock().expect("plan cache poisoned").map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -128,7 +206,7 @@ impl PlanCache {
 
     /// Drop all cached plans (between ablation runs).
     pub fn clear(&self) {
-        self.entries.lock().expect("plan cache poisoned").clear();
+        self.entries.lock().expect("plan cache poisoned").map.clear();
     }
 }
 
@@ -216,6 +294,45 @@ mod tests {
         cache.clear();
         assert!(cache.is_empty());
         assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn default_capacity_is_bounded() {
+        let cache = PlanCache::new();
+        assert_eq!(cache.capacity(), DEFAULT_PLAN_CACHE_CAPACITY);
+        let s = cache.stats();
+        assert_eq!(s.capacity, DEFAULT_PLAN_CACHE_CAPACITY);
+        assert_eq!(s.evictions, 0);
+        // degenerate configuration clamps to 1, never 0
+        assert_eq!(PlanCache::with_capacity(0).capacity(), 1);
+    }
+
+    #[test]
+    fn lru_cap_evicts_least_recently_used() {
+        let cache = PlanCache::with_capacity(2);
+        let buffer = TaskBuffer::new(PlanOptions::default());
+        let hw = HwSpec::haswell_reference();
+        let m1 = bsr(1, 0.5);
+        let m2 = bsr(2, 0.75);
+        let m3 = bsr(3, 0.25);
+        let a = cache.get_or_compile("a", &m1, &hw, &buffer);
+        let _b = cache.get_or_compile("b", &m2, &hw, &buffer);
+        assert_eq!(cache.stats().evictions, 0);
+        // touch m1 so m2 becomes the LRU victim
+        let _ = cache.get_or_compile("a", &m1, &hw, &buffer);
+        let _c = cache.get_or_compile("c", &m3, &hw, &buffer);
+        let s = cache.stats();
+        assert_eq!((s.entries, s.evictions, s.capacity), (2, 1, 2));
+        // m1 survived: still a hit sharing the original entry
+        let misses_before = cache.stats().misses;
+        let a2 = cache.get_or_compile("a", &m1, &hw, &buffer);
+        assert!(Arc::ptr_eq(&a, &a2));
+        assert_eq!(cache.stats().misses, misses_before);
+        // m2 was evicted: requesting it again re-plans (a new miss)
+        let _ = cache.get_or_compile("b", &m2, &hw, &buffer);
+        assert_eq!(cache.stats().misses, misses_before + 1);
+        assert_eq!(cache.stats().evictions, 2);
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

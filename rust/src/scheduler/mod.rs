@@ -39,7 +39,7 @@ pub mod task;
 
 pub use autosched::{AutoScheduler, ExecParams};
 pub use buffer::TaskBuffer;
-pub use cache::{CacheStats, ExecPlan, PlanCache};
+pub use cache::{CacheStats, ExecPlan, PlanCache, DEFAULT_PLAN_CACHE_CAPACITY};
 pub use hwspec::HwSpec;
 pub use plan::{build_plan, OrderPolicy, PlanOptions};
 pub use stats::SchedulerStats;

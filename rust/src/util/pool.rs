@@ -198,6 +198,25 @@ impl Pool {
             .expect("pool workers gone");
     }
 
+    /// Submit a job and return a [`StageHandle`] that joins *just this
+    /// job* — the submit-without-join primitive the serving pipeline is
+    /// built on: dispatch stage N's work onto the pool, overlap stage
+    /// N+1's preparation on the calling thread, then `wait()` for stage N
+    /// before publishing its results. Unlike [`Pool::join`] the handle
+    /// does not synchronize with unrelated jobs sharing the pool.
+    pub fn submit_staged<F: FnOnce() + Send + 'static>(&self, f: F) -> StageHandle {
+        let state = Arc::new((Mutex::new(false), Condvar::new()));
+        let job_state = Arc::clone(&state);
+        self.submit(move || {
+            // Completion is signalled on drop so a panicking stage still
+            // releases its waiter (the pool worker survives via its own
+            // catch_unwind).
+            let _done = StageDoneGuard(job_state);
+            f();
+        });
+        StageHandle { state }
+    }
+
     /// Block until every job submitted so far has completed.
     pub fn join(&self) {
         let (lock, cvar) = &*self.pending;
@@ -318,6 +337,41 @@ impl Drop for Pool {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Completion handle for a single job submitted with
+/// [`Pool::submit_staged`]. Waiting is optional: dropping the handle
+/// detaches the job (it still runs to completion under the pool's drain
+/// guarantees).
+pub struct StageHandle {
+    state: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl StageHandle {
+    /// Block until the staged job has finished (including by panic).
+    pub fn wait(&self) {
+        let (lock, cvar) = &*self.state;
+        let mut done = lock.lock().expect("stage handle poisoned");
+        while !*done {
+            done = cvar.wait(done).expect("stage handle poisoned");
+        }
+    }
+
+    /// Non-blocking completion check.
+    pub fn is_done(&self) -> bool {
+        *self.state.0.lock().expect("stage handle poisoned")
+    }
+}
+
+/// Signals stage completion on drop (survives panics inside the job).
+struct StageDoneGuard(Arc<(Mutex<bool>, Condvar)>);
+
+impl Drop for StageDoneGuard {
+    fn drop(&mut self) {
+        let (lock, cvar) = &*self.0;
+        *lock.lock().expect("stage handle poisoned") = true;
+        cvar.notify_all();
     }
 }
 
@@ -555,6 +609,65 @@ mod tests {
         pool.join(); // must not hang
         assert_eq!(c.load(Ordering::Relaxed), 10);
         drop(pool); // must not hang either
+    }
+
+    #[test]
+    fn staged_job_joinable_without_pool_join() {
+        let pool = Pool::new(2);
+        let flag = Arc::new(AtomicU64::new(0));
+        let f = Arc::clone(&flag);
+        let slow = pool.submit_staged(move || {
+            std::thread::sleep(std::time::Duration::from_millis(15));
+            f.fetch_add(1, Ordering::Relaxed);
+        });
+        // A second staged job on the same pool: waiting on it must not
+        // require the slow one to finish first (finer-grained than join).
+        let f2 = Arc::clone(&flag);
+        let fast = pool.submit_staged(move || {
+            f2.fetch_add(10, Ordering::Relaxed);
+        });
+        fast.wait();
+        assert!(flag.load(Ordering::Relaxed) >= 10);
+        slow.wait();
+        assert_eq!(flag.load(Ordering::Relaxed), 11);
+        assert!(slow.is_done() && fast.is_done());
+    }
+
+    #[test]
+    fn staged_job_overlaps_with_submitter() {
+        // The submitter keeps doing work while the staged job runs — the
+        // double-buffering contract the pipelined coordinator relies on.
+        let pool = Pool::new(1);
+        let started = Arc::new(AtomicU64::new(0));
+        let s = Arc::clone(&started);
+        let h = pool.submit_staged(move || {
+            s.store(1, Ordering::Release);
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        });
+        // busy-wait until the job is live, then do "prepare" work while
+        // it is still running
+        while started.load(Ordering::Acquire) == 0 {
+            std::thread::yield_now();
+        }
+        let overlapped = !h.is_done();
+        h.wait();
+        assert!(overlapped, "staged job finished before submitter could overlap");
+    }
+
+    #[test]
+    fn panicking_staged_job_still_completes_handle() {
+        let pool = Pool::new(1);
+        let h = pool.submit_staged(|| panic!("staged panic (expected in test output)"));
+        h.wait(); // must not hang
+        assert!(h.is_done());
+        // pool still usable afterwards
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&c);
+        pool.submit_staged(move || {
+            c2.fetch_add(1, Ordering::Relaxed);
+        })
+        .wait();
+        assert_eq!(c.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 use sparsebert::bench_harness::{report, run_table1, Table1Config};
 use sparsebert::coordinator::batcher::BatchPolicy;
 use sparsebert::coordinator::request::WorkloadTrace;
-use sparsebert::coordinator::Router;
+use sparsebert::coordinator::{PipelineMode, Router};
+use sparsebert::util::pool::Pool;
 use sparsebert::interp::bert::InterpEngine;
 use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
 use sparsebert::model::engine::Engine;
@@ -198,6 +199,54 @@ fn serving_mixed_variants_consistent() {
     let rep = router.run_trace("tvm+", &trace).unwrap();
     assert_eq!(rep.requests, 12);
     router.shutdown();
+}
+
+/// Pipelined serving returns the same answers as barrier-mode serving —
+/// the pipeline changes scheduling, never numerics — with both modes
+/// running their batches AND the sparse engine's kernels on one shared
+/// engine-side pool (the `sparsebert serve` wiring).
+#[test]
+fn pipelined_and_barrier_serving_agree_end_to_end() {
+    let cfg = BertConfig::micro();
+    let w = Arc::new(BertWeights::synthetic(&cfg, 505));
+    let mut pruned = (*w).clone();
+    let block = BlockShape::new(2, 4);
+    pruned.prune(&PruneSpec::structured(0.6, block), 2);
+    let pruned = Arc::new(pruned);
+    let tokens = vec![7u32, 3, 9, 4];
+    let mut answers = Vec::new();
+    for mode in [PipelineMode::Pipelined, PipelineMode::Barrier] {
+        let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
+        let shared = Arc::new(Pool::new(2));
+        let engine: Arc<dyn Engine> = Arc::new(
+            SparseBsrEngine::with_pool(
+                Arc::clone(&pruned),
+                block,
+                sched,
+                2,
+                Some(Arc::clone(&shared)),
+            )
+            .unwrap(),
+        );
+        let mut router = Router::with_exec_pool(shared);
+        router.register_with_mode(
+            "tvm+",
+            engine,
+            Arc::clone(&pruned),
+            BatchPolicy::default(),
+            2,
+            mode,
+        );
+        assert_eq!(router.mode_of("tvm+"), Some(mode));
+        let resp = router.infer("tvm+", tokens.clone()).unwrap();
+        // a burst trace exercises batching under the mode
+        let trace = WorkloadTrace::burst(10, 4, cfg.vocab, 9);
+        let rep = router.run_trace("tvm+", &trace).unwrap();
+        assert_eq!(rep.requests, 10);
+        answers.push(resp.cls);
+        router.shutdown();
+    }
+    assert_eq!(answers[0], answers[1], "serving modes diverged numerically");
 }
 
 /// Weight bundles written by Rust load back bit-identically — the
