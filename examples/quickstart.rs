@@ -1,16 +1,21 @@
-//! Quickstart: the library's core loop in ~60 lines.
+//! Quickstart: the library's core loop.
 //!
 //! 1. Build a BERT-geometry model with synthetic weights.
 //! 2. Apply the paper's structured (group/block) pruning at 80%.
-//! 3. Convert to BSR, let the auto-scheduler compile reuse-deduped plans.
-//! 4. Run the same input through the compiled-dense and sparse engines;
-//!    verify they agree and compare latency + memory footprint.
+//! 3. Convert to BSR, let the auto-scheduler compile reuse-deduped plans
+//!    — writing both plans and packed weights into a persistent artifact
+//!    store.
+//! 4. Simulate a serving restart: a fresh scheduler warm-starts entirely
+//!    from the store (zero live plannings, zero BSR re-packs).
+//! 5. Run the same input through the compiled-dense and (warm) sparse
+//!    engines; verify they agree and compare latency + memory footprint.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
 use sparsebert::model::engine::Engine;
 use sparsebert::model::{BertConfig, BertWeights, PruneMode, PruneSpec};
+use sparsebert::planstore::PlanStore;
 use sparsebert::scheduler::{AutoScheduler, HwSpec};
 use sparsebert::sparse::prune::BlockShape;
 use sparsebert::util::pool::default_threads;
@@ -38,10 +43,18 @@ fn main() -> anyhow::Result<()> {
     println!("pruned transformer blocks to {:.1}% zeros (block {block})", achieved * 100.0);
     let weights = Arc::new(weights);
 
-    // 3. engines: compiled-dense (negative control) vs BSR + scheduler
+    // 3. engines: compiled-dense (negative control) vs BSR + scheduler.
+    // The sparse build runs against a persistent artifact store (the
+    // `sparsebert serve --plan-store` machinery): compiled plans and
+    // packed BSR buffers land on disk as a side effect.
+    let store_dir = std::env::temp_dir().join("sparsebert-quickstart-store");
+    let _ = std::fs::remove_dir_all(&store_dir);
     let dense = CompiledDenseEngine::new(Arc::clone(&weights), threads);
     let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
-    let sparse = SparseBsrEngine::new(Arc::clone(&weights), block, Arc::clone(&sched), threads)?;
+    sched.attach_store(Arc::new(PlanStore::open(&store_dir, &sched.hw)?));
+    let cold_t = Instant::now();
+    let _cold = SparseBsrEngine::new(Arc::clone(&weights), block, Arc::clone(&sched), threads)?;
+    let cold_ms = cold_t.elapsed().as_secs_f64() * 1e3;
     let snap = sched.buffer.stats.snapshot();
     println!(
         "scheduler compiled {} programs for {} block-rows (row reuse {:.1}%)",
@@ -50,7 +63,29 @@ fn main() -> anyhow::Result<()> {
         snap.row_reuse_rate() * 100.0
     );
 
-    // 4. run + compare
+    // 4. "restart" the server: a fresh scheduler + reopened store must
+    // reload everything — zero live plannings, zero BSR re-packs.
+    let store = Arc::new(PlanStore::open(&store_dir, &HwSpec::detect())?);
+    let sched_warm = Arc::new(AutoScheduler::new(HwSpec::detect()));
+    sched_warm.attach_store(Arc::clone(&store));
+    let warm_t = Instant::now();
+    let sparse =
+        SparseBsrEngine::new(Arc::clone(&weights), block, Arc::clone(&sched_warm), threads)?;
+    let warm_ms = warm_t.elapsed().as_secs_f64() * 1e3;
+    let ws = store.stats();
+    println!(
+        "warm restart: {} plans + {} packed weights loaded from {:?} in {warm_ms:.1} ms \
+         (cold build {cold_ms:.1} ms, live plannings on warm path: {})",
+        ws.plan_hits,
+        ws.weight_hits,
+        store_dir,
+        sched_warm.buffer.len()
+    );
+    assert_eq!(sched_warm.buffer.len(), 0, "warm start must not re-plan");
+    assert_eq!(ws.weight_misses, 0, "warm start must not re-pack");
+    assert_eq!(ws.corrupt_rejects, 0, "no artifact may fail verification");
+
+    // 5. run + compare
     let tokens: Vec<u32> = (0..128).map(|i| 10 + (i * 37) % 20000).collect();
     let x = weights.embed(&tokens);
     let warm = |e: &dyn Engine| {

@@ -7,7 +7,11 @@
 //! reports latency percentiles and throughput — the serving-paper
 //! validation protocol.
 //!
-//! Run: `cargo run --release --example serve_bert`
+//! Run: `cargo run --release --example serve_bert [plan-store-dir]`
+//!
+//! With a plan-store directory argument the sparse engine warm-starts
+//! from persisted artifacts (run twice: the first invocation populates
+//! the store, the second reloads it — zero re-plans, zero re-packs).
 
 use sparsebert::coordinator::batcher::BatchPolicy;
 use sparsebert::coordinator::request::WorkloadTrace;
@@ -15,6 +19,7 @@ use sparsebert::coordinator::Router;
 use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
 use sparsebert::model::engine::Engine;
 use sparsebert::model::{BertConfig, BertWeights, PruneMode, PruneSpec};
+use sparsebert::planstore::PlanStore;
 use sparsebert::scheduler::{AutoScheduler, HwSpec};
 use sparsebert::sparse::prune::BlockShape;
 use sparsebert::util::pool::default_threads;
@@ -55,6 +60,17 @@ fn main() -> anyhow::Result<()> {
     );
     let pruned = Arc::new(pruned);
     let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
+    // Optional warm start: `serve_bert <dir>` persists plans + packed
+    // weights there and reloads them on the next invocation.
+    let store = match std::env::args().nth(1) {
+        Some(dir) => {
+            let store = Arc::new(PlanStore::open(std::path::Path::new(&dir), &sched.hw)?);
+            sched.attach_store(Arc::clone(&store));
+            println!("plan store: {dir} ({} artifacts on open)", store.len());
+            Some(store)
+        }
+        None => None,
+    };
 
     let mut router = Router::new();
     let exec_pool = router.exec_pool();
@@ -80,6 +96,27 @@ fn main() -> anyhow::Result<()> {
         BatchPolicy::default(),
         threads,
     );
+    // PlanCache (and warm-start) counters render into the metrics
+    // snapshot below, exactly as `sparsebert serve` exposes them.
+    {
+        let s = Arc::clone(&sched);
+        router
+            .metrics
+            .register_gauge("plan_cache", move || s.cache.stats().to_json());
+    }
+    if let Some(store) = &store {
+        let stats = store.stats();
+        println!(
+            "warm start: {} plans + {} packed weights loaded, {} plans compiled live",
+            stats.plan_hits,
+            stats.weight_hits,
+            sched.buffer.len()
+        );
+        let st = Arc::clone(store);
+        router
+            .metrics
+            .register_gauge("plan_store", move || st.stats().to_json());
+    }
 
     let quick = std::env::var("SPARSEBERT_BENCH_QUICK").is_ok();
     let n_open = if quick { 30 } else { 100 };

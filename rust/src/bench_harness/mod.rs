@@ -12,6 +12,9 @@
 //! * [`serving`] — the A3 serving sweep: pipelined vs barrier
 //!   coordinator mode across batch-size caps (also behind `sparsebert
 //!   cibench`, whose JSON becomes the CI `BENCH_ci.json` artifact);
+//! * [`warmstart`] — the cold-vs-warm artifact-store smoke: first run
+//!   populates a plan store, second run must reload everything (zero
+//!   live plannings, zero BSR re-packs), asserted by `cibench`;
 //! * [`report`] — paper-style rendering + JSON export.
 //!
 //! Geometry: the full paper setting is BERT_BASE (L=12) at seq 128. On
@@ -25,10 +28,14 @@ pub mod figure2;
 pub mod report;
 pub mod serving;
 pub mod table1;
+pub mod warmstart;
 
 pub use serving::{
     pipelined_speedup, render_serving_sweep, run_serving_sweep, serving_sweep_json,
     ServingSweepConfig, ServingSweepRow,
+};
+pub use warmstart::{
+    render_warm_start, run_warm_start_smoke, warm_start_json, WarmStartConfig, WarmStartReport,
 };
 pub use table1::{
     render_sched_sweep, run_scheduler_sweep, run_table1, SchedSweepConfig, SchedSweepReport,

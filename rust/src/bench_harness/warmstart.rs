@@ -1,0 +1,233 @@
+//! Cold-vs-warm serving smoke: build an engine against an empty plan
+//! store (cold — compiles plans, packs BSR buffers, writes both back),
+//! then simulate a serving restart by re-building with a fresh scheduler
+//! and a reopened store (warm — everything loads from disk). Each run
+//! also serves a small closed-loop burst through the full coordinator
+//! path so the warm engine is exercised, not just constructed.
+//!
+//! `sparsebert cibench` runs this and **fails** if the warm run performs
+//! any live planning or any BSR re-pack — the acceptance property of the
+//! artifact store — and CI persists the store directory across runs via
+//! `actions/cache`, so the reload path is exercised against artifacts
+//! written by a *previous* CI run whenever the runner hardware matches.
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::request::WorkloadTrace;
+use crate::coordinator::Router;
+use crate::model::bert::SparseBsrEngine;
+use crate::model::config::BertConfig;
+use crate::model::engine::Engine;
+use crate::model::weights::{BertWeights, PruneMode, PruneSpec};
+use crate::planstore::{PlanStore, StoreStats};
+use crate::scheduler::{AutoScheduler, HwSpec};
+use crate::sparse::prune::BlockShape;
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Smoke configuration (mirrors the `serve` wiring at test scale).
+#[derive(Debug, Clone)]
+pub struct WarmStartConfig {
+    pub model: BertConfig,
+    pub sparsity: f64,
+    pub block: BlockShape,
+    /// Pattern-pool size for structured pruning.
+    pub pool: usize,
+    pub threads: usize,
+    /// Requests in the post-build serving burst.
+    pub requests: usize,
+    pub seq: usize,
+    pub seed: u64,
+}
+
+impl WarmStartConfig {
+    /// Tiny profile for unit tests and the CI smoke job.
+    pub fn smoke() -> WarmStartConfig {
+        WarmStartConfig {
+            model: BertConfig::micro(),
+            sparsity: 0.6,
+            block: BlockShape::new(2, 4),
+            pool: 4,
+            threads: 2,
+            requests: 8,
+            seq: 6,
+            seed: 7,
+        }
+    }
+}
+
+/// One run's observations (cold or warm).
+#[derive(Debug, Clone, Copy)]
+pub struct RunObservation {
+    /// Engine construction time (packing + planning or reloading).
+    pub build_ms: f64,
+    /// Plans compiled live through the task buffer during construction.
+    pub live_plans: u64,
+    /// Serving-burst p50 latency.
+    pub p50_ms: f64,
+    /// Store counters at the end of the run.
+    pub store: StoreStats,
+}
+
+/// Cold-vs-warm report for rendering / JSON export / assertions.
+#[derive(Debug, Clone, Copy)]
+pub struct WarmStartReport {
+    pub cold: RunObservation,
+    pub warm: RunObservation,
+}
+
+impl WarmStartReport {
+    /// The acceptance property: the warm run performed zero live
+    /// plannings and zero BSR re-packs. Corrupt-artifact rejections
+    /// count as failures too — a rejected payload silently re-plans or
+    /// re-packs live without touching the miss counters.
+    pub fn warm_is_fully_served(&self) -> bool {
+        self.warm.live_plans == 0
+            && self.warm.store.plan_misses == 0
+            && self.warm.store.weight_misses == 0
+            && self.warm.store.corrupt_rejects == 0
+            && self.warm.store.hw_rejects == 0
+            && self.warm.store.plan_hits > 0
+            && self.warm.store.weight_hits > 0
+    }
+}
+
+/// Run the cold-then-warm smoke against `dir` (created if absent). If
+/// the store is already populated from an earlier invocation on the
+/// same hardware, the "cold" run is itself warm — the assertions only
+/// constrain the warm run.
+pub fn run_warm_start_smoke(dir: &Path, cfg: &WarmStartConfig) -> Result<WarmStartReport> {
+    let hw = HwSpec::detect();
+    let mut w = BertWeights::synthetic(&cfg.model, 1234);
+    w.prune(
+        &PruneSpec {
+            mode: PruneMode::Structured { pool: cfg.pool },
+            sparsity: cfg.sparsity,
+            block: cfg.block,
+        },
+        7,
+    );
+    let w = Arc::new(w);
+    let one_run = |store: Arc<PlanStore>| -> Result<RunObservation> {
+        let sched = Arc::new(AutoScheduler::new(hw.clone()));
+        sched.attach_store(Arc::clone(&store));
+        let shared = Arc::new(Pool::new(cfg.threads));
+        let t0 = Instant::now();
+        let engine: Arc<dyn Engine> = Arc::new(SparseBsrEngine::with_pool(
+            Arc::clone(&w),
+            cfg.block,
+            Arc::clone(&sched),
+            cfg.threads,
+            Some(Arc::clone(&shared)),
+        )?);
+        let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut router = Router::with_exec_pool(shared);
+        router.register(
+            "tvm+",
+            engine,
+            Arc::clone(&w),
+            BatchPolicy::default(),
+            cfg.threads,
+        );
+        let trace = WorkloadTrace::burst(cfg.requests, cfg.seq, cfg.model.vocab, cfg.seed);
+        let report = router.run_trace("tvm+", &trace)?;
+        router.shutdown();
+        Ok(RunObservation {
+            build_ms,
+            live_plans: sched.buffer.len() as u64,
+            p50_ms: report.p50_ms,
+            store: store.stats(),
+        })
+    };
+    let cold = one_run(Arc::new(PlanStore::open(dir, &hw)?))?;
+    // the "restart": a fresh store handle replays the index log from disk
+    let warm = one_run(Arc::new(PlanStore::open(dir, &hw)?))?;
+    Ok(WarmStartReport { cold, warm })
+}
+
+/// Render the report as an aligned text block.
+pub fn render_warm_start(rep: &WarmStartReport, title: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<6} {:>10} {:>11} {:>10} {:>10} {:>11} {:>11} {:>9}\n",
+        "run", "build ms", "live plans", "plan hits", "wt hits", "plan miss", "wt miss", "p50 ms"
+    ));
+    for (name, o) in [("cold", &rep.cold), ("warm", &rep.warm)] {
+        out.push_str(&format!(
+            "{:<6} {:>10.1} {:>11} {:>10} {:>10} {:>11} {:>11} {:>9.1}\n",
+            name,
+            o.build_ms,
+            o.live_plans,
+            o.store.plan_hits,
+            o.store.weight_hits,
+            o.store.plan_misses,
+            o.store.weight_misses,
+            o.p50_ms
+        ));
+    }
+    out.push_str(&format!(
+        "warm start fully served from store: {}\n",
+        rep.warm_is_fully_served()
+    ));
+    out
+}
+
+fn observation_json(o: &RunObservation) -> Json {
+    let mut j = Json::obj();
+    j.set("build_ms", o.build_ms)
+        .set("live_plans", o.live_plans)
+        .set("p50_ms", o.p50_ms)
+        .set("store", o.store.to_json());
+    j
+}
+
+/// JSON export (`BENCH_ci.json` warm-start section).
+pub fn warm_start_json(rep: &WarmStartReport) -> Json {
+    let mut j = Json::obj();
+    j.set("cold", observation_json(&rep.cold))
+        .set("warm", observation_json(&rep.warm))
+        .set("warm_fully_served", rep.warm_is_fully_served());
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "sparsebert-warmstart-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn warm_run_performs_zero_replans_and_zero_repacks() {
+        let dir = tmpdir("smoke");
+        let rep = run_warm_start_smoke(&dir, &WarmStartConfig::smoke()).unwrap();
+        // cold run against the empty store compiled and packed live…
+        assert!(rep.cold.live_plans >= 1, "{rep:?}");
+        assert!(rep.cold.store.writes >= 2, "{rep:?}");
+        assert_eq!(rep.cold.store.plan_hits, 0, "{rep:?}");
+        // …the warm restart served everything from disk
+        assert!(rep.warm_is_fully_served(), "{rep:?}");
+        assert_eq!(rep.warm.live_plans, 0, "{rep:?}");
+        assert_eq!(rep.warm.store.weight_misses, 0, "{rep:?}");
+        // one packed-weight load per projection (1 layer × 6)
+        assert_eq!(rep.warm.store.weight_hits, 6, "{rep:?}");
+        // both runs actually served traffic
+        assert!(rep.cold.p50_ms > 0.0 && rep.warm.p50_ms > 0.0, "{rep:?}");
+        let text = render_warm_start(&rep, "smoke");
+        assert!(text.contains("cold") && text.contains("warm"), "{text}");
+        let j = warm_start_json(&rep);
+        assert_eq!(j.at(&["warm_fully_served"]).and_then(Json::as_bool), Some(true));
+        assert!(j.at(&["warm", "store", "plan_hits"]).is_some());
+    }
+}

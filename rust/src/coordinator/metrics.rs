@@ -70,10 +70,16 @@ struct VariantMetrics {
     overlaps: u64,
 }
 
+/// A pluggable stats section evaluated at query time (e.g. the
+/// scheduler's plan-cache counters or the plan store's warm-start
+/// counters, which live outside the coordinator layer).
+type Gauge = Box<dyn Fn() -> Json + Send + Sync>;
+
 /// Thread-safe metrics registry.
 pub struct Metrics {
     started: Instant,
     variants: Mutex<BTreeMap<String, VariantMetrics>>,
+    gauges: Mutex<Vec<(String, Gauge)>>,
 }
 
 impl Metrics {
@@ -81,7 +87,23 @@ impl Metrics {
         Metrics {
             started: Instant::now(),
             variants: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Register a named stats section rendered into every
+    /// [`Metrics::to_json`] snapshot. `serve` registers the PlanCache
+    /// hit/miss/eviction counters (and, when warm-starting, the plan
+    /// store counters) so cache efficacy is observable in the stats
+    /// endpoint next to the pipeline metrics.
+    pub fn register_gauge<F>(&self, name: &str, gauge: F)
+    where
+        F: Fn() -> Json + Send + Sync + 'static,
+    {
+        self.gauges
+            .lock()
+            .expect("metrics poisoned")
+            .push((name.to_string(), Box::new(gauge)));
     }
 
     pub fn record(&self, variant: &str, total_us: u64, queue_us: u64, compute_us: u64) {
@@ -185,11 +207,11 @@ impl Metrics {
     }
 
     pub fn to_json(&self) -> Json {
-        let m = self.variants.lock().expect("metrics poisoned");
         let elapsed = self.started.elapsed().as_secs_f64();
         let mut root = Json::obj();
         root.set("uptime_seconds", elapsed);
         let mut variants = Json::obj();
+        let m = self.variants.lock().expect("metrics poisoned");
         for (name, v) in m.iter() {
             let mut j = Json::obj();
             j.set("requests", v.requests)
@@ -222,7 +244,13 @@ impl Metrics {
                 .set("stage_overlaps", v.overlaps);
             variants.set(name, j);
         }
+        drop(m);
         root.set("variants", variants);
+        // Gauges run outside the variants lock so a gauge callback can
+        // never deadlock against concurrent request recording.
+        for (name, gauge) in self.gauges.lock().expect("metrics poisoned").iter() {
+            root.set(name, gauge());
+        }
         root
     }
 }
@@ -257,6 +285,27 @@ mod tests {
         let p99 = v.get("latency_p99_us").unwrap().as_f64().unwrap();
         assert!(p50 <= p99);
         assert_eq!(v.get("stage_overlaps").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn gauges_render_into_snapshots() {
+        let m = Metrics::new();
+        m.record("tvm+", 100, 10, 90);
+        let hits = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(3));
+        let h = std::sync::Arc::clone(&hits);
+        m.register_gauge("plan_cache", move || {
+            let mut j = Json::obj();
+            j.set("hits", h.load(std::sync::atomic::Ordering::Relaxed));
+            j
+        });
+        let j = m.to_json();
+        assert_eq!(j.at(&["plan_cache", "hits"]).and_then(Json::as_f64), Some(3.0));
+        // gauges are live: the next snapshot reflects the new value
+        hits.store(9, std::sync::atomic::Ordering::Relaxed);
+        let j2 = m.to_json();
+        assert_eq!(j2.at(&["plan_cache", "hits"]).and_then(Json::as_f64), Some(9.0));
+        // pipeline metrics still render alongside
+        assert!(j2.at(&["variants", "tvm+"]).is_some());
     }
 
     #[test]

@@ -41,6 +41,22 @@
 //! block shape (including the paper's 32x1 vs 32x32 comparison) over
 //! this engine and verify the zero-re-planning property.
 //!
+//! ## Artifact store & warm start
+//!
+//! The [`planstore`] subsystem persists compiled plans **and** pre-packed
+//! BSR weight buffers on disk, keyed by `structure × hardware ×
+//! format-version` fingerprints. Attaching a [`planstore::PlanStore`] to
+//! an [`scheduler::AutoScheduler`] turns the plan cache into a
+//! load-through/write-back cache, and `SparseBsrEngine` construction
+//! reloads packed weights instead of re-walking the dense tensors — a
+//! serving restart against a populated store performs zero live
+//! plannings and zero BSR re-packs. Integrity is checked per artifact
+//! (length + FNV-1a checksum + structural validation); any mismatch,
+//! including a foreign hardware fingerprint or store-format version,
+//! falls back to live planning. `sparsebert plan {build,inspect,gc}`
+//! compiles and maintains stores ahead of deployment; `sparsebert serve
+//! --plan-store <dir>` consumes them.
+//!
 //! ## Serving pipeline
 //!
 //! The coordinator's request path is a **two-stage pipeline**
@@ -67,6 +83,7 @@ pub mod util;
 pub mod sparse;
 pub mod kernels;
 pub mod scheduler;
+pub mod planstore;
 pub mod interp;
 pub mod model;
 pub mod runtime;

@@ -16,8 +16,9 @@
 use anyhow::{bail, Context, Result};
 use sparsebert::bench_harness::figure2::build_figure2;
 use sparsebert::bench_harness::{
-    render_sched_sweep, render_serving_sweep, report, run_scheduler_sweep, run_serving_sweep,
-    run_table1, serving_sweep_json, SchedSweepConfig, ServingSweepConfig, Table1Config,
+    render_sched_sweep, render_serving_sweep, render_warm_start, report, run_scheduler_sweep,
+    run_serving_sweep, run_table1, run_warm_start_smoke, serving_sweep_json, warm_start_json,
+    SchedSweepConfig, ServingSweepConfig, Table1Config, WarmStartConfig,
 };
 use sparsebert::coordinator::batcher::BatchPolicy;
 use sparsebert::coordinator::server::{Client, Server};
@@ -26,6 +27,7 @@ use sparsebert::interp::bert::InterpEngine;
 use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
 use sparsebert::model::engine::Engine;
 use sparsebert::model::{BertConfig, BertWeights, PruneMode, PruneSpec};
+use sparsebert::planstore::PlanStore;
 use sparsebert::scheduler::{AutoScheduler, HwSpec};
 use sparsebert::sparse::pattern::PatternStats;
 use sparsebert::sparse::prune::BlockShape;
@@ -54,6 +56,7 @@ fn main() {
         "table2" => cmd_table2(rest),
         "serve" => cmd_serve(rest),
         "client" => cmd_client(rest),
+        "plan" => cmd_plan(rest),
         "prune" => cmd_prune(rest),
         "inspect" => cmd_inspect(rest),
         "selftest" => cmd_selftest(rest),
@@ -83,6 +86,7 @@ fn usage() -> String {
          \x20 table2     render Table 2 from artifacts/table2.json (run `make table2` first)\n\
          \x20 serve      start the serving coordinator (TCP, JSON lines)\n\
          \x20 client     send one request to a running server\n\
+         \x20 plan       artifact store: build | inspect | gc (warm starts for serve)\n\
          \x20 prune      prune synthetic/bundled weights, print structure stats\n\
          \x20 inspect    sparsity-pattern & scheduler-reuse introspection\n\
          \x20 selftest   cross-engine numerical agreement check\n\n\
@@ -215,9 +219,14 @@ fn cmd_schedsweep(argv: Vec<String>) -> Result<()> {
 fn cmd_cibench(argv: Vec<String>) -> Result<()> {
     let args = Parser::new(
         "sparsebert cibench",
-        "CI bench smoke: one tiny schedsweep + A3 serving sweep, exported as JSON",
+        "CI bench smoke: tiny schedsweep + A3 serving sweep + cold/warm store smoke, as JSON",
     )
     .opt("out", "BENCH_ci.json", "output JSON path")
+    .opt(
+        "plan-store",
+        "plan-store-ci",
+        "artifact-store root for the cold-vs-warm smoke (persisted across CI runs)",
+    )
     .parse(argv)?;
     // Tiny but representative: the paper's 32x1-vs-32x32 scheduler
     // comparison plus the serving pipeline's barrier-vs-pipelined sweep,
@@ -261,6 +270,25 @@ fn cmd_cibench(argv: Vec<String>) -> Result<()> {
         "{}",
         render_serving_sweep(&serving_rows, "cibench — A3 serving sweep")
     );
+    // Cold-vs-warm artifact-store smoke. The store root is keyed by the
+    // hardware fingerprint so a CI cache restored from a different
+    // runner class starts a fresh sub-store instead of tripping the
+    // hardware-mismatch rejection.
+    let hw = HwSpec::detect();
+    let store_dir =
+        std::path::PathBuf::from(args.get("plan-store")).join(format!("{:016x}", hw.fingerprint()));
+    eprintln!("cibench warm-start smoke: store {}", store_dir.display());
+    let ws = run_warm_start_smoke(&store_dir, &WarmStartConfig::smoke())?;
+    println!("{}", render_warm_start(&ws, "cibench — cold vs warm start"));
+    if !ws.warm_is_fully_served() {
+        bail!(
+            "warm start not fully served from the store: {} live plans, {} plan misses, \
+             {} weight misses",
+            ws.warm.live_plans,
+            ws.warm.store.plan_misses,
+            ws.warm.store.weight_misses
+        );
+    }
     let mut root = Json::obj();
     root.set("schema", "sparsebert-bench-ci/v1")
         .set("version", sparsebert::VERSION)
@@ -283,10 +311,12 @@ fn cmd_cibench(argv: Vec<String>) -> Result<()> {
         .set("cache_entries", sched_rep.cache.entries)
         .set("cache_evictions", sched_rep.cache.evictions)
         .set("replans_on_repeat", sched_rep.replans_on_repeat);
-    root.set("schedsweep", ss).set(
-        "serving",
-        serving_sweep_json(&serving_rows, &[("experiment", Json::Str("A3-ci".into()))]),
-    );
+    root.set("schedsweep", ss)
+        .set(
+            "serving",
+            serving_sweep_json(&serving_rows, &[("experiment", Json::Str("A3-ci".into()))]),
+        )
+        .set("warmstart", warm_start_json(&ws));
     std::fs::write(args.get("out"), root.to_string_pretty())?;
     eprintln!("wrote {}", args.get("out"));
     Ok(())
@@ -382,12 +412,34 @@ fn cmd_table2(argv: Vec<String>) -> Result<()> {
 // serve / client
 // ---------------------------------------------------------------------------
 
+/// The `tvm+` variant's pruning, shared by `serve` and `plan build` so
+/// ahead-of-time artifacts fingerprint-match the serving engine exactly
+/// (same pool, same projection seed → byte-identical pruned weights).
+fn prune_for_tvm_plus(
+    weights: &BertWeights,
+    block: BlockShape,
+    sparsity: f64,
+    pool: usize,
+) -> Arc<BertWeights> {
+    let mut pruned = weights.clone();
+    pruned.prune(
+        &PruneSpec {
+            mode: PruneMode::Structured { pool },
+            sparsity,
+            block,
+        },
+        7,
+    );
+    Arc::new(pruned)
+}
+
 fn build_engines(
     weights: Arc<BertWeights>,
     block: BlockShape,
     sparsity: f64,
     threads: usize,
     exec_pool: Arc<Pool>,
+    sched: Arc<AutoScheduler>,
 ) -> Result<Vec<(String, Arc<dyn Engine>, Arc<BertWeights>)>> {
     let mut out: Vec<(String, Arc<dyn Engine>, Arc<BertWeights>)> = Vec::new();
     out.push((
@@ -400,17 +452,7 @@ fn build_engines(
         Arc::new(CompiledDenseEngine::new(Arc::clone(&weights), threads)),
         Arc::clone(&weights),
     ));
-    let mut pruned = (*weights).clone();
-    pruned.prune(
-        &PruneSpec {
-            mode: PruneMode::Structured { pool: 16 },
-            sparsity,
-            block,
-        },
-        7,
-    );
-    let pruned = Arc::new(pruned);
-    let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
+    let pruned = prune_for_tvm_plus(&weights, block, sparsity, 16);
     // The sparse engine shares the coordinator's engine-side pool, so
     // its kernel fan-out and the batch-level parallelism never
     // oversubscribe each other (see coordinator::pool docs).
@@ -439,6 +481,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .opt("batch-wait-ms", "2", "dynamic batch window")
         .opt("workers", "0", "batch workers (0 = auto)")
         .opt("mode", "pipelined", "coordinator mode: pipelined|barrier")
+        .opt(
+            "plan-store",
+            "",
+            "artifact store dir for warm starts (populate with `sparsebert plan build`)",
+        )
         .parse(argv)?;
     let cfg = match args.get("model") {
         "base" => BertConfig::base(),
@@ -465,15 +512,53 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     // sparse engine's kernels execute on it.
     let exec_pool = Arc::new(Pool::new(threads));
     let mut router = Router::with_exec_pool(Arc::clone(&exec_pool));
+    let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
+    // Warm start: attach the persistent artifact store before the sparse
+    // engine is built, so plans and packed weights load from disk.
+    let plan_store = if args.get("plan-store").is_empty() {
+        None
+    } else {
+        let store = Arc::new(PlanStore::open(
+            std::path::Path::new(args.get("plan-store")),
+            &sched.hw,
+        )?);
+        sched.attach_store(Arc::clone(&store));
+        Some(store)
+    };
     let engines = build_engines(
         weights,
         block,
         args.get_f64("sparsity")?,
         threads,
         exec_pool,
+        Arc::clone(&sched),
     )?;
     for (name, engine, w) in engines {
         router.register_with_mode(&name, engine, w, policy, threads, mode);
+    }
+    // Surface the plan-cache (and, when warm-starting, plan-store)
+    // counters in the stats endpoint next to the pipeline metrics.
+    {
+        let s = Arc::clone(&sched);
+        router
+            .metrics
+            .register_gauge("plan_cache", move || s.cache.stats().to_json());
+    }
+    if let Some(store) = &plan_store {
+        let st = Arc::clone(store);
+        router
+            .metrics
+            .register_gauge("plan_store", move || st.stats().to_json());
+        let stats = store.stats();
+        eprintln!(
+            "plan store {}: {} plans + {} packed weights warm-loaded, {} plans compiled live \
+             (hw match: {})",
+            args.get("plan-store"),
+            stats.plan_hits,
+            stats.weight_hits,
+            sched.buffer.len(),
+            store.hw_match()
+        );
     }
     let router = Arc::new(router);
     eprintln!(
@@ -528,6 +613,149 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
             .and_then(Json::as_arr)
             .map(|a| a.iter().take(4).filter_map(Json::as_f64).collect::<Vec<_>>())
             .unwrap_or_default()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// plan — ahead-of-time artifact store
+// ---------------------------------------------------------------------------
+
+fn cmd_plan(argv: Vec<String>) -> Result<()> {
+    let plan_usage = "usage: sparsebert plan <build|inspect|gc> [options]\n\
+                      \x20 build    compile plans + pack BSR weights into a store\n\
+                      \x20 inspect  list the artifacts in a store\n\
+                      \x20 gc       verify, compact, and reclaim a store";
+    let (sub, rest) = match argv.split_first() {
+        Some((s, r)) => (s.as_str(), r.to_vec()),
+        None => bail!("{plan_usage}"),
+    };
+    match sub {
+        "build" => cmd_plan_build(rest),
+        "inspect" => cmd_plan_inspect(rest),
+        "gc" => cmd_plan_gc(rest),
+        "--help" | "-h" | "help" => {
+            println!("{plan_usage}");
+            Ok(())
+        }
+        other => bail!("unknown plan subcommand '{other}'\n{plan_usage}"),
+    }
+}
+
+fn cmd_plan_build(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new(
+        "sparsebert plan build",
+        "compile execution plans and pack BSR weights into an artifact store ahead of deployment",
+    )
+    .req("store", "artifact store directory")
+    .opt("model", "tiny", "model config: tiny|micro|base")
+    .opt("weights", "", "weight bundle dir (default: synthetic init, matching serve)")
+    .opt("block", "1x32", "block shape for the tvm+ variant")
+    .opt("sparsity", "0.8", "sparsity for the tvm+ variant")
+    .opt("pool", "16", "structured-prune pattern pool size")
+    .opt("seed", "1234", "synthetic weight seed (matching serve)")
+    .parse(argv)?;
+    let cfg = match args.get("model") {
+        "base" => BertConfig::base(),
+        "micro" => BertConfig::micro(),
+        _ => BertConfig::tiny(),
+    };
+    let weights = if args.get("weights").is_empty() {
+        BertWeights::synthetic(&cfg, args.get_usize("seed")? as u64)
+    } else {
+        let bundle = TensorBundle::load(std::path::Path::new(args.get("weights")))?;
+        BertWeights::from_bundle(&bundle)?
+    };
+    let block = BlockShape::parse(args.get("block")).map_err(|e| anyhow::anyhow!(e))?;
+    let pruned = prune_for_tvm_plus(
+        &weights,
+        block,
+        args.get_f64("sparsity")?,
+        args.get_usize("pool")?,
+    );
+    let hw = HwSpec::detect();
+    let store = Arc::new(PlanStore::open(std::path::Path::new(args.get("store")), &hw)?);
+    if !store.hw_match() {
+        bail!(
+            "store {} was built on different hardware ({}); build on the deployment machine \
+             or use a fresh directory",
+            args.get("store"),
+            store.header().hw_desc
+        );
+    }
+    let sched = Arc::new(AutoScheduler::new(hw.clone()));
+    sched.attach_store(Arc::clone(&store));
+    let t0 = std::time::Instant::now();
+    let _engine =
+        SparseBsrEngine::new(Arc::clone(&pruned), block, Arc::clone(&sched), default_threads())?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let s = store.stats();
+    println!(
+        "built artifacts in {ms:.1} ms: {} plans compiled live, {} already present, \
+         {} artifacts written; store {} now holds {} artifacts ({})",
+        sched.buffer.len(),
+        s.plan_hits,
+        s.writes,
+        args.get("store"),
+        store.len(),
+        hw
+    );
+    Ok(())
+}
+
+fn cmd_plan_inspect(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new("sparsebert plan inspect", "list the artifacts in a store")
+        .req("store", "artifact store directory")
+        .parse(argv)?;
+    let hw = HwSpec::detect();
+    let store = PlanStore::open(std::path::Path::new(args.get("store")), &hw)?;
+    let header = store.header();
+    println!(
+        "store {} — format v{}, built on: {} (matches this machine: {})",
+        args.get("store"),
+        header.version,
+        header.hw_desc,
+        store.hw_match()
+    );
+    println!(
+        "{:<10} {:>8} {:>8} {:>8} {:>10}  {}",
+        "kind", "rows", "cols", "block", "bytes", "id"
+    );
+    for e in store.entries() {
+        let meta = |k: &str| e.meta.get(k).cloned().unwrap_or_default();
+        println!(
+            "{:<10} {:>8} {:>8} {:>8} {:>10}  {}",
+            e.kind.as_str(),
+            meta("rows"),
+            meta("cols"),
+            meta("block"),
+            e.bytes,
+            e.id
+        );
+    }
+    println!("{} artifacts", store.len());
+    Ok(())
+}
+
+fn cmd_plan_gc(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new(
+        "sparsebert plan gc",
+        "verify every artifact, compact the index log, and delete orphaned files \
+         (run offline: no serving process may be writing to the store)",
+    )
+    .req("store", "artifact store directory")
+    .parse(argv)?;
+    let hw = HwSpec::detect();
+    let store = PlanStore::open(std::path::Path::new(args.get("store")), &hw)?;
+    let report = store.gc()?;
+    println!(
+        "gc {}: {} live artifacts, dropped {} corrupt/missing entries, removed {} orphan \
+         files ({} bytes reclaimed)",
+        args.get("store"),
+        report.live,
+        report.dropped_entries,
+        report.removed_files,
+        report.reclaimed_bytes
     );
     Ok(())
 }

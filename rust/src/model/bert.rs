@@ -142,10 +142,24 @@ impl SparseBsrEngine {
         threads: usize,
         exec_pool: Option<Arc<Pool>>,
     ) -> Result<SparseBsrEngine> {
+        // Warm start: when the scheduler carries a persistent artifact
+        // store, pre-packed BSR buffers replace the `from_dense` packing
+        // walk, and freshly packed layers are written back for the next
+        // restart. The plan side warm-starts inside `exec_plan`.
+        let store = sched.store();
         let mut sparse_layers = Vec::with_capacity(weights.layers.len());
         for (li, lw) in weights.layers.iter().enumerate() {
             let conv = |label: &str, m: &Matrix| -> Result<(BsrMatrix, Arc<ExecPlan>)> {
-                let bsr = BsrMatrix::from_dense(m, block)?;
+                let bsr = match store.as_deref().and_then(|s| s.load_packed(m, block)) {
+                    Some(packed) => packed,
+                    None => {
+                        let packed = BsrMatrix::from_dense(m, block)?;
+                        if let Some(s) = store.as_deref() {
+                            let _ = s.store_packed(m, &packed);
+                        }
+                        packed
+                    }
+                };
                 let plan = sched.exec_plan(&format!("layer{li}.{label}"), &bsr);
                 Ok((bsr, plan))
             };
@@ -384,6 +398,71 @@ mod tests {
         stage.wait();
         let y_nested = rx.recv().unwrap();
         assert_eq!(y_direct.data, y_nested.data);
+    }
+
+    #[test]
+    fn warm_start_engine_skips_planning_and_packing() {
+        let block = BlockShape::new(2, 4);
+        let (w, x) = setup(0.6, block);
+        let dir = std::env::temp_dir().join(format!(
+            "sparsebert-warm-engine-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let hw = HwSpec::haswell_reference();
+        // cold process: compiles live and populates the store
+        let sched_cold = Arc::new(AutoScheduler::new(hw.clone()));
+        sched_cold.attach_store(Arc::new(
+            crate::planstore::PlanStore::open(&dir, &hw).unwrap(),
+        ));
+        let cold =
+            SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched_cold), 2).unwrap();
+        assert!(sched_cold.buffer.len() >= 1, "cold run compiles live");
+        // warm "restart": fresh scheduler + reopened store
+        let store = Arc::new(crate::planstore::PlanStore::open(&dir, &hw).unwrap());
+        let sched_warm = Arc::new(AutoScheduler::new(hw.clone()));
+        sched_warm.attach_store(Arc::clone(&store));
+        let warm =
+            SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched_warm), 2).unwrap();
+        let s = store.stats();
+        assert_eq!(sched_warm.buffer.len(), 0, "zero live plannings on warm start");
+        assert_eq!(s.plan_misses, 0, "every plan served from the store: {s:?}");
+        assert_eq!(s.weight_misses, 0, "zero BSR re-packs on warm start: {s:?}");
+        assert!(s.plan_hits >= 1, "{s:?}");
+        assert_eq!(s.weight_hits, 6, "one packed load per projection: {s:?}");
+        // and the warm engine is byte-identical to the cold one
+        assert_eq!(cold.forward(&x).data, warm.forward(&x).data);
+    }
+
+    #[test]
+    fn foreign_store_falls_back_to_live_planning() {
+        let block = BlockShape::new(2, 4);
+        let (w, x) = setup(0.6, block);
+        let dir = std::env::temp_dir().join(format!(
+            "sparsebert-foreign-engine-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let hw_a = HwSpec::haswell_reference();
+        let sched_a = Arc::new(AutoScheduler::new(hw_a.clone()));
+        sched_a.attach_store(Arc::new(
+            crate::planstore::PlanStore::open(&dir, &hw_a).unwrap(),
+        ));
+        let _cold = SparseBsrEngine::new(Arc::clone(&w), block, sched_a, 2).unwrap();
+        // a different machine opens the same store: plans are rejected by
+        // the hardware fingerprint, and the engine builds live — no error
+        let mut hw_b = HwSpec::haswell_reference();
+        hw_b.cores = 96;
+        let store_b = Arc::new(crate::planstore::PlanStore::open(&dir, &hw_b).unwrap());
+        let sched_b = Arc::new(AutoScheduler::new(hw_b));
+        sched_b.attach_store(Arc::clone(&store_b));
+        let engine =
+            SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched_b), 2).unwrap();
+        assert!(sched_b.buffer.len() >= 1, "foreign store must plan live");
+        assert!(store_b.stats().hw_rejects >= 1);
+        // forward still works on the live-planned engine
+        let y = engine.forward(&x);
+        assert_eq!(y.rows, x.rows);
     }
 
     #[test]

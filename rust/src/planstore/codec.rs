@@ -1,0 +1,336 @@
+//! Plan payload codec: [`ExecPlan`] ⇄ JSON document.
+//!
+//! A compiled plan is structure-derived data — row programs (deduped by
+//! pattern), per-row data base offsets, the execution order, and the
+//! pattern statistics the auto-scheduler's O(1) parameter derivation
+//! needs. All of it is integers plus one float, so the payload is a
+//! single JSON document (built on [`crate::util::json`]); the store
+//! wraps it with a length + checksum in the index log.
+//!
+//! Decoding **re-validates everything against the requesting matrix**:
+//! block shape, row count, permutation property of the order, program
+//! bounds, and that each row's base offset and program size match the
+//! matrix's `indptr`. A payload that passes the checksum but fails any
+//! structural check is still rejected — the caller falls back to live
+//! planning rather than executing a plan over mismatched buffers.
+
+use crate::kernels::bsr_spmm::{Run, RowProgram, SpmmPlan};
+use crate::scheduler::cache::ExecPlan;
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::prune::BlockShape;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Payload schema tag (belt-and-braces next to the store-level version).
+const SCHEMA: &str = "sparsebert-plan/v1";
+
+/// Serialize a compiled plan (with its scheduling statistics) for the
+/// matrix it was built from.
+pub fn encode_plan(ep: &ExecPlan, m: &BsrMatrix) -> String {
+    let sp = &ep.plan;
+    // Dedup shared programs by pointer identity so the payload stores
+    // each distinct pattern program once (mirroring the in-memory Arcs).
+    let mut index_of: HashMap<usize, usize> = HashMap::new();
+    let mut programs: Vec<Arc<RowProgram>> = Vec::new();
+    let mut prog_of_row: Vec<usize> = Vec::with_capacity(sp.rows.len());
+    let mut bases: Vec<usize> = Vec::with_capacity(sp.rows.len());
+    for (program, base) in &sp.rows {
+        let ptr = Arc::as_ptr(program) as usize;
+        let idx = *index_of.entry(ptr).or_insert_with(|| {
+            programs.push(Arc::clone(program));
+            programs.len() - 1
+        });
+        prog_of_row.push(idx);
+        bases.push(*base as usize);
+    }
+    let programs_json: Vec<Json> = programs
+        .iter()
+        .map(|p| {
+            let mut runs: Vec<usize> = Vec::with_capacity(p.runs.len() * 3);
+            for r in &p.runs {
+                runs.push(r.x_row as usize);
+                runs.push(r.width as usize);
+                runs.push(r.rel_offset as usize);
+            }
+            let mut j = Json::obj();
+            j.set("elems", p.elems as usize).set("runs", runs);
+            j
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("schema", SCHEMA)
+        .set("block", ep.block.to_string())
+        .set("rows", m.rows)
+        .set("cols", m.cols)
+        .set("block_rows", ep.block_rows)
+        .set("mean_blocks_per_row", ep.mean_blocks_per_row)
+        .set("distinct", sp.distinct_programs)
+        .set(
+            "order",
+            sp.order.iter().map(|&v| v as usize).collect::<Vec<usize>>(),
+        )
+        .set("bases", bases)
+        .set("prog_of_row", prog_of_row)
+        .set("programs", programs_json);
+    root.to_string_compact()
+}
+
+fn usize_array(j: &Json, key: &str) -> Result<Vec<usize>> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("plan payload missing '{key}'"))?;
+    arr.iter()
+        .map(|v| v.as_usize().with_context(|| format!("non-integer in '{key}'")))
+        .collect()
+}
+
+/// Decode and validate a plan payload against the matrix it claims to
+/// schedule. Any structural disagreement is an error (→ live planning).
+pub fn decode_plan(text: &str, m: &BsrMatrix) -> Result<ExecPlan> {
+    let root = json::parse(text).map_err(|e| anyhow::anyhow!("plan payload: {e}"))?;
+    if root.get("schema").and_then(Json::as_str) != Some(SCHEMA) {
+        bail!("plan payload schema mismatch");
+    }
+    let block = BlockShape::parse(
+        root.get("block")
+            .and_then(Json::as_str)
+            .context("plan payload missing 'block'")?,
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    if block != m.block {
+        bail!("plan block {block} != matrix block {}", m.block);
+    }
+    let rows = root.get("rows").and_then(Json::as_usize).context("'rows'")?;
+    let cols = root.get("cols").and_then(Json::as_usize).context("'cols'")?;
+    if rows != m.rows || cols != m.cols {
+        bail!("plan dims {rows}x{cols} != matrix {}x{}", m.rows, m.cols);
+    }
+    let block_rows = root
+        .get("block_rows")
+        .and_then(Json::as_usize)
+        .context("'block_rows'")?;
+    if block_rows != m.block_rows() {
+        bail!("plan block_rows {block_rows} != matrix {}", m.block_rows());
+    }
+    let mean_blocks_per_row = root
+        .get("mean_blocks_per_row")
+        .and_then(Json::as_f64)
+        .context("'mean_blocks_per_row'")?;
+    let distinct = root
+        .get("distinct")
+        .and_then(Json::as_usize)
+        .context("'distinct'")?;
+    let order = usize_array(&root, "order")?;
+    let bases = usize_array(&root, "bases")?;
+    let prog_of_row = usize_array(&root, "prog_of_row")?;
+    if order.len() != block_rows || bases.len() != block_rows || prog_of_row.len() != block_rows {
+        bail!("plan row arrays disagree with block_rows {block_rows}");
+    }
+    // order must be a permutation of 0..block_rows (the executor's
+    // disjoint-Y-band safety rests on this)
+    let mut seen = vec![false; block_rows];
+    for &i in &order {
+        if i >= block_rows || seen[i] {
+            bail!("plan order is not a permutation");
+        }
+        seen[i] = true;
+    }
+    let elems = block.elems();
+    let programs_json = root
+        .get("programs")
+        .and_then(Json::as_arr)
+        .context("'programs'")?;
+    let mut programs: Vec<Arc<RowProgram>> = Vec::with_capacity(programs_json.len());
+    for pj in programs_json {
+        let p_elems = pj.get("elems").and_then(Json::as_usize).context("'elems'")?;
+        let flat = usize_array(pj, "runs")?;
+        if flat.len() % 3 != 0 {
+            bail!("program runs array not a multiple of 3");
+        }
+        let mut runs = Vec::with_capacity(flat.len() / 3);
+        for t in flat.chunks_exact(3) {
+            let (x_row, width, rel_offset) = (t[0], t[1], t[2]);
+            if x_row + width > cols {
+                bail!("run exceeds matrix columns ({x_row}+{width} > {cols})");
+            }
+            // The executor reads `width` X rows for 1×C runs but a fixed
+            // `block.c` rows for taller blocks — a payload width that
+            // disagrees with the block shape would index past the
+            // activation matrix, so it is rejected here.
+            let width_ok = if block.r == 1 {
+                width > 0 && width % block.c == 0
+            } else {
+                width == block.c
+            };
+            if !width_ok {
+                bail!("run width {width} invalid for block {block}");
+            }
+            let run_elems = if block.r == 1 { width } else { elems };
+            if rel_offset + run_elems > p_elems {
+                bail!("run exceeds program data ({rel_offset}+{run_elems} > {p_elems})");
+            }
+            runs.push(Run {
+                x_row: x_row as u32,
+                width: width as u32,
+                rel_offset: rel_offset as u32,
+            });
+        }
+        programs.push(Arc::new(RowProgram {
+            block,
+            runs,
+            elems: p_elems as u32,
+        }));
+    }
+    let mut plan_rows: Vec<(Arc<RowProgram>, u32)> = Vec::with_capacity(block_rows);
+    for bi in 0..block_rows {
+        let idx = prog_of_row[bi];
+        let program = programs
+            .get(idx)
+            .with_context(|| format!("program index {idx} out of range"))?;
+        // Cross-check against the matrix structure: base offsets come
+        // straight from indptr, and the program must cover exactly this
+        // row's stored elements.
+        let want_base = m.indptr[bi] as usize * elems;
+        if bases[bi] != want_base {
+            bail!("row {bi} base {} != indptr-derived {want_base}", bases[bi]);
+        }
+        let row_elems = m.row_range(bi).len() * elems;
+        if program.elems as usize != row_elems {
+            bail!(
+                "row {bi} program covers {} elems, matrix row stores {row_elems}",
+                program.elems
+            );
+        }
+        plan_rows.push((Arc::clone(program), bases[bi] as u32));
+    }
+    Ok(ExecPlan {
+        plan: Arc::new(SpmmPlan {
+            block,
+            rows: plan_rows,
+            order: order.iter().map(|&v| v as u32).collect(),
+            distinct_programs: distinct,
+        }),
+        block,
+        block_rows,
+        mean_blocks_per_row,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::plan::{build_plan, PlanOptions};
+    use crate::sparse::dense::Matrix;
+    use crate::sparse::pattern::PatternStats;
+    use crate::sparse::prune::prune_structured;
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    fn exec_plan_for(m: &BsrMatrix) -> ExecPlan {
+        let stats = PatternStats::of(m);
+        ExecPlan {
+            plan: Arc::new(build_plan(m, PlanOptions::tvm_plus())),
+            block: m.block,
+            block_rows: m.block_rows(),
+            mean_blocks_per_row: stats.mean_blocks_per_row,
+        }
+    }
+
+    fn bsr(block: BlockShape, sparsity: f64, seed: u64) -> BsrMatrix {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(64, 64, 1.0, &mut rng);
+        prune_structured(&mut w, sparsity, block);
+        BsrMatrix::from_dense(&w, block).unwrap()
+    }
+
+    fn assert_plans_equal(a: &ExecPlan, b: &ExecPlan) {
+        assert_eq!(a.block, b.block);
+        assert_eq!(a.block_rows, b.block_rows);
+        assert_eq!(a.mean_blocks_per_row.to_bits(), b.mean_blocks_per_row.to_bits());
+        assert_eq!(a.plan.order, b.plan.order);
+        assert_eq!(a.plan.distinct_programs, b.plan.distinct_programs);
+        assert_eq!(a.plan.rows.len(), b.plan.rows.len());
+        for ((pa, ba), (pb, bb)) in a.plan.rows.iter().zip(&b.plan.rows) {
+            assert_eq!(ba, bb);
+            assert_eq!(pa.as_ref(), pb.as_ref());
+        }
+    }
+
+    #[test]
+    fn roundtrip_across_paper_shapes_and_sparsities() {
+        // The acceptance grid: property-based round trips over the
+        // paper's block shapes × sparsities.
+        let shapes = [
+            BlockShape::new(1, 1),
+            BlockShape::new(32, 1),
+            BlockShape::new(32, 32),
+            BlockShape::new(1, 32),
+        ];
+        propcheck::check(
+            "plan payload roundtrip",
+            16,
+            |rng| {
+                let block = shapes[rng.range(0, shapes.len())];
+                let sparsity = if rng.chance(0.5) { 0.5 } else { 0.9 };
+                (block, sparsity, rng.next_u64())
+            },
+            |&(block, sparsity, seed)| {
+                let m = bsr(block, sparsity, seed);
+                let ep = exec_plan_for(&m);
+                let text = encode_plan(&ep, &m);
+                let back = decode_plan(&text, &m).map_err(|e| format!("decode: {e:#}"))?;
+                assert_plans_equal(&ep, &back);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn decoded_plan_executes_identically() {
+        use crate::kernels::bsr_spmm::bsr_linear_planned;
+        for &block in &[BlockShape::new(1, 32), BlockShape::new(32, 1)] {
+            let m = bsr(block, 0.9, 7);
+            let ep = exec_plan_for(&m);
+            let back = decode_plan(&encode_plan(&ep, &m), &m).unwrap();
+            let mut rng = Rng::new(9);
+            let x = Matrix::randn(64, 5, 1.0, &mut rng);
+            let y_live = bsr_linear_planned(&m, &ep.plan, &x, None, 2);
+            let y_loaded = bsr_linear_planned(&m, &back.plan, &x, None, 2);
+            assert_eq!(y_live.data, y_loaded.data);
+        }
+    }
+
+    #[test]
+    fn mismatched_matrix_is_rejected() {
+        let block = BlockShape::new(1, 32);
+        let m = bsr(block, 0.5, 1);
+        let ep = exec_plan_for(&m);
+        let text = encode_plan(&ep, &m);
+        // same geometry, different structure → base/ program checks fire
+        let other = bsr(block, 0.9, 2);
+        assert!(decode_plan(&text, &other).is_err());
+        // different block shape
+        let square = bsr(BlockShape::new(32, 32), 0.5, 1);
+        assert!(decode_plan(&text, &square).is_err());
+    }
+
+    #[test]
+    fn garbage_and_tampered_payloads_are_rejected() {
+        let block = BlockShape::new(1, 32);
+        let m = bsr(block, 0.5, 3);
+        let ep = exec_plan_for(&m);
+        let text = encode_plan(&ep, &m);
+        assert!(decode_plan("not json", &m).is_err());
+        assert!(decode_plan("{}", &m).is_err());
+        // corrupt the order into a non-permutation
+        let tampered = text.replacen("\"order\":[0", "\"order\":[1", 1);
+        if tampered != text {
+            assert!(decode_plan(&tampered, &m).is_err());
+        }
+        // truncated document
+        assert!(decode_plan(&text[..text.len() / 2], &m).is_err());
+    }
+}

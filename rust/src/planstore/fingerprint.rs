@@ -1,0 +1,255 @@
+//! Artifact fingerprinting: the `structure × hardware × format-version`
+//! key under which compiled plans and pre-packed BSR weight buffers are
+//! persisted.
+//!
+//! Two artifact kinds share one key shape:
+//!
+//! * **plans** are content-addressed by the sparsity *structure*
+//!   ([`matrix_signature`]), the scheduler's [`PlanOptions`] (a plan
+//!   compiled with similarity reordering must never be served to a
+//!   sequential-order ablation scheduler), and the [`HwSpec`]
+//!   fingerprint they were tuned for — a plan compiled on one machine
+//!   is never replayed on another;
+//! * **packed weights** are content-addressed by a digest of the dense
+//!   *values* (packing is value-dependent but hardware-independent), so
+//!   a re-pruned model never reloads stale buffers.
+//!
+//! [`FORMAT_VERSION`] participates in every id, so bumping the on-disk
+//! format orphans old artifacts instead of misreading them (the GC pass
+//! then reclaims the files).
+
+use crate::scheduler::hwspec::HwSpec;
+use crate::scheduler::plan::{OrderPolicy, PlanOptions};
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::dense::Matrix;
+use crate::sparse::pattern::matrix_signature;
+use crate::sparse::prune::BlockShape;
+use std::fmt;
+
+/// On-disk format version; bumped on any incompatible layout change.
+/// Mixed into every artifact id and written to the index-log header.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Incremental FNV-1a 64-bit hasher (the same construction
+/// [`HwSpec::fingerprint`] uses, shared here for artifact ids and
+/// payload checksums).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    #[inline]
+    pub fn mix_u64(&mut self, v: u64) {
+        self.0 ^= v;
+        self.0 = self.0.wrapping_mul(0x100000001b3);
+    }
+
+    #[inline]
+    pub fn mix_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// FNV-1a digest of a byte slice (payload checksums).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.mix_bytes(bytes);
+    h.finish()
+}
+
+/// Digest of f32 values by bit pattern (one multiply per element — far
+/// cheaper than the byte walk, and exact: equal digests ⇔ bitwise-equal
+/// values for non-degenerate inputs).
+pub fn digest_f32(data: &[f32]) -> u64 {
+    let mut h = Fnv::new();
+    h.mix_u64(data.len() as u64);
+    for &x in data {
+        h.mix_u64(x.to_bits() as u64);
+    }
+    h.finish()
+}
+
+/// What an artifact stores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// A compiled [`SpmmPlan`][crate::kernels::bsr_spmm::SpmmPlan] plus
+    /// the structure statistics the auto-scheduler derives parameters
+    /// from.
+    Plan,
+    /// Pre-packed BSR weight buffers (`data`/`indices`/`indptr`).
+    PackedWeights,
+}
+
+impl ArtifactKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArtifactKind::Plan => "plan",
+            ArtifactKind::PackedWeights => "weights",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArtifactKind> {
+        match s {
+            "plan" => Some(ArtifactKind::Plan),
+            "weights" => Some(ArtifactKind::PackedWeights),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ArtifactKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The full lookup key of one stored artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    pub kind: ArtifactKind,
+    /// Logical dense dimensions of the matrix the artifact belongs to.
+    pub rows: usize,
+    pub cols: usize,
+    pub block: BlockShape,
+    /// Structure signature mixed with the scheduler options (plans) or
+    /// dense-value digest (weights).
+    pub content: u64,
+    /// Hardware fingerprint (plans); 0 for hardware-independent kinds.
+    pub hw: u64,
+}
+
+impl ArtifactKey {
+    /// Key of the plan for `m` compiled under `opts` and tuned against
+    /// `hw`. The options participate so that e.g. a similarity-reordered
+    /// plan is never served to a sequential-order ablation scheduler.
+    pub fn plan(m: &BsrMatrix, hw: &HwSpec, opts: PlanOptions) -> ArtifactKey {
+        let mut content = Fnv::new();
+        content.mix_u64(matrix_signature(m));
+        content.mix_u64(opts.dedup as u64);
+        content.mix_u64(match opts.order {
+            OrderPolicy::Sequential => 0,
+            OrderPolicy::SimilarityAdjacent => 1,
+        });
+        ArtifactKey {
+            kind: ArtifactKind::Plan,
+            rows: m.rows,
+            cols: m.cols,
+            block: m.block,
+            content: content.finish(),
+            hw: hw.fingerprint(),
+        }
+    }
+
+    /// Key of the packed BSR buffers for `dense` at `block` granularity.
+    pub fn packed_weights(dense: &Matrix, block: BlockShape) -> ArtifactKey {
+        ArtifactKey {
+            kind: ArtifactKind::PackedWeights,
+            rows: dense.rows,
+            cols: dense.cols,
+            block,
+            content: digest_f32(&dense.data),
+            hw: 0,
+        }
+    }
+
+    /// Stable id string used as the index key and payload file stem.
+    /// Mixes every field plus [`FORMAT_VERSION`].
+    pub fn id(&self) -> String {
+        let mut h = Fnv::new();
+        h.mix_u64(FORMAT_VERSION as u64);
+        h.mix_u64(match self.kind {
+            ArtifactKind::Plan => 1,
+            ArtifactKind::PackedWeights => 2,
+        });
+        h.mix_u64(self.rows as u64);
+        h.mix_u64(self.cols as u64);
+        h.mix_u64(self.block.r as u64);
+        h.mix_u64(self.block.c as u64);
+        h.mix_u64(self.content);
+        h.mix_u64(self.hw);
+        format!("{}-{:016x}", self.kind.as_str(), h.finish())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune::prune_structured;
+    use crate::util::rng::Rng;
+
+    fn bsr(seed: u64) -> BsrMatrix {
+        let block = BlockShape::new(2, 2);
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(16, 16, 1.0, &mut rng);
+        prune_structured(&mut w, 0.5, block);
+        BsrMatrix::from_dense(&w, block).unwrap()
+    }
+
+    #[test]
+    fn plan_key_tracks_structure_options_and_hardware() {
+        let hw = HwSpec::haswell_reference();
+        let opts = PlanOptions::tvm_plus();
+        let m = bsr(1);
+        let a = ArtifactKey::plan(&m, &hw, opts);
+        // values differ, structure identical → same key
+        let mut m2 = m.clone();
+        for v in m2.data.iter_mut() {
+            *v *= 3.0;
+        }
+        assert_eq!(a, ArtifactKey::plan(&m2, &hw, opts));
+        // different structure → different key
+        assert_ne!(a, ArtifactKey::plan(&bsr(2), &hw, opts));
+        // different scheduler options → different key (a reordered plan
+        // must never serve an ablation scheduler)
+        assert_ne!(a, ArtifactKey::plan(&m, &hw, PlanOptions::default()));
+        assert_ne!(a, ArtifactKey::plan(&m, &hw, PlanOptions::no_reuse()));
+        // different hardware → different key and id
+        let mut other = HwSpec::haswell_reference();
+        other.cores = 64;
+        let b = ArtifactKey::plan(&m, &other, opts);
+        assert_ne!(a, b);
+        assert_ne!(a.id(), b.id());
+        assert!(a.id().starts_with("plan-"));
+    }
+
+    #[test]
+    fn weights_key_tracks_values() {
+        let block = BlockShape::new(2, 2);
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(8, 8, 1.0, &mut rng);
+        let a = ArtifactKey::packed_weights(&w, block);
+        assert_eq!(a, ArtifactKey::packed_weights(&w, block));
+        assert!(a.id().starts_with("weights-"));
+        let mut w2 = w.clone();
+        w2.data[7] += 1.0;
+        assert_ne!(a, ArtifactKey::packed_weights(&w2, block));
+        // same values, different block granularity → different key
+        assert_ne!(a, ArtifactKey::packed_weights(&w, BlockShape::new(4, 4)));
+    }
+
+    #[test]
+    fn fnv_checksum_is_stable_and_sensitive() {
+        assert_eq!(fnv1a(b"abc"), fnv1a(b"abc"));
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+        assert_ne!(fnv1a(b""), fnv1a(b"\0"));
+        assert_eq!(digest_f32(&[1.0, 2.0]), digest_f32(&[1.0, 2.0]));
+        assert_ne!(digest_f32(&[1.0, 2.0]), digest_f32(&[2.0, 1.0]));
+        assert_ne!(digest_f32(&[]), digest_f32(&[0.0]));
+    }
+}

@@ -1,0 +1,369 @@
+//! On-disk layout of the artifact store: a header + append-only JSON-lines
+//! index log (`index.log`) next to one payload file (or file set) per
+//! artifact.
+//!
+//! * Line 1 is the **header**: magic, [`FORMAT_VERSION`], and the
+//!   hardware fingerprint the store was created on. A version mismatch is
+//!   a typed error ([`PlanStoreError::VersionMismatch`]) — callers fall
+//!   back to live planning rather than misreading records.
+//! * Every following line is a **record**: `put` (an artifact landed,
+//!   with payload file, byte length, and FNV-1a checksum) or `del`.
+//!   Later records supersede earlier ones with the same id, so writes
+//!   are pure appends — crash-safe by construction (a torn final line is
+//!   ignored on replay, matching what an interrupted append leaves
+//!   behind).
+//! * [`super::store::PlanStore::gc`] *compacts*: it rewrites the log with
+//!   only live, verified entries and deletes orphaned payload files.
+
+use super::fingerprint::{ArtifactKind, FORMAT_VERSION};
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::Write;
+use std::path::Path;
+
+/// Magic string identifying an index log.
+pub const MAGIC: &str = "sparsebert-planstore";
+
+/// Name of the index log inside a store directory.
+pub const INDEX_LOG: &str = "index.log";
+
+/// Typed store-format errors (carried through `anyhow` so call sites can
+/// keep the crate-wide `Result`; the message names the variant).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanStoreError {
+    /// The log was written by an incompatible format version.
+    VersionMismatch { found: u64 },
+    /// The first log line is not a valid store header.
+    BadHeader(String),
+}
+
+impl fmt::Display for PlanStoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanStoreError::VersionMismatch { found } => write!(
+                f,
+                "plan store format version {found} != supported {FORMAT_VERSION} \
+                 (rebuild the store with `sparsebert plan build`)"
+            ),
+            PlanStoreError::BadHeader(detail) => {
+                write!(f, "plan store index header invalid: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanStoreError {}
+
+/// Parsed index-log header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Header {
+    pub version: u64,
+    /// Fingerprint of the [`HwSpec`][crate::scheduler::HwSpec] the store
+    /// was created on (plans are only replayed when this matches).
+    pub hw: u64,
+    /// Human-readable hardware description (diagnostics only).
+    pub hw_desc: String,
+}
+
+impl Header {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("magic", MAGIC)
+            .set("version", self.version)
+            .set("hw", format!("{:016x}", self.hw))
+            .set("hw_desc", self.hw_desc.as_str());
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Header> {
+        if j.get("magic").and_then(Json::as_str) != Some(MAGIC) {
+            return Err(PlanStoreError::BadHeader("missing magic".into()).into());
+        }
+        let version = j
+            .get("version")
+            .and_then(Json::as_f64)
+            .map(|v| v as u64)
+            .ok_or_else(|| PlanStoreError::BadHeader("missing version".into()))?;
+        if version != FORMAT_VERSION as u64 {
+            return Err(PlanStoreError::VersionMismatch { found: version }.into());
+        }
+        let hw = j
+            .get("hw")
+            .and_then(Json::as_str)
+            .and_then(parse_hex64)
+            .ok_or_else(|| PlanStoreError::BadHeader("missing hw fingerprint".into()))?;
+        Ok(Header {
+            version,
+            hw,
+            hw_desc: j
+                .get("hw_desc")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+        })
+    }
+}
+
+/// One live index entry (the merged view after log replay).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexEntry {
+    pub id: String,
+    pub kind: ArtifactKind,
+    /// Payload file stem relative to the store directory. Plans store one
+    /// `<file>` JSON document; packed weights store
+    /// `<file>.{data,indices,indptr}.npy`.
+    pub file: String,
+    /// Total payload bytes across the artifact's files.
+    pub bytes: u64,
+    /// FNV-1a over the payload bytes (files concatenated in the order
+    /// [`super::store::weight_files`] lists them).
+    pub checksum: u64,
+    /// Artifact metadata (dims, block, fingerprints) for `plan inspect`.
+    pub meta: BTreeMap<String, String>,
+}
+
+impl IndexEntry {
+    fn to_json(&self) -> Json {
+        let mut meta = Json::obj();
+        for (k, v) in &self.meta {
+            meta.set(k, v.as_str());
+        }
+        let mut j = Json::obj();
+        j.set("op", "put")
+            .set("id", self.id.as_str())
+            .set("kind", self.kind.as_str())
+            .set("file", self.file.as_str())
+            .set("bytes", self.bytes)
+            .set("checksum", format!("{:016x}", self.checksum))
+            .set("meta", meta);
+        j
+    }
+
+    fn from_json(j: &Json) -> Option<IndexEntry> {
+        let mut meta = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("meta") {
+            for (k, v) in m {
+                if let Some(s) = v.as_str() {
+                    meta.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        Some(IndexEntry {
+            id: j.get("id")?.as_str()?.to_string(),
+            kind: ArtifactKind::parse(j.get("kind")?.as_str()?)?,
+            file: j.get("file")?.as_str()?.to_string(),
+            bytes: j.get("bytes")?.as_f64()? as u64,
+            checksum: j.get("checksum").and_then(Json::as_str).and_then(parse_hex64)?,
+            meta,
+        })
+    }
+}
+
+/// One replayed log record.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LogRecord {
+    Put(IndexEntry),
+    Del { id: String },
+}
+
+impl LogRecord {
+    pub fn to_json(&self) -> Json {
+        match self {
+            LogRecord::Put(e) => e.to_json(),
+            LogRecord::Del { id } => {
+                let mut j = Json::obj();
+                j.set("op", "del").set("id", id.as_str());
+                j
+            }
+        }
+    }
+
+    fn from_json(j: &Json) -> Option<LogRecord> {
+        match j.get("op").and_then(Json::as_str) {
+            Some("put") => IndexEntry::from_json(j).map(LogRecord::Put),
+            Some("del") => Some(LogRecord::Del {
+                id: j.get("id")?.as_str()?.to_string(),
+            }),
+            _ => None,
+        }
+    }
+}
+
+fn parse_hex64(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Read and replay an index log: header first, then records in order.
+/// A torn or malformed *final* line (interrupted append) is ignored;
+/// malformed interior lines are skipped defensively.
+pub fn read_log(path: &Path) -> Result<(Header, Vec<LogRecord>)> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read index log {path:?}"))?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let head_line = lines
+        .next()
+        .ok_or_else(|| PlanStoreError::BadHeader("empty index log".into()))?;
+    let head_json = json::parse(head_line)
+        .map_err(|e| PlanStoreError::BadHeader(format!("unparseable header: {e}")))?;
+    let header = Header::from_json(&head_json)?;
+    let mut records = Vec::new();
+    for line in lines {
+        let Ok(j) = json::parse(line) else {
+            continue; // torn append or stray bytes: skip, never fail
+        };
+        if let Some(rec) = LogRecord::from_json(&j) {
+            records.push(rec);
+        }
+    }
+    Ok((header, records))
+}
+
+/// Create a fresh log containing only the header.
+pub fn write_header(path: &Path, header: &Header) -> Result<()> {
+    let mut f =
+        std::fs::File::create(path).with_context(|| format!("create index log {path:?}"))?;
+    writeln!(f, "{}", header.to_json().to_string_compact())?;
+    Ok(())
+}
+
+/// Append one record to an existing log. The whole line (including the
+/// newline) goes down in a single `write` so concurrent appenders on an
+/// `O_APPEND` descriptor cannot interleave partial lines — the only
+/// torn shape a crash can leave is a truncated *final* line, which
+/// [`read_log`] skips.
+pub fn append_record(path: &Path, record: &LogRecord) -> Result<()> {
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(path)
+        .with_context(|| format!("append to index log {path:?}"))?;
+    let mut line = record.to_json().to_string_compact();
+    line.push('\n');
+    f.write_all(line.as_bytes())?;
+    Ok(())
+}
+
+/// Rewrite the log as header + one `put` per live entry (compaction).
+pub fn rewrite_log<'a>(
+    path: &Path,
+    header: &Header,
+    live: impl Iterator<Item = &'a IndexEntry>,
+) -> Result<()> {
+    let tmp = path.with_extension("log.tmp");
+    {
+        let mut f =
+            std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        writeln!(f, "{}", header.to_json().to_string_compact())?;
+        for e in live {
+            writeln!(f, "{}", LogRecord::Put(e.clone()).to_json().to_string_compact())?;
+        }
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("replace {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmplog(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "sparsebert-psfmt-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(INDEX_LOG)
+    }
+
+    fn header() -> Header {
+        Header {
+            version: FORMAT_VERSION as u64,
+            hw: 0xdead_beef_1234_5678,
+            hw_desc: "test hw".into(),
+        }
+    }
+
+    fn entry(id: &str) -> IndexEntry {
+        let mut meta = BTreeMap::new();
+        meta.insert("block".into(), "1x32".into());
+        IndexEntry {
+            id: id.to_string(),
+            kind: ArtifactKind::Plan,
+            file: format!("{id}.json"),
+            bytes: 123,
+            checksum: 0xfeed_f00d_0000_0042,
+            meta,
+        }
+    }
+
+    #[test]
+    fn header_and_records_roundtrip() {
+        let path = tmplog("rt");
+        write_header(&path, &header()).unwrap();
+        append_record(&path, &LogRecord::Put(entry("plan-aa"))).unwrap();
+        append_record(&path, &LogRecord::Put(entry("plan-bb"))).unwrap();
+        append_record(&path, &LogRecord::Del { id: "plan-aa".into() }).unwrap();
+        let (h, recs) = read_log(&path).unwrap();
+        assert_eq!(h, header());
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0], LogRecord::Put(entry("plan-aa")));
+        assert_eq!(recs[2], LogRecord::Del { id: "plan-aa".into() });
+    }
+
+    #[test]
+    fn torn_final_line_is_ignored() {
+        let path = tmplog("torn");
+        write_header(&path, &header()).unwrap();
+        append_record(&path, &LogRecord::Put(entry("plan-aa"))).unwrap();
+        // simulate an interrupted append: half a JSON object, no newline
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        use std::io::Write as _;
+        write!(f, "{{\"op\":\"put\",\"id\":\"pla").unwrap();
+        drop(f);
+        let (_, recs) = read_log(&path).unwrap();
+        assert_eq!(recs.len(), 1);
+    }
+
+    #[test]
+    fn version_mismatch_is_typed() {
+        let path = tmplog("ver");
+        let mut bad = header();
+        bad.version = 99;
+        // write manually (write_header would encode the same thing)
+        std::fs::write(&path, format!("{}\n", bad.to_json().to_string_compact())).unwrap();
+        let err = read_log(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("format version 99"),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn non_header_first_line_rejected() {
+        let path = tmplog("nohead");
+        std::fs::write(&path, "{\"op\":\"put\"}\n").unwrap();
+        assert!(read_log(&path).is_err());
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(read_log(&path).is_err());
+    }
+
+    #[test]
+    fn rewrite_compacts_to_live_entries() {
+        let path = tmplog("compact");
+        write_header(&path, &header()).unwrap();
+        for id in ["a", "b", "c"] {
+            append_record(&path, &LogRecord::Put(entry(id))).unwrap();
+        }
+        append_record(&path, &LogRecord::Del { id: "b".into() }).unwrap();
+        let live = [entry("a"), entry("c")];
+        rewrite_log(&path, &header(), live.iter()).unwrap();
+        let (h, recs) = read_log(&path).unwrap();
+        assert_eq!(h, header());
+        assert_eq!(recs.len(), 2);
+        assert!(matches!(&recs[0], LogRecord::Put(e) if e.id == "a"));
+        assert!(matches!(&recs[1], LogRecord::Put(e) if e.id == "c"));
+    }
+}

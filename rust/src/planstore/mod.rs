@@ -1,0 +1,38 @@
+//! Persistent compilation-artifact store — warm-starting the sparse
+//! serving stack across process restarts.
+//!
+//! The PR-1 plan cache made repeated inference over one pruned model
+//! re-plan nothing *within* a process; this subsystem extends that
+//! across restarts, the ahead-of-time workflow of weight-block-sparsity
+//! compilation stacks (arXiv:2407.09453) and pre-packed sparse weight
+//! layouts (arXiv:2306.16601). A store directory persists:
+//!
+//! * **compiled plans** — [`ExecPlan`][crate::scheduler::cache::ExecPlan]
+//!   payloads (row programs, order, base offsets, pattern statistics),
+//!   keyed by `structure × hardware × format-version`;
+//! * **pre-packed BSR weights** — `data`/`indices`/`indptr` buffers keyed
+//!   by a digest of the dense values, so a server skips the
+//!   `from_dense` packing walk entirely.
+//!
+//! Layout: an append-only JSON-lines index log ([`format`]) records one
+//! checksummed entry per payload file; [`PlanStore::gc`] compacts the
+//! log and reclaims orphaned files. Loads verify length + checksum +
+//! structural agreement with the requesting matrix, and **every failure
+//! degrades to live planning/packing** — a corrupted, stale, or
+//! foreign-hardware store can cost a cold start but never an error or a
+//! wrong answer.
+//!
+//! Wiring: [`AutoScheduler::attach_store`][crate::scheduler::AutoScheduler::attach_store]
+//! makes the plan cache load-through/write-back; `SparseBsrEngine`
+//! construction consults the same store for packed weights; `sparsebert
+//! serve --plan-store <dir>` warm-starts a server, and `sparsebert plan
+//! {build,inspect,gc}` compiles artifacts ahead of deployment.
+
+pub mod codec;
+pub mod fingerprint;
+pub mod format;
+pub mod store;
+
+pub use fingerprint::{ArtifactKey, ArtifactKind, FORMAT_VERSION};
+pub use format::{Header, IndexEntry, PlanStoreError};
+pub use store::{GcReport, PlanStore, StoreStats};

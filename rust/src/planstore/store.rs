@@ -1,0 +1,773 @@
+//! [`PlanStore`]: the persistent compilation-artifact store.
+//!
+//! A store is a directory holding an append-only index log
+//! ([`super::format`]) plus one payload per artifact: compiled execution
+//! plans as JSON documents ([`super::codec`]) and pre-packed BSR weight
+//! buffers as `.npy` tensors ([`crate::util::tensorfile`]). Artifacts
+//! are keyed by `structure × hardware × format-version` fingerprints
+//! ([`super::fingerprint`]).
+//!
+//! **Failure policy: never worse than cold.** Every load path degrades
+//! to `None` — the caller re-plans or re-packs live — on any of:
+//!
+//! * hardware-fingerprint mismatch (plans tuned elsewhere are rejected
+//!   wholesale; packed weights are hardware-independent and still load),
+//! * byte-length or checksum mismatch (torn write, bit rot),
+//! * structural disagreement with the requesting matrix (stale artifact
+//!   after re-pruning),
+//!
+//! with a counter bumped per reason so warm-start efficacy is observable
+//! ([`StoreStats`], surfaced in the `serve` stats JSON).
+
+use super::codec::{decode_plan, encode_plan};
+use super::fingerprint::{fnv1a, ArtifactKey, ArtifactKind, Fnv, FORMAT_VERSION};
+use super::format::{self, Header, IndexEntry, LogRecord, INDEX_LOG};
+use crate::scheduler::cache::ExecPlan;
+use crate::scheduler::hwspec::HwSpec;
+use crate::scheduler::plan::PlanOptions;
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::dense::Matrix;
+use crate::sparse::prune::BlockShape;
+use crate::util::json::Json;
+use crate::util::tensorfile::{npy_bytes, parse_npy, Dtype, NpyTensor};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// The three payload files of one packed-weights artifact, in checksum
+/// order.
+pub fn weight_files(stem: &str) -> [String; 3] {
+    [
+        format!("{stem}.data.npy"),
+        format!("{stem}.indices.npy"),
+        format!("{stem}.indptr.npy"),
+    ]
+}
+
+/// Counter snapshot for instrumentation and the warm-start assertions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Live index entries.
+    pub entries: usize,
+    /// Plans served from disk (warm path).
+    pub plan_hits: u64,
+    /// Plan lookups that fell back to live planning (cold path).
+    pub plan_misses: u64,
+    /// Packed-weight buffers served from disk.
+    pub weight_hits: u64,
+    /// Packed-weight lookups that fell back to live packing.
+    pub weight_misses: u64,
+    /// Artifacts written since open.
+    pub writes: u64,
+    /// Loads rejected by length/checksum/structure validation.
+    pub corrupt_rejects: u64,
+    /// Plan loads rejected because the store's hardware fingerprint does
+    /// not match this process's.
+    pub hw_rejects: u64,
+    /// Whether the store was created on this hardware.
+    pub hw_match: bool,
+}
+
+impl StoreStats {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("entries", self.entries)
+            .set("plan_hits", self.plan_hits)
+            .set("plan_misses", self.plan_misses)
+            .set("weight_hits", self.weight_hits)
+            .set("weight_misses", self.weight_misses)
+            .set("writes", self.writes)
+            .set("corrupt_rejects", self.corrupt_rejects)
+            .set("hw_rejects", self.hw_rejects)
+            .set("hw_match", self.hw_match);
+        j
+    }
+}
+
+/// Result of a [`PlanStore::gc`] pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GcReport {
+    /// Entries that survived verification.
+    pub live: usize,
+    /// Index entries dropped (missing or corrupt payloads).
+    pub dropped_entries: usize,
+    /// Unreferenced files deleted from the store directory.
+    pub removed_files: usize,
+    /// Bytes reclaimed by file removal.
+    pub reclaimed_bytes: u64,
+}
+
+/// On-disk, versioned artifact store for compiled plans and pre-packed
+/// BSR weights. Thread-safe; clone the `Arc` to share between the
+/// scheduler and engine constructors.
+pub struct PlanStore {
+    dir: PathBuf,
+    hw: HwSpec,
+    hw_match: bool,
+    header: Header,
+    entries: Mutex<BTreeMap<String, IndexEntry>>,
+    plan_hits: AtomicU64,
+    plan_misses: AtomicU64,
+    weight_hits: AtomicU64,
+    weight_misses: AtomicU64,
+    writes: AtomicU64,
+    corrupt_rejects: AtomicU64,
+    hw_rejects: AtomicU64,
+}
+
+impl PlanStore {
+    /// Open (or create) the store at `dir` for the given hardware. A
+    /// format-version mismatch in an existing index is a typed error;
+    /// a hardware mismatch opens read-degraded (plans rejected, writes
+    /// skipped) so a foreign store is never corrupted or misused.
+    pub fn open(dir: &Path, hw: &HwSpec) -> Result<PlanStore> {
+        std::fs::create_dir_all(dir).with_context(|| format!("create store dir {dir:?}"))?;
+        let log = dir.join(INDEX_LOG);
+        let (header, entries) = if log.exists() {
+            let (header, records) = format::read_log(&log)?;
+            let mut map = BTreeMap::new();
+            for rec in records {
+                match rec {
+                    LogRecord::Put(e) => {
+                        map.insert(e.id.clone(), e);
+                    }
+                    LogRecord::Del { id } => {
+                        map.remove(&id);
+                    }
+                }
+            }
+            (header, map)
+        } else {
+            let header = Header {
+                version: FORMAT_VERSION as u64,
+                hw: hw.fingerprint(),
+                hw_desc: hw.to_string(),
+            };
+            format::write_header(&log, &header)?;
+            (header, BTreeMap::new())
+        };
+        let hw_match = header.hw == hw.fingerprint();
+        Ok(PlanStore {
+            dir: dir.to_path_buf(),
+            hw: hw.clone(),
+            hw_match,
+            header,
+            entries: Mutex::new(entries),
+            plan_hits: AtomicU64::new(0),
+            plan_misses: AtomicU64::new(0),
+            weight_hits: AtomicU64::new(0),
+            weight_misses: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            corrupt_rejects: AtomicU64::new(0),
+            hw_rejects: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Whether artifacts written here were tuned for this machine.
+    pub fn hw_match(&self) -> bool {
+        self.hw_match
+    }
+
+    pub fn header(&self) -> &Header {
+        &self.header
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().expect("plan store poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the live index (for `sparsebert plan inspect`).
+    pub fn entries(&self) -> Vec<IndexEntry> {
+        self.entries
+            .lock()
+            .expect("plan store poisoned")
+            .values()
+            .cloned()
+            .collect()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            entries: self.len(),
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            weight_hits: self.weight_hits.load(Ordering::Relaxed),
+            weight_misses: self.weight_misses.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+            corrupt_rejects: self.corrupt_rejects.load(Ordering::Relaxed),
+            hw_rejects: self.hw_rejects.load(Ordering::Relaxed),
+            hw_match: self.hw_match,
+        }
+    }
+
+    // -- plans --------------------------------------------------------
+
+    /// Load the persisted plan for `m` compiled under `opts`, or `None`
+    /// (→ live planning) on miss, hardware mismatch, or any integrity
+    /// failure.
+    pub fn load_plan(&self, m: &BsrMatrix, opts: PlanOptions) -> Option<Arc<ExecPlan>> {
+        if !self.hw_match {
+            self.hw_rejects.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let id = ArtifactKey::plan(m, &self.hw, opts).id();
+        let entry = {
+            self.entries
+                .lock()
+                .expect("plan store poisoned")
+                .get(&id)
+                .cloned()
+        };
+        let Some(entry) = entry else {
+            self.plan_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        match self.read_plan_payload(&entry, m) {
+            Ok(ep) => {
+                self.plan_hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::new(ep))
+            }
+            Err(_) => {
+                // Corrupt or stale: drop from the in-memory index so the
+                // session stops retrying; gc reclaims the file later.
+                self.corrupt_rejects.fetch_add(1, Ordering::Relaxed);
+                self.entries.lock().expect("plan store poisoned").remove(&id);
+                None
+            }
+        }
+    }
+
+    fn read_plan_payload(&self, entry: &IndexEntry, m: &BsrMatrix) -> Result<ExecPlan> {
+        let path = self.dir.join(&entry.file);
+        let bytes = std::fs::read(&path).with_context(|| format!("read {path:?}"))?;
+        if bytes.len() as u64 != entry.bytes {
+            bail!("payload {} bytes, index records {}", bytes.len(), entry.bytes);
+        }
+        if fnv1a(&bytes) != entry.checksum {
+            bail!("payload checksum mismatch for {}", entry.id);
+        }
+        let text = std::str::from_utf8(&bytes).context("payload not utf-8")?;
+        decode_plan(text, m)
+    }
+
+    /// Persist a compiled plan (idempotent; skipped on hardware
+    /// mismatch so a foreign store is never polluted).
+    pub fn store_plan(&self, m: &BsrMatrix, opts: PlanOptions, ep: &ExecPlan) -> Result<()> {
+        if !self.hw_match {
+            return Ok(());
+        }
+        let key = ArtifactKey::plan(m, &self.hw, opts);
+        let id = key.id();
+        if self
+            .entries
+            .lock()
+            .expect("plan store poisoned")
+            .contains_key(&id)
+        {
+            return Ok(());
+        }
+        let file = format!("{id}.json");
+        let text = encode_plan(ep, m);
+        std::fs::write(self.dir.join(&file), &text)
+            .with_context(|| format!("write plan payload {file}"))?;
+        let entry = IndexEntry {
+            id: id.clone(),
+            kind: ArtifactKind::Plan,
+            file,
+            bytes: text.len() as u64,
+            checksum: fnv1a(text.as_bytes()),
+            meta: self.artifact_meta(&key),
+        };
+        format::append_record(&self.dir.join(INDEX_LOG), &LogRecord::Put(entry.clone()))?;
+        self.entries
+            .lock()
+            .expect("plan store poisoned")
+            .insert(id, entry);
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    // -- packed weights ----------------------------------------------
+
+    /// Load the pre-packed BSR buffers for `dense` at `block`
+    /// granularity, or `None` (→ live packing) on miss or integrity
+    /// failure. Packed weights are hardware-independent, so they load
+    /// even when the store's plan half is hardware-rejected.
+    pub fn load_packed(&self, dense: &Matrix, block: BlockShape) -> Option<BsrMatrix> {
+        let id = ArtifactKey::packed_weights(dense, block).id();
+        let entry = {
+            self.entries
+                .lock()
+                .expect("plan store poisoned")
+                .get(&id)
+                .cloned()
+        };
+        let Some(entry) = entry else {
+            self.weight_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        match self.read_packed_payload(&entry, dense, block) {
+            Ok(bsr) => {
+                self.weight_hits.fetch_add(1, Ordering::Relaxed);
+                Some(bsr)
+            }
+            Err(_) => {
+                self.corrupt_rejects.fetch_add(1, Ordering::Relaxed);
+                self.entries.lock().expect("plan store poisoned").remove(&id);
+                None
+            }
+        }
+    }
+
+    fn read_packed_payload(
+        &self,
+        entry: &IndexEntry,
+        dense: &Matrix,
+        block: BlockShape,
+    ) -> Result<BsrMatrix> {
+        let files = weight_files(&entry.file);
+        // One read per file: the same buffers are checksummed and then
+        // decoded (the data tensor dominates warm-start I/O).
+        let mut blobs: Vec<Vec<u8>> = Vec::with_capacity(files.len());
+        let mut total = 0u64;
+        let mut h = Fnv::new();
+        for f in &files {
+            let path = self.dir.join(f);
+            let bytes = std::fs::read(&path).with_context(|| format!("read {path:?}"))?;
+            total += bytes.len() as u64;
+            h.mix_bytes(&bytes);
+            blobs.push(bytes);
+        }
+        if total != entry.bytes {
+            bail!("payload {total} bytes, index records {}", entry.bytes);
+        }
+        if h.finish() != entry.checksum {
+            bail!("payload checksum mismatch for {}", entry.id);
+        }
+        let data = parse_npy(&blobs[0])?;
+        let indices = parse_npy(&blobs[1])?;
+        let indptr = parse_npy(&blobs[2])?;
+        if data.dtype != Dtype::F32 || indices.dtype != Dtype::I32 || indptr.dtype != Dtype::I32 {
+            bail!("packed-weight tensors have unexpected dtypes");
+        }
+        // `from_parts` re-validates every BSR invariant on the untrusted
+        // input, so a stale-but-checksummed artifact cannot reach the
+        // executor.
+        BsrMatrix::from_parts(
+            dense.rows,
+            dense.cols,
+            block,
+            data.f32_data,
+            to_u32(&indices.i32_data, "indices")?,
+            to_u32(&indptr.i32_data, "indptr")?,
+        )
+    }
+
+    /// Persist pre-packed BSR buffers for `dense` (idempotent; skipped
+    /// on hardware mismatch — a foreign store is opened read-degraded
+    /// and must never be mutated).
+    pub fn store_packed(&self, dense: &Matrix, bsr: &BsrMatrix) -> Result<()> {
+        if !self.hw_match {
+            return Ok(());
+        }
+        if bsr.rows != dense.rows || bsr.cols != dense.cols {
+            bail!(
+                "packed {}x{} does not match dense {}x{}",
+                bsr.rows,
+                bsr.cols,
+                dense.rows,
+                dense.cols
+            );
+        }
+        let key = ArtifactKey::packed_weights(dense, bsr.block);
+        let id = key.id();
+        if self
+            .entries
+            .lock()
+            .expect("plan store poisoned")
+            .contains_key(&id)
+        {
+            return Ok(());
+        }
+        let files = weight_files(&id);
+        // Encode in memory so length + checksum come from the exact
+        // buffers being written (no read-back pass).
+        let payloads = [
+            npy_bytes(&NpyTensor::from_f32(vec![bsr.data.len()], bsr.data.clone())),
+            npy_bytes(&NpyTensor::from_i32(
+                vec![bsr.indices.len()],
+                bsr.indices.iter().map(|&v| v as i32).collect(),
+            )),
+            npy_bytes(&NpyTensor::from_i32(
+                vec![bsr.indptr.len()],
+                bsr.indptr.iter().map(|&v| v as i32).collect(),
+            )),
+        ];
+        let mut total = 0u64;
+        let mut h = Fnv::new();
+        for (f, bytes) in files.iter().zip(&payloads) {
+            total += bytes.len() as u64;
+            h.mix_bytes(bytes);
+            std::fs::write(self.dir.join(f), bytes)
+                .with_context(|| format!("write packed payload {f}"))?;
+        }
+        let entry = IndexEntry {
+            id: id.clone(),
+            kind: ArtifactKind::PackedWeights,
+            file: id.clone(),
+            bytes: total,
+            checksum: h.finish(),
+            meta: self.artifact_meta(&key),
+        };
+        format::append_record(&self.dir.join(INDEX_LOG), &LogRecord::Put(entry.clone()))?;
+        self.entries
+            .lock()
+            .expect("plan store poisoned")
+            .insert(id, entry);
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn artifact_meta(&self, key: &ArtifactKey) -> BTreeMap<String, String> {
+        let mut meta = BTreeMap::new();
+        meta.insert("rows".into(), key.rows.to_string());
+        meta.insert("cols".into(), key.cols.to_string());
+        meta.insert("block".into(), key.block.to_string());
+        meta.insert("content".into(), format!("{:016x}", key.content));
+        meta.insert("hw".into(), format!("{:016x}", key.hw));
+        meta
+    }
+
+    // -- maintenance --------------------------------------------------
+
+    /// Garbage-collect and compact: verify every entry's payload
+    /// (dropping missing/corrupt ones), rewrite the index log to the
+    /// live set, and delete unreferenced files from the directory.
+    ///
+    /// **Single-writer operation.** Compaction rewrites the log from
+    /// this handle's snapshot and deletes files it does not reference,
+    /// so records appended by *another process* since this handle
+    /// opened would be discarded and their payloads reclaimed as
+    /// orphans. Run `sparsebert plan gc` only while no server is
+    /// writing to the store (concurrent *readers* are safe — their
+    /// loads degrade to live planning at worst).
+    pub fn gc(&self) -> Result<GcReport> {
+        let mut entries = self.entries.lock().expect("plan store poisoned");
+        let before = entries.len();
+        entries.retain(|_, e| self.verify_entry(e));
+        let dropped_entries = before - entries.len();
+        format::rewrite_log(&self.dir.join(INDEX_LOG), &self.header, entries.values())?;
+        let mut referenced: std::collections::BTreeSet<String> =
+            std::collections::BTreeSet::new();
+        referenced.insert(INDEX_LOG.to_string());
+        for e in entries.values() {
+            match e.kind {
+                ArtifactKind::Plan => {
+                    referenced.insert(e.file.clone());
+                }
+                ArtifactKind::PackedWeights => {
+                    for f in weight_files(&e.file) {
+                        referenced.insert(f);
+                    }
+                }
+            }
+        }
+        let live = entries.len();
+        drop(entries);
+        let mut removed_files = 0usize;
+        let mut reclaimed_bytes = 0u64;
+        for dirent in std::fs::read_dir(&self.dir)? {
+            let dirent = dirent?;
+            if !dirent.file_type()?.is_file() {
+                continue;
+            }
+            let name = dirent.file_name().to_string_lossy().to_string();
+            if referenced.contains(&name) {
+                continue;
+            }
+            let size = dirent.metadata().map(|m| m.len()).unwrap_or(0);
+            if std::fs::remove_file(dirent.path()).is_ok() {
+                removed_files += 1;
+                reclaimed_bytes += size;
+            }
+        }
+        Ok(GcReport {
+            live,
+            dropped_entries,
+            removed_files,
+            reclaimed_bytes,
+        })
+    }
+
+    /// Length + checksum verification of one entry's payload files.
+    fn verify_entry(&self, entry: &IndexEntry) -> bool {
+        let files: Vec<String> = match entry.kind {
+            ArtifactKind::Plan => vec![entry.file.clone()],
+            ArtifactKind::PackedWeights => weight_files(&entry.file).to_vec(),
+        };
+        let mut total = 0u64;
+        let mut h = Fnv::new();
+        for f in files {
+            match std::fs::read(self.dir.join(&f)) {
+                Ok(bytes) => {
+                    total += bytes.len() as u64;
+                    h.mix_bytes(&bytes);
+                }
+                Err(_) => return false,
+            }
+        }
+        total == entry.bytes && h.finish() == entry.checksum
+    }
+}
+
+fn to_u32(values: &[i32], what: &str) -> Result<Vec<u32>> {
+    values
+        .iter()
+        .map(|&v| u32::try_from(v).map_err(|_| anyhow::anyhow!("negative {what} value {v}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::plan::{build_plan, PlanOptions};
+    use crate::sparse::pattern::PatternStats;
+    use crate::sparse::prune::prune_structured;
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "sparsebert-planstore-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn pruned(block: BlockShape, sparsity: f64, seed: u64) -> (Matrix, BsrMatrix) {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(64, 64, 1.0, &mut rng);
+        prune_structured(&mut w, sparsity, block);
+        let bsr = BsrMatrix::from_dense(&w, block).unwrap();
+        (w, bsr)
+    }
+
+    fn exec_plan_for(m: &BsrMatrix) -> ExecPlan {
+        let stats = PatternStats::of(m);
+        ExecPlan {
+            plan: Arc::new(build_plan(m, PlanOptions::tvm_plus())),
+            block: m.block,
+            block_rows: m.block_rows(),
+            mean_blocks_per_row: stats.mean_blocks_per_row,
+        }
+    }
+
+    #[test]
+    fn roundtrip_across_restart_property() {
+        // Store + reload across a simulated restart (reopen), over the
+        // acceptance grid of block shapes × sparsities.
+        let shapes = [
+            BlockShape::new(1, 1),
+            BlockShape::new(32, 1),
+            BlockShape::new(32, 32),
+            BlockShape::new(1, 32),
+        ];
+        let hw = HwSpec::haswell_reference();
+        let dir = tmpdir("rt");
+        propcheck::check(
+            "plan store roundtrip",
+            8,
+            |rng| {
+                let block = shapes[rng.range(0, shapes.len())];
+                let sparsity = if rng.chance(0.5) { 0.5 } else { 0.9 };
+                (block, sparsity, rng.next_u64())
+            },
+            |&(block, sparsity, seed)| {
+                let (w, bsr) = pruned(block, sparsity, seed);
+                let ep = exec_plan_for(&bsr);
+                let store = PlanStore::open(&dir, &hw).map_err(|e| format!("open: {e:#}"))?;
+                store
+                    .store_plan(&bsr, PlanOptions::tvm_plus(), &ep)
+                    .map_err(|e| format!("store_plan: {e:#}"))?;
+                store
+                    .store_packed(&w, &bsr)
+                    .map_err(|e| format!("store_packed: {e:#}"))?;
+                // restart: fresh handle replays the log from disk
+                let reopened =
+                    PlanStore::open(&dir, &hw).map_err(|e| format!("reopen: {e:#}"))?;
+                let loaded = reopened
+                    .load_plan(&bsr, PlanOptions::tvm_plus())
+                    .ok_or_else(|| "plan did not reload".to_string())?;
+                if loaded.plan.order != ep.plan.order {
+                    return Err("order changed across reload".into());
+                }
+                if loaded.mean_blocks_per_row.to_bits() != ep.mean_blocks_per_row.to_bits() {
+                    return Err("stats changed across reload".into());
+                }
+                let packed = reopened
+                    .load_packed(&w, block)
+                    .ok_or_else(|| "weights did not reload".to_string())?;
+                if packed != bsr {
+                    return Err("packed weights changed across reload".into());
+                }
+                let s = reopened.stats();
+                if s.plan_hits != 1 || s.weight_hits != 1 || s.corrupt_rejects != 0 {
+                    return Err(format!("unexpected stats {s:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn corrupted_or_truncated_artifacts_fall_back() {
+        let hw = HwSpec::haswell_reference();
+        let dir = tmpdir("corrupt");
+        let block = BlockShape::new(1, 32);
+        let (w, bsr) = pruned(block, 0.5, 3);
+        let ep = exec_plan_for(&bsr);
+        let store = PlanStore::open(&dir, &hw).unwrap();
+        store.store_plan(&bsr, PlanOptions::tvm_plus(), &ep).unwrap();
+        store.store_packed(&w, &bsr).unwrap();
+        // truncate the plan payload
+        let plan_file = {
+            let e = store
+                .entries()
+                .into_iter()
+                .find(|e| e.kind == ArtifactKind::Plan)
+                .unwrap();
+            dir.join(e.file)
+        };
+        let bytes = std::fs::read(&plan_file).unwrap();
+        std::fs::write(&plan_file, &bytes[..bytes.len() / 2]).unwrap();
+        // flip one byte in the packed data tensor
+        let weights_stem = store
+            .entries()
+            .into_iter()
+            .find(|e| e.kind == ArtifactKind::PackedWeights)
+            .unwrap()
+            .file;
+        let data_file = dir.join(&weight_files(&weights_stem)[0]);
+        let mut wb = std::fs::read(&data_file).unwrap();
+        let last = wb.len() - 1;
+        wb[last] ^= 0xff;
+        std::fs::write(&data_file, wb).unwrap();
+
+        let reopened = PlanStore::open(&dir, &hw).unwrap();
+        assert!(reopened.load_plan(&bsr, PlanOptions::tvm_plus()).is_none());
+        assert!(reopened.load_packed(&w, block).is_none());
+        let s = reopened.stats();
+        assert_eq!(s.corrupt_rejects, 2, "{s:?}");
+        // the corrupt entries are dropped: the next lookup is a clean miss
+        assert!(reopened.load_plan(&bsr, PlanOptions::tvm_plus()).is_none());
+        assert_eq!(reopened.stats().plan_misses, 1);
+    }
+
+    #[test]
+    fn hardware_mismatch_rejects_plans_but_not_weights() {
+        let hw_a = HwSpec::haswell_reference();
+        let mut hw_b = HwSpec::haswell_reference();
+        hw_b.cores = 96;
+        hw_b.isa = "x86_64+avx512".to_string();
+        let dir = tmpdir("hw");
+        let block = BlockShape::new(32, 1);
+        let (w, bsr) = pruned(block, 0.9, 5);
+        let ep = exec_plan_for(&bsr);
+        let store = PlanStore::open(&dir, &hw_a).unwrap();
+        store.store_plan(&bsr, PlanOptions::tvm_plus(), &ep).unwrap();
+        store.store_packed(&w, &bsr).unwrap();
+        drop(store);
+        let foreign = PlanStore::open(&dir, &hw_b).unwrap();
+        assert!(!foreign.hw_match());
+        // plans tuned elsewhere never replay…
+        assert!(foreign.load_plan(&bsr, PlanOptions::tvm_plus()).is_none());
+        assert_eq!(foreign.stats().hw_rejects, 1);
+        // …writes are skipped (the foreign store is not polluted), for
+        // plans and for novel packed weights alike…
+        foreign.store_plan(&bsr, PlanOptions::tvm_plus(), &ep).unwrap();
+        let (w_novel, b_novel) = pruned(block, 0.5, 77);
+        foreign.store_packed(&w_novel, &b_novel).unwrap();
+        assert_eq!(foreign.stats().writes, 0);
+        assert_eq!(foreign.len(), 2);
+        // …but hardware-independent packed weights still load.
+        assert_eq!(foreign.load_packed(&w, block), Some(bsr));
+    }
+
+    #[test]
+    fn version_mismatch_is_a_typed_open_error() {
+        let hw = HwSpec::haswell_reference();
+        let dir = tmpdir("ver");
+        drop(PlanStore::open(&dir, &hw).unwrap());
+        let log = dir.join(INDEX_LOG);
+        let text = std::fs::read_to_string(&log).unwrap();
+        std::fs::write(&log, text.replace("\"version\":1", "\"version\":9")).unwrap();
+        let err = PlanStore::open(&dir, &hw).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("format version 9"),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn gc_compacts_and_removes_orphans() {
+        let hw = HwSpec::haswell_reference();
+        let dir = tmpdir("gc");
+        let block = BlockShape::new(1, 32);
+        let (w1, b1) = pruned(block, 0.5, 11);
+        let (w2, b2) = pruned(block, 0.9, 12);
+        let store = PlanStore::open(&dir, &hw).unwrap();
+        store.store_plan(&b1, PlanOptions::tvm_plus(), &exec_plan_for(&b1)).unwrap();
+        store.store_plan(&b2, PlanOptions::tvm_plus(), &exec_plan_for(&b2)).unwrap();
+        store.store_packed(&w1, &b1).unwrap();
+        store.store_packed(&w2, &b2).unwrap();
+        assert_eq!(store.len(), 4);
+        // delete one plan payload (→ entry dropped) and add an orphan
+        let victim = store
+            .entries()
+            .into_iter()
+            .find(|e| e.kind == ArtifactKind::Plan)
+            .unwrap();
+        std::fs::remove_file(dir.join(&victim.file)).unwrap();
+        std::fs::write(dir.join("stray.bin"), b"junk").unwrap();
+        let report = store.gc().unwrap();
+        assert_eq!(report.live, 3);
+        assert_eq!(report.dropped_entries, 1);
+        assert!(report.removed_files >= 1, "{report:?}");
+        assert!(report.reclaimed_bytes >= 4);
+        assert!(!dir.join("stray.bin").exists());
+        // the compacted log replays to exactly the live set
+        let reopened = PlanStore::open(&dir, &hw).unwrap();
+        assert_eq!(reopened.len(), 3);
+        // surviving artifacts still verify
+        assert!(reopened.load_packed(&w1, block).is_some());
+        assert!(reopened.load_packed(&w2, block).is_some());
+    }
+
+    #[test]
+    fn store_writes_are_idempotent() {
+        let hw = HwSpec::haswell_reference();
+        let dir = tmpdir("idem");
+        let block = BlockShape::new(1, 1);
+        let (w, bsr) = pruned(block, 0.5, 21);
+        let ep = exec_plan_for(&bsr);
+        let store = PlanStore::open(&dir, &hw).unwrap();
+        for _ in 0..3 {
+            store.store_plan(&bsr, PlanOptions::tvm_plus(), &ep).unwrap();
+            store.store_packed(&w, &bsr).unwrap();
+        }
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.stats().writes, 2);
+    }
+}

@@ -18,10 +18,11 @@ use super::cache::{ExecPlan, PlanCache};
 use super::hwspec::HwSpec;
 use super::plan::{OrderPolicy, PlanOptions};
 use crate::kernels::bsr_spmm::SpmmPlan;
+use crate::planstore::PlanStore;
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::pattern::PatternStats;
 use crate::sparse::prune::BlockShape;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 /// Per-matrix execution parameters chosen by the auto-scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,6 +72,11 @@ pub struct AutoScheduler {
     /// Structure×hardware-keyed execution-plan cache: repeated inference
     /// over the same pruned weights never re-plans (see [`PlanCache`]).
     pub cache: PlanCache,
+    /// Optional persistent artifact store ([`AutoScheduler::attach_store`]):
+    /// when present, cache misses load persisted plans instead of
+    /// compiling, and live compiles are written back for the next
+    /// process restart.
+    store: RwLock<Option<Arc<PlanStore>>>,
 }
 
 impl AutoScheduler {
@@ -80,6 +86,7 @@ impl AutoScheduler {
             hw,
             buffer: TaskBuffer::new(PlanOptions::tvm_plus()),
             cache: PlanCache::new(),
+            store: RwLock::new(None),
         }
     }
 
@@ -89,6 +96,7 @@ impl AutoScheduler {
             hw,
             buffer: TaskBuffer::new(PlanOptions::no_reuse()),
             cache: PlanCache::new(),
+            store: RwLock::new(None),
         }
     }
 
@@ -98,7 +106,23 @@ impl AutoScheduler {
             hw,
             buffer: TaskBuffer::new(opts),
             cache: PlanCache::new(),
+            store: RwLock::new(None),
         }
+    }
+
+    /// Attach a persistent artifact store: subsequent
+    /// [`AutoScheduler::exec_plan`] misses load through it, and live
+    /// compiles write back. Callable on a shared `Arc<AutoScheduler>`
+    /// (interior mutability) so `serve` can wire the store after
+    /// construction.
+    pub fn attach_store(&self, store: Arc<PlanStore>) {
+        *self.store.write().expect("scheduler store poisoned") = Some(store);
+    }
+
+    /// The attached artifact store, if any (the sparse engine consults
+    /// it for pre-packed weights at construction).
+    pub fn store(&self) -> Option<Arc<PlanStore>> {
+        self.store.read().expect("scheduler store poisoned").clone()
     }
 
     /// Plan (or fetch) the execution plan for a matrix.
@@ -109,9 +133,13 @@ impl AutoScheduler {
     /// Cached hot path: plan + precomputed structure statistics in one
     /// lookup keyed by (structure, shape, hardware). A hit performs zero
     /// re-planning and zero structure walks; [`ExecPlan::params_for`]
-    /// then derives threads/grain in O(1) per call.
+    /// then derives threads/grain in O(1) per call. With a store
+    /// attached, a cache miss loads the persisted plan before falling
+    /// back to live compilation.
     pub fn exec_plan(&self, label: &str, m: &BsrMatrix) -> Arc<ExecPlan> {
-        self.cache.get_or_compile(label, m, &self.hw, &self.buffer)
+        let store = self.store();
+        self.cache
+            .get_or_load(label, m, &self.hw, &self.buffer, store.as_deref())
     }
 
     /// Choose threads/grain for one spmm over `tokens` activation columns.

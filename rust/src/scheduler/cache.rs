@@ -19,17 +19,26 @@
 //! [`PlanCache::with_capacity`] to configure) keeps a long-lived server
 //! facing unbounded structure churn from growing without limit, and
 //! eviction counts are exported through [`CacheStats`] alongside
-//! hits/misses. Persistence across restarts is the remaining ROADMAP
-//! half of this item.
+//! hits/misses.
+//!
+//! Persistence across restarts is delegated to the
+//! [`planstore`][crate::planstore] subsystem: [`PlanCache::get_or_load`]
+//! consults an optional [`PlanStore`] between the in-memory lookup and
+//! live compilation (load-through), and writes freshly compiled plans
+//! back (write-back). Store loads count as cache *misses* here — the
+//! store's own [`StoreStats`][crate::planstore::StoreStats] distinguish
+//! warm loads from cold compiles.
 
 use super::autosched::ExecParams;
 use super::buffer::TaskBuffer;
 use super::hwspec::HwSpec;
 use super::task::{SparseTask, TaskKey};
 use crate::kernels::bsr_spmm::SpmmPlan;
+use crate::planstore::PlanStore;
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::pattern::PatternStats;
 use crate::sparse::prune::BlockShape;
+use crate::util::json::Json;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -70,6 +79,21 @@ pub struct CacheStats {
     /// Entries displaced by the LRU cap since construction.
     pub evictions: u64,
     pub capacity: usize,
+}
+
+impl CacheStats {
+    /// JSON rendering for the `serve` stats endpoint (registered as a
+    /// metrics gauge so warm-start efficacy is observable in production
+    /// output).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("hits", self.hits)
+            .set("misses", self.misses)
+            .set("entries", self.entries)
+            .set("evictions", self.evictions)
+            .set("capacity", self.capacity);
+        j
+    }
 }
 
 /// Default [`PlanCache`] capacity: comfortably above what a multi-layer
@@ -135,6 +159,22 @@ impl PlanCache {
         hw: &HwSpec,
         buffer: &TaskBuffer,
     ) -> Arc<ExecPlan> {
+        self.get_or_load(label, m, hw, buffer, None)
+    }
+
+    /// As [`PlanCache::get_or_compile`], with an optional persistent
+    /// [`PlanStore`] consulted between the in-memory lookup and live
+    /// compilation. A store hit skips the task buffer entirely (zero
+    /// live planning); a live compile is written back so the next
+    /// process restart warm-starts.
+    pub fn get_or_load(
+        &self,
+        label: &str,
+        m: &BsrMatrix,
+        hw: &HwSpec,
+        buffer: &TaskBuffer,
+        store: Option<&PlanStore>,
+    ) -> Arc<ExecPlan> {
         let key = (SparseTask::for_bsr(label, m).key, hw.fingerprint());
         {
             let mut st = self.entries.lock().expect("plan cache poisoned");
@@ -147,6 +187,14 @@ impl PlanCache {
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        // Load-through: a persisted plan (validated against `m` by the
+        // store, keyed by the buffer's compilation options) replaces
+        // compilation outright.
+        if let Some(st) = store {
+            if let Some(loaded) = st.load_plan(m, buffer.options()) {
+                return self.insert(key, loaded);
+            }
+        }
         // Compile outside the lock; the task buffer dedups the underlying
         // SpmmPlan, so a racing compile of the same structure is cheap.
         let plan = buffer.plan_for(label, m);
@@ -157,6 +205,17 @@ impl PlanCache {
             block_rows: m.block_rows(),
             mean_blocks_per_row: stats.mean_blocks_per_row,
         });
+        let inserted = self.insert(key, built);
+        // Write-back: best-effort persistence of the live compile (a
+        // full disk or read-only store must never fail the hot path).
+        if let Some(st) = store {
+            let _ = st.store_plan(m, buffer.options(), &inserted);
+        }
+        inserted
+    }
+
+    /// Insert under the LRU policy; a racing earlier insert wins.
+    fn insert(&self, key: (TaskKey, u64), plan: Arc<ExecPlan>) -> Arc<ExecPlan> {
         let mut st = self.entries.lock().expect("plan cache poisoned");
         st.tick += 1;
         let tick = st.tick;
@@ -179,11 +238,11 @@ impl PlanCache {
         st.map.insert(
             key,
             LruEntry {
-                plan: Arc::clone(&built),
+                plan: Arc::clone(&plan),
                 last_used: tick,
             },
         );
-        built
+        plan
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -358,5 +417,50 @@ mod tests {
         assert_eq!(s.entries, 1);
         assert_eq!(s.hits + s.misses, 160);
         assert!(s.hits >= 160 - 8, "hits {}", s.hits);
+    }
+
+    #[test]
+    fn store_load_through_and_write_back() {
+        let dir = std::env::temp_dir().join(format!(
+            "sparsebert-cache-store-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let hw = HwSpec::haswell_reference();
+        let store = crate::planstore::PlanStore::open(&dir, &hw).unwrap();
+        let m = bsr(9, 0.5);
+        // cold: compiled live through the buffer, written back to disk
+        let cache = PlanCache::new();
+        let buffer = TaskBuffer::new(PlanOptions::default());
+        let a = cache.get_or_load("x", &m, &hw, &buffer, Some(&store));
+        assert_eq!(buffer.len(), 1);
+        assert_eq!(store.stats().writes, 1);
+        // warm: fresh cache + fresh buffer load from the store — the
+        // buffer never compiles anything
+        let store2 = crate::planstore::PlanStore::open(&dir, &hw).unwrap();
+        let cache2 = PlanCache::new();
+        let buffer2 = TaskBuffer::new(PlanOptions::default());
+        let b = cache2.get_or_load("x", &m, &hw, &buffer2, Some(&store2));
+        assert_eq!(buffer2.len(), 0, "warm path must not compile");
+        assert_eq!(store2.stats().plan_hits, 1);
+        assert_eq!(a.plan.order, b.plan.order);
+        // once loaded it is memory-cached: the next lookup is a pure hit
+        // with no further store traffic
+        let _ = cache2.get_or_load("x", &m, &hw, &buffer2, Some(&store2));
+        assert_eq!(cache2.stats().hits, 1);
+        assert_eq!(store2.stats().plan_hits, 1);
+    }
+
+    #[test]
+    fn cache_stats_render_as_json() {
+        let cache = PlanCache::with_capacity(3);
+        let buffer = TaskBuffer::new(PlanOptions::default());
+        let hw = HwSpec::haswell_reference();
+        let _ = cache.get_or_compile("a", &bsr(1, 0.5), &hw, &buffer);
+        let j = cache.stats().to_json();
+        assert_eq!(j.get("misses").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("entries").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("capacity").and_then(Json::as_f64), Some(3.0));
     }
 }

@@ -10,8 +10,49 @@
 use super::json::{self, Json};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::fmt;
 use std::path::{Path, PathBuf};
+
+/// Manifest format version written by [`TensorBundle::save`]. Loaders
+/// reject a *different* recorded version with a typed error; an absent
+/// field is accepted as version 1 (manifests written by the Python
+/// pipeline and by pre-guard Rust builds carry none).
+pub const BUNDLE_FORMAT_VERSION: usize = 1;
+
+/// Typed decode errors for tensor files and bundles: a version or
+/// byte-order mismatch must surface as a recognizable error, never as a
+/// garbage tensor. Carried through `anyhow::Result` at the public API.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TensorFileError {
+    /// `.npy` major version outside the supported 1..=3 range.
+    UnsupportedNpyVersion(u8),
+    /// Dtype descr declares non-little-endian data (e.g. `'>f4'`); the
+    /// raw-byte decode below would silently produce byte-swapped floats.
+    NonLittleEndian(String),
+    /// Bundle manifest written by an incompatible format version.
+    BundleVersionMismatch { found: String },
+}
+
+impl fmt::Display for TensorFileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TensorFileError::UnsupportedNpyVersion(v) => {
+                write!(f, "unsupported npy format version {v} (supported: 1..=3)")
+            }
+            TensorFileError::NonLittleEndian(descr) => write!(
+                f,
+                "npy dtype descr '{descr}' declares big-endian data; only little-endian \
+                 ('<f4' / '<i4') is supported"
+            ),
+            TensorFileError::BundleVersionMismatch { found } => write!(
+                f,
+                "bundle manifest format_version {found} != supported {BUNDLE_FORMAT_VERSION}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TensorFileError {}
 
 /// Supported element types.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,6 +73,9 @@ impl Dtype {
         match d {
             "<f4" | "|f4" | "=f4" => Ok(Dtype::F32),
             "<i4" | "|i4" | "=i4" => Ok(Dtype::I32),
+            other if other.starts_with('>') => {
+                Err(TensorFileError::NonLittleEndian(other.to_string()).into())
+            }
             other => bail!("unsupported npy dtype descr '{other}' (only <f4 / <i4)"),
         }
     }
@@ -78,39 +122,53 @@ impl NpyTensor {
 
 /// Read one `.npy` file (format version 1.0/2.0, C-order).
 pub fn read_npy(path: &Path) -> Result<NpyTensor> {
-    let mut file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
-    let mut magic = [0u8; 8];
-    file.read_exact(&mut magic).context("npy magic")?;
-    if &magic[0..6] != b"\x93NUMPY" {
-        bail!("{path:?}: not an npy file");
+    let bytes = std::fs::read(path).with_context(|| format!("open {path:?}"))?;
+    parse_npy(&bytes).with_context(|| format!("{path:?}"))
+}
+
+/// Decode one `.npy` document from memory (the file-less path used by
+/// the plan store, which checksums the same buffer it decodes).
+pub fn parse_npy(bytes: &[u8]) -> Result<NpyTensor> {
+    if bytes.len() < 8 || &bytes[0..6] != b"\x93NUMPY" {
+        bail!("not an npy file");
     }
-    let major = magic[6];
-    let header_len = match major {
+    let major = bytes[6];
+    let (header_len, header_start) = match major {
         1 => {
-            let mut b = [0u8; 2];
-            file.read_exact(&mut b)?;
-            u16::from_le_bytes(b) as usize
+            if bytes.len() < 10 {
+                bail!("truncated npy header length");
+            }
+            (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10)
         }
         2 | 3 => {
-            let mut b = [0u8; 4];
-            file.read_exact(&mut b)?;
-            u32::from_le_bytes(b) as usize
+            if bytes.len() < 12 {
+                bail!("truncated npy header length");
+            }
+            (
+                u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+                12,
+            )
         }
-        v => bail!("{path:?}: unsupported npy version {v}"),
+        v => return Err(TensorFileError::UnsupportedNpyVersion(v).into()),
     };
-    let mut header = vec![0u8; header_len];
-    file.read_exact(&mut header)?;
-    let header = String::from_utf8(header).context("npy header utf8")?;
-    let (descr, fortran, shape) = parse_npy_header(&header)
-        .with_context(|| format!("{path:?}: bad npy header: {header}"))?;
+    let header_end = header_start + header_len;
+    if bytes.len() < header_end {
+        bail!("truncated npy header");
+    }
+    let header =
+        std::str::from_utf8(&bytes[header_start..header_end]).context("npy header utf8")?;
+    let (descr, fortran, shape) =
+        parse_npy_header(header).with_context(|| format!("bad npy header: {header}"))?;
     if fortran {
-        bail!("{path:?}: fortran_order npy not supported");
+        bail!("fortran_order npy not supported");
     }
     let dtype = Dtype::from_descr(&descr)?;
     let count: usize = shape.iter().product();
-    let mut raw = vec![0u8; count * 4];
-    file.read_exact(&mut raw)
-        .with_context(|| format!("{path:?}: truncated data (want {count} elems)"))?;
+    let data = &bytes[header_end..];
+    if data.len() < count * 4 {
+        bail!("truncated data (want {count} elems)");
+    }
+    let raw = &data[..count * 4];
     Ok(match dtype {
         Dtype::F32 => {
             let data = raw
@@ -164,8 +222,9 @@ fn extract_quoted(h: &str, key: &str) -> Option<String> {
     Some(rest[..end].to_string())
 }
 
-/// Write a `.npy` v1.0 file.
-pub fn write_npy(path: &Path, t: &NpyTensor) -> Result<()> {
+/// Encode one `.npy` v1.0 document into memory (so callers can checksum
+/// exactly what lands on disk without a read-back pass).
+pub fn npy_bytes(t: &NpyTensor) -> Vec<u8> {
     let shape_str = match t.shape.len() {
         1 => format!("({},)", t.shape[0]),
         _ => format!(
@@ -183,27 +242,28 @@ pub fn write_npy(path: &Path, t: &NpyTensor) -> Result<()> {
     let pad = (64 - unpadded % 64) % 64;
     header.push_str(&" ".repeat(pad));
     header.push('\n');
-    let mut file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
-    file.write_all(b"\x93NUMPY\x01\x00")?;
-    file.write_all(&(header.len() as u16).to_le_bytes())?;
-    file.write_all(header.as_bytes())?;
+    let mut out = Vec::with_capacity(10 + header.len() + t.len() * 4);
+    out.extend_from_slice(b"\x93NUMPY\x01\x00");
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
     match t.dtype {
         Dtype::F32 => {
-            let mut raw = Vec::with_capacity(t.f32_data.len() * 4);
             for &x in &t.f32_data {
-                raw.extend_from_slice(&x.to_le_bytes());
+                out.extend_from_slice(&x.to_le_bytes());
             }
-            file.write_all(&raw)?;
         }
         Dtype::I32 => {
-            let mut raw = Vec::with_capacity(t.i32_data.len() * 4);
             for &x in &t.i32_data {
-                raw.extend_from_slice(&x.to_le_bytes());
+                out.extend_from_slice(&x.to_le_bytes());
             }
-            file.write_all(&raw)?;
         }
     }
-    Ok(())
+    out
+}
+
+/// Write a `.npy` v1.0 file.
+pub fn write_npy(path: &Path, t: &NpyTensor) -> Result<()> {
+    std::fs::write(path, npy_bytes(t)).with_context(|| format!("create {path:?}"))
 }
 
 /// A named bundle of tensors backed by a directory:
@@ -236,6 +296,17 @@ impl TensorBundle {
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("read {manifest_path:?}"))?;
         let manifest = json::parse(&text).with_context(|| format!("parse {manifest_path:?}"))?;
+        // Format guard: a manifest stamped with a different version is
+        // rejected up front; an absent field (Python writer, legacy
+        // bundles) is treated as version 1.
+        if let Some(v) = manifest.get("format_version") {
+            if v.as_usize() != Some(BUNDLE_FORMAT_VERSION) {
+                return Err(anyhow::Error::new(TensorFileError::BundleVersionMismatch {
+                    found: v.to_string_compact(),
+                })
+                .context(format!("{manifest_path:?}")));
+            }
+        }
         let mut bundle = TensorBundle::new();
         if let Some(Json::Obj(meta)) = manifest.get("meta") {
             for (k, v) in meta {
@@ -294,7 +365,10 @@ impl TensorBundle {
             meta.set(k, v.as_str());
         }
         let mut manifest = Json::obj();
-        manifest.set("tensors", tensors).set("meta", meta);
+        manifest
+            .set("format_version", BUNDLE_FORMAT_VERSION)
+            .set("tensors", tensors)
+            .set("meta", meta);
         std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty())?;
         Ok(())
     }
@@ -374,6 +448,62 @@ mod tests {
         bytes.extend_from_slice(&1.0f32.to_le_bytes());
         std::fs::write(&p, bytes).unwrap();
         assert!(read_npy(&p).is_err());
+    }
+
+    #[test]
+    fn big_endian_npy_rejected_with_typed_error() {
+        let d = tmpdir("bigend");
+        let p = d.join("be.npy");
+        let header = "{'descr': '>f4', 'fortran_order': False, 'shape': (1,), }\n";
+        let mut bytes: Vec<u8> = b"\x93NUMPY\x01\x00".to_vec();
+        bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&1.0f32.to_be_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        let err = read_npy(&p).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("big-endian"),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn future_npy_version_rejected_with_typed_error() {
+        let d = tmpdir("npyver");
+        let p = d.join("v9.npy");
+        let mut bytes: Vec<u8> = b"\x93NUMPY\x09\x00".to_vec();
+        bytes.extend_from_slice(&[0u8; 8]);
+        std::fs::write(&p, bytes).unwrap();
+        let err = read_npy(&p).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unsupported npy format version 9"),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn bundle_version_guard() {
+        let d = tmpdir("bver");
+        let mut b = TensorBundle::new();
+        b.insert("x", NpyTensor::from_f32(vec![1], vec![1.0]));
+        b.save(&d).unwrap();
+        let m = d.join("manifest.json");
+        let text = std::fs::read_to_string(&m).unwrap();
+        assert!(text.contains("format_version"));
+        // mismatched version → typed error
+        std::fs::write(&m, text.replace("\"format_version\": 1", "\"format_version\": 7"))
+            .unwrap();
+        let err = TensorBundle::load(&d).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("format_version 7"),
+            "unexpected error: {err:#}"
+        );
+        // absent version (legacy / Python-written manifests) still loads
+        let legacy = std::fs::read_to_string(&m)
+            .unwrap()
+            .replace("\"format_version\": 7,", "");
+        std::fs::write(&m, legacy).unwrap();
+        assert!(TensorBundle::load(&d).is_ok());
     }
 
     #[test]
