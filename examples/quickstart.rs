@@ -1,22 +1,23 @@
-//! Quickstart: the library's core loop.
+//! Quickstart: the library's core loop, through the unified builder.
 //!
-//! 1. Build a BERT-geometry model with synthetic weights.
-//! 2. Apply the paper's structured (group/block) pruning at 80%.
-//! 3. Convert to BSR, let the auto-scheduler compile reuse-deduped plans
-//!    — writing both plans and packed weights into a persistent artifact
-//!    store.
-//! 4. Simulate a serving restart: a fresh scheduler warm-starts entirely
-//!    from the store (zero live plannings, zero BSR re-packs).
-//! 5. Run the same input through the compiled-dense and (warm) sparse
+//! 1. Describe the engine once: `EngineBuilder` owns the whole
+//!    weights → prune → scheduler → store-attach → engine chain (the
+//!    algorithm ↔ compilation co-design lives in one declaration).
+//! 2. Cold build: plans compile and BSR buffers pack, both persisted
+//!    into an artifact store.
+//! 3. Simulate a serving restart: the same builder against the reopened
+//!    store warm-starts entirely from disk (zero live plannings, zero
+//!    BSR re-packs) — the `BuildReport` proves it.
+//! 4. Run the same input through the compiled-dense and (warm) sparse
 //!    engines; verify they agree and compare latency + memory footprint.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
-use sparsebert::model::engine::Engine;
-use sparsebert::model::{BertConfig, BertWeights, PruneMode, PruneSpec};
+use sparsebert::deploy::EngineBuilder;
+use sparsebert::model::engine::{Engine, EngineKind};
+use sparsebert::model::BertConfig;
 use sparsebert::planstore::PlanStore;
-use sparsebert::scheduler::{AutoScheduler, HwSpec};
+use sparsebert::scheduler::HwSpec;
 use sparsebert::sparse::prune::BlockShape;
 use sparsebert::util::pool::default_threads;
 use sparsebert::util::propcheck::max_abs_diff;
@@ -29,70 +30,59 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = BertConfig::base();
     cfg.layers = 2;
     let threads = default_threads();
+    let block = BlockShape::new(1, 32);
     println!("hardware: {}", HwSpec::detect());
 
-    // 1. synthetic weights, 2. structured pruning (1x32 blocks @ 80%)
-    let block = BlockShape::new(1, 32);
-    let mut weights = BertWeights::synthetic(&cfg, 42);
-    let spec = PruneSpec {
-        mode: PruneMode::Structured { pool: 16 },
-        sparsity: 0.8,
-        block,
-    };
-    let achieved = weights.prune(&spec, 7);
-    println!("pruned transformer blocks to {:.1}% zeros (block {block})", achieved * 100.0);
-    let weights = Arc::new(weights);
-
-    // 3. engines: compiled-dense (negative control) vs BSR + scheduler.
-    // The sparse build runs against a persistent artifact store (the
-    // `sparsebert serve --plan-store` machinery): compiled plans and
-    // packed BSR buffers land on disk as a side effect.
+    // 1.+2. One declaration builds the whole sparse stack: synthetic
+    // weights, structured pruning (1x32 blocks @ 80%), BSR conversion,
+    // reuse-deduped plan compilation — persisted into an artifact store
+    // (the `sparsebert serve --plan-store` machinery).
     let store_dir = std::env::temp_dir().join("sparsebert-quickstart-store");
     let _ = std::fs::remove_dir_all(&store_dir);
-    let dense = CompiledDenseEngine::new(Arc::clone(&weights), threads);
-    let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
-    sched.attach_store(Arc::new(PlanStore::open(&store_dir, &sched.hw)?));
-    let cold_t = Instant::now();
-    let _cold = SparseBsrEngine::new(Arc::clone(&weights), block, Arc::clone(&sched), threads)?;
-    let cold_ms = cold_t.elapsed().as_secs_f64() * 1e3;
-    let snap = sched.buffer.stats.snapshot();
+    let hw = HwSpec::detect();
+    let cold = EngineBuilder::new(EngineKind::TvmPlus)
+        .weights_synthetic(cfg.clone(), 42)
+        .block(block)
+        .sparsity(0.8)
+        .threads(threads)
+        .plan_store(Arc::new(PlanStore::open(&store_dir, &hw)?))
+        .build()?;
+    println!("cold  build: {}", cold.report.summary());
     println!(
-        "scheduler compiled {} programs for {} block-rows (row reuse {:.1}%)",
-        snap.programs_compiled,
-        snap.rows_total,
-        snap.row_reuse_rate() * 100.0
+        "pruned transformer blocks to ~80% zeros (block {block}), {} plans compiled live",
+        cold.report.live_plans
     );
 
-    // 4. "restart" the server: a fresh scheduler + reopened store must
-    // reload everything — zero live plannings, zero BSR re-packs.
-    let store = Arc::new(PlanStore::open(&store_dir, &HwSpec::detect())?);
-    let sched_warm = Arc::new(AutoScheduler::new(HwSpec::detect()));
-    sched_warm.attach_store(Arc::clone(&store));
-    let warm_t = Instant::now();
-    let sparse =
-        SparseBsrEngine::new(Arc::clone(&weights), block, Arc::clone(&sched_warm), threads)?;
-    let warm_ms = warm_t.elapsed().as_secs_f64() * 1e3;
-    let ws = store.stats();
-    println!(
-        "warm restart: {} plans + {} packed weights loaded from {:?} in {warm_ms:.1} ms \
-         (cold build {cold_ms:.1} ms, live plannings on warm path: {})",
-        ws.plan_hits,
-        ws.weight_hits,
-        store_dir,
-        sched_warm.buffer.len()
-    );
-    assert_eq!(sched_warm.buffer.len(), 0, "warm start must not re-plan");
-    assert_eq!(ws.weight_misses, 0, "warm start must not re-pack");
-    assert_eq!(ws.corrupt_rejects, 0, "no artifact may fail verification");
+    // The dense negative control runs the *same pruned weights* through
+    // compiled-dense kernels — zeros are stored and multiplied like any
+    // other value, so the sparsity buys nothing there.
+    let dense = EngineBuilder::new(EngineKind::TvmStd)
+        .weights(Arc::clone(&cold.weights))
+        .threads(threads)
+        .build()?;
 
-    // 5. run + compare
+    // 3. "Restart the server": the same declaration against the
+    // reopened store must reload everything — zero live plannings, zero
+    // BSR re-packs — and the report says so.
+    let warm = EngineBuilder::new(EngineKind::TvmPlus)
+        .weights_synthetic(cfg.clone(), 42)
+        .block(block)
+        .sparsity(0.8)
+        .threads(threads)
+        .plan_store(Arc::new(PlanStore::open(&store_dir, &hw)?))
+        .build()?;
+    println!("warm  build: {}", warm.report.summary());
+    assert!(warm.report.is_warm(), "warm start must not re-plan or re-pack");
+    assert_eq!(warm.report.live_plans, 0, "warm start must not re-plan");
+    assert_eq!(warm.report.packs, 0, "warm start must not re-pack");
+
+    // 4. run + compare
     let tokens: Vec<u32> = (0..128).map(|i| 10 + (i * 37) % 20000).collect();
-    let x = weights.embed(&tokens);
-    let warm = |e: &dyn Engine| {
-        e.forward(&x);
-    };
-    warm(&dense);
-    warm(&sparse);
+    let x = warm.weights.embed(&tokens);
+    let sparse = &warm.engine;
+    let dense = &dense.engine;
+    dense.forward(&x); // warm both code paths
+    sparse.forward(&x);
     let t0 = Instant::now();
     let yd = dense.forward(&x);
     let dense_ms = t0.elapsed().as_secs_f64() * 1e3;

@@ -16,9 +16,9 @@
 use sparsebert::coordinator::batcher::BatchPolicy;
 use sparsebert::coordinator::request::WorkloadTrace;
 use sparsebert::coordinator::Router;
-use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
-use sparsebert::model::engine::Engine;
-use sparsebert::model::{BertConfig, BertWeights, PruneMode, PruneSpec};
+use sparsebert::deploy::EngineBuilder;
+use sparsebert::model::engine::EngineKind;
+use sparsebert::model::{BertConfig, BertWeights};
 use sparsebert::planstore::PlanStore;
 use sparsebert::scheduler::{AutoScheduler, HwSpec};
 use sparsebert::sparse::prune::BlockShape;
@@ -47,25 +47,12 @@ fn main() -> anyhow::Result<()> {
     println!("model: {} | hw: {}", provenance, HwSpec::detect());
 
     let block = BlockShape::new(1, 32);
-    let mut pruned = (*weights).clone();
-    // idempotent when the bundle is already sparse: magnitude projection
-    // keeps existing zeros zero.
-    pruned.prune(
-        &PruneSpec {
-            mode: PruneMode::Structured { pool: 16 },
-            sparsity: 0.8,
-            block,
-        },
-        7,
-    );
-    let pruned = Arc::new(pruned);
     let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
     // Optional warm start: `serve_bert <dir>` persists plans + packed
     // weights there and reloads them on the next invocation.
     let store = match std::env::args().nth(1) {
         Some(dir) => {
             let store = Arc::new(PlanStore::open(std::path::Path::new(&dir), &sched.hw)?);
-            sched.attach_store(Arc::clone(&store));
             println!("plan store: {dir} ({} artifacts on open)", store.len());
             Some(store)
         }
@@ -73,26 +60,39 @@ fn main() -> anyhow::Result<()> {
     };
 
     let mut router = Router::new();
-    let exec_pool = router.exec_pool();
+    let dense = EngineBuilder::new(EngineKind::TvmStd)
+        .weights(Arc::clone(&weights))
+        .threads(threads)
+        .build()?;
     router.register(
         "tvm",
-        Arc::new(CompiledDenseEngine::new(Arc::clone(&weights), threads)) as Arc<dyn Engine>,
-        Arc::clone(&weights),
+        dense.engine,
+        dense.weights,
         BatchPolicy::default(),
         threads,
     );
-    // The sparse engine shares the router's engine-side pool: batches
-    // and kernels fan out on one set of workers (the serve wiring).
+    // The sparse engine: one builder call owns pruning (idempotent when
+    // the bundle is already sparse: the magnitude projection keeps
+    // existing zeros zero), BSR conversion, plan compilation, and the
+    // optional store attach — and it shares the router's engine-side
+    // pool so batches and kernels fan out on one set of workers (the
+    // serve wiring).
+    let mut sparse = EngineBuilder::new(EngineKind::TvmPlus)
+        .weights(Arc::clone(&weights))
+        .block(block)
+        .sparsity(0.8)
+        .threads(threads)
+        .scheduler(Arc::clone(&sched))
+        .exec_pool(router.exec_pool());
+    if let Some(store) = &store {
+        sparse = sparse.plan_store(Arc::clone(store));
+    }
+    let sparse = sparse.build()?;
+    println!("{}", sparse.report.summary());
     router.register(
         "tvm+",
-        Arc::new(SparseBsrEngine::with_pool(
-            Arc::clone(&pruned),
-            block,
-            Arc::clone(&sched),
-            threads,
-            Some(exec_pool),
-        )?) as Arc<dyn Engine>,
-        Arc::clone(&pruned),
+        sparse.engine,
+        sparse.weights,
         BatchPolicy::default(),
         threads,
     );

@@ -9,10 +9,10 @@
 //!
 //! Run: `cargo run --release --example sparsity_sweep`
 
-use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
-use sparsebert::model::engine::Engine;
-use sparsebert::model::{BertConfig, BertWeights, PruneMode, PruneSpec};
-use sparsebert::scheduler::{AutoScheduler, HwSpec};
+use sparsebert::deploy::EngineBuilder;
+use sparsebert::model::engine::{Engine, EngineKind};
+use sparsebert::model::{BertConfig, BertWeights};
+use sparsebert::scheduler::HwSpec;
 use sparsebert::sparse::prune::BlockShape;
 use sparsebert::util::bench::{measure, BenchConfig};
 use sparsebert::util::pool::default_threads;
@@ -43,7 +43,11 @@ fn main() -> anyhow::Result<()> {
     // dense baseline once
     let dense_w = Arc::new(BertWeights::synthetic(&cfg, 42));
     let x = dense_w.embed(&tokens);
-    let dense_engine = CompiledDenseEngine::new(Arc::clone(&dense_w), threads);
+    let dense_engine = EngineBuilder::new(EngineKind::TvmStd)
+        .weights(Arc::clone(&dense_w))
+        .threads(threads)
+        .build()?
+        .engine;
     let dense_ms = measure("dense", &bench, || {
         std::hint::black_box(dense_engine.forward(&x));
     })
@@ -54,18 +58,14 @@ fn main() -> anyhow::Result<()> {
     for block in blocks {
         print!("{:<10}", block.to_string());
         for ratio in ratios {
-            let mut w = BertWeights::synthetic(&cfg, 42);
-            w.prune(
-                &PruneSpec {
-                    mode: PruneMode::Structured { pool: 16 },
-                    sparsity: ratio,
-                    block,
-                },
-                7,
-            );
-            let w = Arc::new(w);
-            let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
-            let engine = SparseBsrEngine::new(Arc::clone(&w), block, sched, threads)?;
+            // one builder call per cell: prune → convert → plan → engine
+            let engine = EngineBuilder::new(EngineKind::TvmPlus)
+                .weights_synthetic(cfg.clone(), 42)
+                .block(block)
+                .sparsity(ratio)
+                .threads(threads)
+                .build()?
+                .engine;
             let ms = measure(&format!("{block}@{ratio}"), &bench, || {
                 std::hint::black_box(engine.forward(&x));
             })

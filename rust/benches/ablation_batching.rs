@@ -9,11 +9,11 @@ use sparsebert::bench_harness::{
 use sparsebert::coordinator::batcher::BatchPolicy;
 use sparsebert::coordinator::request::WorkloadTrace;
 use sparsebert::coordinator::Router;
-use sparsebert::model::bert::SparseBsrEngine;
+use sparsebert::deploy::EngineBuilder;
 use sparsebert::model::config::BertConfig;
-use sparsebert::model::engine::Engine;
+use sparsebert::model::engine::EngineKind;
 use sparsebert::model::weights::{BertWeights, PruneMode, PruneSpec};
-use sparsebert::scheduler::{AutoScheduler, HwSpec};
+use sparsebert::scheduler::HwSpec;
 use sparsebert::sparse::prune::BlockShape;
 use sparsebert::util::pool::default_threads;
 use std::sync::Arc;
@@ -90,18 +90,14 @@ fn main() {
         ),
     ] {
         let mut router = Router::new();
-        let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
-        let engine: Arc<dyn Engine> = Arc::new(
-            SparseBsrEngine::with_pool(
-                Arc::clone(&w),
-                block,
-                sched,
-                threads,
-                Some(router.exec_pool()),
-            )
-            .unwrap(),
-        );
-        router.register("tvm+", engine, Arc::clone(&w), policy, threads);
+        let built = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(Arc::clone(&w))
+            .block(block)
+            .threads(threads)
+            .exec_pool(router.exec_pool())
+            .build()
+            .unwrap();
+        router.register("tvm+", built.engine, built.weights, policy, threads);
         let trace = WorkloadTrace::poisson(n_req, rate, 48, model.vocab, 99);
         let report = router.run_trace("tvm+", &trace).unwrap();
         println!(

@@ -13,9 +13,9 @@
 //! same-structure calls.
 
 use sparsebert::bench_harness::{render_sched_sweep, run_scheduler_sweep, SchedSweepConfig};
-use sparsebert::model::bert::SparseBsrEngine;
+use sparsebert::deploy::EngineBuilder;
 use sparsebert::model::config::BertConfig;
-use sparsebert::model::engine::Engine;
+use sparsebert::model::engine::{Engine, EngineKind};
 use sparsebert::model::weights::{BertWeights, PruneMode, PruneSpec};
 use sparsebert::scheduler::{AutoScheduler, HwSpec, PlanOptions};
 use sparsebert::sparse::prune::BlockShape;
@@ -52,22 +52,33 @@ fn main() {
         let w = Arc::new(w);
         let tokens: Vec<u32> = (0..seq as u32).collect();
         let x = w.embed(&tokens);
+        // One builder closure per scheduler flavour: the ablation varies
+        // only the scheduler options, everything else comes from the
+        // unified construction path.
+        let build_on = |sched: Arc<AutoScheduler>| {
+            EngineBuilder::new(EngineKind::TvmPlus)
+                .weights(Arc::clone(&w))
+                .block(block)
+                .threads(threads)
+                .scheduler(sched)
+                .build()
+                .unwrap()
+                .engine
+        };
         // construction (plan compilation) time, with vs without dedup
         let build_with = measure_custom(&format!("build+{block}"), &bench, || {
-            let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
             let t0 = Instant::now();
-            let _e = SparseBsrEngine::new(Arc::clone(&w), block, sched, threads).unwrap();
+            let _e = build_on(Arc::new(AutoScheduler::new(HwSpec::detect())));
             t0.elapsed().as_secs_f64() * 1e3
         });
         let build_without = measure_custom(&format!("build-{block}"), &bench, || {
-            let sched = Arc::new(AutoScheduler::without_reuse(HwSpec::detect()));
             let t0 = Instant::now();
-            let _e = SparseBsrEngine::new(Arc::clone(&w), block, sched, threads).unwrap();
+            let _e = build_on(Arc::new(AutoScheduler::without_reuse(HwSpec::detect())));
             t0.elapsed().as_secs_f64() * 1e3
         });
         // execution with similarity ordering vs sequential
         let sched_o = Arc::new(AutoScheduler::new(HwSpec::detect()));
-        let eng_o = SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched_o), threads).unwrap();
+        let eng_o = build_on(Arc::clone(&sched_o));
         let exec_ordered = measure(&format!("exec+{block}"), &bench, || {
             std::hint::black_box(eng_o.forward(&x));
         });
@@ -75,7 +86,7 @@ fn main() {
             HwSpec::detect(),
             PlanOptions::default(), // dedup on, sequential order
         ));
-        let eng_s = SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched_s), threads).unwrap();
+        let eng_s = build_on(Arc::clone(&sched_s));
         let exec_seq = measure(&format!("exec-{block}"), &bench, || {
             std::hint::black_box(eng_s.forward(&x));
         });

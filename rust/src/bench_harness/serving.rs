@@ -11,11 +11,9 @@ use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::pool::PipelineMode;
 use crate::coordinator::request::WorkloadTrace;
 use crate::coordinator::Router;
-use crate::model::bert::SparseBsrEngine;
+use crate::deploy::EngineBuilder;
 use crate::model::config::BertConfig;
-use crate::model::engine::Engine;
-use crate::model::weights::{BertWeights, PruneMode, PruneSpec};
-use crate::scheduler::{AutoScheduler, HwSpec};
+use crate::model::engine::EngineKind;
 use crate::sparse::prune::BlockShape;
 use crate::util::json::Json;
 use crate::util::pool::{default_threads, Pool};
@@ -98,28 +96,17 @@ pub struct ServingSweepRow {
 /// TVM⁺ engine serve every cell (exactly the `sparsebert serve` wiring);
 /// each cell gets a fresh router so its metrics are isolated.
 pub fn run_serving_sweep(cfg: &ServingSweepConfig) -> Vec<ServingSweepRow> {
-    let mut w = BertWeights::synthetic(&cfg.model, 1234);
-    w.prune(
-        &PruneSpec {
-            mode: PruneMode::Structured { pool: cfg.pool },
-            sparsity: cfg.sparsity,
-            block: cfg.block,
-        },
-        7,
-    );
-    let w = Arc::new(w);
-    let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
     let shared = Arc::new(Pool::new(cfg.threads));
-    let engine: Arc<dyn Engine> = Arc::new(
-        SparseBsrEngine::with_pool(
-            Arc::clone(&w),
-            cfg.block,
-            Arc::clone(&sched),
-            cfg.threads,
-            Some(Arc::clone(&shared)),
-        )
-        .expect("block shape must divide the model geometry"),
-    );
+    let built = EngineBuilder::new(EngineKind::TvmPlus)
+        .weights_synthetic(cfg.model.clone(), 1234)
+        .block(cfg.block)
+        .sparsity(cfg.sparsity)
+        .prune_pool(cfg.pool)
+        .threads(cfg.threads)
+        .exec_pool(Arc::clone(&shared))
+        .build()
+        .expect("block shape must divide the model geometry");
+    let (engine, w) = (built.engine, built.weights);
     let mut rows = Vec::new();
     for &mode in &cfg.modes {
         for &max_batch in &cfg.batch_sizes {

@@ -2,11 +2,10 @@
 //! plus the scheduler-interaction sweep (threads × grain × block shape)
 //! behind the paper's 32x1-vs-32x32 finding.
 
-use crate::interp::bert::InterpEngine;
+use crate::deploy::EngineBuilder;
 use crate::kernels::bsr_spmm::bsr_linear_planned_on;
-use crate::model::bert::{CompiledDenseEngine, SparseBsrEngine};
 use crate::model::config::BertConfig;
-use crate::model::engine::Engine;
+use crate::model::engine::{Engine, EngineKind};
 use crate::model::weights::{BertWeights, PruneMode, PruneSpec};
 use crate::scheduler::{AutoScheduler, CacheStats, HwSpec};
 use crate::sparse::bsr::BsrMatrix;
@@ -122,9 +121,21 @@ pub fn run_table1(cfg: &Table1Config) -> Vec<Table1Row> {
     let mut rows = Vec::new();
 
     // ---- Dense row --------------------------------------------------------
+    // All engines come off the unified builder; the harness passes its
+    // own prepared (already-pruned) weights per row, so no sparsity is
+    // set here — pruning stays visible in this file where the sweep
+    // varies it.
+    let build = |kind: EngineKind, weights: &Arc<BertWeights>| {
+        EngineBuilder::new(kind)
+            .weights(Arc::clone(weights))
+            .threads(cfg.threads)
+            .build()
+            .expect("dense engine build")
+            .engine
+    };
     let (pytorch, tensorflow) = if cfg.eager_baselines {
-        let py = InterpEngine::new(Arc::clone(&dense_weights), false, cfg.threads);
-        let tf = InterpEngine::new(Arc::clone(&dense_weights), true, cfg.threads);
+        let py = build(EngineKind::PyTorch, &dense_weights);
+        let tf = build(EngineKind::TensorFlow, &dense_weights);
         (
             Some(measure("pytorch", &cfg.bench, || {
                 std::hint::black_box(py.forward(&x));
@@ -136,20 +147,19 @@ pub fn run_table1(cfg: &Table1Config) -> Vec<Table1Row> {
     } else {
         (None, None)
     };
-    let tvm_dense_engine = CompiledDenseEngine::new(Arc::clone(&dense_weights), cfg.threads);
+    let tvm_dense_engine = build(EngineKind::TvmStd, &dense_weights);
     let tvm_dense = measure("tvm-dense", &cfg.bench, || {
         std::hint::black_box(tvm_dense_engine.forward(&x));
     });
     // Dense weights through the augmented (BSR) runtime — the paper's
     // 772ms cell: all blocks stored, so TVM⁺ ≈ TVM on dense.
-    let sched_dense = Arc::new(AutoScheduler::new(HwSpec::detect()));
-    let dense_bsr = SparseBsrEngine::new(
-        Arc::clone(&dense_weights),
-        BlockShape::new(1, 32),
-        Arc::clone(&sched_dense),
-        cfg.threads,
-    )
-    .expect("dense bsr engine");
+    let dense_bsr = EngineBuilder::new(EngineKind::TvmPlus)
+        .weights(Arc::clone(&dense_weights))
+        .block(BlockShape::new(1, 32))
+        .threads(cfg.threads)
+        .build()
+        .expect("dense bsr engine")
+        .engine;
     let tvm_plus_dense = measure("tvm+-dense", &cfg.bench, || {
         std::hint::black_box(dense_bsr.forward(&x));
     });
@@ -182,19 +192,21 @@ pub fn run_table1(cfg: &Table1Config) -> Vec<Table1Row> {
         let pruned = Arc::new(pruned);
 
         // Negative control: pruned weights, standard compiled-dense path.
-        let tvm_engine = CompiledDenseEngine::new(Arc::clone(&pruned), cfg.threads);
+        let tvm_engine = build(EngineKind::TvmStd, &pruned);
         let tvm = measure(&format!("tvm-{block}"), &cfg.bench, || {
             std::hint::black_box(tvm_engine.forward(&x));
         });
-        // TVM⁺: BSR kernels + scheduler.
+        // TVM⁺: BSR kernels + scheduler (kept explicit so the row-reuse
+        // stats can be read back after the measurement).
         let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
-        let bsr_engine = SparseBsrEngine::new(
-            Arc::clone(&pruned),
-            block,
-            Arc::clone(&sched),
-            cfg.threads,
-        )
-        .expect("bsr engine");
+        let bsr_engine = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(Arc::clone(&pruned))
+            .block(block)
+            .threads(cfg.threads)
+            .scheduler(Arc::clone(&sched))
+            .build()
+            .expect("bsr engine")
+            .engine;
         let tvm_plus = measure(&format!("tvm+-{block}"), &cfg.bench, || {
             std::hint::black_box(bsr_engine.forward(&x));
         });

@@ -14,19 +14,18 @@
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::request::WorkloadTrace;
 use crate::coordinator::Router;
-use crate::model::bert::SparseBsrEngine;
+use crate::deploy::EngineBuilder;
 use crate::model::config::BertConfig;
-use crate::model::engine::Engine;
+use crate::model::engine::EngineKind;
 use crate::model::weights::{BertWeights, PruneMode, PruneSpec};
 use crate::planstore::{PlanStore, StoreStats};
-use crate::scheduler::{AutoScheduler, HwSpec};
+use crate::scheduler::HwSpec;
 use crate::sparse::prune::BlockShape;
 use crate::util::json::Json;
 use crate::util::pool::Pool;
 use anyhow::Result;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
 
 /// Smoke configuration (mirrors the `serve` wiring at test scale).
 #[derive(Debug, Clone)]
@@ -112,23 +111,22 @@ pub fn run_warm_start_smoke(dir: &Path, cfg: &WarmStartConfig) -> Result<WarmSta
     );
     let w = Arc::new(w);
     let one_run = |store: Arc<PlanStore>| -> Result<RunObservation> {
-        let sched = Arc::new(AutoScheduler::new(hw.clone()));
-        sched.attach_store(Arc::clone(&store));
+        // A fresh scheduler per run models the process restart; the
+        // builder attaches the store and reports build time, live-plan
+        // and pack counts directly.
         let shared = Arc::new(Pool::new(cfg.threads));
-        let t0 = Instant::now();
-        let engine: Arc<dyn Engine> = Arc::new(SparseBsrEngine::with_pool(
-            Arc::clone(&w),
-            cfg.block,
-            Arc::clone(&sched),
-            cfg.threads,
-            Some(Arc::clone(&shared)),
-        )?);
-        let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let built = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(Arc::clone(&w))
+            .block(cfg.block)
+            .threads(cfg.threads)
+            .exec_pool(Arc::clone(&shared))
+            .plan_store(Arc::clone(&store))
+            .build()?;
         let mut router = Router::with_exec_pool(shared);
         router.register(
             "tvm+",
-            engine,
-            Arc::clone(&w),
+            built.engine,
+            built.weights,
             BatchPolicy::default(),
             cfg.threads,
         );
@@ -136,8 +134,8 @@ pub fn run_warm_start_smoke(dir: &Path, cfg: &WarmStartConfig) -> Result<WarmSta
         let report = router.run_trace("tvm+", &trace)?;
         router.shutdown();
         Ok(RunObservation {
-            build_ms,
-            live_plans: sched.buffer.len() as u64,
+            build_ms: built.report.build_ms,
+            live_plans: built.report.live_plans,
             p50_ms: report.p50_ms,
             store: store.stats(),
         })

@@ -375,7 +375,7 @@ fn barrier_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::bert::CompiledDenseEngine;
+    use crate::model::bert::{CompiledDenseEngine, DenseEngineOptions};
     use crate::model::config::BertConfig;
     use std::collections::BTreeMap;
     use std::time::Duration;
@@ -383,7 +383,8 @@ mod tests {
     fn setup() -> (Arc<dyn Engine>, Arc<BertWeights>) {
         let cfg = BertConfig::micro();
         let w = Arc::new(BertWeights::synthetic(&cfg, 51));
-        let e: Arc<dyn Engine> = Arc::new(CompiledDenseEngine::new(Arc::clone(&w), 1));
+        let e: Arc<dyn Engine> =
+            Arc::new(CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 1)));
         (e, w)
     }
 
@@ -539,7 +540,7 @@ mod tests {
         let cfg = BertConfig::micro();
         let weights = Arc::new(BertWeights::synthetic(&cfg, 52));
         let engine: Arc<dyn Engine> = Arc::new(SlowEngine {
-            inner: CompiledDenseEngine::new(Arc::clone(&weights), 1),
+            inner: CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&weights), 1)),
             delay: Duration::from_millis(5),
         });
         let pool = VariantPool::start(
@@ -575,7 +576,7 @@ mod tests {
         let cfg = BertConfig::micro();
         let weights = Arc::new(BertWeights::synthetic(&cfg, 53));
         let engine: Arc<dyn Engine> = Arc::new(SlowEngine {
-            inner: CompiledDenseEngine::new(Arc::clone(&weights), 1),
+            inner: CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&weights), 1)),
             delay: Duration::from_millis(10),
         });
         let metrics = Arc::new(Metrics::new());

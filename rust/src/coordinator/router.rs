@@ -23,8 +23,9 @@ use std::time::{Duration, Instant};
 pub struct Router {
     pools: BTreeMap<String, Arc<VariantPool>>,
     /// The shared engine-side pool all variants execute batches on. Hand
-    /// the same handle to engines built with
-    /// [`crate::model::bert::SparseBsrEngine::with_pool`] so kernel
+    /// the same handle to sparse engines (via
+    /// [`crate::deploy::EngineBuilder::exec_pool`] or
+    /// [`crate::model::bert::SparseEngineOptions::on_pool`]) so kernel
     /// fan-out shares it too (total worker threads stay constant no
     /// matter how many variants are registered).
     exec_pool: Arc<WorkerPool>,
@@ -195,13 +196,14 @@ impl Default for Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::bert::CompiledDenseEngine;
+    use crate::model::bert::{CompiledDenseEngine, DenseEngineOptions};
     use crate::model::config::BertConfig;
 
     fn router() -> Router {
         let cfg = BertConfig::micro();
         let w = Arc::new(BertWeights::synthetic(&cfg, 61));
-        let e: Arc<dyn Engine> = Arc::new(CompiledDenseEngine::new(Arc::clone(&w), 1));
+        let e: Arc<dyn Engine> =
+            Arc::new(CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 1)));
         let mut r = Router::new();
         r.register("dense", e, w, BatchPolicy::default(), 2);
         r
@@ -261,7 +263,8 @@ mod tests {
             ("a", PipelineMode::Pipelined),
             ("b", PipelineMode::Barrier),
         ] {
-            let e: Arc<dyn Engine> = Arc::new(CompiledDenseEngine::new(Arc::clone(&w), 1));
+            let e: Arc<dyn Engine> =
+                Arc::new(CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 1)));
             r.register_with_mode(
                 name,
                 e,

@@ -194,7 +194,7 @@ impl Client {
 mod tests {
     use super::*;
     use crate::coordinator::batcher::BatchPolicy;
-    use crate::model::bert::CompiledDenseEngine;
+    use crate::model::bert::{CompiledDenseEngine, DenseEngineOptions};
     use crate::model::config::BertConfig;
     use crate::model::engine::Engine;
     use crate::model::weights::BertWeights;
@@ -203,7 +203,8 @@ mod tests {
     fn serve_router() -> (Arc<Router>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
         let cfg = BertConfig::micro();
         let w = Arc::new(BertWeights::synthetic(&cfg, 71));
-        let e: Arc<dyn Engine> = Arc::new(CompiledDenseEngine::new(Arc::clone(&w), 1));
+        let e: Arc<dyn Engine> =
+            Arc::new(CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 1)));
         let mut r = Router::new();
         r.register("dense", e, w, BatchPolicy::default(), 2);
         let router = Arc::new(r);

@@ -1,0 +1,739 @@
+//! `EngineBuilder` — the single construction path for every inference
+//! engine in the crate.
+//!
+//! The paper's thesis is that the pruning configuration (block shape,
+//! sparsity) and the compilation/runtime configuration (scheduler plans,
+//! packed BSR buffers, worker pools) must be co-designed; before this
+//! module, that co-design was re-implemented by hand at ~8 call sites
+//! (CLI subcommands, examples, bench harnesses), each with subtly
+//! different defaults. The builder owns the whole
+//! weights → prune → scheduler → store-attach → engine chain, validates
+//! incompatible combinations at build time, and reports what the
+//! construction actually did (live plans vs cache/store hits, packs vs
+//! packed loads) so warm-start efficacy is observable wherever an engine
+//! is born.
+
+use super::error::DeployError;
+use crate::coordinator::PipelineMode;
+use crate::interp::bert::InterpEngine;
+use crate::model::bert::{
+    CompiledDenseEngine, DenseEngineOptions, SparseBsrEngine, SparseEngineOptions,
+};
+use crate::model::engine::{Engine, EngineKind};
+use crate::model::weights::{BertWeights, PruneMode, PruneSpec};
+use crate::model::BertConfig;
+use crate::planstore::PlanStore;
+use crate::scheduler::{AutoScheduler, HwSpec};
+use crate::sparse::prune::BlockShape;
+use crate::util::json::Json;
+use crate::util::pool::{default_threads, Pool};
+use crate::util::tensorfile::TensorBundle;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Where the builder gets its dense weights from.
+#[derive(Clone)]
+pub enum WeightSource {
+    /// Deterministic synthetic init (the seed is part of the deployment
+    /// fingerprint: `plan build` and `serve` must agree on it for
+    /// ahead-of-time artifacts to match).
+    Synthetic { config: BertConfig, seed: u64 },
+    /// A tensor bundle directory written by `to_bundle()` / the Python
+    /// training pipeline.
+    Bundle(PathBuf),
+    /// Weights the caller already holds (possibly already pruned — the
+    /// Table 1 harness sweeps pruned copies it prepared itself).
+    Prepared(Arc<BertWeights>),
+}
+
+/// Default structured-prune pattern-pool size (matches the historical
+/// `serve` wiring; `plan build` must use the same value for fingerprints
+/// to line up).
+pub const DEFAULT_PRUNE_POOL: usize = 16;
+/// Default pruning projection seed (ditto).
+pub const DEFAULT_PRUNE_SEED: u64 = 7;
+/// Default synthetic-weight seed (ditto).
+pub const DEFAULT_WEIGHT_SEED: u64 = 1234;
+
+/// What one `build()` actually did — plan-cache and artifact-store
+/// activity, pack counts, and the hardware fingerprint everything was
+/// compiled against.
+#[derive(Debug, Clone)]
+pub struct BuildReport {
+    pub kind: EngineKind,
+    pub name: String,
+    pub block: Option<BlockShape>,
+    pub sparsity: Option<f64>,
+    pub threads: usize,
+    pub build_ms: f64,
+    /// Plans compiled live through the task buffer during this build.
+    pub live_plans: u64,
+    /// Plan-cache misses incurred (cold lookups).
+    pub plan_cache_cold: u64,
+    /// Plan-cache hits (warm lookups — includes store load-throughs).
+    pub plan_cache_warm: u64,
+    /// BSR buffers packed live from dense weights.
+    pub packs: u64,
+    /// Pre-packed BSR buffers loaded from the artifact store.
+    pub packed_loads: u64,
+    /// Artifacts written back to the store.
+    pub store_writes: u64,
+    /// Hardware fingerprint the scheduler compiled against (sparse
+    /// engines only).
+    pub hw_fingerprint: Option<u64>,
+    pub weight_footprint_bytes: usize,
+}
+
+impl BuildReport {
+    /// True when construction touched no live compilation or packing —
+    /// everything came from the plan cache / artifact store.
+    pub fn is_warm(&self) -> bool {
+        self.live_plans == 0 && self.packs == 0
+    }
+
+    /// One operator-facing line (`serve` prints one per variant).
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: built in {:.1} ms — {} live plans, {} cache hits, {} packs, {} packed loads, {} store writes",
+            self.name,
+            self.build_ms,
+            self.live_plans,
+            self.plan_cache_warm,
+            self.packs,
+            self.packed_loads,
+            self.store_writes
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", self.kind.to_string())
+            .set("name", self.name.as_str())
+            .set(
+                "block",
+                match self.block {
+                    Some(b) => Json::Str(b.to_string()),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "sparsity",
+                match self.sparsity {
+                    Some(s) => Json::Num(s),
+                    None => Json::Null,
+                },
+            )
+            .set("threads", self.threads)
+            .set("build_ms", self.build_ms)
+            .set("live_plans", self.live_plans)
+            .set("plan_cache_cold", self.plan_cache_cold)
+            .set("plan_cache_warm", self.plan_cache_warm)
+            .set("packs", self.packs)
+            .set("packed_loads", self.packed_loads)
+            .set("store_writes", self.store_writes)
+            .set(
+                "hw_fingerprint",
+                match self.hw_fingerprint {
+                    Some(fp) => Json::Str(format!("{fp:016x}")),
+                    None => Json::Null,
+                },
+            )
+            .set("weight_footprint_bytes", self.weight_footprint_bytes)
+            .set("warm", self.is_warm());
+        j
+    }
+}
+
+/// A constructed engine plus everything its registration needs: the
+/// weights it actually runs on (post-prune — the router embeds with
+/// them), the pipeline mode to register under, the scheduler that owns
+/// its plans, and the build report.
+pub struct BuiltEngine {
+    pub engine: Arc<dyn Engine>,
+    pub weights: Arc<BertWeights>,
+    pub name: String,
+    pub mode: PipelineMode,
+    /// The scheduler the engine's plans live in (sparse engines only).
+    pub sched: Option<Arc<AutoScheduler>>,
+    pub report: BuildReport,
+}
+
+/// Typed builder for every [`EngineKind`]; see the module docs.
+///
+/// ```no_run
+/// # use sparsebert::deploy::EngineBuilder;
+/// # use sparsebert::model::{BertConfig, EngineKind};
+/// # use sparsebert::sparse::prune::BlockShape;
+/// let built = EngineBuilder::new(EngineKind::TvmPlus)
+///     .weights_synthetic(BertConfig::tiny(), 1234)
+///     .block(BlockShape::new(1, 32))
+///     .sparsity(0.8)
+///     .threads(4)
+///     .build()?;
+/// println!("{}", built.report.summary());
+/// # Ok::<(), sparsebert::deploy::DeployError>(())
+/// ```
+pub struct EngineBuilder {
+    kind: EngineKind,
+    name: Option<String>,
+    weights: Option<WeightSource>,
+    block: Option<BlockShape>,
+    sparsity: Option<f64>,
+    prune_pool: usize,
+    prune_seed: u64,
+    threads: Option<usize>,
+    sched: Option<Arc<AutoScheduler>>,
+    plan_store: Option<Arc<PlanStore>>,
+    exec_pool: Option<Arc<Pool>>,
+    mode: PipelineMode,
+}
+
+impl EngineBuilder {
+    pub fn new(kind: EngineKind) -> EngineBuilder {
+        EngineBuilder {
+            kind,
+            name: None,
+            weights: None,
+            block: None,
+            sparsity: None,
+            prune_pool: DEFAULT_PRUNE_POOL,
+            prune_seed: DEFAULT_PRUNE_SEED,
+            threads: None,
+            sched: None,
+            plan_store: None,
+            exec_pool: None,
+            mode: PipelineMode::default(),
+        }
+    }
+
+    /// Registration/report label (defaults to the kind's canonical name).
+    pub fn name(mut self, name: &str) -> Self {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    /// Use weights the caller already holds (possibly pre-pruned).
+    pub fn weights(mut self, weights: Arc<BertWeights>) -> Self {
+        self.weights = Some(WeightSource::Prepared(weights));
+        self
+    }
+
+    /// Deterministic synthetic weights at `config` geometry.
+    pub fn weights_synthetic(mut self, config: BertConfig, seed: u64) -> Self {
+        self.weights = Some(WeightSource::Synthetic { config, seed });
+        self
+    }
+
+    /// Load a tensor-bundle directory at build time.
+    pub fn weights_bundle(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.weights = Some(WeightSource::Bundle(dir.into()));
+        self
+    }
+
+    /// BSR block granularity (required for, and only valid on,
+    /// [`EngineKind::TvmPlus`]).
+    pub fn block(mut self, block: BlockShape) -> Self {
+        self.block = Some(block);
+        self
+    }
+
+    /// Prune the weight source to this sparsity before conversion
+    /// (structured at [`Self::block`]'s granularity; 1×1 blocks use the
+    /// irregular magnitude projection — the repo-wide convention of
+    /// `prune`, Table 1, and `inspect`, which the pre-builder `serve`
+    /// path deviated from by running the structured projection even at
+    /// 1×1).
+    pub fn sparsity(mut self, sparsity: f64) -> Self {
+        self.sparsity = Some(sparsity);
+        self
+    }
+
+    /// Structured-prune pattern-pool size (default
+    /// [`DEFAULT_PRUNE_POOL`]).
+    pub fn prune_pool(mut self, pool: usize) -> Self {
+        self.prune_pool = pool;
+        self
+    }
+
+    /// Pruning projection seed (default [`DEFAULT_PRUNE_SEED`]; `serve`
+    /// and `plan build` must agree for artifact fingerprints to match).
+    pub fn prune_seed(mut self, seed: u64) -> Self {
+        self.prune_seed = seed;
+        self
+    }
+
+    /// Worker-thread budget. `0` is rejected at build time; omit for one
+    /// worker per core.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Compile plans through an existing scheduler (sharing one across
+    /// variants shares the plan cache; the default is a fresh scheduler
+    /// for the detected hardware).
+    pub fn scheduler(mut self, sched: Arc<AutoScheduler>) -> Self {
+        self.sched = Some(sched);
+        self
+    }
+
+    /// Attach a persistent artifact store: plans and packed weights load
+    /// from it and live compiles write back (warm starts).
+    pub fn plan_store(mut self, store: Arc<PlanStore>) -> Self {
+        self.plan_store = Some(store);
+        self
+    }
+
+    /// Execute kernels on an explicit persistent pool (the serving
+    /// coordinator hands every variant its shared engine-side pool).
+    pub fn exec_pool(mut self, pool: Arc<Pool>) -> Self {
+        self.exec_pool = Some(pool);
+        self
+    }
+
+    /// Coordinator pipeline mode to register the engine under (carried
+    /// through to [`BuiltEngine::mode`]; defaults to pipelined).
+    pub fn pipeline_mode(mut self, mode: PipelineMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Validate the configuration and construct the engine.
+    pub fn build(self) -> Result<BuiltEngine, DeployError> {
+        let kind = self.kind;
+        check_kind_options(
+            kind,
+            self.block.is_some(),
+            self.sparsity.is_some(),
+            self.plan_store.is_some(),
+            self.sched.is_some(),
+            self.exec_pool.is_some(),
+        )?;
+        if let Some(s) = self.sparsity {
+            if !(0.0..1.0).contains(&s) {
+                return Err(DeployError::InvalidValue {
+                    field: "sparsity".into(),
+                    reason: format!("{s} is outside [0, 1)"),
+                });
+            }
+        }
+        let threads = match self.threads {
+            None => default_threads(),
+            Some(0) => {
+                return Err(DeployError::InvalidValue {
+                    field: "threads".into(),
+                    reason: "must be ≥ 1 (omit the option for one worker per core)".into(),
+                })
+            }
+            Some(n) => n,
+        };
+        if kind == EngineKind::XlaDense {
+            return Err(DeployError::Unsupported {
+                what: "the xla engine executes AOT artifacts (`make artifacts`) and is \
+                       constructed via runtime::XlaEngine, not the builder; deploy the \
+                       tvm/tvm+ variants instead"
+                    .into(),
+            });
+        }
+        let source = self.weights.ok_or(DeployError::MissingWeights { kind })?;
+        let weights: Arc<BertWeights> = match source {
+            WeightSource::Prepared(w) => w,
+            WeightSource::Synthetic { config, seed } => {
+                Arc::new(BertWeights::synthetic(&config, seed))
+            }
+            WeightSource::Bundle(dir) => {
+                let bundle = TensorBundle::load(&dir).map_err(|e| DeployError::Build {
+                    context: format!("loading weight bundle {}", dir.display()),
+                    reason: format!("{e:#}"),
+                })?;
+                Arc::new(
+                    BertWeights::from_bundle(&bundle).map_err(|e| DeployError::Build {
+                        context: format!("decoding weight bundle {}", dir.display()),
+                        reason: format!("{e:#}"),
+                    })?,
+                )
+            }
+        };
+        let name = self.name.unwrap_or_else(|| kind.to_string());
+        let t0 = Instant::now();
+        match kind {
+            EngineKind::PyTorch | EngineKind::TensorFlow => {
+                let blocked = kind == EngineKind::TensorFlow;
+                let engine: Arc<dyn Engine> =
+                    Arc::new(InterpEngine::new(Arc::clone(&weights), blocked, threads));
+                Ok(finish(engine, weights, name, self.mode, None, kind, None, None, threads, t0))
+            }
+            EngineKind::TvmStd => {
+                let engine: Arc<dyn Engine> = Arc::new(CompiledDenseEngine::build(
+                    DenseEngineOptions::new(Arc::clone(&weights), threads).named(&name),
+                ));
+                Ok(finish(engine, weights, name, self.mode, None, kind, None, None, threads, t0))
+            }
+            EngineKind::TvmPlus => {
+                let block = self.block.ok_or(DeployError::MissingOption {
+                    kind,
+                    option: "block",
+                })?;
+                let weights = match self.sparsity {
+                    None => weights,
+                    Some(sparsity) => {
+                        let spec = if block == BlockShape::new(1, 1) {
+                            PruneSpec::irregular(sparsity)
+                        } else {
+                            PruneSpec {
+                                mode: PruneMode::Structured {
+                                    pool: self.prune_pool,
+                                },
+                                sparsity,
+                                block,
+                            }
+                        };
+                        // Prune in place when the builder just
+                        // materialized these weights and holds the only
+                        // reference (Synthetic/Bundle); only a shared
+                        // Prepared source pays the out-of-place clone.
+                        let mut pruned =
+                            Arc::try_unwrap(weights).unwrap_or_else(|shared| (*shared).clone());
+                        pruned.prune(&spec, self.prune_seed);
+                        Arc::new(pruned)
+                    }
+                };
+                let sched = self
+                    .sched
+                    .unwrap_or_else(|| Arc::new(AutoScheduler::new(HwSpec::detect())));
+                if let Some(store) = &self.plan_store {
+                    sched.attach_store(Arc::clone(store));
+                }
+                let store = sched.store();
+                let cache0 = sched.cache.stats();
+                let buffer0 = sched.buffer.len() as u64;
+                let store0 = store.as_deref().map(PlanStore::stats);
+                let mut opts = SparseEngineOptions::new(
+                    Arc::clone(&weights),
+                    block,
+                    Arc::clone(&sched),
+                    threads,
+                );
+                opts.exec_pool = self.exec_pool;
+                let engine = SparseBsrEngine::build(opts).map_err(|e| DeployError::Build {
+                    context: format!("constructing '{name}' (block {block})"),
+                    reason: format!("{e:#}"),
+                })?;
+                let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let cache1 = sched.cache.stats();
+                let projections = (weights.layers.len() * 6) as u64;
+                // Counter deltas over the shared store/scheduler are only
+                // exact for sequential builds (the instantiate loop and
+                // every harness); saturate so a concurrent build on the
+                // same store degrades the report instead of underflowing.
+                let (packed_loads, store_writes) = match (store0, store.as_deref()) {
+                    (Some(s0), Some(s1)) => {
+                        let s1 = s1.stats();
+                        (
+                            (s1.weight_hits.saturating_sub(s0.weight_hits)).min(projections),
+                            s1.writes.saturating_sub(s0.writes),
+                        )
+                    }
+                    _ => (0, 0),
+                };
+                let report = BuildReport {
+                    kind,
+                    name: name.clone(),
+                    block: Some(block),
+                    sparsity: self.sparsity,
+                    threads,
+                    build_ms,
+                    live_plans: sched.buffer.len() as u64 - buffer0,
+                    plan_cache_cold: cache1.misses - cache0.misses,
+                    plan_cache_warm: cache1.hits - cache0.hits,
+                    packs: projections - packed_loads,
+                    packed_loads,
+                    store_writes,
+                    hw_fingerprint: Some(sched.hw.fingerprint()),
+                    weight_footprint_bytes: engine.weight_footprint_bytes(),
+                };
+                Ok(BuiltEngine {
+                    engine: Arc::new(engine),
+                    weights,
+                    name,
+                    mode: self.mode,
+                    sched: Some(sched),
+                    report,
+                })
+            }
+            EngineKind::XlaDense => unreachable!("rejected above"),
+        }
+    }
+}
+
+/// Shared kind × option compatibility matrix — used by both
+/// [`EngineBuilder::build`] and [`super::spec::DeploymentSpec::validate`]
+/// so the two layers cannot drift.
+pub(crate) fn check_kind_options(
+    kind: EngineKind,
+    has_block: bool,
+    has_sparsity: bool,
+    has_store: bool,
+    has_sched: bool,
+    has_exec_pool: bool,
+) -> Result<(), DeployError> {
+    if kind == EngineKind::TvmPlus {
+        return Ok(());
+    }
+    if has_block {
+        return Err(DeployError::IncompatibleOption {
+            kind,
+            option: "block",
+            reason: "only the tvm+ (BSR) engine packs weights at a block granularity",
+        });
+    }
+    if has_sparsity {
+        return Err(DeployError::IncompatibleOption {
+            kind,
+            option: "sparsity",
+            reason: "pruning inside the builder is co-designed with the BSR runtime; for \
+                     the dense negative control, prune ahead of time and pass prepared weights",
+        });
+    }
+    if has_store {
+        return Err(DeployError::IncompatibleOption {
+            kind,
+            option: "plan-store",
+            reason: "dense engines compile no scheduler plans and pack no BSR buffers",
+        });
+    }
+    if has_sched {
+        return Err(DeployError::IncompatibleOption {
+            kind,
+            option: "scheduler",
+            reason: "dense engines compile no scheduler plans",
+        });
+    }
+    if has_exec_pool {
+        return Err(DeployError::IncompatibleOption {
+            kind,
+            option: "exec-pool",
+            reason: "dense engines fan out on the process-global pool; only the BSR \
+                     engine binds to an explicit pool",
+        });
+    }
+    Ok(())
+}
+
+/// Assemble the trivial (dense-engine) `BuiltEngine`.
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    engine: Arc<dyn Engine>,
+    weights: Arc<BertWeights>,
+    name: String,
+    mode: PipelineMode,
+    sched: Option<Arc<AutoScheduler>>,
+    kind: EngineKind,
+    block: Option<BlockShape>,
+    sparsity: Option<f64>,
+    threads: usize,
+    t0: Instant,
+) -> BuiltEngine {
+    let report = BuildReport {
+        kind,
+        name: name.clone(),
+        block,
+        sparsity,
+        threads,
+        build_ms: t0.elapsed().as_secs_f64() * 1e3,
+        live_plans: 0,
+        plan_cache_cold: 0,
+        plan_cache_warm: 0,
+        packs: 0,
+        packed_loads: 0,
+        store_writes: 0,
+        hw_fingerprint: None,
+        weight_footprint_bytes: engine.weight_footprint_bytes(),
+    };
+    BuiltEngine {
+        engine,
+        weights,
+        name,
+        mode,
+        sched,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::assert_allclose;
+
+    fn micro_weights() -> Arc<BertWeights> {
+        Arc::new(BertWeights::synthetic(&BertConfig::micro(), 11))
+    }
+
+    #[test]
+    fn builds_every_native_kind() {
+        let w = micro_weights();
+        let x = w.embed(&[1, 2, 3, 4, 5]);
+        let mut outs = Vec::new();
+        for kind in [EngineKind::PyTorch, EngineKind::TensorFlow, EngineKind::TvmStd] {
+            let built = EngineBuilder::new(kind)
+                .weights(Arc::clone(&w))
+                .threads(2)
+                .build()
+                .unwrap();
+            assert_eq!(built.name, kind.to_string());
+            assert_eq!(built.report.kind, kind);
+            assert!(built.report.is_warm(), "dense kinds never plan");
+            outs.push(built.engine.forward(&x));
+        }
+        let sparse = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(Arc::clone(&w))
+            .block(BlockShape::new(2, 4))
+            .threads(2)
+            .build()
+            .unwrap();
+        assert!(sparse.report.live_plans >= 1);
+        assert_eq!(sparse.report.packs, 6, "1 layer × 6 projections packed live");
+        assert!(sparse.report.hw_fingerprint.is_some());
+        let ys = sparse.engine.forward(&x);
+        assert_allclose(&ys.data, &outs[2].data, 1e-3, 1e-4, "builder sparse vs dense");
+    }
+
+    #[test]
+    fn sparsity_prunes_out_of_place() {
+        let w = micro_weights();
+        let built = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(Arc::clone(&w))
+            .block(BlockShape::new(2, 4))
+            .sparsity(0.6)
+            .threads(1)
+            .build()
+            .unwrap();
+        // source weights untouched; engine weights pruned
+        assert!(w.pruned_sparsity() < 0.01);
+        assert!(built.weights.pruned_sparsity() > 0.4);
+        assert_eq!(built.report.sparsity, Some(0.6));
+    }
+
+    #[test]
+    fn incompatible_combinations_are_typed_errors() {
+        let w = micro_weights();
+        // block on an eager engine
+        let e = EngineBuilder::new(EngineKind::PyTorch)
+            .weights(Arc::clone(&w))
+            .block(BlockShape::new(1, 4))
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(e, DeployError::IncompatibleOption { option: "block", .. }),
+            "{e:?}"
+        );
+        // sparsity on the compiled-dense engine
+        let e = EngineBuilder::new(EngineKind::TvmStd)
+            .weights(Arc::clone(&w))
+            .sparsity(0.8)
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(e, DeployError::IncompatibleOption { option: "sparsity", .. }),
+            "{e:?}"
+        );
+        // plan store on a dense engine
+        let dir =
+            std::env::temp_dir().join(format!("sparsebert-builder-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(PlanStore::open(&dir, &HwSpec::detect()).unwrap());
+        let e = EngineBuilder::new(EngineKind::TvmStd)
+            .weights(Arc::clone(&w))
+            .plan_store(store)
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(e, DeployError::IncompatibleOption { option: "plan-store", .. }),
+            "{e:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_inputs_are_typed_errors() {
+        let e = EngineBuilder::new(EngineKind::TvmStd).build().unwrap_err();
+        assert!(matches!(e, DeployError::MissingWeights { .. }), "{e:?}");
+        let e = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(micro_weights())
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(e, DeployError::MissingOption { option: "block", .. }),
+            "{e:?}"
+        );
+        let e = EngineBuilder::new(EngineKind::TvmStd)
+            .weights(micro_weights())
+            .threads(0)
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        let e = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(micro_weights())
+            .block(BlockShape::new(2, 4))
+            .sparsity(1.5)
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        let e = EngineBuilder::new(EngineKind::XlaDense)
+            .weights(micro_weights())
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, DeployError::Unsupported { .. }), "{e:?}");
+        // bad bundle path surfaces as a build error, not a panic
+        let e = EngineBuilder::new(EngineKind::TvmStd)
+            .weights_bundle("/nonexistent/sparsebert-bundle")
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, DeployError::Build { .. }), "{e:?}");
+        // geometry mismatch: block does not divide the micro hidden size
+        let e = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(micro_weights())
+            .block(BlockShape::new(48, 48))
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, DeployError::Build { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn warm_start_reported_through_builder() {
+        let dir =
+            std::env::temp_dir().join(format!("sparsebert-builder-warm-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let hw = HwSpec::detect();
+        let w = micro_weights();
+        let block = BlockShape::new(2, 4);
+        let cold = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(Arc::clone(&w))
+            .block(block)
+            .sparsity(0.6)
+            .threads(2)
+            .plan_store(Arc::new(PlanStore::open(&dir, &hw).unwrap()))
+            .build()
+            .unwrap();
+        assert!(!cold.report.is_warm(), "{:?}", cold.report);
+        assert!(cold.report.store_writes >= 2, "{:?}", cold.report);
+        let warm = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(Arc::clone(&w))
+            .block(block)
+            .sparsity(0.6)
+            .threads(2)
+            .plan_store(Arc::new(PlanStore::open(&dir, &hw).unwrap()))
+            .build()
+            .unwrap();
+        assert!(warm.report.is_warm(), "{:?}", warm.report);
+        assert_eq!(warm.report.packed_loads, 6, "{:?}", warm.report);
+        assert_eq!(warm.report.packs, 0, "{:?}", warm.report);
+        // byte-identical serving outputs cold vs warm
+        let x = cold.weights.embed(&[3, 1, 4]);
+        assert_eq!(cold.engine.forward(&x).data, warm.engine.forward(&x).data);
+        let j = warm.report.to_json();
+        assert_eq!(j.get("warm").and_then(Json::as_bool), Some(true));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

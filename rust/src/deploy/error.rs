@@ -1,0 +1,115 @@
+//! Typed construction/specification errors for the deployment layer.
+//!
+//! Every invalid builder combination and every malformed manifest maps to
+//! a variant here — panics are reserved for programming errors, never for
+//! bad user input. The variants are deliberately coarse enough to match
+//! on in tests (`matches!(err, DeployError::UnknownKey { .. })`) while
+//! the `Display` text carries the operator-facing detail.
+
+use crate::model::engine::EngineKind;
+use std::fmt;
+
+/// Everything that can go wrong constructing an engine or instantiating a
+/// deployment manifest.
+#[derive(Debug)]
+pub enum DeployError {
+    /// The builder was asked to build without any weight source.
+    MissingWeights { kind: EngineKind },
+    /// An option this kind requires was not supplied (e.g. `block` on
+    /// `tvm+`).
+    MissingOption {
+        kind: EngineKind,
+        option: &'static str,
+    },
+    /// An option was supplied that this kind cannot honor (e.g. a plan
+    /// store on a dense engine). Silently ignoring it would let the
+    /// algorithm and runtime configurations drift apart — the exact
+    /// failure mode the co-design API exists to prevent.
+    IncompatibleOption {
+        kind: EngineKind,
+        option: &'static str,
+        reason: &'static str,
+    },
+    /// A field value is out of range or unparseable (`threads = 0`,
+    /// `sparsity = 1.5`, a malformed block shape, …).
+    InvalidValue { field: String, reason: String },
+    /// The combination is well-formed but not buildable in this binary
+    /// (e.g. the XLA engine without AOT artifacts, `numa = "pin"` before
+    /// NUMA pinning lands).
+    Unsupported { what: String },
+    /// Manifest-level failure: unreadable file, syntax error, schema
+    /// mismatch, or a structural problem not covered by a finer variant.
+    Spec { context: String, reason: String },
+    /// A manifest table contains a key the schema does not define —
+    /// rejected rather than ignored so typos ("sparsety") cannot silently
+    /// deploy a mis-configured engine.
+    UnknownKey { table: String, key: String },
+    /// Two `[[variant]]` entries share a name.
+    DuplicateVariant { name: String },
+    /// Engine construction itself failed after validation passed
+    /// (geometry mismatch, store I/O, …).
+    Build { context: String, reason: String },
+}
+
+impl fmt::Display for DeployError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeployError::MissingWeights { kind } => {
+                write!(
+                    f,
+                    "engine '{kind}' needs a weight source \
+                     (weights/weights_synthetic/weights_bundle)"
+                )
+            }
+            DeployError::MissingOption { kind, option } => {
+                write!(f, "engine '{kind}' requires the '{option}' option")
+            }
+            DeployError::IncompatibleOption {
+                kind,
+                option,
+                reason,
+            } => {
+                write!(f, "option '{option}' is incompatible with engine '{kind}': {reason}")
+            }
+            DeployError::InvalidValue { field, reason } => {
+                write!(f, "invalid value for '{field}': {reason}")
+            }
+            DeployError::Unsupported { what } => write!(f, "unsupported: {what}"),
+            DeployError::Spec { context, reason } => {
+                write!(f, "deployment spec error ({context}): {reason}")
+            }
+            DeployError::UnknownKey { table, key } => {
+                write!(f, "unknown key '{key}' in [{table}] (schema sparsebert-deploy/v1)")
+            }
+            DeployError::DuplicateVariant { name } => {
+                write!(f, "duplicate variant name '{name}'")
+            }
+            DeployError::Build { context, reason } => {
+                write!(f, "engine build failed ({context}): {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DeployError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_context() {
+        let e = DeployError::IncompatibleOption {
+            kind: EngineKind::PyTorch,
+            option: "block",
+            reason: "dense engines have no block granularity",
+        };
+        let s = e.to_string();
+        assert!(s.contains("pytorch") && s.contains("block"), "{s}");
+        let u = DeployError::UnknownKey {
+            table: "serving".into(),
+            key: "treads".into(),
+        };
+        assert!(u.to_string().contains("treads"));
+    }
+}

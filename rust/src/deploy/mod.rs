@@ -1,0 +1,48 @@
+//! The deployment layer — one construction API for every engine and
+//! every serving deployment.
+//!
+//! Motivation (and the PR-4 tentpole): the paper's end-to-end speedups
+//! only materialize when the pruning configuration (block shape,
+//! sparsity) is co-designed with the compilation/runtime configuration
+//! (scheduler plans, packed BSR buffers, worker pools). Before this
+//! module, that chain — weights → prune → scheduler → store-attach →
+//! engine → pool → router — was hand-wired at every construction site
+//! with subtly different defaults. Now there are exactly two entry
+//! points, layered:
+//!
+//! * [`EngineBuilder`] — typed builder for a single engine. Validates
+//!   incompatible kind × option combinations at build time (plan store
+//!   on a dense engine, block shape on the eager interpreter, zero
+//!   threads, out-of-range sparsity) and returns the engine together
+//!   with a [`BuildReport`] (live plans vs cache hits, packs vs packed
+//!   loads, hardware fingerprint) so warm-start efficacy is observable
+//!   wherever an engine is born.
+//! * [`DeploymentSpec`] — a declarative TOML/JSON manifest describing a
+//!   full deployment (model, N variants, pool sizing, batcher policy,
+//!   plan store), with [`DeploymentSpec::validate`] for CI manifest
+//!   checking (`sparsebert deploy check`) and
+//!   [`DeploymentSpec::instantiate`] producing a ready
+//!   [`crate::coordinator::Router`]. The flag-based `serve` path builds
+//!   the equivalent spec via [`DeploymentSpec::standard`] and
+//!   instantiates it through the same code — the two invocations are
+//!   byte-identical by construction.
+//!
+//! Future scale items plug in here: NUMA pinning lands as the manifest's
+//! `numa = "pin"` field, cross-host artifact sharing as
+//! `store.sync_url` — both already parse and validate, and return
+//! [`DeployError::Unsupported`] from `instantiate` until implemented.
+
+pub mod builder;
+pub mod error;
+pub mod spec;
+pub mod toml;
+
+pub use builder::{
+    BuildReport, BuiltEngine, EngineBuilder, WeightSource, DEFAULT_PRUNE_POOL, DEFAULT_PRUNE_SEED,
+    DEFAULT_WEIGHT_SEED,
+};
+pub use error::DeployError;
+pub use spec::{
+    Deployment, DeploymentSpec, ModelSpec, NumaPolicy, ServingSpec, StoreSpec, VariantSpec,
+    SPEC_SCHEMA,
+};

@@ -1,0 +1,790 @@
+//! `DeploymentSpec` — a declarative manifest describing a full serving
+//! deployment, and its instantiation into a ready [`Router`].
+//!
+//! A manifest is the authoritative co-design artifact: model geometry,
+//! every engine variant's kind/block/sparsity, pool sizing, pipeline
+//! mode, and the artifact store all live in one checked-in file, so the
+//! algorithm side and the compilation side cannot drift apart between
+//! construction sites. `sparsebert serve --spec deploy.toml` consumes
+//! one; `sparsebert deploy check` validates them in CI; the flag-based
+//! `serve` path builds the equivalent spec via [`DeploymentSpec::standard`]
+//! and instantiates it through the same code, which is what makes the
+//! two invocations byte-identical.
+//!
+//! Reserved fields for the next scale steps (accepted by `validate`,
+//! rejected by `instantiate` until implemented): `numa = "pin"` for
+//! worker/artifact NUMA placement, and `store.sync_url` for cross-host
+//! artifact-store sharing.
+
+use super::builder::{
+    check_kind_options, BuildReport, EngineBuilder, DEFAULT_PRUNE_POOL, DEFAULT_WEIGHT_SEED,
+};
+use super::error::DeployError;
+use super::toml;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::{PipelineMode, Router};
+use crate::model::engine::EngineKind;
+use crate::model::{BertConfig, BertWeights};
+use crate::planstore::PlanStore;
+use crate::scheduler::{AutoScheduler, HwSpec};
+use crate::sparse::prune::BlockShape;
+use crate::util::json::{self, Json};
+use crate::util::pool::{default_threads, Pool};
+use crate::util::tensorfile::TensorBundle;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Manifest schema identifier; bump on incompatible layout changes.
+pub const SPEC_SCHEMA: &str = "sparsebert-deploy/v1";
+
+/// `[model]` — geometry and weight provenance.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Preset name (`tiny` | `micro` | `base`).
+    pub config: String,
+    /// Optional weight-bundle directory; absent = synthetic init.
+    pub weights: Option<PathBuf>,
+    /// Synthetic-weight seed.
+    pub seed: u64,
+}
+
+impl Default for ModelSpec {
+    fn default() -> Self {
+        ModelSpec {
+            config: "tiny".to_string(),
+            weights: None,
+            seed: DEFAULT_WEIGHT_SEED,
+        }
+    }
+}
+
+/// `[serving]` — coordinator-level knobs shared by every variant.
+#[derive(Debug, Clone)]
+pub struct ServingSpec {
+    /// Bind address; absent = the caller's default.
+    pub addr: Option<String>,
+    /// Worker threads; absent = one per core. `0` is a validation error.
+    pub threads: Option<usize>,
+    /// Default pipeline mode (variants may override).
+    pub mode: PipelineMode,
+    /// Dynamic-batch size cap.
+    pub max_batch: usize,
+    /// Dynamic-batch window in milliseconds.
+    pub batch_wait_ms: u64,
+}
+
+impl Default for ServingSpec {
+    fn default() -> Self {
+        ServingSpec {
+            addr: None,
+            threads: None,
+            mode: PipelineMode::default(),
+            max_batch: 8,
+            batch_wait_ms: 2,
+        }
+    }
+}
+
+/// `[store]` — persistent artifact store for warm starts.
+#[derive(Debug, Clone)]
+pub struct StoreSpec {
+    pub path: PathBuf,
+    /// Reserved: object-storage URL to sync artifacts through so a new
+    /// replica warm-starts from a peer's store (cross-host sharing,
+    /// ROADMAP). Accepted by `validate`, rejected by `instantiate`.
+    pub sync_url: Option<String>,
+}
+
+/// Worker/artifact NUMA placement policy (`numa = "pin"` reserved for
+/// the NUMA-pinning ROADMAP item).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumaPolicy {
+    None,
+    Pin,
+}
+
+/// One `[[variant]]` — an engine registration.
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub kind: EngineKind,
+    pub block: Option<BlockShape>,
+    pub sparsity: Option<f64>,
+    /// Structured-prune pattern-pool size; only meaningful (and only
+    /// accepted) on `tvm+` variants. Absent = [`DEFAULT_PRUNE_POOL`].
+    pub pool: Option<usize>,
+    /// Per-variant pipeline-mode override.
+    pub mode: Option<PipelineMode>,
+}
+
+/// A parsed, schema-checked deployment manifest.
+#[derive(Debug, Clone)]
+pub struct DeploymentSpec {
+    pub model: ModelSpec,
+    pub serving: ServingSpec,
+    pub store: Option<StoreSpec>,
+    pub numa: NumaPolicy,
+    pub variants: Vec<VariantSpec>,
+}
+
+/// An instantiated deployment: the router with every variant registered,
+/// plus the handles the serving front-end needs for metrics and logging.
+pub struct Deployment {
+    pub router: Router,
+    pub sched: Arc<AutoScheduler>,
+    pub store: Option<Arc<PlanStore>>,
+    /// One report per variant, in registration order.
+    pub reports: Vec<BuildReport>,
+    /// Resolved worker-thread count.
+    pub threads: usize,
+}
+
+impl Deployment {
+    /// Operator-facing construction summary (one line per variant).
+    pub fn summary(&self) -> String {
+        self.reports
+            .iter()
+            .map(BuildReport::summary)
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+impl DeploymentSpec {
+    /// The flag-equivalent deployment `sparsebert serve` builds when no
+    /// `--spec` is given: eager + compiled-dense baselines plus one
+    /// `tvm+` variant per block shape. With a single block the sparse
+    /// variant is named `tvm+`; with several, `tvm+<block>`.
+    pub fn standard(
+        model: &str,
+        blocks: &[BlockShape],
+        sparsity: f64,
+        prune_pool: usize,
+    ) -> DeploymentSpec {
+        let mut variants = vec![
+            VariantSpec {
+                name: EngineKind::PyTorch.to_string(),
+                kind: EngineKind::PyTorch,
+                block: None,
+                sparsity: None,
+                pool: None,
+                mode: None,
+            },
+            VariantSpec {
+                name: EngineKind::TvmStd.to_string(),
+                kind: EngineKind::TvmStd,
+                block: None,
+                sparsity: None,
+                pool: None,
+                mode: None,
+            },
+        ];
+        for &block in blocks {
+            let name = if blocks.len() == 1 {
+                EngineKind::TvmPlus.to_string()
+            } else {
+                format!("{}{block}", EngineKind::TvmPlus)
+            };
+            variants.push(VariantSpec {
+                name,
+                kind: EngineKind::TvmPlus,
+                block: Some(block),
+                sparsity: Some(sparsity),
+                pool: Some(prune_pool),
+                mode: None,
+            });
+        }
+        DeploymentSpec {
+            model: ModelSpec {
+                config: model.to_string(),
+                ..ModelSpec::default()
+            },
+            serving: ServingSpec::default(),
+            store: None,
+            numa: NumaPolicy::None,
+            variants,
+        }
+    }
+
+    /// Load a manifest from disk; `.json` parses as JSON, anything else
+    /// as the TOML subset. The result is schema-checked but not yet
+    /// [`validate`](DeploymentSpec::validate)d.
+    pub fn from_path(path: &Path) -> Result<DeploymentSpec, DeployError> {
+        let text = std::fs::read_to_string(path).map_err(|e| DeployError::Spec {
+            context: path.display().to_string(),
+            reason: format!("read failed: {e}"),
+        })?;
+        let is_json = path.extension().is_some_and(|e| e == "json");
+        if is_json {
+            Self::from_json_str(&text)
+        } else {
+            Self::from_toml_str(&text)
+        }
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<DeploymentSpec, DeployError> {
+        Self::from_json_value(&toml::parse(text)?)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<DeploymentSpec, DeployError> {
+        let j = json::parse(text).map_err(|e| DeployError::Spec {
+            context: "JSON".to_string(),
+            reason: e.to_string(),
+        })?;
+        Self::from_json_value(&j)
+    }
+
+    /// Decode the parsed value tree, rejecting unknown keys everywhere.
+    fn from_json_value(j: &Json) -> Result<DeploymentSpec, DeployError> {
+        check_keys(j, "<root>", &["schema", "model", "serving", "store", "numa", "variant"])?;
+        if let Some(schema) = j.get("schema") {
+            let s = schema.as_str().ok_or_else(|| invalid("schema", "must be a string"))?;
+            if s != SPEC_SCHEMA {
+                return Err(DeployError::Spec {
+                    context: "schema".to_string(),
+                    reason: format!("unsupported schema '{s}' (this binary reads {SPEC_SCHEMA})"),
+                });
+            }
+        }
+        let mut model = ModelSpec::default();
+        if let Some(m) = j.get("model") {
+            check_keys(m, "model", &["config", "weights", "seed"])?;
+            if let Some(c) = str_field(m, "model.config")? {
+                model.config = c;
+            }
+            if let Some(w) = str_field(m, "model.weights")? {
+                model.weights = Some(PathBuf::from(w));
+            }
+            if let Some(s) = usize_field(m, "model.seed")? {
+                model.seed = s as u64;
+            }
+        }
+        let mut serving = ServingSpec::default();
+        if let Some(s) = j.get("serving") {
+            check_keys(s, "serving", &["addr", "threads", "mode", "max_batch", "batch_wait_ms"])?;
+            serving.addr = str_field(s, "serving.addr")?;
+            serving.threads = usize_field(s, "serving.threads")?;
+            if let Some(m) = str_field(s, "serving.mode")? {
+                serving.mode = PipelineMode::parse(&m).map_err(|e| invalid("serving.mode", &e))?;
+            }
+            if let Some(b) = usize_field(s, "serving.max_batch")? {
+                serving.max_batch = b;
+            }
+            if let Some(w) = usize_field(s, "serving.batch_wait_ms")? {
+                serving.batch_wait_ms = w as u64;
+            }
+        }
+        let store = match j.get("store") {
+            None => None,
+            Some(st) => {
+                check_keys(st, "store", &["path", "sync_url"])?;
+                let path = str_field(st, "store.path")?
+                    .ok_or_else(|| invalid("store.path", "required when [store] is present"))?;
+                Some(StoreSpec {
+                    path: PathBuf::from(path),
+                    sync_url: str_field(st, "store.sync_url")?,
+                })
+            }
+        };
+        let numa = match j.get("numa") {
+            None => NumaPolicy::None,
+            Some(v) => match v.as_str() {
+                Some("none") => NumaPolicy::None,
+                Some("pin") => NumaPolicy::Pin,
+                _ => return Err(invalid("numa", "expected \"none\" or \"pin\"")),
+            },
+        };
+        let raw_variants = match j.get("variant") {
+            Some(Json::Arr(items)) => items.as_slice(),
+            Some(_) => return Err(invalid("variant", "must be [[variant]] tables")),
+            None => &[],
+        };
+        let mut variants = Vec::with_capacity(raw_variants.len());
+        for (i, v) in raw_variants.iter().enumerate() {
+            let table = format!("variant[{i}]");
+            check_keys(v, &table, &["name", "kind", "block", "sparsity", "pool", "mode"])?;
+            let kind_s = str_field(v, "variant.kind")?
+                .ok_or_else(|| invalid(&format!("{table}.kind"), "required"))?;
+            let kind = EngineKind::parse(&kind_s)
+                .map_err(|e| invalid(&format!("{table}.kind"), &format!("{e:#}")))?;
+            let name = match str_field(v, "variant.name")? {
+                Some(n) => n,
+                None => kind.to_string(),
+            };
+            let block = match str_field(v, "variant.block")? {
+                None => None,
+                Some(b) => Some(
+                    BlockShape::parse(&b).map_err(|e| invalid(&format!("{table}.block"), &e))?,
+                ),
+            };
+            let sparsity = f64_field(v, "variant.sparsity")?;
+            let pool = usize_field(v, "variant.pool")?;
+            let mode = match str_field(v, "variant.mode")? {
+                None => None,
+                Some(m) => Some(
+                    PipelineMode::parse(&m).map_err(|e| invalid(&format!("{table}.mode"), &e))?,
+                ),
+            };
+            variants.push(VariantSpec {
+                name,
+                kind,
+                block,
+                sparsity,
+                pool,
+                mode,
+            });
+        }
+        Ok(DeploymentSpec {
+            model,
+            serving,
+            store,
+            numa,
+            variants,
+        })
+    }
+
+    /// Structural validation: everything that can be checked without
+    /// touching the filesystem or building engines. `deploy check` runs
+    /// exactly this, so a manifest that validates here can only fail at
+    /// instantiation for environmental reasons (missing bundle, foreign
+    /// store, unsupported reserved feature).
+    pub fn validate(&self) -> Result<(), DeployError> {
+        BertConfig::preset(&self.model.config)
+            .map_err(|e| invalid("model.config", &format!("{e:#}")))?;
+        if self.serving.threads == Some(0) {
+            return Err(invalid(
+                "serving.threads",
+                "must be ≥ 1 (omit the key for one worker per core)",
+            ));
+        }
+        if self.serving.max_batch == 0 {
+            return Err(invalid("serving.max_batch", "must be ≥ 1"));
+        }
+        if self.variants.is_empty() {
+            return Err(DeployError::Spec {
+                context: "variants".to_string(),
+                reason: "a deployment needs at least one [[variant]]".to_string(),
+            });
+        }
+        if let Some(store) = &self.store {
+            if store.path.as_os_str().is_empty() {
+                return Err(invalid("store.path", "must not be empty"));
+            }
+            // A store only serves tvm+ engines; accepting it on an
+            // all-dense deployment would let an operator believe
+            // warm-start is configured while every restart cold-starts.
+            if !self.variants.iter().any(|v| v.kind == EngineKind::TvmPlus) {
+                return Err(invalid(
+                    "store",
+                    "a plan store requires at least one tvm+ variant (dense engines \
+                     compile no plans and pack no BSR buffers)",
+                ));
+            }
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for v in &self.variants {
+            if v.name.is_empty() {
+                return Err(invalid("variant.name", "must not be empty"));
+            }
+            if !seen.insert(v.name.clone()) {
+                return Err(DeployError::DuplicateVariant {
+                    name: v.name.clone(),
+                });
+            }
+            check_kind_options(
+                v.kind,
+                v.block.is_some(),
+                v.sparsity.is_some(),
+                false,
+                false,
+                false,
+            )?;
+            if v.kind != EngineKind::TvmPlus && v.pool.is_some() {
+                return Err(DeployError::IncompatibleOption {
+                    kind: v.kind,
+                    option: "pool",
+                    reason: "the pattern pool only parameterizes structured pruning on the \
+                             tvm+ engine",
+                });
+            }
+            if v.kind == EngineKind::TvmPlus && v.block.is_none() {
+                return Err(DeployError::MissingOption {
+                    kind: v.kind,
+                    option: "block",
+                });
+            }
+            if let Some(s) = v.sparsity {
+                if !(0.0..1.0).contains(&s) {
+                    return Err(invalid(
+                        &format!("variant '{}' sparsity", v.name),
+                        &format!("{s} is outside [0, 1)"),
+                    ));
+                }
+            }
+            if v.pool == Some(0) {
+                return Err(invalid(&format!("variant '{}' pool", v.name), "must be ≥ 1"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate, then construct the full deployment: weights, shared
+    /// scheduler + exec pool, optional artifact store, and one registered
+    /// engine per variant — all through [`EngineBuilder`].
+    pub fn instantiate(&self) -> Result<Deployment, DeployError> {
+        self.validate()?;
+        if self.numa == NumaPolicy::Pin {
+            return Err(DeployError::Unsupported {
+                what: "numa = \"pin\" (NUMA worker pinning is a ROADMAP item; use \"none\")"
+                    .into(),
+            });
+        }
+        if let Some(store) = &self.store {
+            if store.sync_url.is_some() {
+                return Err(DeployError::Unsupported {
+                    what: "store.sync_url (cross-host artifact sharing is a ROADMAP item)".into(),
+                });
+            }
+        }
+        let threads = self.serving.threads.unwrap_or_else(default_threads);
+        let exec_pool = Arc::new(Pool::new(threads));
+        let mut router = Router::with_exec_pool(Arc::clone(&exec_pool));
+        let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
+        let store = match &self.store {
+            None => None,
+            Some(s) => {
+                let store = Arc::new(PlanStore::open(&s.path, &sched.hw).map_err(|e| {
+                    DeployError::Build {
+                        context: format!("opening plan store {}", s.path.display()),
+                        reason: format!("{e:#}"),
+                    }
+                })?);
+                sched.attach_store(Arc::clone(&store));
+                Some(store)
+            }
+        };
+        let policy = BatchPolicy {
+            max_batch: self.serving.max_batch,
+            max_wait: Duration::from_millis(self.serving.batch_wait_ms),
+        };
+        // Materialize the model weights once: every variant shares the
+        // same Arc (the builder's pruning clones out-of-place), so a
+        // multi-variant deployment does not re-read the bundle or hold N
+        // dense copies of the same weights.
+        let base_weights: Arc<BertWeights> = match &self.model.weights {
+            Some(dir) => {
+                let bundle = TensorBundle::load(dir).map_err(|e| DeployError::Build {
+                    context: format!("loading weight bundle {}", dir.display()),
+                    reason: format!("{e:#}"),
+                })?;
+                Arc::new(
+                    BertWeights::from_bundle(&bundle).map_err(|e| DeployError::Build {
+                        context: format!("decoding weight bundle {}", dir.display()),
+                        reason: format!("{e:#}"),
+                    })?,
+                )
+            }
+            None => {
+                let cfg = BertConfig::preset(&self.model.config)
+                    .map_err(|e| invalid("model.config", &format!("{e:#}")))?;
+                Arc::new(BertWeights::synthetic(&cfg, self.model.seed))
+            }
+        };
+        let mut reports = Vec::with_capacity(self.variants.len());
+        for v in &self.variants {
+            let mut b = EngineBuilder::new(v.kind)
+                .name(&v.name)
+                .weights(Arc::clone(&base_weights))
+                .threads(threads)
+                .pipeline_mode(v.mode.unwrap_or(self.serving.mode));
+            if v.kind == EngineKind::TvmPlus {
+                b = b
+                    .scheduler(Arc::clone(&sched))
+                    .exec_pool(Arc::clone(&exec_pool))
+                    .prune_pool(v.pool.unwrap_or(DEFAULT_PRUNE_POOL));
+                if let Some(store) = &store {
+                    b = b.plan_store(Arc::clone(store));
+                }
+                if let Some(block) = v.block {
+                    b = b.block(block);
+                }
+                if let Some(s) = v.sparsity {
+                    b = b.sparsity(s);
+                }
+            }
+            let built = b.build()?;
+            router.register_with_mode(
+                &built.name,
+                built.engine,
+                built.weights,
+                policy,
+                threads,
+                built.mode,
+            );
+            reports.push(built.report);
+        }
+        // Plan-cache (and, when warm-starting, store) counters surface in
+        // the stats endpoint next to the pipeline metrics.
+        {
+            let s = Arc::clone(&sched);
+            router
+                .metrics
+                .register_gauge("plan_cache", move || s.cache.stats().to_json());
+        }
+        if let Some(store) = &store {
+            let st = Arc::clone(store);
+            router
+                .metrics
+                .register_gauge("plan_store", move || st.stats().to_json());
+        }
+        Ok(Deployment {
+            router,
+            sched,
+            store,
+            reports,
+            threads,
+        })
+    }
+}
+
+fn invalid(field: &str, reason: &str) -> DeployError {
+    DeployError::InvalidValue {
+        field: field.to_string(),
+        reason: reason.to_string(),
+    }
+}
+
+/// Reject any key the schema does not define for this table.
+fn check_keys(j: &Json, table: &str, allowed: &[&str]) -> Result<(), DeployError> {
+    let Json::Obj(map) = j else {
+        return Err(DeployError::Spec {
+            context: table.to_string(),
+            reason: "expected a table".to_string(),
+        });
+    };
+    for key in map.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(DeployError::UnknownKey {
+                table: table.to_string(),
+                key: key.clone(),
+            });
+        }
+    }
+    Ok(())
+}
+
+fn str_field(j: &Json, field: &str) -> Result<Option<String>, DeployError> {
+    let key = field.rsplit('.').next().expect("dotted field name");
+    match j.get(key) {
+        None => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(_) => Err(invalid(field, "expected a string")),
+    }
+}
+
+fn usize_field(j: &Json, field: &str) -> Result<Option<usize>, DeployError> {
+    let key = field.rsplit('.').next().expect("dotted field name");
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| invalid(field, "expected a non-negative integer")),
+    }
+}
+
+fn f64_field(j: &Json, field: &str) -> Result<Option<f64>, DeployError> {
+    let key = field.rsplit('.').next().expect("dotted field name");
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| invalid(field, "expected a number")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+schema = "sparsebert-deploy/v1"
+
+[model]
+config = "micro"
+seed = 42
+
+[serving]
+mode = "pipelined"
+max_batch = 4
+batch_wait_ms = 1
+
+[[variant]]
+name = "tvm"
+kind = "tvm"
+
+[[variant]]
+name = "tvm+"
+kind = "tvm+"
+block = "2x4"
+sparsity = 0.6
+pool = 4
+"#;
+
+    #[test]
+    fn parses_and_validates_good_manifest() {
+        let spec = DeploymentSpec::from_toml_str(GOOD).unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.model.config, "micro");
+        assert_eq!(spec.model.seed, 42);
+        assert_eq!(spec.serving.max_batch, 4);
+        assert_eq!(spec.variants.len(), 2);
+        assert_eq!(spec.variants[1].kind, EngineKind::TvmPlus);
+        assert_eq!(spec.variants[1].block, Some(BlockShape::new(2, 4)));
+        assert_eq!(spec.variants[1].pool, Some(4));
+        assert_eq!(spec.numa, NumaPolicy::None);
+    }
+
+    #[test]
+    fn json_manifests_parse_too() {
+        let spec = DeploymentSpec::from_json_str(
+            r#"{
+              "schema": "sparsebert-deploy/v1",
+              "model": {"config": "micro"},
+              "variant": [
+                {"name": "tvm", "kind": "tvm"},
+                {"name": "tvm+", "kind": "tvm+", "block": "2x4", "sparsity": 0.5}
+              ]
+            }"#,
+        )
+        .unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.variants.len(), 2);
+    }
+
+    #[test]
+    fn unknown_keys_rejected_everywhere() {
+        for (doc, table) in [
+            ("answer = 42\n[[variant]]\nname = \"a\"\nkind = \"tvm\"", "<root>"),
+            ("[model]\nconfg = \"tiny\"\n[[variant]]\nname = \"a\"\nkind = \"tvm\"", "model"),
+            ("[serving]\ntreads = 2\n[[variant]]\nname = \"a\"\nkind = \"tvm\"", "serving"),
+            ("[[variant]]\nname = \"a\"\nkind = \"tvm\"\nsparsety = 0.5", "variant[0]"),
+        ] {
+            let e = DeploymentSpec::from_toml_str(doc).unwrap_err();
+            match e {
+                DeployError::UnknownKey { table: t, .. } => assert_eq!(t, table),
+                other => panic!("expected UnknownKey in {table}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn structural_errors_are_typed() {
+        // duplicate variant names
+        let dup = "[[variant]]\nname = \"x\"\nkind = \"tvm\"\n\
+                   [[variant]]\nname = \"x\"\nkind = \"pytorch\"";
+        let e = DeploymentSpec::from_toml_str(dup).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::DuplicateVariant { .. }), "{e:?}");
+        // zero threads
+        let zt = "[serving]\nthreads = 0\n[[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(zt).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        // no variants at all
+        let e = DeploymentSpec::from_toml_str("[model]\nconfig = \"tiny\"")
+            .unwrap()
+            .validate()
+            .unwrap_err();
+        assert!(matches!(e, DeployError::Spec { .. }), "{e:?}");
+        // block on a dense kind
+        let bk = "[[variant]]\nname = \"a\"\nkind = \"pytorch\"\nblock = \"1x4\"";
+        let e = DeploymentSpec::from_toml_str(bk).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::IncompatibleOption { .. }), "{e:?}");
+        // pool on a dense kind is rejected, not silently ignored
+        let pl = "[[variant]]\nname = \"a\"\nkind = \"tvm\"\npool = 4";
+        let e = DeploymentSpec::from_toml_str(pl).unwrap().validate().unwrap_err();
+        assert!(
+            matches!(e, DeployError::IncompatibleOption { option: "pool", .. }),
+            "{e:?}"
+        );
+        // tvm+ without a block
+        let nb = "[[variant]]\nname = \"a\"\nkind = \"tvm+\"\nsparsity = 0.5";
+        let e = DeploymentSpec::from_toml_str(nb).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::MissingOption { .. }), "{e:?}");
+        // unknown model preset
+        let mp = "[model]\nconfig = \"huge\"\n[[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(mp).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        // bad kind / bad block strings fail at parse time
+        assert!(
+            DeploymentSpec::from_toml_str("[[variant]]\nname = \"a\"\nkind = \"onnx\"").is_err()
+        );
+        assert!(DeploymentSpec::from_toml_str(
+            "[[variant]]\nname = \"a\"\nkind = \"tvm+\"\nblock = \"axb\""
+        )
+        .is_err());
+        // unsupported schema version
+        assert!(DeploymentSpec::from_toml_str("schema = \"sparsebert-deploy/v9\"").is_err());
+    }
+
+    #[test]
+    fn reserved_fields_validate_but_do_not_instantiate() {
+        let numa = "numa = \"pin\"\n[model]\nconfig = \"micro\"\n\
+                    [[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let spec = DeploymentSpec::from_toml_str(numa).unwrap();
+        spec.validate().unwrap();
+        let e = spec.instantiate().unwrap_err();
+        assert!(matches!(e, DeployError::Unsupported { .. }), "{e:?}");
+        let sync = "[model]\nconfig = \"micro\"\n[store]\npath = \"/tmp/s\"\n\
+                    sync_url = \"s3://x\"\n\
+                    [[variant]]\nname = \"a\"\nkind = \"tvm+\"\nblock = \"2x4\"";
+        let spec = DeploymentSpec::from_toml_str(sync).unwrap();
+        spec.validate().unwrap();
+        let e = spec.instantiate().unwrap_err();
+        assert!(matches!(e, DeployError::Unsupported { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn store_without_sparse_variant_rejected() {
+        // A warm-start store on an all-dense deployment would silently do
+        // nothing; validate refuses it instead.
+        let doc = "[store]\npath = \"/tmp/s\"\n[[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(doc).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn instantiate_registers_all_variants_and_serves() {
+        let spec = DeploymentSpec::from_toml_str(GOOD).unwrap();
+        let dep = spec.instantiate().unwrap();
+        assert_eq!(dep.router.variants(), vec!["tvm".to_string(), "tvm+".to_string()]);
+        assert_eq!(dep.reports.len(), 2);
+        assert!(dep.summary().contains("tvm+"));
+        let a = dep.router.infer("tvm", vec![1, 2, 3]).unwrap();
+        let b = dep.router.infer("tvm+", vec![1, 2, 3]).unwrap();
+        assert_eq!(a.cls.len(), b.cls.len());
+        dep.router.shutdown();
+    }
+
+    #[test]
+    fn standard_spec_matches_flag_defaults() {
+        let spec = DeploymentSpec::standard("tiny", &[BlockShape::new(1, 32)], 0.8, 16);
+        spec.validate().unwrap();
+        assert_eq!(
+            spec.variants.iter().map(|v| v.name.as_str()).collect::<Vec<_>>(),
+            vec!["pytorch", "tvm", "tvm+"]
+        );
+        let multi = DeploymentSpec::standard(
+            "tiny",
+            &[BlockShape::new(1, 32), BlockShape::new(32, 1)],
+            0.8,
+            16,
+        );
+        multi.validate().unwrap();
+        assert_eq!(
+            multi.variants.iter().map(|v| v.name.as_str()).collect::<Vec<_>>(),
+            vec!["pytorch", "tvm", "tvm+1x32", "tvm+32x1"]
+        );
+    }
+}

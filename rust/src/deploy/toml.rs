@@ -1,0 +1,427 @@
+//! Minimal TOML-subset parser for deployment manifests.
+//!
+//! Parses into the crate's [`Json`] value model so [`super::spec`] walks
+//! one representation regardless of whether the manifest was TOML or
+//! JSON. Supported surface (everything `bert_sweep.toml`-class manifests
+//! need, nothing more):
+//!
+//! * `#` comments, blank lines;
+//! * `[table]` and `[[array-of-tables]]` headers, dotted paths allowed
+//!   in headers (`[store.remote]`);
+//! * `key = value` with bare (`[A-Za-z0-9_-]`) or `"quoted"` keys;
+//! * values: basic strings with `\" \\ \n \t \r` escapes, booleans,
+//!   integers/floats, and single-line arrays of those.
+//!
+//! Unsupported TOML (inline tables, multi-line strings/arrays, dates,
+//! dotted keys in key position) fails with a line-numbered
+//! [`DeployError::Spec`] instead of parsing to something surprising.
+
+use super::error::DeployError;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+fn err(line: usize, reason: impl Into<String>) -> DeployError {
+    DeployError::Spec {
+        context: format!("TOML line {line}"),
+        reason: reason.into(),
+    }
+}
+
+/// Parse a TOML-subset document into a [`Json`] object tree.
+pub fn parse(text: &str) -> Result<Json, DeployError> {
+    let mut root = Json::Obj(BTreeMap::new());
+    // Path of the table currently receiving `key = value` lines;
+    // navigation descends into the last element of any array-of-tables
+    // along the way, so `[[variant]]` writes target the newest entry.
+    let mut current: Vec<String> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("[[") {
+            let inner = header_body(rest, "]]", lineno)?;
+            let path = parse_header_path(inner, lineno)?;
+            push_array_table(&mut root, &path, lineno)?;
+            current = path;
+        } else if let Some(rest) = line.strip_prefix('[') {
+            let inner = header_body(rest, "]", lineno)?;
+            let path = parse_header_path(inner, lineno)?;
+            open_table(&mut root, &path, lineno)?;
+            current = path;
+        } else {
+            let (key, value) = parse_key_value(line, lineno)?;
+            let table = navigate_mut(&mut root, &current, lineno)?;
+            let Json::Obj(map) = table else {
+                return Err(err(lineno, "internal: table path resolved to a non-table"));
+            };
+            if map.contains_key(&key) {
+                return Err(err(lineno, format!("duplicate key '{key}'")));
+            }
+            map.insert(key, value);
+        }
+    }
+    Ok(root)
+}
+
+/// Strip the closing bracket(s) of a table header, tolerating a trailing
+/// `# comment` after them.
+fn header_body<'a>(
+    rest: &'a str,
+    closer: &str,
+    lineno: usize,
+) -> Result<&'a str, DeployError> {
+    let close = rest
+        .find(closer)
+        .ok_or_else(|| err(lineno, "unterminated table header"))?;
+    let trailing = rest[close + closer.len()..].trim_start();
+    if !trailing.is_empty() && !trailing.starts_with('#') {
+        return Err(err(lineno, "trailing characters after table header"));
+    }
+    Ok(&rest[..close])
+}
+
+fn parse_header_path(inner: &str, lineno: usize) -> Result<Vec<String>, DeployError> {
+    let inner = inner.trim();
+    if inner.is_empty() {
+        return Err(err(lineno, "empty table header"));
+    }
+    inner
+        .split('.')
+        .map(|seg| {
+            let seg = seg.trim();
+            if seg.is_empty() || !is_bare_key(seg) {
+                Err(err(lineno, format!("bad table-path segment '{seg}'")))
+            } else {
+                Ok(seg.to_string())
+            }
+        })
+        .collect()
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '+')
+}
+
+/// Walk `path` from the root, descending into the **last** element of any
+/// array-of-tables along the way (TOML's rule for `[[a]]` followed by
+/// `[a.b]`), creating plain tables for missing segments.
+fn navigate_mut<'a>(
+    root: &'a mut Json,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut Json, DeployError> {
+    let mut cur = root;
+    for seg in path {
+        // move through arrays-of-tables to their most recent element
+        let map = match cur {
+            Json::Obj(m) => m,
+            _ => return Err(err(lineno, format!("'{seg}' parent is not a table"))),
+        };
+        let entry = map
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Arr(items) => items
+                .last_mut()
+                .ok_or_else(|| err(lineno, format!("array '{seg}' has no elements")))?,
+            other => other,
+        };
+        if !matches!(cur, Json::Obj(_)) {
+            return Err(err(lineno, format!("'{seg}' is not a table")));
+        }
+    }
+    Ok(cur)
+}
+
+fn open_table(root: &mut Json, path: &[String], lineno: usize) -> Result<(), DeployError> {
+    let (last, parents) = path.split_last().expect("non-empty header path");
+    let parent = navigate_mut(root, parents, lineno)?;
+    let Json::Obj(map) = parent else {
+        return Err(err(lineno, "internal: parent is not a table"));
+    };
+    match map.get(last.as_str()) {
+        None => {
+            map.insert(last.clone(), Json::Obj(BTreeMap::new()));
+            Ok(())
+        }
+        // re-opening an existing table (or shadowing a scalar) is a
+        // duplicate-definition error, exactly as in real TOML
+        Some(_) => Err(err(lineno, format!("table '{last}' defined twice"))),
+    }
+}
+
+fn push_array_table(root: &mut Json, path: &[String], lineno: usize) -> Result<(), DeployError> {
+    let (last, parents) = path.split_last().expect("non-empty header path");
+    let parent = navigate_mut(root, parents, lineno)?;
+    let Json::Obj(map) = parent else {
+        return Err(err(lineno, "internal: parent is not a table"));
+    };
+    let entry = map
+        .entry(last.clone())
+        .or_insert_with(|| Json::Arr(Vec::new()));
+    match entry {
+        Json::Arr(items) => {
+            items.push(Json::Obj(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(err(
+            lineno,
+            format!("'{last}' is already a non-array value"),
+        )),
+    }
+}
+
+fn parse_key_value(line: &str, lineno: usize) -> Result<(String, Json), DeployError> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut pos = 0usize;
+    let key = if chars.first() == Some(&'"') {
+        pos += 1;
+        let (s, next) = parse_string_body(&chars, pos, lineno)?;
+        pos = next;
+        s
+    } else {
+        let start = pos;
+        while pos < chars.len() && chars[pos] != '=' && !chars[pos].is_whitespace() {
+            pos += 1;
+        }
+        let k: String = chars[start..pos].iter().collect();
+        if !is_bare_key(&k) {
+            return Err(err(
+                lineno,
+                format!(
+                    "bad key '{k}' (dotted/inline keys are not supported; use a [table] header)"
+                ),
+            ));
+        }
+        k
+    };
+    while pos < chars.len() && chars[pos].is_whitespace() {
+        pos += 1;
+    }
+    if pos >= chars.len() || chars[pos] != '=' {
+        return Err(err(lineno, "expected '=' after key"));
+    }
+    pos += 1;
+    let (value, next) = parse_value(&chars, pos, lineno)?;
+    pos = next;
+    while pos < chars.len() && chars[pos].is_whitespace() {
+        pos += 1;
+    }
+    if pos < chars.len() && chars[pos] != '#' {
+        return Err(err(lineno, "trailing characters after value"));
+    }
+    Ok((key, value))
+}
+
+/// Parse one value starting at `pos` (whitespace-tolerant); returns the
+/// value and the index one past its final character.
+fn parse_value(
+    chars: &[char],
+    mut pos: usize,
+    lineno: usize,
+) -> Result<(Json, usize), DeployError> {
+    while pos < chars.len() && chars[pos].is_whitespace() {
+        pos += 1;
+    }
+    if pos >= chars.len() {
+        return Err(err(lineno, "missing value"));
+    }
+    match chars[pos] {
+        '"' => {
+            let (s, next) = parse_string_body(chars, pos + 1, lineno)?;
+            Ok((Json::Str(s), next))
+        }
+        '[' => {
+            let mut items = Vec::new();
+            pos += 1;
+            loop {
+                while pos < chars.len() && chars[pos].is_whitespace() {
+                    pos += 1;
+                }
+                if pos >= chars.len() {
+                    return Err(err(lineno, "unterminated array (arrays must be single-line)"));
+                }
+                if chars[pos] == ']' {
+                    return Ok((Json::Arr(items), pos + 1));
+                }
+                let (v, next) = parse_value(chars, pos, lineno)?;
+                items.push(v);
+                pos = next;
+                while pos < chars.len() && chars[pos].is_whitespace() {
+                    pos += 1;
+                }
+                if pos < chars.len() && chars[pos] == ',' {
+                    pos += 1;
+                } else if pos >= chars.len() || chars[pos] != ']' {
+                    return Err(err(lineno, "expected ',' or ']' in array"));
+                }
+            }
+        }
+        '{' => Err(err(lineno, "inline tables are not supported; use a [table] header")),
+        _ => {
+            let start = pos;
+            while pos < chars.len()
+                && !chars[pos].is_whitespace()
+                && !matches!(chars[pos], ',' | ']' | '#')
+            {
+                pos += 1;
+            }
+            let tok: String = chars[start..pos].iter().collect();
+            match tok.as_str() {
+                "true" => Ok((Json::Bool(true), pos)),
+                "false" => Ok((Json::Bool(false), pos)),
+                _ => {
+                    let num: f64 = tok.parse().map_err(|_| {
+                        err(
+                            lineno,
+                            format!(
+                                "unrecognized value '{tok}' \
+                                 (expected string, number, bool, or array)"
+                            ),
+                        )
+                    })?;
+                    Ok((Json::Num(num), pos))
+                }
+            }
+        }
+    }
+}
+
+/// Parse a basic-string body starting just after the opening quote;
+/// returns the string and the index one past the closing quote.
+fn parse_string_body(
+    chars: &[char],
+    mut pos: usize,
+    lineno: usize,
+) -> Result<(String, usize), DeployError> {
+    let mut out = String::new();
+    while pos < chars.len() {
+        match chars[pos] {
+            '"' => return Ok((out, pos + 1)),
+            '\\' => {
+                pos += 1;
+                let esc = chars
+                    .get(pos)
+                    .ok_or_else(|| err(lineno, "dangling escape"))?;
+                out.push(match esc {
+                    '"' => '"',
+                    '\\' => '\\',
+                    'n' => '\n',
+                    't' => '\t',
+                    'r' => '\r',
+                    other => return Err(err(lineno, format!("unsupported escape '\\{other}'"))),
+                });
+                pos += 1;
+            }
+            c => {
+                out.push(c);
+                pos += 1;
+            }
+        }
+    }
+    Err(err(lineno, "unterminated string"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let doc = r#"
+# top comment
+schema = "sparsebert-deploy/v1"
+
+[model]
+config = "tiny"   # preset
+seed = 1234
+
+[serving]
+threads = 0
+mode = "pipelined"
+
+[[variant]]
+name = "tvm"
+kind = "tvm"
+
+[[variant]]
+name = "tvm+"
+kind = "tvm+"
+block = "1x32"
+sparsity = 0.8
+"#;
+        let j = parse(doc).unwrap();
+        assert_eq!(j.at(&["schema"]).and_then(Json::as_str), Some("sparsebert-deploy/v1"));
+        assert_eq!(j.at(&["model", "config"]).and_then(Json::as_str), Some("tiny"));
+        assert_eq!(j.at(&["model", "seed"]).and_then(Json::as_usize), Some(1234));
+        assert_eq!(j.at(&["serving", "threads"]).and_then(Json::as_usize), Some(0));
+        let variants = j.get("variant").and_then(Json::as_arr).unwrap();
+        assert_eq!(variants.len(), 2);
+        assert_eq!(variants[1].get("sparsity").and_then(Json::as_f64), Some(0.8));
+        assert_eq!(variants[1].get("kind").and_then(Json::as_str), Some("tvm+"));
+    }
+
+    #[test]
+    fn arrays_bools_and_escapes() {
+        let doc = r#"
+blocks = ["1x32", "32x1"]
+caps = [1, 4, 8]
+flag = true
+label = "a \"quoted\" name"
+"#;
+        let j = parse(doc).unwrap();
+        assert_eq!(j.get("blocks").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+        assert_eq!(j.get("caps").and_then(Json::as_arr).map(|a| a.len()), Some(3));
+        assert_eq!(j.get("flag").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            j.get("label").and_then(Json::as_str),
+            Some("a \"quoted\" name")
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        for (doc, what) in [
+            ("key", "missing ="),
+            ("key = ", "missing value"),
+            ("key = \"open", "unterminated string"),
+            ("[table", "unterminated header"),
+            ("a.b = 1", "dotted key"),
+            ("k = {x = 1}", "inline table"),
+            ("k = 1 extra", "trailing"),
+            ("k = zzz", "bad scalar"),
+        ] {
+            let e = parse(doc).unwrap_err();
+            assert!(
+                matches!(e, DeployError::Spec { .. }),
+                "{what}: wrong error {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_and_tables_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("[t]\nx = 1\n[t]\ny = 2").is_err());
+        // but two [[t]] entries are the array-of-tables idiom
+        let j = parse("[[t]]\nx = 1\n[[t]]\nx = 2").unwrap();
+        assert_eq!(j.get("t").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn trailing_comment_after_value() {
+        let j = parse("x = 3 # three").unwrap();
+        assert_eq!(j.get("x").and_then(Json::as_usize), Some(3));
+    }
+
+    #[test]
+    fn trailing_comment_after_header() {
+        let j = parse("[model] # the model table\nconfig = \"tiny\"").unwrap();
+        assert_eq!(j.at(&["model", "config"]).and_then(Json::as_str), Some("tiny"));
+        assert!(parse("[model] junk\nconfig = \"tiny\"").is_err());
+    }
+}

@@ -81,7 +81,7 @@ impl Engine for InterpEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::bert::CompiledDenseEngine;
+    use crate::model::bert::{CompiledDenseEngine, DenseEngineOptions};
     use crate::model::config::BertConfig;
     use crate::util::propcheck::assert_allclose;
 
@@ -94,7 +94,7 @@ mod tests {
         let w = Arc::new(BertWeights::synthetic(&cfg, 21));
         let x = w.embed(&[3, 1, 4, 1, 5]);
         let eager = InterpEngine::new(Arc::clone(&w), false, 1);
-        let compiled = CompiledDenseEngine::new(Arc::clone(&w), 2);
+        let compiled = CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 2));
         let ye = eager.forward(&x);
         let yc = compiled.forward(&x);
         assert_allclose(&ye.data, &yc.data, 1e-3, 1e-4, "interp vs compiled");

@@ -57,6 +57,25 @@
 //! compiles and maintains stores ahead of deployment; `sparsebert serve
 //! --plan-store <dir>` consumes them.
 //!
+//! ## Unified construction API
+//!
+//! Every engine — CLI subcommands, the serving coordinator, examples,
+//! and the bench harnesses alike — is constructed through the
+//! [`deploy`] layer: [`deploy::EngineBuilder`] owns the full
+//! weights → prune → scheduler → store-attach → engine chain (validating
+//! incompatible kind × option combinations at build time and reporting
+//! plan-cache/store activity per build), and [`deploy::DeploymentSpec`]
+//! is the declarative TOML/JSON manifest form of a whole deployment
+//! (`sparsebert serve --spec deploy.toml`, validated in CI by
+//! `sparsebert deploy check`). The legacy
+//! `SparseBsrEngine::{new,with_pool}` and
+//! `CompiledDenseEngine::{new,with_name}` constructors are deprecated
+//! shims over the canonical options-struct constructors
+//! (`SparseBsrEngine::build` / `CompiledDenseEngine::build`) and will be
+//! removed next release. Upcoming scale work (NUMA pinning, cross-host
+//! artifact-store sync) lands as `DeploymentSpec` fields (`numa`,
+//! `store.sync_url`), already parsed and reserved.
+//!
 //! ## Serving pipeline
 //!
 //! The coordinator's request path is a **two-stage pipeline**
@@ -88,6 +107,7 @@ pub mod interp;
 pub mod model;
 pub mod runtime;
 pub mod coordinator;
+pub mod deploy;
 pub mod bench_harness;
 
 /// Crate version string, reported by the CLI and the serving stats endpoint.

@@ -20,12 +20,10 @@ use sparsebert::bench_harness::{
     run_serving_sweep, run_table1, run_warm_start_smoke, serving_sweep_json, warm_start_json,
     SchedSweepConfig, ServingSweepConfig, Table1Config, WarmStartConfig,
 };
-use sparsebert::coordinator::batcher::BatchPolicy;
 use sparsebert::coordinator::server::{Client, Server};
-use sparsebert::coordinator::{PipelineMode, Router};
-use sparsebert::interp::bert::InterpEngine;
-use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
-use sparsebert::model::engine::Engine;
+use sparsebert::coordinator::PipelineMode;
+use sparsebert::deploy::{DeploymentSpec, EngineBuilder, StoreSpec};
+use sparsebert::model::engine::{Engine, EngineKind};
 use sparsebert::model::{BertConfig, BertWeights, PruneMode, PruneSpec};
 use sparsebert::planstore::PlanStore;
 use sparsebert::scheduler::{AutoScheduler, HwSpec};
@@ -35,8 +33,7 @@ use sparsebert::sparse::BsrMatrix;
 use sparsebert::util::argparse::Parser;
 use sparsebert::util::bench::BenchConfig;
 use sparsebert::util::json::{self, Json};
-use sparsebert::util::pool::{default_threads, Pool};
-use sparsebert::util::tensorfile::{artifacts_dir, TensorBundle};
+use sparsebert::util::tensorfile::artifacts_dir;
 use std::sync::Arc;
 
 fn main() {
@@ -56,6 +53,7 @@ fn main() {
         "table2" => cmd_table2(rest),
         "serve" => cmd_serve(rest),
         "client" => cmd_client(rest),
+        "deploy" => cmd_deploy(rest),
         "plan" => cmd_plan(rest),
         "prune" => cmd_prune(rest),
         "inspect" => cmd_inspect(rest),
@@ -84,8 +82,9 @@ fn usage() -> String {
          \x20 cibench    CI bench smoke: tiny schedsweep + A3 serving sweep → JSON\n\
          \x20 figure2    regenerate Figure 2 (TVM+/Dense curve)\n\
          \x20 table2     render Table 2 from artifacts/table2.json (run `make table2` first)\n\
-         \x20 serve      start the serving coordinator (TCP, JSON lines)\n\
+         \x20 serve      start the serving coordinator (TCP, JSON lines; --spec deploy.toml)\n\
          \x20 client     send one request to a running server\n\
+         \x20 deploy     deployment manifests: check (validate TOML/JSON specs)\n\
          \x20 plan       artifact store: build | inspect | gc (warm starts for serve)\n\
          \x20 prune      prune synthetic/bundled weights, print structure stats\n\
          \x20 inspect    sparsity-pattern & scheduler-reuse introspection\n\
@@ -412,71 +411,54 @@ fn cmd_table2(argv: Vec<String>) -> Result<()> {
 // serve / client
 // ---------------------------------------------------------------------------
 
-/// The `tvm+` variant's pruning, shared by `serve` and `plan build` so
-/// ahead-of-time artifacts fingerprint-match the serving engine exactly
-/// (same pool, same projection seed → byte-identical pruned weights).
-fn prune_for_tvm_plus(
-    weights: &BertWeights,
-    block: BlockShape,
-    sparsity: f64,
-    pool: usize,
-) -> Arc<BertWeights> {
-    let mut pruned = weights.clone();
-    pruned.prune(
-        &PruneSpec {
-            mode: PruneMode::Structured { pool },
-            sparsity,
-            block,
-        },
-        7,
+/// Translate the `serve` flag set into the equivalent [`DeploymentSpec`]
+/// — both the flag path and `--spec` instantiate through the same code,
+/// so the two invocations are byte-identical by construction (the PR-4
+/// golden test asserts it).
+fn serve_spec_from_flags(args: &sparsebert::util::argparse::Args) -> Result<DeploymentSpec> {
+    let blocks: Vec<BlockShape> = args
+        .get("block")
+        .split(',')
+        .map(|s| BlockShape::parse(s.trim()))
+        .collect::<std::result::Result<_, String>>()
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let mut spec = DeploymentSpec::standard(
+        args.get("model"),
+        &blocks,
+        args.get_f64("sparsity")?,
+        sparsebert::deploy::DEFAULT_PRUNE_POOL,
     );
-    Arc::new(pruned)
-}
-
-fn build_engines(
-    weights: Arc<BertWeights>,
-    block: BlockShape,
-    sparsity: f64,
-    threads: usize,
-    exec_pool: Arc<Pool>,
-    sched: Arc<AutoScheduler>,
-) -> Result<Vec<(String, Arc<dyn Engine>, Arc<BertWeights>)>> {
-    let mut out: Vec<(String, Arc<dyn Engine>, Arc<BertWeights>)> = Vec::new();
-    out.push((
-        "pytorch".into(),
-        Arc::new(InterpEngine::new(Arc::clone(&weights), false, threads)),
-        Arc::clone(&weights),
-    ));
-    out.push((
-        "tvm".into(),
-        Arc::new(CompiledDenseEngine::new(Arc::clone(&weights), threads)),
-        Arc::clone(&weights),
-    ));
-    let pruned = prune_for_tvm_plus(&weights, block, sparsity, 16);
-    // The sparse engine shares the coordinator's engine-side pool, so
-    // its kernel fan-out and the batch-level parallelism never
-    // oversubscribe each other (see coordinator::pool docs).
-    out.push((
-        "tvm+".into(),
-        Arc::new(SparseBsrEngine::with_pool(
-            Arc::clone(&pruned),
-            block,
-            sched,
-            threads,
-            Some(exec_pool),
-        )?),
-        Arc::clone(&pruned),
-    ));
-    Ok(out)
+    if !args.get("weights").is_empty() {
+        spec.model.weights = Some(args.get("weights").into());
+    }
+    spec.serving.mode = PipelineMode::parse(args.get("mode")).map_err(|e| anyhow::anyhow!(e))?;
+    spec.serving.max_batch = args.get_usize("max-batch")?;
+    spec.serving.batch_wait_ms = args.get_usize("batch-wait-ms")? as u64;
+    let workers = args.get_usize("workers")?;
+    if workers > 0 {
+        spec.serving.threads = Some(workers);
+    }
+    if !args.get("plan-store").is_empty() {
+        spec.store = Some(StoreSpec {
+            path: args.get("plan-store").into(),
+            sync_url: None,
+        });
+    }
+    Ok(spec)
 }
 
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let args = Parser::new("sparsebert serve", "serving coordinator (TCP JSON-lines)")
-        .opt("addr", "127.0.0.1:7878", "bind address")
+        .opt(
+            "spec",
+            "",
+            "deployment manifest (TOML/JSON); when set, the engine/model flags below are ignored",
+        )
+        .opt("addr", "127.0.0.1:7878", "bind address ([serving].addr wins when --spec sets it)")
         .opt("model", "tiny", "model config: tiny|micro|base")
         .opt("weights", "", "weight bundle dir (default: synthetic init)")
-        .opt("block", "1x32", "block shape for the tvm+ variant")
-        .opt("sparsity", "0.8", "sparsity for the tvm+ variant")
+        .opt("block", "1x32", "comma-separated block shapes for the tvm+ variant(s)")
+        .opt("sparsity", "0.8", "sparsity for the tvm+ variant(s)")
         .opt("max-batch", "8", "dynamic batch size cap")
         .opt("batch-wait-ms", "2", "dynamic batch window")
         .opt("workers", "0", "batch workers (0 = auto)")
@@ -487,89 +469,40 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             "artifact store dir for warm starts (populate with `sparsebert plan build`)",
         )
         .parse(argv)?;
-    let cfg = match args.get("model") {
-        "base" => BertConfig::base(),
-        "micro" => BertConfig::micro(),
-        _ => BertConfig::tiny(),
-    };
-    let weights = if args.get("weights").is_empty() {
-        Arc::new(BertWeights::synthetic(&cfg, 1234))
+    let spec = if args.get("spec").is_empty() {
+        serve_spec_from_flags(&args)?
     } else {
-        let bundle = TensorBundle::load(std::path::Path::new(args.get("weights")))?;
-        Arc::new(BertWeights::from_bundle(&bundle)?)
+        DeploymentSpec::from_path(std::path::Path::new(args.get("spec")))?
     };
-    let block = BlockShape::parse(args.get("block")).map_err(|e| anyhow::anyhow!(e))?;
-    let threads = match args.get_usize("workers")? {
-        0 => default_threads(),
-        n => n,
-    };
-    let policy = BatchPolicy {
-        max_batch: args.get_usize("max-batch")?,
-        max_wait: std::time::Duration::from_millis(args.get_usize("batch-wait-ms")? as u64),
-    };
-    let mode = PipelineMode::parse(args.get("mode")).map_err(|e| anyhow::anyhow!(e))?;
-    // One shared engine-side pool: every variant's batches AND the
-    // sparse engine's kernels execute on it.
-    let exec_pool = Arc::new(Pool::new(threads));
-    let mut router = Router::with_exec_pool(Arc::clone(&exec_pool));
-    let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
-    // Warm start: attach the persistent artifact store before the sparse
-    // engine is built, so plans and packed weights load from disk.
-    let plan_store = if args.get("plan-store").is_empty() {
-        None
-    } else {
-        let store = Arc::new(PlanStore::open(
-            std::path::Path::new(args.get("plan-store")),
-            &sched.hw,
-        )?);
-        sched.attach_store(Arc::clone(&store));
-        Some(store)
-    };
-    let engines = build_engines(
-        weights,
-        block,
-        args.get_f64("sparsity")?,
-        threads,
-        exec_pool,
-        Arc::clone(&sched),
-    )?;
-    for (name, engine, w) in engines {
-        router.register_with_mode(&name, engine, w, policy, threads, mode);
-    }
-    // Surface the plan-cache (and, when warm-starting, plan-store)
-    // counters in the stats endpoint next to the pipeline metrics.
-    {
-        let s = Arc::clone(&sched);
-        router
-            .metrics
-            .register_gauge("plan_cache", move || s.cache.stats().to_json());
-    }
-    if let Some(store) = &plan_store {
-        let st = Arc::clone(store);
-        router
-            .metrics
-            .register_gauge("plan_store", move || st.stats().to_json());
+    let addr = spec
+        .serving
+        .addr
+        .clone()
+        .unwrap_or_else(|| args.get("addr").to_string());
+    let dep = spec.instantiate()?;
+    eprintln!("{}", dep.summary());
+    if let Some(store) = &dep.store {
         let stats = store.stats();
         eprintln!(
             "plan store {}: {} plans + {} packed weights warm-loaded, {} plans compiled live \
              (hw match: {})",
-            args.get("plan-store"),
+            store.dir().display(),
             stats.plan_hits,
             stats.weight_hits,
-            sched.buffer.len(),
+            dep.sched.buffer.len(),
             store.hw_match()
         );
     }
-    let router = Arc::new(router);
+    let router = Arc::new(dep.router);
     eprintln!(
-        "serving variants {:?} on {} (model={}, block={block}, mode={mode}, hw: {})",
+        "serving variants {:?} on {addr} (model={}, mode={}, hw: {})",
         router.variants(),
-        args.get("addr"),
-        args.get("model"),
+        spec.model.config,
+        spec.serving.mode,
         HwSpec::detect()
     );
     let server = Server::new(Arc::clone(&router));
-    server.serve(args.get("addr"), |addr| eprintln!("listening on {addr}"))?;
+    server.serve(&addr, |a| eprintln!("listening on {a}"))?;
     router.shutdown();
     eprintln!("server stopped");
     Ok(())
@@ -618,6 +551,61 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// deploy — manifest tooling
+// ---------------------------------------------------------------------------
+
+fn cmd_deploy(argv: Vec<String>) -> Result<()> {
+    let deploy_usage = "usage: sparsebert deploy <check> <manifest.toml|json> [...]\n\
+                        \x20 check    parse + validate deployment manifests (the CI gate \
+                        for checked-in specs)";
+    let (sub, rest) = match argv.split_first() {
+        Some((s, r)) => (s.as_str(), r.to_vec()),
+        None => bail!("{deploy_usage}"),
+    };
+    match sub {
+        "check" => cmd_deploy_check(rest),
+        "--help" | "-h" | "help" => {
+            println!("{deploy_usage}");
+            Ok(())
+        }
+        other => bail!("unknown deploy subcommand '{other}'\n{deploy_usage}"),
+    }
+}
+
+fn cmd_deploy_check(argv: Vec<String>) -> Result<()> {
+    if argv.is_empty() {
+        bail!("usage: sparsebert deploy check <manifest.toml|json> [...]");
+    }
+    let mut failures = 0usize;
+    for path in &argv {
+        let checked = DeploymentSpec::from_path(std::path::Path::new(path)).and_then(|spec| {
+            spec.validate()?;
+            Ok(spec)
+        });
+        match checked {
+            Ok(spec) => {
+                let names: Vec<&str> = spec.variants.iter().map(|v| v.name.as_str()).collect();
+                println!(
+                    "{path}: OK — model {}, {} variant(s) [{}], mode {}",
+                    spec.model.config,
+                    spec.variants.len(),
+                    names.join(", "),
+                    spec.serving.mode
+                );
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("{path}: FAILED — {e}");
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} manifest(s) failed validation");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // plan — ahead-of-time artifact store
 // ---------------------------------------------------------------------------
 
@@ -655,24 +643,7 @@ fn cmd_plan_build(argv: Vec<String>) -> Result<()> {
     .opt("pool", "16", "structured-prune pattern pool size")
     .opt("seed", "1234", "synthetic weight seed (matching serve)")
     .parse(argv)?;
-    let cfg = match args.get("model") {
-        "base" => BertConfig::base(),
-        "micro" => BertConfig::micro(),
-        _ => BertConfig::tiny(),
-    };
-    let weights = if args.get("weights").is_empty() {
-        BertWeights::synthetic(&cfg, args.get_usize("seed")? as u64)
-    } else {
-        let bundle = TensorBundle::load(std::path::Path::new(args.get("weights")))?;
-        BertWeights::from_bundle(&bundle)?
-    };
     let block = BlockShape::parse(args.get("block")).map_err(|e| anyhow::anyhow!(e))?;
-    let pruned = prune_for_tvm_plus(
-        &weights,
-        block,
-        args.get_f64("sparsity")?,
-        args.get_usize("pool")?,
-    );
     let hw = HwSpec::detect();
     let store = Arc::new(PlanStore::open(std::path::Path::new(args.get("store")), &hw)?);
     if !store.hw_match() {
@@ -683,17 +654,29 @@ fn cmd_plan_build(argv: Vec<String>) -> Result<()> {
             store.header().hw_desc
         );
     }
-    let sched = Arc::new(AutoScheduler::new(hw.clone()));
-    sched.attach_store(Arc::clone(&store));
-    let t0 = std::time::Instant::now();
-    let _engine =
-        SparseBsrEngine::new(Arc::clone(&pruned), block, Arc::clone(&sched), default_threads())?;
-    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    // The builder prunes with the same defaults `serve` uses, so the
+    // artifacts fingerprint-match the serving engine exactly (same pool,
+    // same projection seed → byte-identical pruned weights).
+    let mut builder = EngineBuilder::new(EngineKind::TvmPlus)
+        .block(block)
+        .sparsity(args.get_f64("sparsity")?)
+        .prune_pool(args.get_usize("pool")?)
+        .plan_store(Arc::clone(&store));
+    builder = if args.get("weights").is_empty() {
+        builder.weights_synthetic(
+            BertConfig::preset(args.get("model"))?,
+            args.get_usize("seed")? as u64,
+        )
+    } else {
+        builder.weights_bundle(args.get("weights"))
+    };
+    let built = builder.build()?;
     let s = store.stats();
     println!(
-        "built artifacts in {ms:.1} ms: {} plans compiled live, {} already present, \
+        "built artifacts in {:.1} ms: {} plans compiled live, {} already present, \
          {} artifacts written; store {} now holds {} artifacts ({})",
-        sched.buffer.len(),
+        built.report.build_ms,
+        built.report.live_plans,
         s.plan_hits,
         s.writes,
         args.get("store"),
@@ -773,11 +756,7 @@ fn cmd_prune(argv: Vec<String>) -> Result<()> {
         .opt("seed", "42", "weight seed")
         .opt("out", "", "save pruned bundle to this directory")
         .parse(argv)?;
-    let cfg = match args.get("model") {
-        "base" => BertConfig::base(),
-        "micro" => BertConfig::micro(),
-        _ => BertConfig::tiny(),
-    };
+    let cfg = BertConfig::preset(args.get("model"))?;
     let block = BlockShape::parse(args.get("block")).map_err(|e| anyhow::anyhow!(e))?;
     let sparsity = args.get_f64("sparsity")?;
     let mut w = BertWeights::synthetic(&cfg, args.get_usize("seed")? as u64);
@@ -831,11 +810,7 @@ fn cmd_inspect(argv: Vec<String>) -> Result<()> {
     .opt("pool", "16", "pattern pool")
     .opt("seed", "42", "weight seed")
     .parse(argv)?;
-    let cfg = match args.get("model") {
-        "base" => BertConfig::base(),
-        "micro" => BertConfig::micro(),
-        _ => BertConfig::tiny(),
-    };
+    let cfg = BertConfig::preset(args.get("model"))?;
     let sparsity = args.get_f64("sparsity")?;
     let pool = args.get_usize("pool")?;
     println!(
@@ -908,13 +883,22 @@ fn cmd_selftest(argv: Vec<String>) -> Result<()> {
     let pruned = Arc::new(pruned);
     let tokens: Vec<u32> = (0..args.get_usize("seq")? as u32).collect();
     let x = pruned.embed(&tokens);
-    let eager = InterpEngine::new(Arc::clone(&pruned), false, 1);
-    let compiled = CompiledDenseEngine::new(Arc::clone(&pruned), 2);
-    let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
-    let sparse = SparseBsrEngine::new(Arc::clone(&pruned), block, sched, 2)?;
-    let ye = eager.forward(&x);
-    let yc = compiled.forward(&x);
-    let ys = sparse.forward(&x);
+    let eager = EngineBuilder::new(EngineKind::PyTorch)
+        .weights(Arc::clone(&pruned))
+        .threads(1)
+        .build()?;
+    let compiled = EngineBuilder::new(EngineKind::TvmStd)
+        .weights(Arc::clone(&pruned))
+        .threads(2)
+        .build()?;
+    let sparse = EngineBuilder::new(EngineKind::TvmPlus)
+        .weights(Arc::clone(&pruned))
+        .block(block)
+        .threads(2)
+        .build()?;
+    let ye = eager.engine.forward(&x);
+    let yc = compiled.engine.forward(&x);
+    let ys = sparse.engine.forward(&x);
     let d_ec = sparsebert::util::propcheck::max_abs_diff(&ye.data, &yc.data);
     let d_cs = sparsebert::util::propcheck::max_abs_diff(&yc.data, &ys.data);
     println!("eager vs compiled   max|Δ| = {d_ec:.2e}");
@@ -928,7 +912,12 @@ fn cmd_selftest(argv: Vec<String>) -> Result<()> {
         let toks: Vec<u32> = (0..xla.tokens() as u32).collect();
         let x8 = dense_micro.embed(&toks);
         let yx = xla.forward(&x8);
-        let yc8 = CompiledDenseEngine::new(Arc::clone(&dense_micro), 1).forward(&x8);
+        let yc8 = EngineBuilder::new(EngineKind::TvmStd)
+            .weights(Arc::clone(&dense_micro))
+            .threads(1)
+            .build()?
+            .engine
+            .forward(&x8);
         let d_xc = sparsebert::util::propcheck::max_abs_diff(&yx.data, &yc8.data);
         println!("xla vs compiled     max|Δ| = {d_xc:.2e}");
         ok &= d_xc < 5e-3;

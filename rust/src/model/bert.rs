@@ -28,6 +28,35 @@ use std::sync::Arc;
 
 const LN_EPS: f32 = 1e-5;
 
+/// Canonical construction options for [`CompiledDenseEngine`] — the one
+/// entry point [`crate::deploy::EngineBuilder`] drives. The former
+/// `new`/`with_name` constructor pair survives as deprecated shims for
+/// one release.
+#[derive(Clone)]
+pub struct DenseEngineOptions {
+    pub weights: Arc<BertWeights>,
+    pub threads: usize,
+    /// Engine label in reports and the serving stats JSON.
+    pub name: String,
+}
+
+impl DenseEngineOptions {
+    pub fn new(weights: Arc<BertWeights>, threads: usize) -> DenseEngineOptions {
+        DenseEngineOptions {
+            weights,
+            threads,
+            name: "tvm".to_string(),
+        }
+    }
+
+    /// Override the report label (the Table 1 harness labels its negative
+    /// control rows per block shape).
+    pub fn named(mut self, name: &str) -> DenseEngineOptions {
+        self.name = name.to_string();
+        self
+    }
+}
+
 /// Compiled-style dense engine ("TVM" column).
 pub struct CompiledDenseEngine {
     weights: Arc<BertWeights>,
@@ -36,20 +65,31 @@ pub struct CompiledDenseEngine {
 }
 
 impl CompiledDenseEngine {
-    pub fn new(weights: Arc<BertWeights>, threads: usize) -> CompiledDenseEngine {
+    /// Canonical constructor. Prefer [`crate::deploy::EngineBuilder`],
+    /// which owns the full weights→prune→engine chain and validation;
+    /// call this directly only when you already hold prepared weights.
+    pub fn build(opts: DenseEngineOptions) -> CompiledDenseEngine {
         CompiledDenseEngine {
-            weights,
-            threads,
-            name: "tvm".to_string(),
+            weights: opts.weights,
+            threads: opts.threads,
+            name: opts.name,
         }
     }
 
+    #[deprecated(
+        since = "0.2.0",
+        note = "use CompiledDenseEngine::build(DenseEngineOptions) or deploy::EngineBuilder"
+    )]
+    pub fn new(weights: Arc<BertWeights>, threads: usize) -> CompiledDenseEngine {
+        Self::build(DenseEngineOptions::new(weights, threads))
+    }
+
+    #[deprecated(
+        since = "0.2.0",
+        note = "use CompiledDenseEngine::build(DenseEngineOptions::new(..).named(..))"
+    )]
     pub fn with_name(weights: Arc<BertWeights>, threads: usize, name: &str) -> CompiledDenseEngine {
-        CompiledDenseEngine {
-            weights,
-            threads,
-            name: name.to_string(),
-        }
+        Self::build(DenseEngineOptions::new(weights, threads).named(name))
     }
 }
 
@@ -114,34 +154,67 @@ pub struct SparseBsrEngine {
     exec_pool: Option<Arc<Pool>>,
 }
 
-impl SparseBsrEngine {
-    /// Convert pruned weights to BSR at `block` granularity and compile
-    /// (or fetch) execution plans through the scheduler's plan cache.
-    /// Kernels run on the shared global worker pool.
+/// Canonical construction options for [`SparseBsrEngine`] — the one
+/// entry point [`crate::deploy::EngineBuilder`] drives. The former
+/// `new`/`with_pool` constructor pair survives as deprecated shims for
+/// one release.
+#[derive(Clone)]
+pub struct SparseEngineOptions {
+    /// Pruned weights to convert to BSR.
+    pub weights: Arc<BertWeights>,
+    pub block: BlockShape,
+    pub sched: Arc<AutoScheduler>,
+    pub threads: usize,
+    /// Explicit persistent pool for kernel execution; `None` executes on
+    /// the process-wide global pool. The serving coordinator passes its
+    /// **shared engine-side pool** (the same handle every variant's
+    /// batches run on): a multi-sequence batch then parallelizes across
+    /// sequences while each sequence's kernels execute inline on their
+    /// batch worker (the pool's re-entrancy rule), and a single-sequence
+    /// batch — dispatched from the execute-stage thread — keeps full
+    /// kernel fan-out. Either way the engine never oversubscribes the
+    /// machine.
+    pub exec_pool: Option<Arc<Pool>>,
+}
+
+impl SparseEngineOptions {
     pub fn new(
         weights: Arc<BertWeights>,
         block: BlockShape,
         sched: Arc<AutoScheduler>,
         threads: usize,
-    ) -> Result<SparseBsrEngine> {
-        Self::with_pool(weights, block, sched, threads, None)
+    ) -> SparseEngineOptions {
+        SparseEngineOptions {
+            weights,
+            block,
+            sched,
+            threads,
+            exec_pool: None,
+        }
     }
 
-    /// As [`SparseBsrEngine::new`], but with an explicit persistent pool
-    /// for kernel execution. The serving coordinator passes its **shared
-    /// engine-side pool** (the same handle every variant's batches run
-    /// on): a multi-sequence batch then parallelizes across sequences
-    /// while each sequence's kernels execute inline on their batch
-    /// worker (the pool's re-entrancy rule), and a single-sequence batch
-    /// — dispatched from the execute-stage thread — keeps full kernel
-    /// fan-out. Either way the engine never oversubscribes the machine.
-    pub fn with_pool(
-        weights: Arc<BertWeights>,
-        block: BlockShape,
-        sched: Arc<AutoScheduler>,
-        threads: usize,
-        exec_pool: Option<Arc<Pool>>,
-    ) -> Result<SparseBsrEngine> {
+    /// Execute kernels on an explicit persistent pool (see the
+    /// `exec_pool` field docs).
+    pub fn on_pool(mut self, pool: Arc<Pool>) -> SparseEngineOptions {
+        self.exec_pool = Some(pool);
+        self
+    }
+}
+
+impl SparseBsrEngine {
+    /// Canonical constructor: convert pruned weights to BSR at the
+    /// options' block granularity and compile (or fetch) execution plans
+    /// through the scheduler's plan cache. Prefer
+    /// [`crate::deploy::EngineBuilder`], which owns the full
+    /// weights→prune→scheduler→store chain and validation.
+    pub fn build(opts: SparseEngineOptions) -> Result<SparseBsrEngine> {
+        let SparseEngineOptions {
+            weights,
+            block,
+            sched,
+            threads,
+            exec_pool,
+        } = opts;
         // Warm start: when the scheduler carries a persistent artifact
         // store, pre-packed BSR buffers replace the `from_dense` packing
         // walk, and freshly packed layers are written back for the next
@@ -180,6 +253,35 @@ impl SparseBsrEngine {
             block,
             exec_pool,
         })
+    }
+
+    #[deprecated(
+        since = "0.2.0",
+        note = "use SparseBsrEngine::build(SparseEngineOptions) or deploy::EngineBuilder"
+    )]
+    pub fn new(
+        weights: Arc<BertWeights>,
+        block: BlockShape,
+        sched: Arc<AutoScheduler>,
+        threads: usize,
+    ) -> Result<SparseBsrEngine> {
+        Self::build(SparseEngineOptions::new(weights, block, sched, threads))
+    }
+
+    #[deprecated(
+        since = "0.2.0",
+        note = "use SparseBsrEngine::build(SparseEngineOptions::new(..).on_pool(..))"
+    )]
+    pub fn with_pool(
+        weights: Arc<BertWeights>,
+        block: BlockShape,
+        sched: Arc<AutoScheduler>,
+        threads: usize,
+        exec_pool: Option<Arc<Pool>>,
+    ) -> Result<SparseBsrEngine> {
+        let mut opts = SparseEngineOptions::new(weights, block, sched, threads);
+        opts.exec_pool = exec_pool;
+        Self::build(opts)
     }
 
     pub fn block(&self) -> BlockShape {
@@ -268,6 +370,22 @@ mod tests {
     use crate::scheduler::HwSpec;
     use crate::util::propcheck::assert_allclose;
 
+    /// Canonical-constructor shorthand for this module's tests.
+    fn sparse_on(
+        w: &Arc<BertWeights>,
+        block: BlockShape,
+        sched: &Arc<AutoScheduler>,
+        threads: usize,
+    ) -> SparseBsrEngine {
+        SparseBsrEngine::build(SparseEngineOptions::new(
+            Arc::clone(w),
+            block,
+            Arc::clone(sched),
+            threads,
+        ))
+        .unwrap()
+    }
+
     fn setup(sparsity: f64, block: BlockShape) -> (Arc<BertWeights>, Matrix) {
         let cfg = BertConfig::micro();
         let mut w = BertWeights::synthetic(&cfg, 11);
@@ -282,9 +400,9 @@ mod tests {
     fn sparse_engine_matches_dense_on_pruned_weights() {
         let block = BlockShape::new(2, 4);
         let (w, x) = setup(0.6, block);
-        let dense = CompiledDenseEngine::new(Arc::clone(&w), 2);
+        let dense = CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 2));
         let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
-        let sparse = SparseBsrEngine::new(Arc::clone(&w), block, sched, 2).unwrap();
+        let sparse = sparse_on(&w, block, &sched, 2);
         let yd = dense.forward(&x);
         let ys = sparse.forward(&x);
         assert_eq!(yd.rows, x.rows);
@@ -296,9 +414,9 @@ mod tests {
     fn sparse_engine_footprint_smaller() {
         let block = BlockShape::new(1, 4);
         let (w, _) = setup(0.8, block);
-        let dense = CompiledDenseEngine::new(Arc::clone(&w), 1);
+        let dense = CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 1));
         let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
-        let sparse = SparseBsrEngine::new(Arc::clone(&w), block, sched, 1).unwrap();
+        let sparse = sparse_on(&w, block, &sched, 1);
         assert!(
             sparse.weight_footprint_bytes() < dense.weight_footprint_bytes() / 2,
             "sparse {} vs dense {}",
@@ -324,8 +442,7 @@ mod tests {
             5,
         );
         let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
-        let _engine =
-            SparseBsrEngine::new(Arc::new(w), block, Arc::clone(&sched), 1).unwrap();
+        let _engine = sparse_on(&Arc::new(w), block, &sched, 1);
         let snap = sched.buffer.stats.snapshot();
         assert!(snap.tasks_seen >= 6);
         // Pool=1 pruning makes every block-row inside a matrix share one
@@ -342,13 +459,13 @@ mod tests {
         let block = BlockShape::new(2, 4);
         let (w, x) = setup(0.6, block);
         let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
-        let e1 = SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched), 2).unwrap();
+        let e1 = sparse_on(&w, block, &sched, 2);
         let misses_after_first = sched.cache.stats().misses;
         assert!(misses_after_first >= 1);
         // Same weights → identical structures: the second engine (a second
         // serving replica, or the same model re-registered) must be all
         // cache hits — zero re-planning.
-        let e2 = SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched), 2).unwrap();
+        let e2 = sparse_on(&w, block, &sched, 2);
         let s = sched.cache.stats();
         assert_eq!(s.misses, misses_after_first, "re-planned on repeat: {s:?}");
         assert!(s.hits >= 6, "expected per-projection hits, got {s:?}");
@@ -363,13 +480,10 @@ mod tests {
         let block = BlockShape::new(1, 4);
         let (w, x) = setup(0.7, block);
         let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
-        let shared = SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched), 3).unwrap();
-        let dedicated = SparseBsrEngine::with_pool(
-            Arc::clone(&w),
-            block,
-            Arc::clone(&sched),
-            3,
-            Some(Arc::new(crate::util::pool::Pool::new(3))),
+        let shared = sparse_on(&w, block, &sched, 3);
+        let dedicated = SparseBsrEngine::build(
+            SparseEngineOptions::new(Arc::clone(&w), block, Arc::clone(&sched), 3)
+                .on_pool(Arc::new(crate::util::pool::Pool::new(3))),
         )
         .unwrap();
         assert_eq!(shared.forward(&x).data, dedicated.forward(&x).data);
@@ -386,7 +500,10 @@ mod tests {
         let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
         let pool = Arc::new(crate::util::pool::Pool::new(3));
         let engine = Arc::new(
-            SparseBsrEngine::with_pool(w, block, sched, 3, Some(Arc::clone(&pool))).unwrap(),
+            SparseBsrEngine::build(
+                SparseEngineOptions::new(w, block, sched, 3).on_pool(Arc::clone(&pool)),
+            )
+            .unwrap(),
         );
         let y_direct = engine.forward(&x);
         let (tx, rx) = std::sync::mpsc::channel();
@@ -415,15 +532,13 @@ mod tests {
         sched_cold.attach_store(Arc::new(
             crate::planstore::PlanStore::open(&dir, &hw).unwrap(),
         ));
-        let cold =
-            SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched_cold), 2).unwrap();
+        let cold = sparse_on(&w, block, &sched_cold, 2);
         assert!(sched_cold.buffer.len() >= 1, "cold run compiles live");
         // warm "restart": fresh scheduler + reopened store
         let store = Arc::new(crate::planstore::PlanStore::open(&dir, &hw).unwrap());
         let sched_warm = Arc::new(AutoScheduler::new(hw.clone()));
         sched_warm.attach_store(Arc::clone(&store));
-        let warm =
-            SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched_warm), 2).unwrap();
+        let warm = sparse_on(&w, block, &sched_warm, 2);
         let s = store.stats();
         assert_eq!(sched_warm.buffer.len(), 0, "zero live plannings on warm start");
         assert_eq!(s.plan_misses, 0, "every plan served from the store: {s:?}");
@@ -448,7 +563,7 @@ mod tests {
         sched_a.attach_store(Arc::new(
             crate::planstore::PlanStore::open(&dir, &hw_a).unwrap(),
         ));
-        let _cold = SparseBsrEngine::new(Arc::clone(&w), block, sched_a, 2).unwrap();
+        let _cold = sparse_on(&w, block, &sched_a, 2);
         // a different machine opens the same store: plans are rejected by
         // the hardware fingerprint, and the engine builds live — no error
         let mut hw_b = HwSpec::haswell_reference();
@@ -456,8 +571,7 @@ mod tests {
         let store_b = Arc::new(crate::planstore::PlanStore::open(&dir, &hw_b).unwrap());
         let sched_b = Arc::new(AutoScheduler::new(hw_b));
         sched_b.attach_store(Arc::clone(&store_b));
-        let engine =
-            SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched_b), 2).unwrap();
+        let engine = sparse_on(&w, block, &sched_b, 2);
         assert!(sched_b.buffer.len() >= 1, "foreign store must plan live");
         assert!(store_b.stats().hw_rejects >= 1);
         // forward still works on the live-planned engine
@@ -468,9 +582,48 @@ mod tests {
     #[test]
     fn deterministic_forward() {
         let (w, x) = setup(0.0, BlockShape::new(1, 1));
-        let dense = CompiledDenseEngine::new(Arc::clone(&w), 3);
+        let dense = CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 3));
         let y1 = dense.forward(&x);
         let y2 = dense.forward(&x);
         assert_eq!(y1.data, y2.data);
+    }
+
+    /// The deprecated constructor shims must stay byte-equivalent to the
+    /// canonical options-struct constructors for the one release they
+    /// survive.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_delegate_to_canonical_constructors() {
+        let block = BlockShape::new(2, 4);
+        let (w, x) = setup(0.6, block);
+        let via_shim = CompiledDenseEngine::new(Arc::clone(&w), 2).forward(&x);
+        let via_build =
+            CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 2)).forward(&x);
+        assert_eq!(via_shim.data, via_build.data);
+        assert_eq!(
+            CompiledDenseEngine::with_name(Arc::clone(&w), 1, "ctrl").name(),
+            "ctrl"
+        );
+        let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
+        let s_shim = SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched), 2)
+            .unwrap()
+            .forward(&x);
+        let pool = Arc::new(crate::util::pool::Pool::new(2));
+        let s_pool = SparseBsrEngine::with_pool(
+            Arc::clone(&w),
+            block,
+            Arc::clone(&sched),
+            2,
+            Some(Arc::clone(&pool)),
+        )
+        .unwrap()
+        .forward(&x);
+        let s_build = SparseBsrEngine::build(
+            SparseEngineOptions::new(Arc::clone(&w), block, sched, 2).on_pool(pool),
+        )
+        .unwrap()
+        .forward(&x);
+        assert_eq!(s_shim.data, s_build.data);
+        assert_eq!(s_pool.data, s_build.data);
     }
 }

@@ -61,6 +61,19 @@ impl BertConfig {
         }
     }
 
+    /// Named preset lookup — the single place CLI flags and deployment
+    /// manifests resolve `model = "tiny"`-style strings (previously each
+    /// subcommand carried its own `match`, silently defaulting unknown
+    /// names to tiny).
+    pub fn preset(name: &str) -> Result<BertConfig> {
+        match name {
+            "base" => Ok(BertConfig::base()),
+            "tiny" => Ok(BertConfig::tiny()),
+            "micro" => Ok(BertConfig::micro()),
+            other => bail!("unknown model preset '{other}' (expected tiny|micro|base)"),
+        }
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.hidden % self.heads != 0 {
             bail!("hidden {} not divisible by heads {}", self.hidden, self.heads);
@@ -149,6 +162,14 @@ mod tests {
         let mut c2 = BertConfig::micro();
         c2.layers = 0;
         assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert_eq!(BertConfig::preset("tiny").unwrap(), BertConfig::tiny());
+        assert_eq!(BertConfig::preset("micro").unwrap(), BertConfig::micro());
+        assert_eq!(BertConfig::preset("base").unwrap(), BertConfig::base());
+        assert!(BertConfig::preset("huge").is_err());
     }
 
     #[test]

@@ -41,17 +41,30 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Every accepted spelling of this kind, lowercase. The first entry is
+    /// the canonical form (identical to the [`fmt::Display`] string), so
+    /// `parse(kind.to_string())` always round-trips. This table is the
+    /// single source of truth for CLI flags, deployment manifests, and the
+    /// builder — there is deliberately no other string matching on engine
+    /// names anywhere in the crate.
+    pub fn aliases(self) -> &'static [&'static str] {
+        match self {
+            EngineKind::PyTorch => &["pytorch", "torch", "interp"],
+            EngineKind::TensorFlow => &["tensorflow", "tf"],
+            EngineKind::TvmStd => &["tvm", "tvm-std", "dense"],
+            EngineKind::TvmPlus => &["tvm+", "tvmplus", "tvm-plus", "bsr", "sparse"],
+            EngineKind::XlaDense => &["xla", "xla-dense"],
+        }
+    }
+
     pub fn parse(s: &str) -> Result<EngineKind> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "pytorch" | "torch" | "interp" => EngineKind::PyTorch,
-            "tensorflow" | "tf" => EngineKind::TensorFlow,
-            "tvm" | "tvm-std" | "dense" => EngineKind::TvmStd,
-            "tvm+" | "tvmplus" | "tvm-plus" | "bsr" | "sparse" => EngineKind::TvmPlus,
-            "xla" | "xla-dense" => EngineKind::XlaDense,
-            other => bail!(
-                "unknown engine '{other}' (expected pytorch|tensorflow|tvm|tvm+|xla)"
-            ),
-        })
+        let lower = s.to_ascii_lowercase();
+        for kind in EngineKind::all() {
+            if kind.aliases().contains(&lower.as_str()) {
+                return Ok(kind);
+            }
+        }
+        bail!("unknown engine '{s}' (expected pytorch|tensorflow|tvm|tvm+|xla)")
     }
 
     pub fn all() -> [EngineKind; 5] {
@@ -67,14 +80,7 @@ impl EngineKind {
 
 impl fmt::Display for EngineKind {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let s = match self {
-            EngineKind::PyTorch => "pytorch",
-            EngineKind::TensorFlow => "tensorflow",
-            EngineKind::TvmStd => "tvm",
-            EngineKind::TvmPlus => "tvm+",
-            EngineKind::XlaDense => "xla",
-        };
-        write!(f, "{s}")
+        write!(f, "{}", self.aliases()[0])
     }
 }
 
@@ -90,5 +96,27 @@ mod tests {
         assert_eq!(EngineKind::parse("BSR").unwrap(), EngineKind::TvmPlus);
         assert_eq!(EngineKind::parse("torch").unwrap(), EngineKind::PyTorch);
         assert!(EngineKind::parse("onnx").is_err());
+    }
+
+    /// Satellite invariant: every alias parses (case-insensitively) back to
+    /// its kind, every `Display` string is the head of its alias table, and
+    /// no alias is claimed by two kinds.
+    #[test]
+    fn every_alias_parses_and_display_roundtrips() {
+        let mut seen = std::collections::HashSet::new();
+        for kind in EngineKind::all() {
+            let display = kind.to_string();
+            assert_eq!(kind.aliases()[0], display, "Display must be the canonical alias");
+            for alias in kind.aliases() {
+                assert!(seen.insert(*alias), "alias '{alias}' claimed twice");
+                assert_eq!(EngineKind::parse(alias).unwrap(), kind);
+                assert_eq!(
+                    EngineKind::parse(&alias.to_ascii_uppercase()).unwrap(),
+                    kind,
+                    "parsing must be case-insensitive for '{alias}'"
+                );
+            }
+            assert_eq!(EngineKind::parse(&display).unwrap(), kind);
+        }
     }
 }

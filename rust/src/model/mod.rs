@@ -16,6 +16,9 @@ pub mod engine;
 pub mod weights;
 pub mod bert;
 
+pub use bert::{
+    CompiledDenseEngine, DenseEngineOptions, SparseBsrEngine, SparseEngineOptions,
+};
 pub use config::BertConfig;
 pub use engine::{Engine, EngineKind};
 pub use weights::{BertWeights, LayerWeights, PruneMode, PruneSpec};

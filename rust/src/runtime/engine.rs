@@ -151,7 +151,7 @@ impl Engine for XlaEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::bert::CompiledDenseEngine;
+    use crate::model::bert::{CompiledDenseEngine, DenseEngineOptions};
     use crate::model::config::BertConfig;
     use crate::runtime::service::RuntimeService;
     use crate::util::propcheck::assert_allclose;
@@ -171,7 +171,7 @@ mod tests {
         let tokens: Vec<u32> = (0..xla.tokens() as u32).collect();
         let x = w.embed(&tokens);
         let y_xla = xla.forward(&x);
-        let native = CompiledDenseEngine::new(Arc::clone(&w), 2);
+        let native = CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 2));
         let y_native = native.forward(&x);
         // Three implementations of the same math (JAX-lowered XLA vs our
         // fused Rust kernels): f32 tolerance.

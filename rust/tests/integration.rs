@@ -5,9 +5,12 @@ use sparsebert::bench_harness::{report, run_table1, Table1Config};
 use sparsebert::coordinator::batcher::BatchPolicy;
 use sparsebert::coordinator::request::WorkloadTrace;
 use sparsebert::coordinator::{PipelineMode, Router};
+use sparsebert::deploy::DeploymentSpec;
 use sparsebert::util::pool::Pool;
 use sparsebert::interp::bert::InterpEngine;
-use sparsebert::model::bert::{CompiledDenseEngine, SparseBsrEngine};
+use sparsebert::model::bert::{
+    CompiledDenseEngine, DenseEngineOptions, SparseBsrEngine, SparseEngineOptions,
+};
 use sparsebert::model::engine::Engine;
 use sparsebert::model::{BertConfig, BertWeights, PruneMode, PruneSpec};
 use sparsebert::scheduler::{AutoScheduler, HwSpec};
@@ -34,9 +37,10 @@ fn all_engines_agree_on_pruned_model() {
     let x = w.embed(&[4, 8, 15, 16, 23, 42]);
     let eager = InterpEngine::new(Arc::clone(&w), false, 1).forward(&x);
     let eager_blocked = InterpEngine::new(Arc::clone(&w), true, 2).forward(&x);
-    let compiled = CompiledDenseEngine::new(Arc::clone(&w), 2).forward(&x);
+    let compiled =
+        CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 2)).forward(&x);
     let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
-    let sparse = SparseBsrEngine::new(Arc::clone(&w), block, sched, 2)
+    let sparse = SparseBsrEngine::build(SparseEngineOptions::new(Arc::clone(&w), block, sched, 2))
         .unwrap()
         .forward(&x);
     assert_allclose(&eager_blocked.data, &eager.data, 1e-4, 1e-5, "blocked vs dot");
@@ -71,9 +75,11 @@ fn sweep_shapes_end_to_end_equivalence() {
         );
         let w = Arc::new(w);
         let x = w.embed(&[1, 2, 3, 4]);
-        let dense = CompiledDenseEngine::new(Arc::clone(&w), 1).forward(&x);
+        let dense =
+            CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 1)).forward(&x);
         let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
-        let sparse = SparseBsrEngine::new(Arc::clone(&w), block, sched, 2)
+        let sparse =
+            SparseBsrEngine::build(SparseEngineOptions::new(Arc::clone(&w), block, sched, 2))
             .unwrap()
             .forward(&x);
         let diff = max_abs_diff(&dense.data, &sparse.data);
@@ -90,7 +96,7 @@ fn bsr_footprint_claims() {
     let cfg = BertConfig::micro();
     let dense_bytes = {
         let w = BertWeights::synthetic(&cfg, 77);
-        let e = CompiledDenseEngine::new(Arc::new(w), 1);
+        let e = CompiledDenseEngine::build(DenseEngineOptions::new(Arc::new(w), 1));
         e.weight_footprint_bytes()
     };
     for block in [BlockShape::new(1, 4), BlockShape::new(4, 4)] {
@@ -104,7 +110,8 @@ fn bsr_footprint_claims() {
             3,
         );
         let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
-        let e = SparseBsrEngine::new(Arc::new(w), block, sched, 1).unwrap();
+        let e = SparseBsrEngine::build(SparseEngineOptions::new(Arc::new(w), block, sched, 1))
+            .unwrap();
         let sparse_bytes = e.weight_footprint_bytes();
         assert!(
             (sparse_bytes as f64) < dense_bytes as f64 * 0.45,
@@ -149,14 +156,23 @@ fn serving_mixed_variants_consistent() {
     let mut router = Router::new();
     router.register(
         "tvm",
-        Arc::new(CompiledDenseEngine::new(Arc::clone(&pruned), 1)) as Arc<dyn Engine>,
+        Arc::new(CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&pruned), 1)))
+            as Arc<dyn Engine>,
         Arc::clone(&pruned),
         BatchPolicy::default(),
         2,
     );
     router.register(
         "tvm+",
-        Arc::new(SparseBsrEngine::new(Arc::clone(&pruned), block, sched, 1).unwrap())
+        Arc::new(
+            SparseBsrEngine::build(SparseEngineOptions::new(
+                Arc::clone(&pruned),
+                block,
+                sched,
+                1,
+            ))
+            .unwrap(),
+        )
             as Arc<dyn Engine>,
         Arc::clone(&pruned),
         BatchPolicy::immediate(),
@@ -219,13 +235,11 @@ fn pipelined_and_barrier_serving_agree_end_to_end() {
         let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
         let shared = Arc::new(Pool::new(2));
         let engine: Arc<dyn Engine> = Arc::new(
-            SparseBsrEngine::with_pool(
+            SparseBsrEngine::build(SparseEngineOptions::new(
                 Arc::clone(&pruned),
                 block,
                 sched,
-                2,
-                Some(Arc::clone(&shared)),
-            )
+                2).on_pool(Arc::clone(&shared)))
             .unwrap(),
         );
         let mut router = Router::with_exec_pool(shared);
@@ -247,6 +261,48 @@ fn pipelined_and_barrier_serving_agree_end_to_end() {
         router.shutdown();
     }
     assert_eq!(answers[0], answers[1], "serving modes diverged numerically");
+}
+
+/// PR-4 acceptance (golden test): `sparsebert serve --spec
+/// examples/deploy/bert_sweep.toml` must serve the same variants
+/// byte-identically to the equivalent flag-based invocation
+/// (`serve --model tiny --block 1x32,32x1 --sparsity 0.8`). Both paths
+/// instantiate through `DeploymentSpec`, so this pins the manifest, the
+/// flag translation, and the builder defaults to each other.
+#[test]
+fn spec_file_matches_flag_equivalent_deployment() {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/deploy/bert_sweep.toml");
+    let spec = DeploymentSpec::from_path(&manifest).expect("checked-in manifest parses");
+    spec.validate().expect("checked-in manifest validates");
+    let flags = DeploymentSpec::standard(
+        "tiny",
+        &[BlockShape::new(1, 32), BlockShape::new(32, 1)],
+        0.8,
+        16,
+    );
+    let dep_spec = spec.instantiate().unwrap();
+    let dep_flags = flags.instantiate().unwrap();
+    assert_eq!(
+        dep_spec.router.variants(),
+        dep_flags.router.variants(),
+        "manifest and flag-equivalent deployments must register the same variants"
+    );
+    assert_eq!(
+        dep_spec.router.variants(),
+        vec!["pytorch", "tvm", "tvm+1x32", "tvm+32x1"]
+    );
+    let tokens = vec![11u32, 42, 7, 99, 3];
+    for variant in dep_spec.router.variants() {
+        let a = dep_spec.router.infer(&variant, tokens.clone()).unwrap();
+        let b = dep_flags.router.infer(&variant, tokens.clone()).unwrap();
+        assert_eq!(
+            a.cls, b.cls,
+            "variant '{variant}' diverged between --spec and flag invocations"
+        );
+    }
+    dep_spec.router.shutdown();
+    dep_flags.router.shutdown();
 }
 
 /// Weight bundles written by Rust load back bit-identically — the

@@ -2,7 +2,7 @@
 //! PJRT must agree with the native engines (the L1/L2 ↔ L3 contract).
 //! These tests skip (with a notice) when `make artifacts` hasn't run.
 
-use sparsebert::model::bert::CompiledDenseEngine;
+use sparsebert::model::bert::{CompiledDenseEngine, DenseEngineOptions};
 use sparsebert::model::config::BertConfig;
 use sparsebert::model::engine::Engine;
 use sparsebert::model::weights::BertWeights;
@@ -33,7 +33,8 @@ fn xla_encoder_matches_native_across_weights() {
         let tokens: Vec<u32> = (0..xla.tokens() as u32).map(|i| i * 3 + 1).collect();
         let x = w.embed(&tokens);
         let y_xla = xla.forward(&x);
-        let y_native = CompiledDenseEngine::new(Arc::clone(&w), 1).forward(&x);
+        let y_native =
+            CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 1)).forward(&x);
         assert_allclose(&y_xla.data, &y_native.data, 2e-3, 2e-4, &format!("seed {seed}"));
     }
     let stats = svc.handle.stats().unwrap();
