@@ -312,6 +312,15 @@ pub struct SchedSweepRow {
     /// Speedup of this (threads, grain) cell over the single-thread run of
     /// the same block shape — the parallel-engine headline number.
     pub speedup_vs_serial: f64,
+    /// Microkernel variant the plan dispatched to for this cell (e.g.
+    /// `"simd-32x1"`); the scalar/SIMD axis of the sweep.
+    pub kernel_variant: String,
+    /// Mean ms of the same cell forced onto the scalar twin kernel.
+    /// Equal to `ms` when the dispatched variant is already scalar.
+    pub ms_scalar: f64,
+    /// `ms_scalar / ms` — the microkernel win in isolation (1.0 on
+    /// scalar builds or non-AVX2 machines).
+    pub simd_speedup: f64,
 }
 
 /// Sweep result: cells plus plan-cache instrumentation.
@@ -350,6 +359,7 @@ pub fn run_scheduler_sweep(cfg: &SchedSweepConfig) -> SchedSweepReport {
                 1,
             ));
         });
+        let variant = ep.plan.kernel_variant;
         for &threads in &cfg.threads {
             for &grain in &cfg.grains {
                 let m = measure(&format!("{block}-t{threads}-g{grain}"), &cfg.bench, || {
@@ -363,12 +373,42 @@ pub fn run_scheduler_sweep(cfg: &SchedSweepConfig) -> SchedSweepReport {
                         grain,
                     ));
                 });
+                // SIMD cells also time the scalar twin (same plan, scalar
+                // kernel) so the microkernel win is visible in isolation
+                // from threads/grain effects.
+                let (ms_scalar, simd_speedup) = if variant.is_simd() {
+                    let scalar_plan = ep.plan.with_kernel_variant(variant.scalar_twin());
+                    let sm = measure(
+                        &format!("{block}-t{threads}-g{grain}-scalar"),
+                        &cfg.bench,
+                        || {
+                            std::hint::black_box(bsr_linear_planned_on(
+                                &bsr,
+                                &scalar_plan,
+                                &x,
+                                None,
+                                pool::global(),
+                                threads,
+                                grain,
+                            ));
+                        },
+                    );
+                    (
+                        sm.summary.mean,
+                        sm.summary.mean / m.summary.mean.max(1e-9),
+                    )
+                } else {
+                    (m.summary.mean, 1.0)
+                };
                 rows.push(SchedSweepRow {
                     block,
                     threads,
                     grain,
                     ms: m.summary.mean,
                     speedup_vs_serial: serial.summary.mean / m.summary.mean.max(1e-9),
+                    kernel_variant: variant.as_str().to_string(),
+                    ms_scalar,
+                    simd_speedup,
                 });
             }
         }
@@ -393,17 +433,20 @@ pub fn render_sched_sweep(report: &SchedSweepReport, title: &str) -> String {
     let mut out = String::new();
     out.push_str(&format!("== {title} ==\n"));
     out.push_str(&format!(
-        "{:<10} {:>8} {:>7} {:>12} {:>14}\n",
-        "block", "threads", "grain", "ms", "speedup vs 1t"
+        "{:<10} {:>8} {:>7} {:>12} {:>14} {:<16} {:>12} {:>8}\n",
+        "block", "threads", "grain", "ms", "speedup vs 1t", "kernel", "ms scalar", "simd x"
     ));
     for r in &report.rows {
         out.push_str(&format!(
-            "{:<10} {:>8} {:>7} {:>12.2} {:>14.2}\n",
+            "{:<10} {:>8} {:>7} {:>12.2} {:>14.2} {:<16} {:>12.2} {:>8.2}\n",
             r.block.to_string(),
             r.threads,
             r.grain,
             r.ms,
-            r.speedup_vs_serial
+            r.speedup_vs_serial,
+            r.kernel_variant,
+            r.ms_scalar,
+            r.simd_speedup
         ));
     }
     out.push_str(&format!(
@@ -426,10 +469,19 @@ mod tests {
             cfg.blocks.len() * cfg.threads.len() * cfg.grains.len()
         );
         assert!(report.rows.iter().all(|r| r.ms > 0.0 && r.speedup_vs_serial > 0.0));
+        assert!(report.rows.iter().all(|r| {
+            !r.kernel_variant.is_empty() && r.ms_scalar > 0.0 && r.simd_speedup > 0.0
+        }));
+        // scalar cells report themselves as their own scalar baseline
+        for r in report.rows.iter().filter(|r| !r.kernel_variant.starts_with("simd")) {
+            assert_eq!(r.ms, r.ms_scalar);
+            assert_eq!(r.simd_speedup, 1.0);
+        }
         assert_eq!(report.replans_on_repeat, 0, "plan cache re-planned: {report:?}");
         assert_eq!(report.cache.entries, cfg.blocks.len());
         let text = render_sched_sweep(&report, "smoke");
         assert!(text.contains("32x1"), "{text}");
+        assert!(text.contains("kernel"), "{text}");
         assert!(text.contains("re-plans on repeat: 0"), "{text}");
     }
 

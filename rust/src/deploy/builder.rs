@@ -82,6 +82,10 @@ pub struct BuildReport {
     /// Hardware fingerprint the scheduler compiled against (sparse
     /// engines only).
     pub hw_fingerprint: Option<u64>,
+    /// Microkernel variant the engine's plans dispatch to (sparse
+    /// engines only) — e.g. `"simd-32x1"`; see
+    /// [`crate::kernels::micro::KernelVariant`].
+    pub kernel_variant: Option<String>,
     pub weight_footprint_bytes: usize,
 }
 
@@ -95,14 +99,18 @@ impl BuildReport {
     /// One operator-facing line (`serve` prints one per variant).
     pub fn summary(&self) -> String {
         format!(
-            "{}: built in {:.1} ms — {} live plans, {} cache hits, {} packs, {} packed loads, {} store writes",
+            "{}: built in {:.1} ms — {} live plans, {} cache hits, {} packs, {} packed loads, {} store writes{}",
             self.name,
             self.build_ms,
             self.live_plans,
             self.plan_cache_warm,
             self.packs,
             self.packed_loads,
-            self.store_writes
+            self.store_writes,
+            match &self.kernel_variant {
+                Some(v) => format!(", kernel {v}"),
+                None => String::new(),
+            }
         )
     }
 
@@ -136,6 +144,13 @@ impl BuildReport {
                 "hw_fingerprint",
                 match self.hw_fingerprint {
                     Some(fp) => Json::Str(format!("{fp:016x}")),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "kernel_variant",
+                match &self.kernel_variant {
+                    Some(v) => Json::Str(v.clone()),
                     None => Json::Null,
                 },
             )
@@ -451,6 +466,7 @@ impl EngineBuilder {
                     packed_loads,
                     store_writes,
                     hw_fingerprint: Some(sched.hw.fingerprint()),
+                    kernel_variant: engine.kernel_variant().map(|v| v.to_string()),
                     weight_footprint_bytes: engine.weight_footprint_bytes(),
                 };
                 Ok(BuiltEngine {
@@ -549,6 +565,7 @@ fn finish(
         packed_loads: 0,
         store_writes: 0,
         hw_fingerprint: None,
+        kernel_variant: None,
         weight_footprint_bytes: engine.weight_footprint_bytes(),
     };
     BuiltEngine {
@@ -595,6 +612,12 @@ mod tests {
         assert!(sparse.report.live_plans >= 1);
         assert_eq!(sparse.report.packs, 6, "1 layer × 6 projections packed live");
         assert!(sparse.report.hw_fingerprint.is_some());
+        assert_eq!(
+            sparse.report.kernel_variant.as_deref(),
+            Some(crate::kernels::micro::select_variant(BlockShape::new(2, 4)).as_str()),
+            "sparse report surfaces the plan-selected microkernel"
+        );
+        assert!(outs.iter().all(|o| o.rows == x.rows));
         let ys = sparse.engine.forward(&x);
         assert_allclose(&ys.data, &outs[2].data, 1e-3, 1e-4, "builder sparse vs dense");
     }

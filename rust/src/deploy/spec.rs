@@ -538,6 +538,15 @@ impl DeploymentSpec {
                 .metrics
                 .register_gauge("plan_store", move || st.stats().to_json());
         }
+        // Per-variant build reports (including the selected microkernel
+        // variant) are static after construction; snapshot them once and
+        // serve the snapshot from the gauge.
+        {
+            let reports_json = Json::Arr(reports.iter().map(BuildReport::to_json).collect());
+            router
+                .metrics
+                .register_gauge("build_reports", move || reports_json.clone());
+        }
         Ok(Deployment {
             router,
             sched,
@@ -764,6 +773,20 @@ pool = 4
         let a = dep.router.infer("tvm", vec![1, 2, 3]).unwrap();
         let b = dep.router.infer("tvm+", vec![1, 2, 3]).unwrap();
         assert_eq!(a.cls.len(), b.cls.len());
+        // the build-report gauge surfaces each variant's report —
+        // including the sparse variant's selected microkernel — in the
+        // serving stats JSON
+        let stats = dep.router.metrics.to_json();
+        let reports = stats
+            .get("build_reports")
+            .and_then(Json::as_arr)
+            .expect("build_reports gauge in stats");
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().any(|r| {
+            r.get("kernel_variant")
+                .and_then(Json::as_str)
+                .is_some_and(|v| v.contains("32x") || v.contains("linear") || v.contains("generic"))
+        }));
         dep.router.shutdown();
     }
 

@@ -23,7 +23,14 @@
 //! stored blocks are contiguous both in `data` and in the X rows they
 //! touch, so they fuse into a single longer axpy panel — the mechanism
 //! behind the paper's observation that linear blocks beat squares on CPU.
+//!
+//! The inner loops themselves live in [`crate::kernels::micro`]: each
+//! plan records a [`KernelVariant`] (chosen per block shape × hardware
+//! capability at plan-compile time) and execution dispatches through the
+//! [`Microkernel`][crate::kernels::micro::Microkernel] trait, with an
+//! optional fused [`Epilogue`] applied per Y band while it is cache-hot.
 
+use crate::kernels::micro::{self, Epilogue, KernelVariant};
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::dense::Matrix;
 use crate::sparse::prune::BlockShape;
@@ -105,6 +112,21 @@ pub struct SpmmPlan {
     pub order: Vec<u32>,
     /// Distinct programs compiled (≤ rows; the reuse metric).
     pub distinct_programs: usize,
+    /// Microkernel selected for this structure × hardware capability at
+    /// plan-compile time (dispatched via [`micro::kernel_for`]).
+    pub kernel_variant: KernelVariant,
+}
+
+impl SpmmPlan {
+    /// Cheap clone with a forced kernel variant — programs stay shared
+    /// (`Arc`). Used by the bench harness to time a plan's scalar twin,
+    /// and by tests pinning a specific kernel.
+    pub fn with_kernel_variant(&self, kernel_variant: KernelVariant) -> SpmmPlan {
+        SpmmPlan {
+            kernel_variant,
+            ..self.clone()
+        }
+    }
 }
 
 /// Direct (unplanned) BSR linear: `Y = W·X + bias`, single-threaded.
@@ -164,9 +186,29 @@ pub fn bsr_linear_planned_on(
     threads: usize,
     grain: usize,
 ) -> Matrix {
+    bsr_linear_planned_fused(w, plan, x, bias, Epilogue::None, exec_pool, threads, grain)
+}
+
+/// [`bsr_linear_planned_on`] with a fused elementwise [`Epilogue`]: bias
+/// is seeded into each Y band before accumulation and the epilogue (e.g.
+/// GELU for the FFN up-projection) is applied to the band right after
+/// its microkernel finishes, while the band is still in cache — the
+/// activation never round-trips through memory between ops.
+#[allow(clippy::too_many_arguments)]
+pub fn bsr_linear_planned_fused(
+    w: &BsrMatrix,
+    plan: &SpmmPlan,
+    x: &Matrix,
+    bias: Option<&[f32]>,
+    epilogue: Epilogue,
+    exec_pool: &pool::Pool,
+    threads: usize,
+    grain: usize,
+) -> Matrix {
     assert_eq!(w.cols, x.rows);
     assert_eq!(plan.rows.len(), w.block_rows(), "plan/matrix row mismatch");
     assert_eq!(plan.block, w.block, "plan/matrix block mismatch");
+    let kernel = micro::kernel_for(plan.kernel_variant);
     let mut y = Matrix::zeros(w.rows, x.cols);
     let t = x.cols;
     let r = w.block.r;
@@ -185,7 +227,8 @@ pub fn bsr_linear_planned_on(
                     yband[i * t..(i + 1) * t].iter_mut().for_each(|o| *o = v);
                 }
             }
-            execute_program(program, *base as usize, &w.data, x, yband, t);
+            kernel.run_program(program, *base as usize, &w.data, x, yband, t);
+            micro::apply_epilogue(yband, epilogue);
         }
     };
     if threads <= 1 {
@@ -232,69 +275,7 @@ fn accumulate_block(
 ) {
     for i in 0..block.r {
         let coeffs = &blk[i * block.c..(i + 1) * block.c];
-        axpy_panel(&mut yband[i * t..(i + 1) * t], coeffs, x, x_row0, t);
-    }
-}
-
-/// `y += Σ_j coeffs[j] · X[x_row0 + j, :]` with 4-way unrolling — the
-/// innermost loop of the whole system. Slices are re-bounded to `t` up
-/// front so LLVM drops per-element bounds checks and vectorizes the body
-/// (perf log: EXPERIMENTS.md §Perf L3-2).
-#[inline]
-fn axpy_panel(yrow: &mut [f32], coeffs: &[f32], x: &Matrix, x_row0: usize, t: usize) {
-    let yrow = &mut yrow[..t];
-    let mut j = 0;
-    while j + 4 <= coeffs.len() {
-        let (a0, a1, a2, a3) = (coeffs[j], coeffs[j + 1], coeffs[j + 2], coeffs[j + 3]);
-        let x0 = &x.row(x_row0 + j)[..t];
-        let x1 = &x.row(x_row0 + j + 1)[..t];
-        let x2 = &x.row(x_row0 + j + 2)[..t];
-        let x3 = &x.row(x_row0 + j + 3)[..t];
-        for k in 0..t {
-            yrow[k] += a0 * x0[k] + a1 * x1[k] + a2 * x2[k] + a3 * x3[k];
-        }
-        j += 4;
-    }
-    while j < coeffs.len() {
-        let a = coeffs[j];
-        if a != 0.0 {
-            let xr = &x.row(x_row0 + j)[..t];
-            for k in 0..t {
-                yrow[k] += a * xr[k];
-            }
-        }
-        j += 1;
-    }
-}
-
-/// Execute one row program against a Y band.
-#[inline]
-fn execute_program(
-    program: &RowProgram,
-    base: usize,
-    data: &[f32],
-    x: &Matrix,
-    yband: &mut [f32],
-    t: usize,
-) {
-    let block = program.block;
-    if block.r == 1 {
-        // merged runs: every run is a contiguous coeff slice × contiguous
-        // X row panel
-        for run in &program.runs {
-            let coeffs = &data[base + run.rel_offset as usize
-                ..base + run.rel_offset as usize + run.width as usize];
-            axpy_panel(yband, coeffs, x, run.x_row as usize, t);
-        }
-    } else {
-        for run in &program.runs {
-            let blk = &data[base + run.rel_offset as usize
-                ..base + run.rel_offset as usize + block.elems()];
-            for i in 0..block.r {
-                let coeffs = &blk[i * block.c..(i + 1) * block.c];
-                axpy_panel(&mut yband[i * t..(i + 1) * t], coeffs, x, run.x_row as usize, t);
-            }
-        }
+        micro::scalar::axpy_panel(&mut yband[i * t..(i + 1) * t], coeffs, x, x_row0, t);
     }
 }
 
@@ -464,6 +445,41 @@ mod tests {
         let got = bsr_linear_planned(&bsr, &plan, &x, None, 2);
         let want = w.matmul_ref(&x);
         assert_allclose(&got.data, &want.data, 1e-4, 1e-5, "replicated");
+    }
+
+    /// Fusing the GELU epilogue into the band pass must be *bitwise*
+    /// equivalent to the unfused planned spmm followed by the standalone
+    /// whole-matrix GELU — both apply [`crate::kernels::ops::gelu_scalar`]
+    /// to identical accumulated values.
+    #[test]
+    fn fused_epilogue_matches_unfused_bitwise() {
+        let exec_pool = crate::util::pool::Pool::new(3);
+        let shapes = [
+            BlockShape::new(1, 4),
+            BlockShape::new(32, 1),
+            BlockShape::new(4, 4),
+        ];
+        for &block in &shapes {
+            let (_, bsr) = random_bsr(64, 64, block, 0.7, 21);
+            let mut rng = Rng::new(0xfeed ^ block.r as u64);
+            let x = Matrix::randn(64, 7, 1.0, &mut rng);
+            let bias: Vec<f32> = (0..64).map(|_| rng.f32()).collect();
+            let plan = build_plan(&bsr, Default::default());
+            let mut unfused =
+                bsr_linear_planned_on(&bsr, &plan, &x, Some(&bias), &exec_pool, 3, 2);
+            crate::kernels::ops::gelu(&mut unfused);
+            let fused = bsr_linear_planned_fused(
+                &bsr,
+                &plan,
+                &x,
+                Some(&bias),
+                Epilogue::Gelu,
+                &exec_pool,
+                3,
+                2,
+            );
+            assert_eq!(fused.data, unfused.data, "fused vs unfused {block}");
+        }
     }
 
     #[test]

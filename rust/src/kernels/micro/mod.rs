@@ -1,0 +1,361 @@
+//! Per-shape block microkernels — the instruction-stream end of the
+//! paper's algorithm→compilation co-design story.
+//!
+//! The pruner induces block structure, the scheduler compiles it into
+//! [`RowProgram`]s, and this module supplies the innermost loops that
+//! execute those programs: one microkernel per *shape class* the paper
+//! sweeps (linear `1×C`, tall `32×1`, square `32×32`, generic fallback),
+//! each in a safe scalar reference form and — behind the `simd` cargo
+//! feature — an explicitly vectorized AVX2 form.
+//!
+//! ## Variant selection
+//!
+//! [`select_variant`] picks a [`KernelVariant`] from the block shape at
+//! plan-compile time (in [`crate::scheduler::plan::build_plan`]); the
+//! choice is recorded on the [`SpmmPlan`] and dispatched through the
+//! [`Microkernel`] trait at execution time. SIMD variants are selected
+//! only when the binary was built with `--features simd` *and* the
+//! running CPU reports AVX2 ([`simd_active`]); otherwise the scalar twin
+//! runs. Plans decoded from the plan store re-derive their variant for
+//! the *current* binary/CPU, so a store written by a SIMD build
+//! warm-starts a scalar build (and vice versa) without re-planning.
+//!
+//! ## Byte-identical scalar/SIMD contract
+//!
+//! Every SIMD kernel performs, per output element, exactly the same
+//! floating-point operation sequence as its scalar twin: multiplies and
+//! adds in the same association order, no FMA contraction, and the same
+//! zero-coefficient skips. The property tests in this module assert
+//! bitwise equality across the paper's shape×sparsity grid, including
+//! token counts that are not multiples of the 8-lane AVX2 width.
+//!
+//! ## Fused epilogues
+//!
+//! [`Epilogue`] is applied to each Y band while it is still hot in
+//! cache, immediately after accumulation — bias is already seeded into
+//! the band before accumulation, so `Epilogue::Gelu` completes the
+//! paper-relevant `W·X + b` → GELU fusion without a second pass over
+//! the full activation matrix. The element function is the same
+//! [`gelu_scalar`][crate::kernels::ops::gelu_scalar] the standalone pass
+//! uses, so fused and unfused execution are byte-identical.
+
+pub mod scalar;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub mod simd;
+
+use crate::kernels::bsr_spmm::RowProgram;
+use crate::kernels::ops::gelu_scalar;
+use crate::sparse::dense::Matrix;
+use crate::sparse::prune::BlockShape;
+use std::fmt;
+
+/// The microkernel chosen for a plan, named `<path>-<shape>`:
+/// `scalar-32x1`, `simd-linear`, … Selected per structure×hardware at
+/// plan-compile time and recorded in `BuildReport` / stats JSON.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelVariant {
+    /// `r == 1` blocks (incl. the paper's 1×32): merged-run axpy panels.
+    ScalarLinear,
+    /// The paper's CPU-optimal 32×1 tall block.
+    Scalar32x1,
+    /// The 32×32 square block.
+    Scalar32x32,
+    /// Any other block shape.
+    ScalarGeneric,
+    SimdLinear,
+    Simd32x1,
+    Simd32x32,
+    SimdGeneric,
+}
+
+impl KernelVariant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelVariant::ScalarLinear => "scalar-linear",
+            KernelVariant::Scalar32x1 => "scalar-32x1",
+            KernelVariant::Scalar32x32 => "scalar-32x32",
+            KernelVariant::ScalarGeneric => "scalar-generic",
+            KernelVariant::SimdLinear => "simd-linear",
+            KernelVariant::Simd32x1 => "simd-32x1",
+            KernelVariant::Simd32x32 => "simd-32x32",
+            KernelVariant::SimdGeneric => "simd-generic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KernelVariant> {
+        Some(match s {
+            "scalar-linear" => KernelVariant::ScalarLinear,
+            "scalar-32x1" => KernelVariant::Scalar32x1,
+            "scalar-32x32" => KernelVariant::Scalar32x32,
+            "scalar-generic" => KernelVariant::ScalarGeneric,
+            "simd-linear" => KernelVariant::SimdLinear,
+            "simd-32x1" => KernelVariant::Simd32x1,
+            "simd-32x32" => KernelVariant::Simd32x32,
+            "simd-generic" => KernelVariant::SimdGeneric,
+            _ => return None,
+        })
+    }
+
+    pub fn is_simd(&self) -> bool {
+        matches!(
+            self,
+            KernelVariant::SimdLinear
+                | KernelVariant::Simd32x1
+                | KernelVariant::Simd32x32
+                | KernelVariant::SimdGeneric
+        )
+    }
+
+    /// The scalar reference kernel for the same shape class (identity for
+    /// scalar variants). Used for forced-scalar benchmarking and as the
+    /// runtime fallback when AVX2 is unavailable.
+    pub fn scalar_twin(&self) -> KernelVariant {
+        match self {
+            KernelVariant::SimdLinear => KernelVariant::ScalarLinear,
+            KernelVariant::Simd32x1 => KernelVariant::Scalar32x1,
+            KernelVariant::Simd32x32 => KernelVariant::Scalar32x32,
+            KernelVariant::SimdGeneric => KernelVariant::ScalarGeneric,
+            v => *v,
+        }
+    }
+
+    /// The SIMD kernel for the same shape class (identity for SIMD
+    /// variants). Whether it actually runs still depends on
+    /// [`simd_active`] at dispatch time.
+    pub fn simd_twin(&self) -> KernelVariant {
+        match self {
+            KernelVariant::ScalarLinear => KernelVariant::SimdLinear,
+            KernelVariant::Scalar32x1 => KernelVariant::Simd32x1,
+            KernelVariant::Scalar32x32 => KernelVariant::Simd32x32,
+            KernelVariant::ScalarGeneric => KernelVariant::SimdGeneric,
+            v => *v,
+        }
+    }
+}
+
+impl fmt::Display for KernelVariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Elementwise tail fused into the band loop, applied while the Y band
+/// is still cache-hot. Bias is not listed here because it is fused on
+/// the *front* of the loop (seeded into the band before accumulation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Epilogue {
+    #[default]
+    None,
+    /// Tanh-approximation GELU (the BERT FFN activation).
+    Gelu,
+}
+
+/// Apply the epilogue to one Y band.
+#[inline]
+pub fn apply_epilogue(yband: &mut [f32], epilogue: Epilogue) {
+    match epilogue {
+        Epilogue::None => {}
+        Epilogue::Gelu => {
+            for v in yband.iter_mut() {
+                *v = gelu_scalar(*v);
+            }
+        }
+    }
+}
+
+/// True when SIMD kernels can actually run: the `simd` feature was
+/// compiled in and the CPU reports AVX2. Always false otherwise — the
+/// scalar reference kernels are then the production path.
+pub fn simd_active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Scalar variant for a block shape (the shape-class mapping alone).
+pub fn select_scalar_variant(block: BlockShape) -> KernelVariant {
+    if block.r == 1 {
+        KernelVariant::ScalarLinear
+    } else if block.r == 32 && block.c == 1 {
+        KernelVariant::Scalar32x1
+    } else if block.r == 32 && block.c == 32 {
+        KernelVariant::Scalar32x32
+    } else {
+        KernelVariant::ScalarGeneric
+    }
+}
+
+/// Variant selection at plan-compile time: shape class × whether SIMD
+/// is available on this binary/CPU.
+pub fn select_variant(block: BlockShape) -> KernelVariant {
+    let scalar = select_scalar_variant(block);
+    if simd_active() {
+        scalar.simd_twin()
+    } else {
+        scalar
+    }
+}
+
+/// One block microkernel: executes a compiled [`RowProgram`] against a
+/// Y band of `t` tokens. `base` is the block-row's absolute element
+/// offset into the BSR `data` array.
+pub trait Microkernel: Send + Sync {
+    fn variant(&self) -> KernelVariant;
+    fn run_program(
+        &self,
+        program: &RowProgram,
+        base: usize,
+        data: &[f32],
+        x: &Matrix,
+        yband: &mut [f32],
+        t: usize,
+    );
+}
+
+/// Resolve the kernel implementation for a variant. SIMD variants fall
+/// back to their scalar twin when the feature is compiled out or the
+/// CPU lacks AVX2 (e.g. a plan built elsewhere, or a forced variant).
+pub fn kernel_for(variant: KernelVariant) -> &'static dyn Microkernel {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if variant.is_simd() && simd_active() {
+            return simd::kernel(variant);
+        }
+    }
+    scalar::kernel(variant.scalar_twin())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::bsr_spmm::{bsr_linear, bsr_linear_planned_on};
+    use crate::scheduler::plan::build_plan;
+    use crate::sparse::bsr::BsrMatrix;
+    use crate::sparse::prune::prune_structured;
+    use crate::util::pool::Pool;
+    use crate::util::propcheck::assert_allclose;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn variant_names_roundtrip() {
+        let all = [
+            KernelVariant::ScalarLinear,
+            KernelVariant::Scalar32x1,
+            KernelVariant::Scalar32x32,
+            KernelVariant::ScalarGeneric,
+            KernelVariant::SimdLinear,
+            KernelVariant::Simd32x1,
+            KernelVariant::Simd32x32,
+            KernelVariant::SimdGeneric,
+        ];
+        for v in all {
+            assert_eq!(KernelVariant::parse(v.as_str()), Some(v));
+            assert_eq!(v.scalar_twin().simd_twin().scalar_twin(), v.scalar_twin());
+            assert_eq!(v.is_simd(), v.as_str().starts_with("simd"));
+        }
+        assert_eq!(KernelVariant::parse("avx512-32x1"), None);
+    }
+
+    #[test]
+    fn shape_class_mapping() {
+        let cases = [
+            (BlockShape::new(1, 1), KernelVariant::ScalarLinear),
+            (BlockShape::new(1, 32), KernelVariant::ScalarLinear),
+            (BlockShape::new(32, 1), KernelVariant::Scalar32x1),
+            (BlockShape::new(32, 32), KernelVariant::Scalar32x32),
+            (BlockShape::new(16, 16), KernelVariant::ScalarGeneric),
+            (BlockShape::new(4, 8), KernelVariant::ScalarGeneric),
+        ];
+        for (block, want) in cases {
+            assert_eq!(select_scalar_variant(block), want, "{block}");
+            let sel = select_variant(block);
+            assert_eq!(sel.scalar_twin(), want, "{block}");
+            assert_eq!(sel.is_simd(), simd_active(), "{block}");
+        }
+    }
+
+    #[test]
+    fn kernel_for_reports_resolved_variant() {
+        for block in [BlockShape::new(1, 32), BlockShape::new(32, 1), BlockShape::new(32, 32)] {
+            let v = select_variant(block);
+            let k = kernel_for(v);
+            assert_eq!(k.variant(), v);
+            // the scalar twin always resolves, and to a scalar kernel
+            let s = kernel_for(v.scalar_twin());
+            assert!(!s.variant().is_simd());
+        }
+    }
+
+    #[test]
+    fn epilogue_matches_standalone_gelu() {
+        let mut rng = Rng::new(11);
+        let mut band: Vec<f32> = (0..37).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let mut want = band.clone();
+        for v in want.iter_mut() {
+            *v = crate::kernels::ops::gelu_scalar(*v);
+        }
+        apply_epilogue(&mut band, Epilogue::Gelu);
+        assert_eq!(
+            band.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let before = band.clone();
+        apply_epilogue(&mut band, Epilogue::None);
+        assert_eq!(band, before);
+    }
+
+    /// The satellite property test: scalar and SIMD kernels produce
+    /// byte-identical outputs across the paper's shape × sparsity grid,
+    /// including token counts and inner dims that are not multiples of
+    /// the 8-lane AVX2 width. In scalar-only builds this degenerates to
+    /// self-consistency (twin == self) and still checks the planned path
+    /// against the direct reference within tolerance.
+    #[test]
+    fn scalar_and_simd_kernels_are_byte_identical() {
+        // (block, O, I): dims chosen so whatever the block allows is NOT
+        // a multiple of 8 (for 32-multiples that is impossible, so the
+        // unaligned coverage rides on I and T instead).
+        let shapes = [
+            (BlockShape::new(1, 1), 37, 53),
+            (BlockShape::new(32, 1), 96, 37),
+            (BlockShape::new(1, 32), 37, 96),
+            (BlockShape::new(32, 32), 96, 96),
+        ];
+        let tokens = [1usize, 5, 8, 9, 33];
+        let exec_pool = Pool::new(4);
+        for &(block, o, i) in &shapes {
+            for &sparsity in &[0.5f64, 0.9] {
+                let mut rng = Rng::new(0xbeef ^ block.r as u64 ^ sparsity.to_bits());
+                let mut w = Matrix::randn(o, i, 1.0, &mut rng);
+                prune_structured(&mut w, sparsity, block);
+                let bsr = BsrMatrix::from_dense(&w, block).unwrap();
+                let plan = build_plan(&bsr, Default::default());
+                let scalar_plan = plan.with_kernel_variant(plan.kernel_variant.scalar_twin());
+                let simd_plan = plan.with_kernel_variant(plan.kernel_variant.simd_twin());
+                for &t in &tokens {
+                    let x = Matrix::randn(i, t, 1.0, &mut rng);
+                    let bias: Vec<f32> = (0..o).map(|_| rng.f32()).collect();
+                    let ys = bsr_linear_planned_on(
+                        &bsr, &scalar_plan, &x, Some(&bias), &exec_pool, 3, 2,
+                    );
+                    let yv = bsr_linear_planned_on(
+                        &bsr, &simd_plan, &x, Some(&bias), &exec_pool, 3, 2,
+                    );
+                    let label = format!("{block} s={sparsity} t={t}");
+                    assert_eq!(
+                        ys.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        yv.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "scalar vs simd bits: {label}"
+                    );
+                    let direct = bsr_linear(&bsr, &x, Some(&bias));
+                    assert_allclose(&yv.data, &direct.data, 1e-4, 1e-5, &label);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Safe scalar reference microkernels — the production path on machines
+//! without AVX2 (or builds without `--features simd`), and the numerical
+//! ground truth the SIMD kernels must match bit-for-bit.
+//!
+//! Every kernel here is a loop arrangement of [`axpy_panel`], the 4-way
+//! unrolled inner loop the repo has always used; the SIMD twins in
+//! [`super::simd`] replicate its per-element operation sequence exactly.
+
+use super::{KernelVariant, Microkernel};
+use crate::kernels::bsr_spmm::RowProgram;
+use crate::sparse::dense::Matrix;
+
+/// `y += Σ_j coeffs[j] · X[x_row0 + j, :]` with 4-way unrolling — the
+/// innermost loop of the whole system. Slices are re-bounded to `t` up
+/// front so LLVM drops per-element bounds checks and vectorizes the body
+/// (perf log: EXPERIMENTS.md §Perf L3-2).
+#[inline]
+pub(crate) fn axpy_panel(yrow: &mut [f32], coeffs: &[f32], x: &Matrix, x_row0: usize, t: usize) {
+    let yrow = &mut yrow[..t];
+    let mut j = 0;
+    while j + 4 <= coeffs.len() {
+        let (a0, a1, a2, a3) = (coeffs[j], coeffs[j + 1], coeffs[j + 2], coeffs[j + 3]);
+        let x0 = &x.row(x_row0 + j)[..t];
+        let x1 = &x.row(x_row0 + j + 1)[..t];
+        let x2 = &x.row(x_row0 + j + 2)[..t];
+        let x3 = &x.row(x_row0 + j + 3)[..t];
+        for k in 0..t {
+            yrow[k] += a0 * x0[k] + a1 * x1[k] + a2 * x2[k] + a3 * x3[k];
+        }
+        j += 4;
+    }
+    while j < coeffs.len() {
+        let a = coeffs[j];
+        if a != 0.0 {
+            let xr = &x.row(x_row0 + j)[..t];
+            for k in 0..t {
+                yrow[k] += a * xr[k];
+            }
+        }
+        j += 1;
+    }
+}
+
+/// Resolve a scalar variant to its implementation. Callers pass scalar
+/// variants only ([`super::kernel_for`] maps SIMD → scalar twin first).
+pub fn kernel(variant: KernelVariant) -> &'static dyn Microkernel {
+    debug_assert!(!variant.is_simd(), "scalar::kernel got {variant}");
+    match variant.scalar_twin() {
+        KernelVariant::ScalarLinear => &LINEAR,
+        KernelVariant::Scalar32x1 => &TALL,
+        KernelVariant::Scalar32x32 => &SQUARE,
+        _ => &GENERIC,
+    }
+}
+
+static LINEAR: ScalarLinearKernel = ScalarLinearKernel;
+static TALL: ScalarTallKernel = ScalarTallKernel;
+static SQUARE: ScalarRowAxpyKernel = ScalarRowAxpyKernel {
+    variant: KernelVariant::Scalar32x32,
+};
+static GENERIC: ScalarRowAxpyKernel = ScalarRowAxpyKernel {
+    variant: KernelVariant::ScalarGeneric,
+};
+
+/// `r == 1` blocks: every run is a contiguous coefficient slice × a
+/// contiguous X row panel (run merging done at program compile time).
+struct ScalarLinearKernel;
+
+impl Microkernel for ScalarLinearKernel {
+    fn variant(&self) -> KernelVariant {
+        KernelVariant::ScalarLinear
+    }
+
+    fn run_program(
+        &self,
+        program: &RowProgram,
+        base: usize,
+        data: &[f32],
+        x: &Matrix,
+        yband: &mut [f32],
+        t: usize,
+    ) {
+        debug_assert_eq!(program.block.r, 1);
+        for run in &program.runs {
+            let coeffs = &data[base + run.rel_offset as usize..][..run.width as usize];
+            axpy_panel(yband, coeffs, x, run.x_row as usize, t);
+        }
+    }
+}
+
+/// Tall `32×1` blocks: one coefficient per output row, all rows reading
+/// the *same* X row. The unconditional `y += a·x` per row is the exact
+/// per-element sequence the SIMD twin tiles (no zero-skip here: skipping
+/// would have to be mirrored per-row in the SIMD tile, breaking its X
+/// register reuse for a case structured pruning never produces).
+struct ScalarTallKernel;
+
+impl Microkernel for ScalarTallKernel {
+    fn variant(&self) -> KernelVariant {
+        KernelVariant::Scalar32x1
+    }
+
+    fn run_program(
+        &self,
+        program: &RowProgram,
+        base: usize,
+        data: &[f32],
+        x: &Matrix,
+        yband: &mut [f32],
+        t: usize,
+    ) {
+        let r = program.block.r;
+        debug_assert_eq!(program.block.c, 1);
+        for run in &program.runs {
+            let blk = &data[base + run.rel_offset as usize..][..r];
+            let xr = &x.row(run.x_row as usize)[..t];
+            for (i, &a) in blk.iter().enumerate() {
+                let yrow = &mut yband[i * t..(i + 1) * t];
+                for k in 0..t {
+                    yrow[k] += a * xr[k];
+                }
+            }
+        }
+    }
+}
+
+/// Square 32×32 and generic blocks: per-output-row [`axpy_panel`] over
+/// the block's coefficient rows (the historical executor behaviour).
+struct ScalarRowAxpyKernel {
+    variant: KernelVariant,
+}
+
+impl Microkernel for ScalarRowAxpyKernel {
+    fn variant(&self) -> KernelVariant {
+        self.variant
+    }
+
+    fn run_program(
+        &self,
+        program: &RowProgram,
+        base: usize,
+        data: &[f32],
+        x: &Matrix,
+        yband: &mut [f32],
+        t: usize,
+    ) {
+        let block = program.block;
+        for run in &program.runs {
+            let blk = &data[base + run.rel_offset as usize..][..block.elems()];
+            for i in 0..block.r {
+                let coeffs = &blk[i * block.c..(i + 1) * block.c];
+                axpy_panel(&mut yband[i * t..(i + 1) * t], coeffs, x, run.x_row as usize, t);
+            }
+        }
+    }
+}

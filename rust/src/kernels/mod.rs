@@ -24,7 +24,9 @@
 pub mod attention;
 pub mod bsr_spmm;
 pub mod dense_matmul;
+pub mod micro;
 pub mod ops;
 
-pub use bsr_spmm::{bsr_linear, bsr_linear_planned, bsr_linear_planned_on};
+pub use bsr_spmm::{bsr_linear, bsr_linear_planned, bsr_linear_planned_fused, bsr_linear_planned_on};
 pub use dense_matmul::{linear_dense, linear_dense_parallel};
+pub use micro::{Epilogue, KernelVariant};

@@ -40,13 +40,21 @@ pub fn layernorm_fm(x: &mut Matrix, gamma: &[f32], beta: &[f32], eps: f32) {
     }
 }
 
+/// Scalar GELU (tanh approximation, the BERT convention). This is the
+/// single definition both the standalone [`gelu`] pass and the fused
+/// spmm epilogue ([`crate::kernels::micro::Epilogue::Gelu`]) apply, so
+/// fused and unfused execution are byte-identical by construction.
+#[inline]
+pub fn gelu_scalar(u: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    let inner = C * (u + 0.044715 * u * u * u);
+    0.5 * u * (1.0 + inner.tanh())
+}
+
 /// GELU activation (tanh approximation, the BERT convention), in place.
 pub fn gelu(x: &mut Matrix) {
-    const C: f32 = 0.7978845608; // sqrt(2/pi)
     for v in x.data.iter_mut() {
-        let u = *v;
-        let inner = C * (u + 0.044715 * u * u * u);
-        *v = 0.5 * u * (1.0 + inner.tanh());
+        *v = gelu_scalar(*v);
     }
 }
 

@@ -41,6 +41,20 @@
 //! block shape (including the paper's 32x1 vs 32x32 comparison) over
 //! this engine and verify the zero-re-planning property.
 //!
+//! ## Block microkernels & fused epilogues
+//!
+//! The spmm inner loop dispatches through [`kernels::micro`]: per-shape
+//! block microkernels (linear `1xC`, tall `32x1`, square `32x32`, generic
+//! fallback) in a scalar reference form and, under the `simd` cargo
+//! feature with runtime AVX2 detection, explicitly vectorized AVX2 twins
+//! that are **byte-identical** to the scalar kernels (same association
+//! order, no FMA contraction). The variant is chosen at plan-compile time
+//! ([`kernels::micro::select_variant`]), recorded on the [`SpmmPlan`],
+//! and surfaced through `BuildReport` and the serving stats JSON.
+//! Bias-add + GELU epilogues fuse into the same Y-band pass as the
+//! accumulation ([`kernels::bsr_spmm::bsr_linear_planned_fused`]), so
+//! FFN activations never round-trip through memory.
+//!
 //! ## Artifact store & warm start
 //!
 //! The [`planstore`] subsystem persists compiled plans **and** pre-packed
@@ -51,9 +65,12 @@
 //! reloads packed weights instead of re-walking the dense tensors — a
 //! serving restart against a populated store performs zero live
 //! plannings and zero BSR re-packs. Integrity is checked per artifact
-//! (length + FNV-1a checksum + structural validation); any mismatch,
-//! including a foreign hardware fingerprint or store-format version,
-//! falls back to live planning. `sparsebert plan {build,inspect,gc}`
+//! (length + FNV-1a checksum + structural validation); any per-artifact
+//! mismatch, including a foreign hardware fingerprint, falls back to
+//! live planning, and a store written under an older
+//! [`planstore::fingerprint::FORMAT_VERSION`] is **reinitialized on
+//! open** (`stale_format_reset` in the store stats) rather than
+//! half-read. `sparsebert plan {build,inspect,gc}`
 //! compiles and maintains stores ahead of deployment; `sparsebert serve
 //! --plan-store <dir>` consumes them.
 //!
@@ -67,14 +84,12 @@
 //! plan-cache/store activity per build), and [`deploy::DeploymentSpec`]
 //! is the declarative TOML/JSON manifest form of a whole deployment
 //! (`sparsebert serve --spec deploy.toml`, validated in CI by
-//! `sparsebert deploy check`). The legacy
-//! `SparseBsrEngine::{new,with_pool}` and
-//! `CompiledDenseEngine::{new,with_name}` constructors are deprecated
-//! shims over the canonical options-struct constructors
-//! (`SparseBsrEngine::build` / `CompiledDenseEngine::build`) and will be
-//! removed next release. Upcoming scale work (NUMA pinning, cross-host
-//! artifact-store sync) lands as `DeploymentSpec` fields (`numa`,
-//! `store.sync_url`), already parsed and reserved.
+//! `sparsebert deploy check`). The options-struct constructors
+//! (`SparseBsrEngine::build` / `CompiledDenseEngine::build`) are the
+//! only construction entry points; the pre-0.2 `new`/`with_pool`/
+//! `with_name` shims have been removed. Upcoming scale work (NUMA
+//! pinning, cross-host artifact-store sync) lands as `DeploymentSpec`
+//! fields (`numa`, `store.sync_url`), already parsed and reserved.
 //!
 //! ## Serving pipeline
 //!

@@ -49,6 +49,7 @@ fn main() {
         "table1" => cmd_table1(rest),
         "schedsweep" => cmd_schedsweep(rest),
         "cibench" => cmd_cibench(rest),
+        "benchdiff" => cmd_benchdiff(rest),
         "figure2" => cmd_figure2(rest),
         "table2" => cmd_table2(rest),
         "serve" => cmd_serve(rest),
@@ -80,6 +81,7 @@ fn usage() -> String {
          \x20 table1     regenerate Table 1 (inference ms per engine × block config)\n\
          \x20 schedsweep threads × grain × block sweep of the parallel plan-cached engine\n\
          \x20 cibench    CI bench smoke: tiny schedsweep + A3 serving sweep → JSON\n\
+         \x20 benchdiff  compare a cibench JSON against a checked-in baseline (regression gate)\n\
          \x20 figure2    regenerate Figure 2 (TVM+/Dense curve)\n\
          \x20 table2     render Table 2 from artifacts/table2.json (run `make table2` first)\n\
          \x20 serve      start the serving coordinator (TCP, JSON lines; --spec deploy.toml)\n\
@@ -289,9 +291,10 @@ fn cmd_cibench(argv: Vec<String>) -> Result<()> {
         );
     }
     let mut root = Json::obj();
-    root.set("schema", "sparsebert-bench-ci/v1")
+    root.set("schema", "sparsebert-bench-ci/v2")
         .set("version", sparsebert::VERSION)
-        .set("hw", HwSpec::detect().to_string());
+        .set("hw", HwSpec::detect().to_string())
+        .set("simd_active", sparsebert::kernels::micro::simd_active());
     let cells: Vec<Json> = sched_rep
         .rows
         .iter()
@@ -301,7 +304,10 @@ fn cmd_cibench(argv: Vec<String>) -> Result<()> {
                 .set("threads", r.threads)
                 .set("grain", r.grain)
                 .set("ms", r.ms)
-                .set("speedup_vs_serial", r.speedup_vs_serial);
+                .set("speedup_vs_serial", r.speedup_vs_serial)
+                .set("kernel_variant", r.kernel_variant.as_str())
+                .set("ms_scalar", r.ms_scalar)
+                .set("simd_speedup", r.simd_speedup);
             j
         })
         .collect();
@@ -318,6 +324,191 @@ fn cmd_cibench(argv: Vec<String>) -> Result<()> {
         .set("warmstart", warm_start_json(&ws));
     std::fs::write(args.get("out"), root.to_string_pretty())?;
     eprintln!("wrote {}", args.get("out"));
+    Ok(())
+}
+
+/// One schedsweep cell pulled out of a cibench JSON (`benchdiff` reads
+/// both v1 and v2 documents; `ms_scalar` is absent in v1).
+struct BenchDiffRow {
+    block: String,
+    threads: usize,
+    grain: usize,
+    ms: f64,
+    ms_scalar: Option<f64>,
+}
+
+fn benchdiff_rows(doc: &Json, label: &str) -> Result<Vec<BenchDiffRow>> {
+    let rows = doc
+        .get("schedsweep")
+        .and_then(|s| s.get("rows"))
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{label}: no schedsweep.rows array"))?;
+    rows.iter()
+        .map(|r| {
+            Ok(BenchDiffRow {
+                block: r
+                    .get("block")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("{label}: row missing block"))?
+                    .to_string(),
+                threads: r
+                    .get("threads")
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("{label}: row missing threads"))?,
+                grain: r
+                    .get("grain")
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("{label}: row missing grain"))?,
+                ms: r
+                    .get("ms")
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("{label}: row missing ms"))?,
+                ms_scalar: r.get("ms_scalar").and_then(Json::as_f64),
+            })
+        })
+        .collect()
+}
+
+/// Bench regression gate for CI: compare the current `cibench` output
+/// against the checked-in baseline. Rows of the gate block shape
+/// (default the paper-headline 32x1) that regress more than the
+/// threshold fail the build; every other shape only warns (those cells
+/// are small enough that runner noise dominates). Because absolute ms
+/// does not transfer between runner classes, a baseline recorded on
+/// different hardware downgrades gate failures to warnings unless
+/// `--strict` — the within-run SIMD-vs-scalar gate below still enforces
+/// the microkernel win on whatever machine the current run used.
+fn cmd_benchdiff(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new(
+        "sparsebert benchdiff",
+        "compare a cibench JSON against a checked-in baseline; fail on gate-block regressions",
+    )
+    .opt(
+        "baseline",
+        "ci/BENCH_baseline.json",
+        "baseline cibench JSON (checked in; refresh from a CI artifact)",
+    )
+    .opt("current", "BENCH_ci.json", "cibench JSON from the current run")
+    .opt(
+        "threshold",
+        "0.25",
+        "relative ms regression tolerance on gate-block rows",
+    )
+    .opt(
+        "gate-block",
+        "32x1",
+        "block shape whose regressions fail the build (others warn)",
+    )
+    .flag(
+        "strict",
+        "enforce the gate even when baseline/current hardware strings differ",
+    )
+    .parse(argv)?;
+    let read = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        json::parse(&text).with_context(|| format!("parsing {path}"))
+    };
+    let base_doc = read(args.get("baseline"))?;
+    let cur_doc = read(args.get("current"))?;
+    let threshold = args.get_f64("threshold")?;
+    let gate_block = args.get("gate-block");
+    let hw_base = base_doc.get("hw").and_then(Json::as_str).unwrap_or("");
+    let hw_cur = cur_doc.get("hw").and_then(Json::as_str).unwrap_or("");
+    let hw_match = !hw_base.is_empty() && hw_base == hw_cur;
+    let gate_enforced = hw_match || args.flag("strict");
+    if !gate_enforced {
+        eprintln!(
+            "benchdiff: baseline hardware ({hw_base}) differs from current ({hw_cur}); \
+             absolute-ms gate downgraded to warnings (pass --strict to enforce)"
+        );
+    }
+    let base_rows = benchdiff_rows(&base_doc, "baseline")?;
+    let cur_rows = benchdiff_rows(&cur_doc, "current")?;
+    let mut baseline: std::collections::HashMap<(String, usize, usize), f64> = base_rows
+        .iter()
+        .map(|r| ((r.block.clone(), r.threads, r.grain), r.ms))
+        .collect();
+    let mut failures = 0usize;
+    let mut warnings = 0usize;
+    for r in &cur_rows {
+        let key = (r.block.clone(), r.threads, r.grain);
+        let Some(base_ms) = baseline.remove(&key) else {
+            eprintln!(
+                "benchdiff: warn — {} t{} g{} has no baseline row (new cell?)",
+                r.block, r.threads, r.grain
+            );
+            warnings += 1;
+            continue;
+        };
+        let ratio = r.ms / base_ms.max(1e-9);
+        let regressed = ratio > 1.0 + threshold;
+        let gated = r.block == gate_block;
+        println!(
+            "{:<8} t{:<2} g{:<3} {:>10.3} ms vs {:>10.3} ms baseline  ({:+.1}%){}",
+            r.block,
+            r.threads,
+            r.grain,
+            r.ms,
+            base_ms,
+            (ratio - 1.0) * 100.0,
+            match (regressed, gated && gate_enforced) {
+                (true, true) => "  FAIL",
+                (true, false) => "  warn",
+                _ => "",
+            }
+        );
+        if regressed {
+            if gated && gate_enforced {
+                failures += 1;
+            } else {
+                warnings += 1;
+            }
+        }
+    }
+    for (block, threads, grain) in baseline.into_keys() {
+        eprintln!("benchdiff: warn — baseline row {block} t{threads} g{grain} missing from current run");
+        warnings += 1;
+    }
+    // Within-run microkernel gate: on a SIMD-active run, the dispatched
+    // gate-block kernel must beat its scalar twin measured in the *same*
+    // process on the *same* machine — immune to runner-class drift.
+    let simd_active = cur_doc
+        .get("simd_active")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    if simd_active {
+        let (mut simd_ms, mut scalar_ms) = (0.0f64, 0.0f64);
+        for r in cur_rows.iter().filter(|r| r.block == gate_block) {
+            if let Some(s) = r.ms_scalar {
+                simd_ms += r.ms;
+                scalar_ms += s;
+            }
+        }
+        if scalar_ms > 0.0 {
+            let speedup = scalar_ms / simd_ms.max(1e-9);
+            println!(
+                "simd gate: {gate_block} aggregate {:.3} ms simd vs {:.3} ms scalar — {:.2}x",
+                simd_ms, scalar_ms, speedup
+            );
+            if speedup < 1.0 {
+                bail!(
+                    "SIMD {gate_block} kernel slower than its scalar twin ({speedup:.2}x); \
+                     microkernel regression"
+                );
+            }
+        } else {
+            eprintln!("benchdiff: warn — simd_active run has no scalar-twin timings for {gate_block}");
+            warnings += 1;
+        }
+    }
+    if failures > 0 {
+        bail!(
+            "{failures} gate-block ({gate_block}) rows regressed more than {:.0}% vs baseline \
+             ({warnings} warnings)",
+            threshold * 100.0
+        );
+    }
+    eprintln!("benchdiff: ok ({warnings} warnings)");
     Ok(())
 }
 

@@ -15,8 +15,9 @@
 use super::engine::Engine;
 use super::weights::BertWeights;
 use crate::kernels::attention::multi_head_attention;
-use crate::kernels::bsr_spmm::bsr_linear_planned_on;
+use crate::kernels::bsr_spmm::bsr_linear_planned_fused;
 use crate::kernels::dense_matmul::{linear_dense_parallel, transpose};
+use crate::kernels::micro::{Epilogue, KernelVariant};
 use crate::kernels::ops::{add_inplace, gelu, layernorm_fm};
 use crate::scheduler::{AutoScheduler, ExecPlan};
 use crate::sparse::bsr::BsrMatrix;
@@ -29,9 +30,7 @@ use std::sync::Arc;
 const LN_EPS: f32 = 1e-5;
 
 /// Canonical construction options for [`CompiledDenseEngine`] — the one
-/// entry point [`crate::deploy::EngineBuilder`] drives. The former
-/// `new`/`with_name` constructor pair survives as deprecated shims for
-/// one release.
+/// entry point [`crate::deploy::EngineBuilder`] drives.
 #[derive(Clone)]
 pub struct DenseEngineOptions {
     pub weights: Arc<BertWeights>,
@@ -74,22 +73,6 @@ impl CompiledDenseEngine {
             threads: opts.threads,
             name: opts.name,
         }
-    }
-
-    #[deprecated(
-        since = "0.2.0",
-        note = "use CompiledDenseEngine::build(DenseEngineOptions) or deploy::EngineBuilder"
-    )]
-    pub fn new(weights: Arc<BertWeights>, threads: usize) -> CompiledDenseEngine {
-        Self::build(DenseEngineOptions::new(weights, threads))
-    }
-
-    #[deprecated(
-        since = "0.2.0",
-        note = "use CompiledDenseEngine::build(DenseEngineOptions::new(..).named(..))"
-    )]
-    pub fn with_name(weights: Arc<BertWeights>, threads: usize, name: &str) -> CompiledDenseEngine {
-        Self::build(DenseEngineOptions::new(weights, threads).named(name))
     }
 }
 
@@ -155,9 +138,7 @@ pub struct SparseBsrEngine {
 }
 
 /// Canonical construction options for [`SparseBsrEngine`] — the one
-/// entry point [`crate::deploy::EngineBuilder`] drives. The former
-/// `new`/`with_pool` constructor pair survives as deprecated shims for
-/// one release.
+/// entry point [`crate::deploy::EngineBuilder`] drives.
 #[derive(Clone)]
 pub struct SparseEngineOptions {
     /// Pruned weights to convert to BSR.
@@ -255,35 +236,6 @@ impl SparseBsrEngine {
         })
     }
 
-    #[deprecated(
-        since = "0.2.0",
-        note = "use SparseBsrEngine::build(SparseEngineOptions) or deploy::EngineBuilder"
-    )]
-    pub fn new(
-        weights: Arc<BertWeights>,
-        block: BlockShape,
-        sched: Arc<AutoScheduler>,
-        threads: usize,
-    ) -> Result<SparseBsrEngine> {
-        Self::build(SparseEngineOptions::new(weights, block, sched, threads))
-    }
-
-    #[deprecated(
-        since = "0.2.0",
-        note = "use SparseBsrEngine::build(SparseEngineOptions::new(..).on_pool(..))"
-    )]
-    pub fn with_pool(
-        weights: Arc<BertWeights>,
-        block: BlockShape,
-        sched: Arc<AutoScheduler>,
-        threads: usize,
-        exec_pool: Option<Arc<Pool>>,
-    ) -> Result<SparseBsrEngine> {
-        let mut opts = SparseEngineOptions::new(weights, block, sched, threads);
-        opts.exec_pool = exec_pool;
-        Self::build(opts)
-    }
-
     pub fn block(&self) -> BlockShape {
         self.block
     }
@@ -296,8 +248,41 @@ impl SparseBsrEngine {
     /// cached stats), capped by the engine's thread budget, executed on
     /// the persistent pool.
     fn project(&self, m: &(BsrMatrix, Arc<ExecPlan>), x: &Matrix, bias: &[f32]) -> Matrix {
+        self.project_fused(m, x, bias, Epilogue::None)
+    }
+
+    /// A planned projection with the activation epilogue fused into the
+    /// same Y-band pass as the accumulation (the band is still hot in
+    /// cache; the activation never round-trips through memory as a
+    /// separate whole-matrix walk).
+    fn project_fused(
+        &self,
+        m: &(BsrMatrix, Arc<ExecPlan>),
+        x: &Matrix,
+        bias: &[f32],
+        epilogue: Epilogue,
+    ) -> Matrix {
         let p = m.1.params_for(x.cols, &self.sched.hw).capped(self.threads);
-        bsr_linear_planned_on(&m.0, &m.1.plan, x, Some(bias), self.pool(), p.threads, p.grain)
+        bsr_linear_planned_fused(
+            &m.0,
+            &m.1.plan,
+            x,
+            Some(bias),
+            epilogue,
+            self.pool(),
+            p.threads,
+            p.grain,
+        )
+    }
+
+    /// The microkernel variant the engine's plans dispatch to (every
+    /// projection shares one block shape, hence one variant). `None` for
+    /// a zero-layer model. Surfaced through [`crate::deploy::BuildReport`]
+    /// and the serving stats JSON.
+    pub fn kernel_variant(&self) -> Option<KernelVariant> {
+        self.sparse_layers
+            .first()
+            .map(|sl| sl.wq.1.plan.kernel_variant)
     }
 
     /// Stored-block sparsity of the converted model (diagnostics).
@@ -335,8 +320,7 @@ impl Engine for SparseBsrEngine {
             let attn_out = self.project(&sl.wo, &ctx, &lw.bo);
             add_inplace(&mut x, &attn_out);
             layernorm_fm(&mut x, &lw.ln1_gamma, &lw.ln1_beta, LN_EPS);
-            let mut ff = self.project(&sl.w_up, &x, &lw.b_up);
-            gelu(&mut ff);
+            let ff = self.project_fused(&sl.w_up, &x, &lw.b_up, Epilogue::Gelu);
             let ff_out = self.project(&sl.w_down, &ff, &lw.b_down);
             add_inplace(&mut x, &ff_out);
             layernorm_fm(&mut x, &lw.ln2_gamma, &lw.ln2_beta, LN_EPS);
@@ -588,42 +572,17 @@ mod tests {
         assert_eq!(y1.data, y2.data);
     }
 
-    /// The deprecated constructor shims must stay byte-equivalent to the
-    /// canonical options-struct constructors for the one release they
-    /// survive.
+    /// The engine reports the plan-selected microkernel variant, and it
+    /// matches what `select_variant` derives for the engine's block shape.
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_delegate_to_canonical_constructors() {
+    fn engine_reports_plan_selected_kernel_variant() {
         let block = BlockShape::new(2, 4);
-        let (w, x) = setup(0.6, block);
-        let via_shim = CompiledDenseEngine::new(Arc::clone(&w), 2).forward(&x);
-        let via_build =
-            CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 2)).forward(&x);
-        assert_eq!(via_shim.data, via_build.data);
-        assert_eq!(
-            CompiledDenseEngine::with_name(Arc::clone(&w), 1, "ctrl").name(),
-            "ctrl"
-        );
+        let (w, _) = setup(0.6, block);
         let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
-        let s_shim = SparseBsrEngine::new(Arc::clone(&w), block, Arc::clone(&sched), 2)
-            .unwrap()
-            .forward(&x);
-        let pool = Arc::new(crate::util::pool::Pool::new(2));
-        let s_pool = SparseBsrEngine::with_pool(
-            Arc::clone(&w),
-            block,
-            Arc::clone(&sched),
-            2,
-            Some(Arc::clone(&pool)),
-        )
-        .unwrap()
-        .forward(&x);
-        let s_build = SparseBsrEngine::build(
-            SparseEngineOptions::new(Arc::clone(&w), block, sched, 2).on_pool(pool),
-        )
-        .unwrap()
-        .forward(&x);
-        assert_eq!(s_shim.data, s_build.data);
-        assert_eq!(s_pool.data, s_build.data);
+        let engine = sparse_on(&w, block, &sched, 2);
+        assert_eq!(
+            engine.kernel_variant(),
+            Some(crate::kernels::micro::select_variant(block))
+        );
     }
 }

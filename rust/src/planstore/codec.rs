@@ -15,6 +15,7 @@
 //! planning rather than executing a plan over mismatched buffers.
 
 use crate::kernels::bsr_spmm::{Run, RowProgram, SpmmPlan};
+use crate::kernels::micro;
 use crate::scheduler::cache::ExecPlan;
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::prune::BlockShape;
@@ -24,7 +25,8 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Payload schema tag (belt-and-braces next to the store-level version).
-const SCHEMA: &str = "sparsebert-plan/v1";
+/// v2 adds `kernel_variant`.
+const SCHEMA: &str = "sparsebert-plan/v2";
 
 /// Serialize a compiled plan (with its scheduling statistics) for the
 /// matrix it was built from.
@@ -61,6 +63,7 @@ pub fn encode_plan(ep: &ExecPlan, m: &BsrMatrix) -> String {
         .collect();
     let mut root = Json::obj();
     root.set("schema", SCHEMA)
+        .set("kernel_variant", sp.kernel_variant.as_str())
         .set("block", ep.block.to_string())
         .set("rows", m.rows)
         .set("cols", m.cols)
@@ -206,12 +209,24 @@ pub fn decode_plan(text: &str, m: &BsrMatrix) -> Result<ExecPlan> {
         }
         plan_rows.push((Arc::clone(program), bases[bi] as u32));
     }
+    // The stored kernel_variant is informational (what the writing
+    // binary selected); it must parse, but the variant actually executed
+    // is re-derived for the *current* binary/CPU so a store written by a
+    // SIMD build still warm-starts a scalar build and vice versa.
+    let stored_variant = root
+        .get("kernel_variant")
+        .and_then(Json::as_str)
+        .context("plan payload missing 'kernel_variant'")?;
+    if micro::KernelVariant::parse(stored_variant).is_none() {
+        bail!("unknown kernel_variant '{stored_variant}'");
+    }
     Ok(ExecPlan {
         plan: Arc::new(SpmmPlan {
             block,
             rows: plan_rows,
             order: order.iter().map(|&v| v as u32).collect(),
             distinct_programs: distinct,
+            kernel_variant: micro::select_variant(block),
         }),
         block,
         block_rows,
@@ -252,6 +267,7 @@ mod tests {
         assert_eq!(a.mean_blocks_per_row.to_bits(), b.mean_blocks_per_row.to_bits());
         assert_eq!(a.plan.order, b.plan.order);
         assert_eq!(a.plan.distinct_programs, b.plan.distinct_programs);
+        assert_eq!(a.plan.kernel_variant, b.plan.kernel_variant);
         assert_eq!(a.plan.rows.len(), b.plan.rows.len());
         for ((pa, ba), (pb, bb)) in a.plan.rows.iter().zip(&b.plan.rows) {
             assert_eq!(ba, bb);

@@ -28,7 +28,11 @@ use std::fmt;
 
 /// On-disk format version; bumped on any incompatible layout change.
 /// Mixed into every artifact id and written to the index-log header.
-pub const FORMAT_VERSION: u32 = 1;
+///
+/// v2: plan payloads record the microkernel `kernel_variant` (schema
+/// `sparsebert-plan/v2`). Stores written at v1 are reinitialized on open
+/// and their entries degrade to live planning.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Incremental FNV-1a 64-bit hasher (the same construction
 /// [`HwSpec::fingerprint`] uses, shared here for artifact ids and

@@ -4,8 +4,10 @@
 //!
 //! * Line 1 is the **header**: magic, [`FORMAT_VERSION`], and the
 //!   hardware fingerprint the store was created on. A version mismatch is
-//!   a typed error ([`PlanStoreError::VersionMismatch`]) — callers fall
-//!   back to live planning rather than misreading records.
+//!   a typed error ([`PlanStoreError::VersionMismatch`]) at this layer;
+//!   [`PlanStore::open`][super::store::PlanStore::open] catches it and
+//!   reinitializes the store (fresh header, empty index) so stale
+//!   artifacts degrade to live planning rather than failing startup.
 //! * Every following line is a **record**: `put` (an artifact landed,
 //!   with payload file, byte length, and FNV-1a checksum) or `del`.
 //!   Later records supersede earlier ones with the same id, so writes

@@ -18,6 +18,13 @@
 //!
 //! with a counter bumped per reason so warm-start efficacy is observable
 //! ([`StoreStats`], surfaced in the `serve` stats JSON).
+//!
+//! A **stale on-disk format version** follows the same policy at open
+//! time: the store is reinitialized with a fresh header (every lookup
+//! then cold-misses into live planning) rather than failing startup.
+//! `FORMAT_VERSION` participates in every artifact id, so the orphaned
+//! old payloads could never be looked up anyway; `plan gc` reclaims
+//! them. The reset is recorded in [`StoreStats::stale_format_reset`].
 
 use super::codec::{decode_plan, encode_plan};
 use super::fingerprint::{fnv1a, ArtifactKey, ArtifactKind, Fnv, FORMAT_VERSION};
@@ -68,6 +75,9 @@ pub struct StoreStats {
     pub hw_rejects: u64,
     /// Whether the store was created on this hardware.
     pub hw_match: bool,
+    /// Whether open() found a stale format version and reinitialized
+    /// the store (all prior artifacts degraded to live planning).
+    pub stale_format_reset: bool,
 }
 
 impl StoreStats {
@@ -81,7 +91,8 @@ impl StoreStats {
             .set("writes", self.writes)
             .set("corrupt_rejects", self.corrupt_rejects)
             .set("hw_rejects", self.hw_rejects)
-            .set("hw_match", self.hw_match);
+            .set("hw_match", self.hw_match)
+            .set("stale_format_reset", self.stale_format_reset);
         j
     }
 }
@@ -106,6 +117,7 @@ pub struct PlanStore {
     dir: PathBuf,
     hw: HwSpec,
     hw_match: bool,
+    stale_format_reset: bool,
     header: Header,
     entries: Mutex<BTreeMap<String, IndexEntry>>,
     plan_hits: AtomicU64,
@@ -118,41 +130,64 @@ pub struct PlanStore {
 }
 
 impl PlanStore {
-    /// Open (or create) the store at `dir` for the given hardware. A
-    /// format-version mismatch in an existing index is a typed error;
-    /// a hardware mismatch opens read-degraded (plans rejected, writes
+    /// Open (or create) the store at `dir` for the given hardware. An
+    /// existing index with a stale format version is reinitialized —
+    /// fresh header, empty index; prior artifacts degrade to live
+    /// planning and `plan gc` reclaims their orphaned payload files. A
+    /// hardware mismatch opens read-degraded (plans rejected, writes
     /// skipped) so a foreign store is never corrupted or misused.
     pub fn open(dir: &Path, hw: &HwSpec) -> Result<PlanStore> {
         std::fs::create_dir_all(dir).with_context(|| format!("create store dir {dir:?}"))?;
         let log = dir.join(INDEX_LOG);
-        let (header, entries) = if log.exists() {
-            let (header, records) = format::read_log(&log)?;
-            let mut map = BTreeMap::new();
-            for rec in records {
-                match rec {
-                    LogRecord::Put(e) => {
-                        map.insert(e.id.clone(), e);
+        let fresh_header = || Header {
+            version: FORMAT_VERSION as u64,
+            hw: hw.fingerprint(),
+            hw_desc: hw.to_string(),
+        };
+        let (header, entries, stale_format_reset) = if log.exists() {
+            match format::read_log(&log) {
+                Ok((header, records)) => {
+                    let mut map = BTreeMap::new();
+                    for rec in records {
+                        match rec {
+                            LogRecord::Put(e) => {
+                                map.insert(e.id.clone(), e);
+                            }
+                            LogRecord::Del { id } => {
+                                map.remove(&id);
+                            }
+                        }
                     }
-                    LogRecord::Del { id } => {
-                        map.remove(&id);
-                    }
+                    (header, map, false)
                 }
+                Err(err)
+                    if err
+                        .downcast_ref::<format::PlanStoreError>()
+                        .is_some_and(|e| {
+                            matches!(e, format::PlanStoreError::VersionMismatch { .. })
+                        }) =>
+                {
+                    // Stale on-disk format: reinitialize. The old
+                    // payloads are unreachable regardless (FORMAT_VERSION
+                    // is mixed into every artifact id), so this only
+                    // trades an error for a cold start.
+                    let header = fresh_header();
+                    format::write_header(&log, &header)?;
+                    (header, BTreeMap::new(), true)
+                }
+                Err(err) => return Err(err),
             }
-            (header, map)
         } else {
-            let header = Header {
-                version: FORMAT_VERSION as u64,
-                hw: hw.fingerprint(),
-                hw_desc: hw.to_string(),
-            };
+            let header = fresh_header();
             format::write_header(&log, &header)?;
-            (header, BTreeMap::new())
+            (header, BTreeMap::new(), false)
         };
         let hw_match = header.hw == hw.fingerprint();
         Ok(PlanStore {
             dir: dir.to_path_buf(),
             hw: hw.clone(),
             hw_match,
+            stale_format_reset,
             header,
             entries: Mutex::new(entries),
             plan_hits: AtomicU64::new(0),
@@ -207,6 +242,7 @@ impl PlanStore {
             corrupt_rejects: self.corrupt_rejects.load(Ordering::Relaxed),
             hw_rejects: self.hw_rejects.load(Ordering::Relaxed),
             hw_match: self.hw_match,
+            stale_format_reset: self.stale_format_reset,
         }
     }
 
@@ -706,18 +742,33 @@ mod tests {
     }
 
     #[test]
-    fn version_mismatch_is_a_typed_open_error() {
+    fn stale_format_version_reinitializes_store() {
         let hw = HwSpec::haswell_reference();
         let dir = tmpdir("ver");
-        drop(PlanStore::open(&dir, &hw).unwrap());
+        let block = BlockShape::new(1, 32);
+        let (_, bsr) = pruned(block, 0.5, 9);
+        let ep = exec_plan_for(&bsr);
+        {
+            let store = PlanStore::open(&dir, &hw).unwrap();
+            store.store_plan(&bsr, PlanOptions::tvm_plus(), &ep).unwrap();
+            assert!(!store.stats().stale_format_reset);
+        }
+        // simulate an index written by an older (or newer) release
         let log = dir.join(INDEX_LOG);
         let text = std::fs::read_to_string(&log).unwrap();
-        std::fs::write(&log, text.replace("\"version\":1", "\"version\":9")).unwrap();
-        let err = PlanStore::open(&dir, &hw).unwrap_err();
-        assert!(
-            format!("{err:#}").contains("format version 9"),
-            "unexpected error: {err:#}"
-        );
+        let needle = format!("\"version\":{FORMAT_VERSION}");
+        assert!(text.contains(&needle), "header missing {needle}");
+        std::fs::write(&log, text.replace(&needle, "\"version\":9")).unwrap();
+        // reopening degrades to a fresh, fully usable store
+        let store = PlanStore::open(&dir, &hw).unwrap();
+        assert!(store.stats().stale_format_reset);
+        assert!(store.is_empty());
+        assert!(store.hw_match());
+        assert!(store.load_plan(&bsr, PlanOptions::tvm_plus()).is_none());
+        store.store_plan(&bsr, PlanOptions::tvm_plus(), &ep).unwrap();
+        let reopened = PlanStore::open(&dir, &hw).unwrap();
+        assert!(!reopened.stats().stale_format_reset);
+        assert!(reopened.load_plan(&bsr, PlanOptions::tvm_plus()).is_some());
     }
 
     #[test]

@@ -68,6 +68,13 @@ impl ExecPlan {
             hw,
         )
     }
+
+    /// The microkernel variant the underlying [`SpmmPlan`] dispatches to
+    /// (chosen at plan-compile time from the block shape and the running
+    /// binary's CPU features).
+    pub fn kernel_variant(&self) -> crate::kernels::micro::KernelVariant {
+        self.plan.kernel_variant
+    }
 }
 
 /// Counter snapshot for instrumentation and tests.

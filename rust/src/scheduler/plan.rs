@@ -14,6 +14,7 @@
 //!    (partial X-panel reuse).
 
 use crate::kernels::bsr_spmm::{RowProgram, SpmmPlan};
+use crate::kernels::micro;
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::pattern::{jaccard, row_signature};
 use std::collections::HashMap;
@@ -101,6 +102,7 @@ pub fn build_plan(m: &BsrMatrix, opts: PlanOptions) -> SpmmPlan {
         rows,
         order,
         distinct_programs: if opts.dedup { cache.len() } else { distinct },
+        kernel_variant: micro::select_variant(m.block),
     }
 }
 
