@@ -1,0 +1,350 @@
+//! Cost-model validation: predicted vs measured over the A4 sweep grid.
+//!
+//! `sparsebert costcheck` runs the same threads × grain × block grid as
+//! the A4 scheduler sweep ([`super::table1::run_scheduler_sweep`]),
+//! measures every cell, prices the same cells with the analytical
+//! roofline model ([`crate::scheduler::costmodel`]), and reports how well
+//! the model's *ranking* matches reality:
+//!
+//! * **Spearman rank correlation** per block shape (and the mean across
+//!   shapes) — the headline number; the scheduler consumes ranks, not
+//!   absolute times;
+//! * **inversion counts** — Kendall discordant pairs, the number of cell
+//!   pairs the model orders backwards;
+//! * **top-1 regret** — how much slower the model's predicted-best cell
+//!   measured than the measured-best cell, in percent. Zero means the
+//!   model picked the same winner the sweep would have.
+//!
+//! Methodology notes live in `docs/cost-model.md`. Absolute predicted
+//! times are expected to be off (the model's constants are not
+//! calibrated per machine); rankings are what is validated here.
+
+use crate::kernels::bsr_spmm::bsr_linear_planned_on;
+use crate::scheduler::costmodel::{self, CostInputs};
+use crate::scheduler::{AutoScheduler, ExecParams, HwSpec};
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::dense::Matrix;
+use crate::sparse::prune::{prune_structured_replicated, BlockShape};
+use crate::util::bench::measure;
+use crate::util::json::Json;
+use crate::util::pool;
+
+pub use super::table1::SchedSweepConfig as CostCheckConfig;
+
+/// Predicted-best regret (percent) below which the model's top-1 choice
+/// counts as matching the measured winner — measurement noise between
+/// near-identical cells should not flip the verdict.
+pub const TOP1_REGRET_TOLERANCE_PCT: f64 = 10.0;
+
+/// One grid cell: the candidate, what the model predicted, and what the
+/// machine measured.
+#[derive(Debug, Clone, Copy)]
+pub struct CostCheckCell {
+    pub params: ExecParams,
+    pub predicted_ms: f64,
+    pub measured_ms: f64,
+}
+
+/// Validation result for one block shape's grid.
+#[derive(Debug, Clone)]
+pub struct CostCheckBlock {
+    pub block: BlockShape,
+    pub cells: Vec<CostCheckCell>,
+    /// Spearman rank correlation between predicted and measured times.
+    pub spearman: f64,
+    /// Kendall discordant pairs (model orders backwards vs measurement).
+    pub inversions: usize,
+    /// Total strictly-ordered pairs compared.
+    pub pairs: usize,
+    /// Measured time of the model's predicted-best cell relative to the
+    /// measured-best cell, in percent over the optimum (0 = same cell or
+    /// a tie).
+    pub top1_regret_pct: f64,
+    /// `top1_regret_pct <= TOP1_REGRET_TOLERANCE_PCT`.
+    pub top1_match: bool,
+}
+
+/// Full costcheck result across every block shape in the grid.
+#[derive(Debug, Clone)]
+pub struct CostCheckReport {
+    pub blocks: Vec<CostCheckBlock>,
+    /// Mean of the per-block Spearman correlations (ranks only compare
+    /// within a block shape — absolute scales differ across shapes).
+    pub mean_spearman: f64,
+    pub total_inversions: usize,
+    pub total_pairs: usize,
+    /// Hardware the model priced against, for the report header.
+    pub hw: String,
+}
+
+impl CostCheckReport {
+    /// True when every block shape's predicted-best cell measured within
+    /// [`TOP1_REGRET_TOLERANCE_PCT`] of its measured-best cell.
+    pub fn all_top1_match(&self) -> bool {
+        self.blocks.iter().all(|b| b.top1_match)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for b in &self.blocks {
+            let cells: Vec<Json> = b
+                .cells
+                .iter()
+                .map(|c| {
+                    let mut j = Json::obj();
+                    j.set("threads", c.params.threads)
+                        .set("grain", c.params.grain)
+                        .set("predicted_ms", c.predicted_ms)
+                        .set("measured_ms", c.measured_ms);
+                    j
+                })
+                .collect();
+            let mut j = Json::obj();
+            j.set("block", b.block.to_string())
+                .set("spearman", b.spearman)
+                .set("inversions", b.inversions)
+                .set("pairs", b.pairs)
+                .set("top1_regret_pct", b.top1_regret_pct)
+                .set("top1_match", b.top1_match)
+                .set("cells", cells);
+            blocks.push(j);
+        }
+        let mut root = Json::obj();
+        root.set("hw", self.hw.as_str())
+            .set("mean_spearman", self.mean_spearman)
+            .set("total_inversions", self.total_inversions)
+            .set("total_pairs", self.total_pairs)
+            .set("all_top1_match", self.all_top1_match())
+            .set("blocks", blocks);
+        root
+    }
+}
+
+/// Measure the sweep grid and compare against the roofline predictions.
+///
+/// Reuses [`CostCheckConfig`] (= the A4 sweep's `SchedSweepConfig`) so
+/// the validated grid is byte-identical to the grid `schedsweep`
+/// measures: same geometry, same seeds, same pruning, same kernels.
+pub fn run_costcheck(cfg: &CostCheckConfig) -> CostCheckReport {
+    let hw = HwSpec::detect();
+    let sched = AutoScheduler::new(hw.clone());
+    let mut rng = crate::util::rng::Rng::new(cfg.seed);
+    let x = Matrix::randn(cfg.cols, cfg.tokens, 1.0, &mut rng);
+    let mut blocks = Vec::with_capacity(cfg.blocks.len());
+    for &block in &cfg.blocks {
+        let mut w = Matrix::randn(cfg.rows, cfg.cols, 1.0, &mut rng);
+        prune_structured_replicated(&mut w, cfg.sparsity, block, cfg.pool, &mut rng);
+        let bsr = BsrMatrix::from_dense(&w, block).expect("block divides geometry");
+        let ep = sched.exec_plan(&format!("costcheck.{block}"), &bsr);
+        let inputs = CostInputs {
+            block: ep.block,
+            block_rows: ep.block_rows,
+            cols: bsr.cols,
+            mean_blocks_per_row: ep.mean_blocks_per_row,
+            tokens: cfg.tokens,
+        };
+        let mut cells = Vec::with_capacity(cfg.threads.len() * cfg.grains.len());
+        for &threads in &cfg.threads {
+            for &grain in &cfg.grains {
+                let params = ExecParams { threads, grain };
+                let predicted_ms = costmodel::estimate(&inputs, params, &hw).predicted_ms;
+                let m = measure(&format!("cc-{block}-t{threads}-g{grain}"), &cfg.bench, || {
+                    std::hint::black_box(bsr_linear_planned_on(
+                        &bsr,
+                        &ep.plan,
+                        &x,
+                        None,
+                        pool::global(),
+                        threads,
+                        grain,
+                    ));
+                });
+                cells.push(CostCheckCell {
+                    params,
+                    predicted_ms,
+                    measured_ms: m.summary.mean,
+                });
+            }
+        }
+        blocks.push(summarize_block(block, cells));
+    }
+    let mean_spearman = if blocks.is_empty() {
+        0.0
+    } else {
+        blocks.iter().map(|b| b.spearman).sum::<f64>() / blocks.len() as f64
+    };
+    CostCheckReport {
+        mean_spearman,
+        total_inversions: blocks.iter().map(|b| b.inversions).sum(),
+        total_pairs: blocks.iter().map(|b| b.pairs).sum(),
+        hw: hw.to_string(),
+        blocks,
+    }
+}
+
+fn summarize_block(block: BlockShape, cells: Vec<CostCheckCell>) -> CostCheckBlock {
+    let pred: Vec<f64> = cells.iter().map(|c| c.predicted_ms).collect();
+    let meas: Vec<f64> = cells.iter().map(|c| c.measured_ms).collect();
+    let spearman = costmodel::spearman(&pred, &meas);
+    let inversions = costmodel::inversions(&pred, &meas);
+    // Strictly-ordered pairs on both sides (the denominator inversions
+    // are counted out of).
+    let mut pairs = 0;
+    for i in 0..cells.len() {
+        for j in (i + 1)..cells.len() {
+            if pred[i] != pred[j] && meas[i] != meas[j] {
+                pairs += 1;
+            }
+        }
+    }
+    let pred_best = argmin(&pred);
+    let meas_best_ms = meas.iter().cloned().fold(f64::INFINITY, f64::min);
+    let top1_regret_pct = if meas_best_ms > 0.0 && pred_best < meas.len() {
+        (meas[pred_best] / meas_best_ms - 1.0) * 100.0
+    } else {
+        0.0
+    };
+    CostCheckBlock {
+        block,
+        cells,
+        spearman,
+        inversions,
+        pairs,
+        top1_regret_pct,
+        top1_match: top1_regret_pct <= TOP1_REGRET_TOLERANCE_PCT,
+    }
+}
+
+fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Render the report as an aligned text table (the `costcheck`
+/// subcommand's default output).
+pub fn render_costcheck(report: &CostCheckReport, title: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!("hw: {}\n", report.hw));
+    out.push_str(&format!(
+        "{:<10} {:>8} {:>7} {:>13} {:>12}\n",
+        "block", "threads", "grain", "predicted ms", "measured ms"
+    ));
+    for b in &report.blocks {
+        for c in &b.cells {
+            out.push_str(&format!(
+                "{:<10} {:>8} {:>7} {:>13.3} {:>12.3}\n",
+                b.block.to_string(),
+                c.params.threads,
+                c.params.grain,
+                c.predicted_ms,
+                c.measured_ms
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "\n{:<10} {:>9} {:>12} {:>13} {:>6}\n",
+        "block", "spearman", "inversions", "top1 regret", "top1"
+    ));
+    for b in &report.blocks {
+        out.push_str(&format!(
+            "{:<10} {:>9.3} {:>8}/{:<3} {:>12.1}% {:>6}\n",
+            b.block.to_string(),
+            b.spearman,
+            b.inversions,
+            b.pairs,
+            b.top1_regret_pct,
+            if b.top1_match { "ok" } else { "MISS" }
+        ));
+    }
+    out.push_str(&format!(
+        "mean spearman {:.3}, {} inversions over {} ordered pairs, top-1 {}\n",
+        report.mean_spearman,
+        report.total_inversions,
+        report.total_pairs,
+        if report.all_top1_match() {
+            "matched on every block shape".to_string()
+        } else {
+            let misses: Vec<String> = report
+                .blocks
+                .iter()
+                .filter(|b| !b.top1_match)
+                .map(|b| b.block.to_string())
+                .collect();
+            format!("MISSED on {}", misses.join(", "))
+        }
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn costcheck_smoke_produces_finite_metrics() {
+        let cfg = CostCheckConfig::smoke();
+        let report = run_costcheck(&cfg);
+        assert_eq!(report.blocks.len(), cfg.blocks.len());
+        for b in &report.blocks {
+            assert_eq!(b.cells.len(), cfg.threads.len() * cfg.grains.len());
+            assert!((-1.0..=1.0).contains(&b.spearman), "{}", b.spearman);
+            assert!(b.top1_regret_pct >= 0.0, "{}", b.top1_regret_pct);
+            assert!(b.inversions <= b.pairs.max(1));
+            for c in &b.cells {
+                assert!(c.predicted_ms > 0.0 && c.measured_ms > 0.0);
+            }
+        }
+        // rendering and JSON encoding hold together
+        let text = render_costcheck(&report, "smoke");
+        assert!(text.contains("spearman"));
+        let j = report.to_json();
+        assert!(j.get("mean_spearman").and_then(Json::as_f64).is_some());
+        assert_eq!(
+            j.get("blocks").and_then(Json::as_arr).map(Vec::len),
+            Some(cfg.blocks.len())
+        );
+    }
+
+    #[test]
+    fn block_summary_metrics_are_consistent() {
+        let block = BlockShape::new(32, 1);
+        // model and measurement in perfect agreement → spearman 1, no
+        // inversions, zero regret
+        let agree = summarize_block(
+            block,
+            vec![
+                cell(1, 1, 4.0, 8.0),
+                cell(2, 1, 2.0, 4.0),
+                cell(4, 1, 1.0, 2.0),
+            ],
+        );
+        assert!((agree.spearman - 1.0).abs() < 1e-12);
+        assert_eq!(agree.inversions, 0);
+        assert_eq!(agree.pairs, 3);
+        assert_eq!(agree.top1_regret_pct, 0.0);
+        assert!(agree.top1_match);
+        // model picks the measured-worst cell → full inversion, regret > 0
+        let disagree = summarize_block(
+            block,
+            vec![cell(1, 1, 1.0, 30.0), cell(2, 1, 2.0, 20.0), cell(4, 1, 3.0, 10.0)],
+        );
+        assert!((disagree.spearman + 1.0).abs() < 1e-12);
+        assert_eq!(disagree.inversions, 3);
+        assert!((disagree.top1_regret_pct - 200.0).abs() < 1e-9);
+        assert!(!disagree.top1_match);
+    }
+
+    fn cell(threads: usize, grain: usize, predicted_ms: f64, measured_ms: f64) -> CostCheckCell {
+        CostCheckCell {
+            params: ExecParams { threads, grain },
+            predicted_ms,
+            measured_ms,
+        }
+    }
+}

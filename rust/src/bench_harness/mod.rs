@@ -9,6 +9,10 @@
 //! * [`table1::run_scheduler_sweep`] — the scheduler-interaction sweep
 //!   (threads × grain × block shape, 32x1 vs 32x32 included) over the
 //!   parallel plan-cached BSR engine, with zero-re-planning verification;
+//! * [`costcheck`] — the cost-model validation run: the A4 sweep grid
+//!   measured and re-priced by the analytical roofline model, with rank
+//!   correlation, inversion counts, and top-1 regret per block shape
+//!   (`sparsebert costcheck`; methodology in `docs/cost-model.md`);
 //! * [`serving`] — the A3 serving sweep: pipelined vs barrier
 //!   coordinator mode across batch-size caps (also behind `sparsebert
 //!   cibench`, whose JSON becomes the CI `BENCH_ci.json` artifact);
@@ -24,6 +28,7 @@
 //! projections. `--layers 12` (or `SPARSEBERT_BENCH_FULL=1`) restores the
 //! paper's exact geometry.
 
+pub mod costcheck;
 pub mod figure2;
 pub mod report;
 pub mod serving;
@@ -40,4 +45,8 @@ pub use warmstart::{
 pub use table1::{
     render_sched_sweep, run_scheduler_sweep, run_table1, SchedSweepConfig, SchedSweepReport,
     SchedSweepRow, Table1Config, Table1Row,
+};
+pub use costcheck::{
+    render_costcheck, run_costcheck, CostCheckBlock, CostCheckCell, CostCheckConfig,
+    CostCheckReport,
 };

@@ -61,11 +61,17 @@ pub const DEFAULT_WEIGHT_SEED: u64 = 1234;
 /// compiled against.
 #[derive(Debug, Clone)]
 pub struct BuildReport {
+    /// Engine kind that was constructed.
     pub kind: EngineKind,
+    /// Routing/registration name.
     pub name: String,
+    /// BSR block shape (sparse engines only).
     pub block: Option<BlockShape>,
+    /// Structured-prune target applied before conversion, if any.
     pub sparsity: Option<f64>,
+    /// Worker threads the engine was configured with.
     pub threads: usize,
+    /// Wall time of the whole build, in milliseconds.
     pub build_ms: f64,
     /// Plans compiled live through the task buffer during this build.
     pub live_plans: u64,
@@ -86,6 +92,15 @@ pub struct BuildReport {
     /// engines only) — e.g. `"simd-32x1"`; see
     /// [`crate::kernels::micro::KernelVariant`].
     pub kernel_variant: Option<String>,
+    /// Active cost policy of the scheduler the engine's plans live in
+    /// (sparse engines only) — `"sweep"` / `"roofline"` / `"hybrid"`.
+    pub cost_policy: Option<String>,
+    /// Mean absolute relative error of the roofline model's prediction
+    /// against measured near-tie candidates, in percent. `None` until
+    /// the hybrid policy has measured at least once (serving populates
+    /// it live through the `cost_model` stats gauge).
+    pub cost_model_error_pct: Option<f64>,
+    /// Dense-weight memory footprint of the constructed engine.
     pub weight_footprint_bytes: usize,
 }
 
@@ -99,7 +114,7 @@ impl BuildReport {
     /// One operator-facing line (`serve` prints one per variant).
     pub fn summary(&self) -> String {
         format!(
-            "{}: built in {:.1} ms — {} live plans, {} cache hits, {} packs, {} packed loads, {} store writes{}",
+            "{}: built in {:.1} ms — {} live plans, {} cache hits, {} packs, {} packed loads, {} store writes{}{}",
             self.name,
             self.build_ms,
             self.live_plans,
@@ -110,10 +125,16 @@ impl BuildReport {
             match &self.kernel_variant {
                 Some(v) => format!(", kernel {v}"),
                 None => String::new(),
+            },
+            match &self.cost_policy {
+                Some(p) => format!(", policy {p}"),
+                None => String::new(),
             }
         )
     }
 
+    /// Stats-endpoint representation (one element of the
+    /// `build_reports` gauge in the serving stats JSON).
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("kind", self.kind.to_string())
@@ -154,6 +175,20 @@ impl BuildReport {
                     None => Json::Null,
                 },
             )
+            .set(
+                "cost_policy",
+                match &self.cost_policy {
+                    Some(p) => Json::Str(p.clone()),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "cost_model_error_pct",
+                match self.cost_model_error_pct {
+                    Some(e) => Json::Num(e),
+                    None => Json::Null,
+                },
+            )
             .set("weight_footprint_bytes", self.weight_footprint_bytes)
             .set("warm", self.is_warm());
         j
@@ -165,12 +200,18 @@ impl BuildReport {
 /// them), the pipeline mode to register under, the scheduler that owns
 /// its plans, and the build report.
 pub struct BuiltEngine {
+    /// The ready engine.
     pub engine: Arc<dyn Engine>,
+    /// Post-prune weights the engine runs on (the router embeds with
+    /// these).
     pub weights: Arc<BertWeights>,
+    /// Registration name.
     pub name: String,
+    /// Pipeline mode to register under.
     pub mode: PipelineMode,
     /// The scheduler the engine's plans live in (sparse engines only).
     pub sched: Option<Arc<AutoScheduler>>,
+    /// What the build actually did.
     pub report: BuildReport,
 }
 
@@ -205,6 +246,8 @@ pub struct EngineBuilder {
 }
 
 impl EngineBuilder {
+    /// Start a builder for the given engine kind; configure it with the
+    /// chained setters, then [`build`](EngineBuilder::build).
     pub fn new(kind: EngineKind) -> EngineBuilder {
         EngineBuilder {
             kind,
@@ -452,6 +495,7 @@ impl EngineBuilder {
                     }
                     _ => (0, 0),
                 };
+                let cost_stats = sched.cost_stats();
                 let report = BuildReport {
                     kind,
                     name: name.clone(),
@@ -467,6 +511,8 @@ impl EngineBuilder {
                     store_writes,
                     hw_fingerprint: Some(sched.hw.fingerprint()),
                     kernel_variant: engine.kernel_variant().map(|v| v.to_string()),
+                    cost_policy: Some(sched.policy().as_str().to_string()),
+                    cost_model_error_pct: cost_stats.mean_abs_err_pct,
                     weight_footprint_bytes: engine.weight_footprint_bytes(),
                 };
                 Ok(BuiltEngine {
@@ -566,6 +612,8 @@ fn finish(
         store_writes: 0,
         hw_fingerprint: None,
         kernel_variant: None,
+        cost_policy: None,
+        cost_model_error_pct: None,
         weight_footprint_bytes: engine.weight_footprint_bytes(),
     };
     BuiltEngine {
@@ -601,6 +649,7 @@ mod tests {
             assert_eq!(built.name, kind.to_string());
             assert_eq!(built.report.kind, kind);
             assert!(built.report.is_warm(), "dense kinds never plan");
+            assert!(built.report.cost_policy.is_none(), "dense kinds have no cost policy");
             outs.push(built.engine.forward(&x));
         }
         let sparse = EngineBuilder::new(EngineKind::TvmPlus)
@@ -612,6 +661,12 @@ mod tests {
         assert!(sparse.report.live_plans >= 1);
         assert_eq!(sparse.report.packs, 6, "1 layer × 6 projections packed live");
         assert!(sparse.report.hw_fingerprint.is_some());
+        assert_eq!(
+            sparse.report.cost_policy.as_deref(),
+            Some("roofline"),
+            "sparse report surfaces the scheduler's default cost policy"
+        );
+        assert!(sparse.report.summary().contains("policy roofline"));
         assert_eq!(
             sparse.report.kernel_variant.as_deref(),
             Some(crate::kernels::micro::select_variant(BlockShape::new(2, 4)).as_str()),

@@ -14,11 +14,16 @@ use std::fmt;
 #[derive(Debug)]
 pub enum DeployError {
     /// The builder was asked to build without any weight source.
-    MissingWeights { kind: EngineKind },
+    MissingWeights {
+        /// The engine kind being built.
+        kind: EngineKind,
+    },
     /// An option this kind requires was not supplied (e.g. `block` on
     /// `tvm+`).
     MissingOption {
+        /// The engine kind being built.
         kind: EngineKind,
+        /// The missing option's name.
         option: &'static str,
     },
     /// An option was supplied that this kind cannot honor (e.g. a plan
@@ -26,29 +31,58 @@ pub enum DeployError {
     /// algorithm and runtime configurations drift apart — the exact
     /// failure mode the co-design API exists to prevent.
     IncompatibleOption {
+        /// The engine kind being built.
         kind: EngineKind,
+        /// The offending option's name.
         option: &'static str,
+        /// Why the kind cannot honor it.
         reason: &'static str,
     },
     /// A field value is out of range or unparseable (`threads = 0`,
     /// `sparsity = 1.5`, a malformed block shape, …).
-    InvalidValue { field: String, reason: String },
+    InvalidValue {
+        /// Dotted path of the field (`"scheduler.hybrid_margin"`).
+        field: String,
+        /// What was wrong with the value.
+        reason: String,
+    },
     /// The combination is well-formed but not buildable in this binary
     /// (e.g. the XLA engine without AOT artifacts, `numa = "pin"` before
     /// NUMA pinning lands).
-    Unsupported { what: String },
+    Unsupported {
+        /// The unsupported feature.
+        what: String,
+    },
     /// Manifest-level failure: unreadable file, syntax error, schema
     /// mismatch, or a structural problem not covered by a finer variant.
-    Spec { context: String, reason: String },
+    Spec {
+        /// Where the failure occurred (path, table, or "JSON").
+        context: String,
+        /// What went wrong.
+        reason: String,
+    },
     /// A manifest table contains a key the schema does not define —
     /// rejected rather than ignored so typos ("sparsety") cannot silently
     /// deploy a mis-configured engine.
-    UnknownKey { table: String, key: String },
+    UnknownKey {
+        /// The table containing the stray key.
+        table: String,
+        /// The unrecognized key.
+        key: String,
+    },
     /// Two `[[variant]]` entries share a name.
-    DuplicateVariant { name: String },
+    DuplicateVariant {
+        /// The duplicated variant name.
+        name: String,
+    },
     /// Engine construction itself failed after validation passed
     /// (geometry mismatch, store I/O, …).
-    Build { context: String, reason: String },
+    Build {
+        /// Which variant/stage failed.
+        context: String,
+        /// The underlying failure.
+        reason: String,
+    },
 }
 
 impl fmt::Display for DeployError {

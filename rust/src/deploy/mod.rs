@@ -32,6 +32,8 @@
 //! `store.sync_url` — both already parse and validate, and return
 //! [`DeployError::Unsupported`] from `instantiate` until implemented.
 
+#![warn(missing_docs)]
+
 pub mod builder;
 pub mod error;
 pub mod spec;
@@ -43,6 +45,6 @@ pub use builder::{
 };
 pub use error::DeployError;
 pub use spec::{
-    Deployment, DeploymentSpec, ModelSpec, NumaPolicy, ServingSpec, StoreSpec, VariantSpec,
-    SPEC_SCHEMA,
+    Deployment, DeploymentSpec, ModelSpec, NumaPolicy, SchedulerSpec, ServingSpec, StoreSpec,
+    VariantSpec, SPEC_SCHEMA,
 };

@@ -26,7 +26,7 @@ use crate::coordinator::{PipelineMode, Router};
 use crate::model::engine::EngineKind;
 use crate::model::{BertConfig, BertWeights};
 use crate::planstore::PlanStore;
-use crate::scheduler::{AutoScheduler, HwSpec};
+use crate::scheduler::{AutoScheduler, CostPolicy, HwSpec};
 use crate::sparse::prune::BlockShape;
 use crate::util::json::{self, Json};
 use crate::util::pool::{default_threads, Pool};
@@ -89,6 +89,7 @@ impl Default for ServingSpec {
 /// `[store]` — persistent artifact store for warm starts.
 #[derive(Debug, Clone)]
 pub struct StoreSpec {
+    /// Store directory (created on first open).
     pub path: PathBuf,
     /// Reserved: object-storage URL to sync artifacts through so a new
     /// replica warm-starts from a peer's store (cross-host sharing,
@@ -96,20 +97,49 @@ pub struct StoreSpec {
     pub sync_url: Option<String>,
 }
 
+/// `[scheduler]` — how the shared auto-scheduler picks `(threads, grain)`
+/// per plan × token count (see `docs/cost-model.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerSpec {
+    /// `cost_model = "roofline" | "sweep" | "hybrid"`. Omitting the table
+    /// (or the key) selects the analytical roofline ranking, the same
+    /// default [`AutoScheduler::new`] applies.
+    pub cost_model: CostPolicy,
+    /// `hybrid_margin` — relative near-tie margin in `(0, 1]` for the
+    /// hybrid policy; only accepted alongside `cost_model = "hybrid"`.
+    pub hybrid_margin: Option<f64>,
+}
+
+impl Default for SchedulerSpec {
+    fn default() -> Self {
+        SchedulerSpec {
+            cost_model: CostPolicy::default(),
+            hybrid_margin: None,
+        }
+    }
+}
+
 /// Worker/artifact NUMA placement policy (`numa = "pin"` reserved for
 /// the NUMA-pinning ROADMAP item).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NumaPolicy {
+    /// No placement constraints (the default).
     None,
+    /// Pin workers and artifacts to NUMA nodes (reserved — rejected by
+    /// `instantiate` until implemented).
     Pin,
 }
 
 /// One `[[variant]]` — an engine registration.
 #[derive(Debug, Clone)]
 pub struct VariantSpec {
+    /// Unique routing name (defaults to the kind string).
     pub name: String,
+    /// Engine kind to construct.
     pub kind: EngineKind,
+    /// BSR block shape; required on `tvm+`, rejected elsewhere.
     pub block: Option<BlockShape>,
+    /// Structured-prune target in `[0, 1)`; `tvm+` only.
     pub sparsity: Option<f64>,
     /// Structured-prune pattern-pool size; only meaningful (and only
     /// accepted) on `tvm+` variants. Absent = [`DEFAULT_PRUNE_POOL`].
@@ -119,20 +149,60 @@ pub struct VariantSpec {
 }
 
 /// A parsed, schema-checked deployment manifest.
+///
+/// # Examples
+///
+/// ```
+/// use sparsebert::deploy::DeploymentSpec;
+/// use sparsebert::scheduler::CostPolicy;
+///
+/// let spec = DeploymentSpec::from_toml_str(
+///     r#"
+///     schema = "sparsebert-deploy/v1"
+///
+///     [model]
+///     config = "tiny"
+///
+///     [scheduler]
+///     cost_model = "hybrid"
+///     hybrid_margin = 0.2
+///
+///     [[variant]]
+///     name = "tvm+1x32"
+///     kind = "tvm+"
+///     block = "1x32"
+///     sparsity = 0.8
+///     "#,
+/// )?;
+/// spec.validate()?;
+/// assert_eq!(spec.scheduler.cost_model, CostPolicy::Hybrid);
+/// assert_eq!(spec.variants[0].name, "tvm+1x32");
+/// # Ok::<(), sparsebert::deploy::DeployError>(())
+/// ```
 #[derive(Debug, Clone)]
 pub struct DeploymentSpec {
+    /// `[model]` — geometry and weight provenance.
     pub model: ModelSpec,
+    /// `[serving]` — coordinator-level knobs.
     pub serving: ServingSpec,
+    /// `[scheduler]` — cost-model policy for the shared auto-scheduler.
+    pub scheduler: SchedulerSpec,
+    /// `[store]` — optional persistent artifact store.
     pub store: Option<StoreSpec>,
+    /// `numa` — worker/artifact placement policy (reserved).
     pub numa: NumaPolicy,
+    /// `[[variant]]` — the engines to register, in order.
     pub variants: Vec<VariantSpec>,
 }
 
 /// An instantiated deployment: the router with every variant registered,
 /// plus the handles the serving front-end needs for metrics and logging.
 pub struct Deployment {
+    /// The router with every variant registered and stats gauges wired.
     pub router: Router,
+    /// The one auto-scheduler shared by every sparse variant.
     pub sched: Arc<AutoScheduler>,
+    /// The attached plan store, when the manifest configured one.
     pub store: Option<Arc<PlanStore>>,
     /// One report per variant, in registration order.
     pub reports: Vec<BuildReport>,
@@ -201,6 +271,7 @@ impl DeploymentSpec {
                 ..ModelSpec::default()
             },
             serving: ServingSpec::default(),
+            scheduler: SchedulerSpec::default(),
             store: None,
             numa: NumaPolicy::None,
             variants,
@@ -223,10 +294,12 @@ impl DeploymentSpec {
         }
     }
 
+    /// Parse a manifest from TOML-subset text (see [`super::toml`]).
     pub fn from_toml_str(text: &str) -> Result<DeploymentSpec, DeployError> {
         Self::from_json_value(&toml::parse(text)?)
     }
 
+    /// Parse a manifest from JSON text.
     pub fn from_json_str(text: &str) -> Result<DeploymentSpec, DeployError> {
         let j = json::parse(text).map_err(|e| DeployError::Spec {
             context: "JSON".to_string(),
@@ -237,7 +310,11 @@ impl DeploymentSpec {
 
     /// Decode the parsed value tree, rejecting unknown keys everywhere.
     fn from_json_value(j: &Json) -> Result<DeploymentSpec, DeployError> {
-        check_keys(j, "<root>", &["schema", "model", "serving", "store", "numa", "variant"])?;
+        check_keys(
+            j,
+            "<root>",
+            &["schema", "model", "serving", "scheduler", "store", "numa", "variant"],
+        )?;
         if let Some(schema) = j.get("schema") {
             let s = schema.as_str().ok_or_else(|| invalid("schema", "must be a string"))?;
             if s != SPEC_SCHEMA {
@@ -274,6 +351,19 @@ impl DeploymentSpec {
             if let Some(w) = usize_field(s, "serving.batch_wait_ms")? {
                 serving.batch_wait_ms = w as u64;
             }
+        }
+        let mut scheduler = SchedulerSpec::default();
+        if let Some(sc) = j.get("scheduler") {
+            check_keys(sc, "scheduler", &["cost_model", "hybrid_margin"])?;
+            if let Some(cm) = str_field(sc, "scheduler.cost_model")? {
+                scheduler.cost_model = CostPolicy::parse(&cm).ok_or_else(|| {
+                    invalid(
+                        "scheduler.cost_model",
+                        &format!("unknown policy '{cm}' (expected \"sweep\", \"roofline\", or \"hybrid\")"),
+                    )
+                })?;
+            }
+            scheduler.hybrid_margin = f64_field(sc, "scheduler.hybrid_margin")?;
         }
         let store = match j.get("store") {
             None => None,
@@ -338,6 +428,7 @@ impl DeploymentSpec {
         Ok(DeploymentSpec {
             model,
             serving,
+            scheduler,
             store,
             numa,
             variants,
@@ -360,6 +451,20 @@ impl DeploymentSpec {
         }
         if self.serving.max_batch == 0 {
             return Err(invalid("serving.max_batch", "must be ≥ 1"));
+        }
+        if let Some(m) = self.scheduler.hybrid_margin {
+            if self.scheduler.cost_model != CostPolicy::Hybrid {
+                return Err(invalid(
+                    "scheduler.hybrid_margin",
+                    "only meaningful with cost_model = \"hybrid\"",
+                ));
+            }
+            if !(m > 0.0 && m <= 1.0) {
+                return Err(invalid(
+                    "scheduler.hybrid_margin",
+                    &format!("{m} is outside (0, 1]"),
+                ));
+            }
         }
         if self.variants.is_empty() {
             return Err(DeployError::Spec {
@@ -451,6 +556,13 @@ impl DeploymentSpec {
         let exec_pool = Arc::new(Pool::new(threads));
         let mut router = Router::with_exec_pool(Arc::clone(&exec_pool));
         let sched = Arc::new(AutoScheduler::new(HwSpec::detect()));
+        // Apply the manifest's cost policy before the store attaches so
+        // the store's artifact metadata records the right producing
+        // policy from the first write.
+        sched.set_policy(self.scheduler.cost_model);
+        if let Some(m) = self.scheduler.hybrid_margin {
+            sched.set_hybrid_margin(m);
+        }
         let store = match &self.store {
             None => None,
             Some(s) => {
@@ -531,6 +643,17 @@ impl DeploymentSpec {
             router
                 .metrics
                 .register_gauge("plan_cache", move || s.cache.stats().to_json());
+        }
+        // The cost-model gauge is live (unlike the build-report snapshot):
+        // hybrid measurement fallbacks and the model's observed prediction
+        // error accumulate during serving.
+        {
+            let s = Arc::clone(&sched);
+            router.metrics.register_gauge("cost_model", move || {
+                let mut j = s.cost_stats().to_json();
+                j.set("policy", s.policy().as_str());
+                j
+            });
         }
         if let Some(store) = &store {
             let st = Arc::clone(store);
@@ -738,6 +861,46 @@ pool = 4
     }
 
     #[test]
+    fn scheduler_table_parses_and_validates() {
+        let doc = "[scheduler]\ncost_model = \"hybrid\"\nhybrid_margin = 0.25\n\
+                   [[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let spec = DeploymentSpec::from_toml_str(doc).unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.scheduler.cost_model, CostPolicy::Hybrid);
+        assert_eq!(spec.scheduler.hybrid_margin, Some(0.25));
+        // omitted table → the roofline default, matching AutoScheduler::new
+        let spec = DeploymentSpec::from_toml_str(GOOD).unwrap();
+        assert_eq!(spec.scheduler, SchedulerSpec::default());
+        assert_eq!(spec.scheduler.cost_model, CostPolicy::Roofline);
+        // unknown policy names are rejected at parse time
+        let bad = "[scheduler]\ncost_model = \"oracle\"\n\
+                   [[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(bad).unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        // a margin without the hybrid policy is a validation error
+        let stray = "[scheduler]\ncost_model = \"roofline\"\nhybrid_margin = 0.2\n\
+                     [[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(stray).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        // and so is a margin outside (0, 1]
+        let oob = "[scheduler]\ncost_model = \"hybrid\"\nhybrid_margin = 1.5\n\
+                   [[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(oob).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn instantiate_applies_scheduler_policy() {
+        let doc = "[model]\nconfig = \"micro\"\n\
+                   [scheduler]\ncost_model = \"hybrid\"\nhybrid_margin = 0.3\n\
+                   [[variant]]\nname = \"tvm+\"\nkind = \"tvm+\"\nblock = \"2x4\"\nsparsity = 0.5";
+        let dep = DeploymentSpec::from_toml_str(doc).unwrap().instantiate().unwrap();
+        assert_eq!(dep.sched.policy(), CostPolicy::Hybrid);
+        assert!((dep.sched.hybrid_margin() - 0.3).abs() < 1e-12);
+        dep.router.shutdown();
+    }
+
+    #[test]
     fn reserved_fields_validate_but_do_not_instantiate() {
         let numa = "numa = \"pin\"\n[model]\nconfig = \"micro\"\n\
                     [[variant]]\nname = \"a\"\nkind = \"tvm\"";
@@ -787,6 +950,11 @@ pool = 4
                 .and_then(Json::as_str)
                 .is_some_and(|v| v.contains("32x") || v.contains("linear") || v.contains("generic"))
         }));
+        // the live cost-model gauge reports the active policy next to the
+        // accumulated analytic/measured counters
+        let cm = stats.get("cost_model").expect("cost_model gauge in stats");
+        assert_eq!(cm.get("policy").and_then(Json::as_str), Some("roofline"));
+        assert!(cm.get("analytic_choices").is_some());
         dep.router.shutdown();
     }
 

@@ -16,9 +16,10 @@
 use anyhow::{bail, Context, Result};
 use sparsebert::bench_harness::figure2::build_figure2;
 use sparsebert::bench_harness::{
-    render_sched_sweep, render_serving_sweep, render_warm_start, report, run_scheduler_sweep,
-    run_serving_sweep, run_table1, run_warm_start_smoke, serving_sweep_json, warm_start_json,
-    SchedSweepConfig, ServingSweepConfig, Table1Config, WarmStartConfig,
+    render_costcheck, render_sched_sweep, render_serving_sweep, render_warm_start, report,
+    run_costcheck, run_scheduler_sweep, run_serving_sweep, run_table1, run_warm_start_smoke,
+    serving_sweep_json, warm_start_json, CostCheckConfig, SchedSweepConfig, ServingSweepConfig,
+    Table1Config, WarmStartConfig,
 };
 use sparsebert::coordinator::server::{Client, Server};
 use sparsebert::coordinator::PipelineMode;
@@ -48,6 +49,7 @@ fn main() {
     let result = match cmd {
         "table1" => cmd_table1(rest),
         "schedsweep" => cmd_schedsweep(rest),
+        "costcheck" => cmd_costcheck(rest),
         "cibench" => cmd_cibench(rest),
         "benchdiff" => cmd_benchdiff(rest),
         "figure2" => cmd_figure2(rest),
@@ -80,6 +82,7 @@ fn usage() -> String {
          commands:\n\
          \x20 table1     regenerate Table 1 (inference ms per engine × block config)\n\
          \x20 schedsweep threads × grain × block sweep of the parallel plan-cached engine\n\
+         \x20 costcheck  validate the roofline cost model against measured sweep timings\n\
          \x20 cibench    CI bench smoke: tiny schedsweep + A3 serving sweep → JSON\n\
          \x20 benchdiff  compare a cibench JSON against a checked-in baseline (regression gate)\n\
          \x20 figure2    regenerate Figure 2 (TVM+/Dense curve)\n\
@@ -213,6 +216,77 @@ fn cmd_schedsweep(argv: Vec<String>) -> Result<()> {
     );
     if rep.replans_on_repeat != 0 {
         bail!("plan cache re-planned {} structures on repeat", rep.replans_on_repeat);
+    }
+    Ok(())
+}
+
+/// Validate the analytical roofline cost model against measured sweep
+/// timings (methodology in `docs/cost-model.md`): price every A4 sweep
+/// cell with [`sparsebert::scheduler::costmodel::estimate`], measure the
+/// same cells, and report rank correlation, pairwise inversions, and
+/// top-1 regret per block shape.
+fn cmd_costcheck(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new(
+        "sparsebert costcheck",
+        "validate the analytical roofline cost model against measured sweep timings",
+    )
+    .opt("sparsity", "0.9", "target sparsity ratio")
+    .opt("tokens", "128", "activation columns per spmm")
+    .opt("pool", "16", "structured-prune pattern pool size")
+    .opt("samples", "0", "timed samples per cell (0 = env default)")
+    .opt("blocks", "", "comma-separated block subset, e.g. 32x1,32x32")
+    .opt("out", "", "write the JSON report to this path")
+    .flag("quick", "tiny smoke-sized grid (the CI configuration)")
+    .parse(argv)?;
+    let mut cfg = if args.flag("quick") {
+        CostCheckConfig::smoke()
+    } else {
+        CostCheckConfig {
+            sparsity: args.get_f64("sparsity")?,
+            tokens: args.get_usize("tokens")?,
+            pool: args.get_usize("pool")?,
+            ..CostCheckConfig::default()
+        }
+    };
+    let samples = args.get_usize("samples")?;
+    if samples > 0 {
+        cfg.bench.samples = samples;
+    }
+    let blocks = args.get("blocks");
+    if !blocks.is_empty() {
+        let parsed: std::result::Result<Vec<BlockShape>, String> =
+            blocks.split(',').map(BlockShape::parse).collect();
+        cfg.blocks = parsed.map_err(|e| anyhow::anyhow!(e))?;
+    }
+    for block in &cfg.blocks {
+        if !block.divides(cfg.rows, cfg.cols) {
+            bail!(
+                "block {block} does not divide the sweep geometry {}x{}",
+                cfg.rows,
+                cfg.cols
+            );
+        }
+    }
+    eprintln!(
+        "costcheck: {}x{} sparsity={} tokens={} ({})",
+        cfg.rows,
+        cfg.cols,
+        cfg.sparsity,
+        cfg.tokens,
+        HwSpec::detect()
+    );
+    let rep = run_costcheck(&cfg);
+    println!(
+        "{}",
+        render_costcheck(&rep, "Cost-model check — roofline predictions vs measured sweep")
+    );
+    let out = args.get("out");
+    if !out.is_empty() {
+        std::fs::write(out, rep.to_json().to_string_pretty())?;
+        eprintln!("wrote {out}");
+    }
+    if !rep.all_top1_match() {
+        bail!("roofline top-1 missed the measured-best cell beyond tolerance on some block shape");
     }
     Ok(())
 }

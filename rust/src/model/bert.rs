@@ -244,9 +244,10 @@ impl SparseBsrEngine {
         self.exec_pool.as_deref().unwrap_or_else(pool::global)
     }
 
-    /// One planned projection: auto-scheduled threads/grain (O(1) from the
-    /// cached stats), capped by the engine's thread budget, executed on
-    /// the persistent pool.
+    /// One planned projection: threads/grain chosen by the scheduler's
+    /// active cost policy (analytical roofline ranking by default,
+    /// memoized per plan × token count), capped by the engine's thread
+    /// budget, executed on the persistent pool.
     fn project(&self, m: &(BsrMatrix, Arc<ExecPlan>), x: &Matrix, bias: &[f32]) -> Matrix {
         self.project_fused(m, x, bias, Epilogue::None)
     }
@@ -262,7 +263,7 @@ impl SparseBsrEngine {
         bias: &[f32],
         epilogue: Epilogue,
     ) -> Matrix {
-        let p = m.1.params_for(x.cols, &self.sched.hw).capped(self.threads);
+        let p = self.sched.params_for(&m.0, &m.1, x.cols).capped(self.threads);
         bsr_linear_planned_fused(
             &m.0,
             &m.1.plan,

@@ -29,8 +29,11 @@ use std::sync::Arc;
 const SCHEMA: &str = "sparsebert-plan/v2";
 
 /// Serialize a compiled plan (with its scheduling statistics) for the
-/// matrix it was built from.
-pub fn encode_plan(ep: &ExecPlan, m: &BsrMatrix) -> String {
+/// matrix it was built from. `policy` records which scheduler cost policy
+/// produced the plan (`"sweep"` / `"roofline"` / `"hybrid"`); it is
+/// informational — [`decode_plan`] tolerates its absence so payloads
+/// written before the field existed keep loading.
+pub fn encode_plan(ep: &ExecPlan, m: &BsrMatrix, policy: &str) -> String {
     let sp = &ep.plan;
     // Dedup shared programs by pointer identity so the payload stores
     // each distinct pattern program once (mirroring the in-memory Arcs).
@@ -64,6 +67,7 @@ pub fn encode_plan(ep: &ExecPlan, m: &BsrMatrix) -> String {
     let mut root = Json::obj();
     root.set("schema", SCHEMA)
         .set("kernel_variant", sp.kernel_variant.as_str())
+        .set("policy", policy)
         .set("block", ep.block.to_string())
         .set("rows", m.rows)
         .set("cols", m.cols)
@@ -296,7 +300,7 @@ mod tests {
             |&(block, sparsity, seed)| {
                 let m = bsr(block, sparsity, seed);
                 let ep = exec_plan_for(&m);
-                let text = encode_plan(&ep, &m);
+                let text = encode_plan(&ep, &m, "roofline");
                 let back = decode_plan(&text, &m).map_err(|e| format!("decode: {e:#}"))?;
                 assert_plans_equal(&ep, &back);
                 Ok(())
@@ -310,7 +314,7 @@ mod tests {
         for &block in &[BlockShape::new(1, 32), BlockShape::new(32, 1)] {
             let m = bsr(block, 0.9, 7);
             let ep = exec_plan_for(&m);
-            let back = decode_plan(&encode_plan(&ep, &m), &m).unwrap();
+            let back = decode_plan(&encode_plan(&ep, &m, "roofline"), &m).unwrap();
             let mut rng = Rng::new(9);
             let x = Matrix::randn(64, 5, 1.0, &mut rng);
             let y_live = bsr_linear_planned(&m, &ep.plan, &x, None, 2);
@@ -320,11 +324,27 @@ mod tests {
     }
 
     #[test]
+    fn payload_without_policy_field_still_decodes() {
+        // Back-compat: the `policy` field is informational; payloads
+        // written before it existed (or with it stripped) must keep
+        // loading unchanged.
+        let block = BlockShape::new(32, 1);
+        let m = bsr(block, 0.9, 5);
+        let ep = exec_plan_for(&m);
+        let text = encode_plan(&ep, &m, "hybrid");
+        assert!(text.contains("\"policy\":\"hybrid\""));
+        let stripped = text.replace("\"policy\":\"hybrid\",", "");
+        assert_ne!(stripped, text);
+        let back = decode_plan(&stripped, &m).unwrap();
+        assert_plans_equal(&ep, &back);
+    }
+
+    #[test]
     fn mismatched_matrix_is_rejected() {
         let block = BlockShape::new(1, 32);
         let m = bsr(block, 0.5, 1);
         let ep = exec_plan_for(&m);
-        let text = encode_plan(&ep, &m);
+        let text = encode_plan(&ep, &m, "roofline");
         // same geometry, different structure → base/ program checks fire
         let other = bsr(block, 0.9, 2);
         assert!(decode_plan(&text, &other).is_err());
@@ -338,7 +358,7 @@ mod tests {
         let block = BlockShape::new(1, 32);
         let m = bsr(block, 0.5, 3);
         let ep = exec_plan_for(&m);
-        let text = encode_plan(&ep, &m);
+        let text = encode_plan(&ep, &m, "roofline");
         assert!(decode_plan("not json", &m).is_err());
         assert!(decode_plan("{}", &m).is_err());
         // corrupt the order into a non-permutation

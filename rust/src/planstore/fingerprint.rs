@@ -41,16 +41,19 @@ pub const FORMAT_VERSION: u32 = 2;
 pub struct Fnv(u64);
 
 impl Fnv {
+    /// Start a hasher at the FNV-1a offset basis.
     pub fn new() -> Fnv {
         Fnv(0xcbf29ce484222325)
     }
 
+    /// Fold one `u64` into the hash state.
     #[inline]
     pub fn mix_u64(&mut self, v: u64) {
         self.0 ^= v;
         self.0 = self.0.wrapping_mul(0x100000001b3);
     }
 
+    /// Fold a byte slice into the hash state, byte by byte.
     #[inline]
     pub fn mix_bytes(&mut self, bytes: &[u8]) {
         for &b in bytes {
@@ -59,6 +62,7 @@ impl Fnv {
         }
     }
 
+    /// The accumulated 64-bit hash.
     pub fn finish(&self) -> u64 {
         self.0
     }
@@ -101,6 +105,7 @@ pub enum ArtifactKind {
 }
 
 impl ArtifactKind {
+    /// Stable on-disk label (`"plan"` / `"weights"`).
     pub fn as_str(&self) -> &'static str {
         match self {
             ArtifactKind::Plan => "plan",
@@ -108,6 +113,7 @@ impl ArtifactKind {
         }
     }
 
+    /// Parse an on-disk label; `None` for anything unrecognized.
     pub fn parse(s: &str) -> Option<ArtifactKind> {
         match s {
             "plan" => Some(ArtifactKind::Plan),
@@ -126,10 +132,13 @@ impl fmt::Display for ArtifactKind {
 /// The full lookup key of one stored artifact.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ArtifactKey {
+    /// What the artifact stores (plan or packed weights).
     pub kind: ArtifactKind,
-    /// Logical dense dimensions of the matrix the artifact belongs to.
+    /// Logical dense row count of the matrix the artifact belongs to.
     pub rows: usize,
+    /// Logical dense column count.
     pub cols: usize,
+    /// BSR block shape the artifact was built at.
     pub block: BlockShape,
     /// Structure signature mixed with the scheduler options (plans) or
     /// dense-value digest (weights).

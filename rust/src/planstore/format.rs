@@ -36,7 +36,10 @@ pub const INDEX_LOG: &str = "index.log";
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PlanStoreError {
     /// The log was written by an incompatible format version.
-    VersionMismatch { found: u64 },
+    VersionMismatch {
+        /// The version the on-disk header declared.
+        found: u64,
+    },
     /// The first log line is not a valid store header.
     BadHeader(String),
 }
@@ -61,6 +64,8 @@ impl std::error::Error for PlanStoreError {}
 /// Parsed index-log header.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Header {
+    /// On-disk format version ([`FORMAT_VERSION`][super::FORMAT_VERSION]
+    /// at write time; older stores reinitialize on open).
     pub version: u64,
     /// Fingerprint of the [`HwSpec`][crate::scheduler::HwSpec] the store
     /// was created on (plans are only replayed when this matches).
@@ -70,6 +75,7 @@ pub struct Header {
 }
 
 impl Header {
+    /// Serialize for the store's `HEADER.json`.
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("magic", MAGIC)
@@ -79,6 +85,8 @@ impl Header {
         j
     }
 
+    /// Decode a `HEADER.json` document, rejecting a missing magic or a
+    /// malformed field.
     pub fn from_json(j: &Json) -> Result<Header> {
         if j.get("magic").and_then(Json::as_str) != Some(MAGIC) {
             return Err(PlanStoreError::BadHeader("missing magic".into()).into());
@@ -111,7 +119,9 @@ impl Header {
 /// One live index entry (the merged view after log replay).
 #[derive(Debug, Clone, PartialEq)]
 pub struct IndexEntry {
+    /// Artifact id — the hex-encoded [`ArtifactKey`] fingerprint.
     pub id: String,
+    /// What the artifact stores (plan or packed weights).
     pub kind: ArtifactKind,
     /// Payload file stem relative to the store directory. Plans store one
     /// `<file>` JSON document; packed weights store
@@ -166,11 +176,17 @@ impl IndexEntry {
 /// One replayed log record.
 #[derive(Debug, Clone, PartialEq)]
 pub enum LogRecord {
+    /// Insert or replace an index entry.
     Put(IndexEntry),
-    Del { id: String },
+    /// Tombstone: drop the entry with this artifact id.
+    Del {
+        /// Artifact id to drop.
+        id: String,
+    },
 }
 
 impl LogRecord {
+    /// Serialize as one line of the append-only index log.
     pub fn to_json(&self) -> Json {
         match self {
             LogRecord::Put(e) => e.to_json(),

@@ -28,6 +28,8 @@
 //! serve --plan-store <dir>` warm-starts a server, and `sparsebert plan
 //! {build,inspect,gc}` compiles artifacts ahead of deployment.
 
+#![warn(missing_docs)]
+
 pub mod codec;
 pub mod fingerprint;
 pub mod format;

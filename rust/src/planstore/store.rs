@@ -81,6 +81,7 @@ pub struct StoreStats {
 }
 
 impl StoreStats {
+    /// JSON rendering for the `plan_store` serving-stats gauge.
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("entries", self.entries)
@@ -119,6 +120,9 @@ pub struct PlanStore {
     hw_match: bool,
     stale_format_reset: bool,
     header: Header,
+    /// Which scheduler cost policy is producing the plans written through
+    /// this handle (recorded per artifact; see [`PlanStore::set_policy_label`]).
+    policy_label: Mutex<String>,
     entries: Mutex<BTreeMap<String, IndexEntry>>,
     plan_hits: AtomicU64,
     plan_misses: AtomicU64,
@@ -189,6 +193,7 @@ impl PlanStore {
             hw_match,
             stale_format_reset,
             header,
+            policy_label: Mutex::new("unspecified".to_string()),
             entries: Mutex::new(entries),
             plan_hits: AtomicU64::new(0),
             plan_misses: AtomicU64::new(0),
@@ -200,6 +205,7 @@ impl PlanStore {
         })
     }
 
+    /// The store's root directory.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
@@ -209,14 +215,35 @@ impl PlanStore {
         self.hw_match
     }
 
+    /// Record which scheduler cost policy (`"sweep"` / `"roofline"` /
+    /// `"hybrid"`) is producing the plans written through this handle.
+    /// Set automatically by [`AutoScheduler::attach_store`] and
+    /// [`AutoScheduler::set_policy`]; every subsequently stored plan
+    /// carries the label in its payload and its index metadata (visible
+    /// in `sparsebert plan inspect`).
+    ///
+    /// [`AutoScheduler::attach_store`]: crate::scheduler::AutoScheduler::attach_store
+    /// [`AutoScheduler::set_policy`]: crate::scheduler::AutoScheduler::set_policy
+    pub fn set_policy_label(&self, label: &str) {
+        *self.policy_label.lock().expect("plan store poisoned") = label.to_string();
+    }
+
+    /// The policy label stamped onto newly written plans.
+    pub fn policy_label(&self) -> String {
+        self.policy_label.lock().expect("plan store poisoned").clone()
+    }
+
+    /// The header read (or written) when the store was opened.
     pub fn header(&self) -> &Header {
         &self.header
     }
 
+    /// Number of live artifacts in the index.
     pub fn len(&self) -> usize {
         self.entries.lock().expect("plan store poisoned").len()
     }
 
+    /// Whether the index holds no artifacts.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -231,6 +258,7 @@ impl PlanStore {
             .collect()
     }
 
+    /// Counter snapshot (hits, misses, writes, rejects).
     pub fn stats(&self) -> StoreStats {
         StoreStats {
             entries: self.len(),
@@ -312,17 +340,20 @@ impl PlanStore {
         {
             return Ok(());
         }
+        let policy = self.policy_label();
         let file = format!("{id}.json");
-        let text = encode_plan(ep, m);
+        let text = encode_plan(ep, m, &policy);
         std::fs::write(self.dir.join(&file), &text)
             .with_context(|| format!("write plan payload {file}"))?;
+        let mut meta = self.artifact_meta(&key);
+        meta.insert("policy".into(), policy);
         let entry = IndexEntry {
             id: id.clone(),
             kind: ArtifactKind::Plan,
             file,
             bytes: text.len() as u64,
             checksum: fnv1a(text.as_bytes()),
-            meta: self.artifact_meta(&key),
+            meta,
         };
         format::append_record(&self.dir.join(INDEX_LOG), &LogRecord::Put(entry.clone()))?;
         self.entries
@@ -804,6 +835,30 @@ mod tests {
         // surviving artifacts still verify
         assert!(reopened.load_packed(&w1, block).is_some());
         assert!(reopened.load_packed(&w2, block).is_some());
+    }
+
+    #[test]
+    fn stored_plans_record_their_producing_policy() {
+        let hw = HwSpec::haswell_reference();
+        let dir = tmpdir("policy");
+        let block = BlockShape::new(32, 1);
+        let (_, bsr) = pruned(block, 0.9, 31);
+        let ep = exec_plan_for(&bsr);
+        let store = PlanStore::open(&dir, &hw).unwrap();
+        assert_eq!(store.policy_label(), "unspecified");
+        store.set_policy_label("hybrid");
+        store.store_plan(&bsr, PlanOptions::tvm_plus(), &ep).unwrap();
+        let entry = store
+            .entries()
+            .into_iter()
+            .find(|e| e.kind == ArtifactKind::Plan)
+            .unwrap();
+        assert_eq!(entry.meta.get("policy").map(String::as_str), Some("hybrid"));
+        // the payload carries the label too, and still loads
+        let payload = std::fs::read_to_string(dir.join(&entry.file)).unwrap();
+        assert!(payload.contains("\"policy\":\"hybrid\""), "{payload}");
+        let reopened = PlanStore::open(&dir, &hw).unwrap();
+        assert!(reopened.load_plan(&bsr, PlanOptions::tvm_plus()).is_some());
     }
 
     #[test]

@@ -2,32 +2,47 @@
 //! and owns the task buffer — the component that makes TVM⁺ "attend to
 //! hardware specifications in the task searching stage".
 //!
-//! Decisions made here (and their rationale):
+//! Two parameter-selection paths coexist (see `docs/cost-model.md`):
 //!
-//! * **threads** — one worker per core, capped by the number of block
-//!   rows (no point spawning more bands than rows);
-//! * **grain** — how many block rows a worker claims at once under
-//!   dynamic scheduling: sized so one grain's working set (Y band + the
-//!   X panels its blocks touch) fits the L2 budget, clamped to [1, 16];
-//! * **ordering policy** — similarity-adjacent when the structure has
-//!   exploitable repetition (row reuse ≥ 10%), sequential otherwise
-//!   (reordering pure-random structure only costs icache).
+//! * the **legacy heuristic** ([`derive_exec_params`], policy `"sweep"`) —
+//!   one worker per core capped by band count, grain sized so one grain's
+//!   working set fits the L2 budget;
+//! * the **analytical roofline ranking** ([`super::costmodel`], policies
+//!   `"roofline"` and `"hybrid"`) — every `(threads, grain)` candidate is
+//!   priced from flops, bytes moved, and the [`HwSpec`] roofs, and the
+//!   top prediction wins. Under `"hybrid"`, near-ties within a relative
+//!   margin are resolved by measuring just those candidates once; the
+//!   winner (and the model's prediction error) is memoized per
+//!   `(plan, tokens)`.
+//!
+//! The ordering policy is unchanged: similarity-adjacent when the
+//! structure has exploitable repetition (row reuse ≥ 10%), sequential
+//! otherwise.
 
 use super::buffer::TaskBuffer;
 use super::cache::{ExecPlan, PlanCache};
+use super::costmodel::{self, CostInputs, CostPolicy, DEFAULT_HYBRID_MARGIN};
 use super::hwspec::HwSpec;
 use super::plan::{OrderPolicy, PlanOptions};
-use crate::kernels::bsr_spmm::SpmmPlan;
+use crate::kernels::bsr_spmm::{bsr_linear_planned_on, SpmmPlan};
 use crate::planstore::PlanStore;
 use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::dense::Matrix;
 use crate::sparse::pattern::PatternStats;
 use crate::sparse::prune::BlockShape;
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
+use std::time::Instant;
 
 /// Per-matrix execution parameters chosen by the auto-scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecParams {
+    /// Worker threads fanned out over Y bands.
     pub threads: usize,
+    /// Block rows one worker claims per work-stealing cursor bump.
     pub grain: usize,
 }
 
@@ -43,7 +58,10 @@ impl ExecParams {
 
 /// The threads/grain derivation shared by the uncached
 /// [`AutoScheduler::exec_params`] walk and the cached
-/// [`ExecPlan::params_for`] path — one formula, two entry points.
+/// [`ExecPlan::params_for`] path — one formula, two entry points. This is
+/// the `"sweep"` policy's heuristic (its constants encode what the offline
+/// schedsweep measurements showed); the analytical policies rank a full
+/// candidate grid instead ([`super::costmodel::rank`]).
 ///
 /// * **threads** — one worker per core, capped by the number of block
 ///   rows;
@@ -66,8 +84,88 @@ pub fn derive_exec_params(
     ExecParams { threads, grain }
 }
 
+/// Counters describing how the active cost policy has been choosing
+/// parameters, surfaced through `BuildReport` and the serving stats JSON.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CostModelStats {
+    /// Selections decided purely by the analytical ranking.
+    pub analytic_choices: usize,
+    /// Selections that fell back to measuring near-tie candidates
+    /// (hybrid policy only).
+    pub measured_fallbacks: usize,
+    /// Mean absolute relative error of the model's prediction against
+    /// the measured time of the winning candidate, in percent, over all
+    /// measured fallbacks. `None` until a measurement has happened.
+    pub mean_abs_err_pct: Option<f64>,
+}
+
+impl CostModelStats {
+    /// Serving-stats representation (the `cost_model` gauge).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("analytic_choices", self.analytic_choices)
+            .set("measured_fallbacks", self.measured_fallbacks)
+            .set(
+                "mean_abs_err_pct",
+                match self.mean_abs_err_pct {
+                    Some(e) => Json::Num(e),
+                    None => Json::Null,
+                },
+            );
+        j
+    }
+}
+
+/// Memoized choices plus accumulated prediction-error statistics.
+#[derive(Default)]
+struct CostState {
+    /// `(plan identity, tokens)` → decided parameters. Keyed by the
+    /// plan's `Arc` address: stable for the plan's lifetime, and a plan
+    /// evicted from the cache simply re-decides (cheap).
+    memo: HashMap<(usize, usize), ExecParams>,
+    analytic: usize,
+    measured: usize,
+    err_sum_pct: f64,
+    err_n: usize,
+}
+
+/// Hardware-aware parameter selection + plan caching for the BSR engine.
+///
+/// Owns the [`TaskBuffer`] (structure-deduped plan compilation), the
+/// [`PlanCache`] (structure×hardware-keyed `ExecPlan`s), the optional
+/// persistent [`PlanStore`], and the active [`CostPolicy`].
+///
+/// # Examples
+///
+/// ```
+/// use sparsebert::scheduler::{AutoScheduler, CostPolicy, HwSpec};
+/// use sparsebert::sparse::bsr::BsrMatrix;
+/// use sparsebert::sparse::dense::Matrix;
+/// use sparsebert::sparse::prune::{prune_structured, BlockShape};
+/// use sparsebert::util::rng::Rng;
+///
+/// // A 90%-sparse 32x1-blocked weight matrix, as in the paper.
+/// let mut rng = Rng::new(7);
+/// let mut w = Matrix::randn(128, 128, 1.0, &mut rng);
+/// prune_structured(&mut w, 0.9, BlockShape::new(32, 1));
+/// let bsr = BsrMatrix::from_dense(&w, BlockShape::new(32, 1)).unwrap();
+///
+/// let sched = AutoScheduler::new(HwSpec::haswell_reference());
+/// assert_eq!(sched.policy(), CostPolicy::Roofline);
+///
+/// // Cached planning: the second call with the same structure is a hit.
+/// let plan = sched.exec_plan("layer0.wq", &bsr);
+/// let again = sched.exec_plan("layer3.wv", &bsr);
+/// assert!(std::sync::Arc::ptr_eq(&plan, &again));
+///
+/// // Policy-aware parameter choice for a 64-token batch.
+/// let params = sched.params_for(&bsr, &plan, 64);
+/// assert!(params.threads >= 1 && params.grain >= 1);
+/// ```
 pub struct AutoScheduler {
+    /// The hardware model parameters are derived against.
     pub hw: HwSpec,
+    /// Structure-keyed compiled-plan buffer (task reuse).
     pub buffer: TaskBuffer,
     /// Structure×hardware-keyed execution-plan cache: repeated inference
     /// over the same pruned weights never re-plans (see [`PlanCache`]).
@@ -77,27 +175,23 @@ pub struct AutoScheduler {
     /// compiling, and live compiles are written back for the next
     /// process restart.
     store: RwLock<Option<Arc<PlanStore>>>,
+    /// Active parameter-selection policy (see [`CostPolicy`]).
+    policy: RwLock<CostPolicy>,
+    /// Relative near-tie margin for [`CostPolicy::Hybrid`].
+    hybrid_margin: RwLock<f64>,
+    cost_state: RwLock<CostState>,
 }
 
 impl AutoScheduler {
-    /// Full TVM⁺ behaviour: reuse + similarity ordering.
+    /// Full TVM⁺ behaviour: reuse + similarity ordering, analytical
+    /// roofline parameter selection ([`CostPolicy::Roofline`]).
     pub fn new(hw: HwSpec) -> AutoScheduler {
-        AutoScheduler {
-            hw,
-            buffer: TaskBuffer::new(PlanOptions::tvm_plus()),
-            cache: PlanCache::new(),
-            store: RwLock::new(None),
-        }
+        Self::with_options(hw, PlanOptions::tvm_plus())
     }
 
     /// Ablated scheduler (A1): no dedup, no reordering.
     pub fn without_reuse(hw: HwSpec) -> AutoScheduler {
-        AutoScheduler {
-            hw,
-            buffer: TaskBuffer::new(PlanOptions::no_reuse()),
-            cache: PlanCache::new(),
-            store: RwLock::new(None),
-        }
+        Self::with_options(hw, PlanOptions::no_reuse())
     }
 
     /// With explicit options (ablation sweeps).
@@ -107,6 +201,51 @@ impl AutoScheduler {
             buffer: TaskBuffer::new(opts),
             cache: PlanCache::new(),
             store: RwLock::new(None),
+            policy: RwLock::new(CostPolicy::default()),
+            hybrid_margin: RwLock::new(DEFAULT_HYBRID_MARGIN),
+            cost_state: RwLock::new(CostState::default()),
+        }
+    }
+
+    /// Select the parameter-selection policy. Callable on a shared
+    /// `Arc<AutoScheduler>` (interior mutability) so the deployment layer
+    /// can apply the manifest's `[scheduler]` section after construction.
+    pub fn set_policy(&self, policy: CostPolicy) {
+        *self.policy.write().expect("scheduler policy poisoned") = policy;
+        if let Some(store) = self.store() {
+            store.set_policy_label(policy.as_str());
+        }
+    }
+
+    /// The active parameter-selection policy.
+    pub fn policy(&self) -> CostPolicy {
+        *self.policy.read().expect("scheduler policy poisoned")
+    }
+
+    /// Set the hybrid near-tie margin (relative, e.g. `0.15` = 15%).
+    /// Values are clamped to `(0, 1]`.
+    pub fn set_hybrid_margin(&self, margin: f64) {
+        let m = if margin > 0.0 { margin.min(1.0) } else { DEFAULT_HYBRID_MARGIN };
+        *self.hybrid_margin.write().expect("scheduler margin poisoned") = m;
+    }
+
+    /// The active hybrid near-tie margin.
+    pub fn hybrid_margin(&self) -> f64 {
+        *self.hybrid_margin.read().expect("scheduler margin poisoned")
+    }
+
+    /// Counters for how the policy has been deciding (analytic vs
+    /// measured) and the model's observed prediction error.
+    pub fn cost_stats(&self) -> CostModelStats {
+        let st = self.cost_state.read().expect("scheduler cost state poisoned");
+        CostModelStats {
+            analytic_choices: st.analytic,
+            measured_fallbacks: st.measured,
+            mean_abs_err_pct: if st.err_n > 0 {
+                Some(st.err_sum_pct / st.err_n as f64)
+            } else {
+                None
+            },
         }
     }
 
@@ -116,6 +255,7 @@ impl AutoScheduler {
     /// (interior mutability) so `serve` can wire the store after
     /// construction.
     pub fn attach_store(&self, store: Arc<PlanStore>) {
+        store.set_policy_label(self.policy().as_str());
         *self.store.write().expect("scheduler store poisoned") = Some(store);
     }
 
@@ -132,20 +272,20 @@ impl AutoScheduler {
 
     /// Cached hot path: plan + precomputed structure statistics in one
     /// lookup keyed by (structure, shape, hardware). A hit performs zero
-    /// re-planning and zero structure walks; [`ExecPlan::params_for`]
-    /// then derives threads/grain in O(1) per call. With a store
-    /// attached, a cache miss loads the persisted plan before falling
-    /// back to live compilation.
+    /// re-planning and zero structure walks; [`AutoScheduler::params_for`]
+    /// then chooses threads/grain per call. With a store attached, a
+    /// cache miss loads the persisted plan before falling back to live
+    /// compilation.
     pub fn exec_plan(&self, label: &str, m: &BsrMatrix) -> Arc<ExecPlan> {
         let store = self.store();
         self.cache
             .get_or_load(label, m, &self.hw, &self.buffer, store.as_deref())
     }
 
-    /// Choose threads/grain for one spmm over `tokens` activation columns.
-    /// Walks the structure each call; the cached path
-    /// ([`AutoScheduler::exec_plan`] → [`ExecPlan::params_for`]) reuses
-    /// the same [`derive_exec_params`] formula from captured stats.
+    /// Choose threads/grain for one spmm over `tokens` activation columns
+    /// (uncached: walks the structure each call). Always uses the legacy
+    /// heuristic regardless of policy — this is the `"sweep"` baseline
+    /// the analytical policies are compared against.
     pub fn exec_params(&self, m: &BsrMatrix, tokens: usize) -> ExecParams {
         let stats = PatternStats::of(m);
         derive_exec_params(
@@ -155,6 +295,64 @@ impl AutoScheduler {
             tokens,
             &self.hw,
         )
+    }
+
+    /// Policy-aware parameter selection for a cached plan — the engine's
+    /// per-projection entry point.
+    ///
+    /// * [`CostPolicy::Sweep`] delegates to the legacy heuristic
+    ///   ([`ExecPlan::params_for`]);
+    /// * [`CostPolicy::Roofline`] takes the analytical ranking's top
+    ///   candidate;
+    /// * [`CostPolicy::Hybrid`] additionally measures the near-tie head
+    ///   of the ranking (predictions within [`Self::hybrid_margin`] of
+    ///   the top) on synthesized activations, once, and memoizes the
+    ///   winner per `(plan, tokens)`.
+    pub fn params_for(&self, m: &BsrMatrix, ep: &ExecPlan, tokens: usize) -> ExecParams {
+        let policy = self.policy();
+        if policy == CostPolicy::Sweep {
+            return ep.params_for(tokens, &self.hw);
+        }
+        let key = (Arc::as_ptr(&ep.plan) as usize, tokens);
+        if let Some(&hit) = self
+            .cost_state
+            .read()
+            .expect("scheduler cost state poisoned")
+            .memo
+            .get(&key)
+        {
+            return hit;
+        }
+        let inputs = CostInputs {
+            block: ep.block,
+            block_rows: ep.block_rows,
+            cols: m.cols,
+            mean_blocks_per_row: ep.mean_blocks_per_row,
+            tokens,
+        };
+        let ranked = costmodel::rank(&inputs, &self.hw);
+        let top = ranked[0];
+        let margin = self.hybrid_margin();
+        let near_ties: Vec<costmodel::PlanEstimate> = ranked
+            .iter()
+            .take_while(|e| e.predicted_ms <= top.predicted_ms * (1.0 + margin))
+            .copied()
+            .collect();
+        let mut st = self.cost_state.write().expect("scheduler cost state poisoned");
+        let chosen = if policy == CostPolicy::Hybrid && near_ties.len() > 1 {
+            let (params, err_pct) = resolve_by_measurement(m, ep, tokens, &near_ties);
+            st.measured += 1;
+            if let Some(e) = err_pct {
+                st.err_sum_pct += e;
+                st.err_n += 1;
+            }
+            params
+        } else {
+            st.analytic += 1;
+            top.params
+        };
+        st.memo.insert(key, chosen);
+        chosen
     }
 
     /// Decide the ordering policy for a structure (exposed for tests and
@@ -171,11 +369,49 @@ impl AutoScheduler {
     }
 }
 
+/// Measure the near-tie candidates on synthesized activations and return
+/// the fastest, plus the model's relative prediction error (percent) for
+/// that winner. One warmup + best-of-2 timed runs per candidate — this
+/// runs once per `(plan, tokens)` and is memoized by the caller.
+fn resolve_by_measurement(
+    m: &BsrMatrix,
+    ep: &ExecPlan,
+    tokens: usize,
+    ties: &[costmodel::PlanEstimate],
+) -> (ExecParams, Option<f64>) {
+    let mut rng = Rng::new(0x5eed ^ tokens as u64);
+    let x = Matrix::randn(m.cols, tokens.max(1), 1.0, &mut rng);
+    let pool = pool::global();
+    let mut best: Option<(ExecParams, f64, f64)> = None; // (params, measured_ms, predicted_ms)
+    for est in ties {
+        let p = est.params;
+        let _ = bsr_linear_planned_on(m, &ep.plan, &x, None, pool, p.threads, p.grain);
+        let mut ms = f64::INFINITY;
+        for _ in 0..2 {
+            let t0 = Instant::now();
+            let _ = bsr_linear_planned_on(m, &ep.plan, &x, None, pool, p.threads, p.grain);
+            ms = ms.min(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        if best.map(|(_, b, _)| ms < b).unwrap_or(true) {
+            best = Some((p, ms, est.predicted_ms));
+        }
+    }
+    match best {
+        Some((params, measured_ms, predicted_ms)) if measured_ms > 0.0 => {
+            let err = (predicted_ms - measured_ms).abs() / measured_ms * 100.0;
+            (params, Some(err))
+        }
+        Some((params, _, _)) => (params, None),
+        None => (ties[0].params, None),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sparse::dense::Matrix;
     use crate::sparse::prune::{prune_structured, prune_structured_replicated, BlockShape};
+    use crate::util::propcheck;
     use crate::util::rng::Rng;
 
     fn bsr(block: BlockShape, rows: usize, cols: usize, pool: usize, seed: u64) -> BsrMatrix {
@@ -208,6 +444,42 @@ mod tests {
     }
 
     #[test]
+    fn derive_exec_params_bounds_hold_under_random_inputs() {
+        // Satellite property: whatever the structure and token count,
+        // the heuristic never exceeds the core count and never produces
+        // a zero-sized grain (or one beyond the [1, 16] clamp).
+        propcheck::check(
+            "derive_exec_params bounds",
+            256,
+            |rng| {
+                let block = BlockShape::new(1 << rng.range(0, 7), 1 << rng.range(0, 7));
+                let block_rows = rng.range(0, 5000);
+                let mean_blocks = rng.range(0, 1000) as f64 / 10.0;
+                let tokens = rng.range(0, 4096);
+                let cores = 1 + rng.range(0, 128);
+                let l2 = 1 << (10 + rng.range(0, 12));
+                (block, block_rows, mean_blocks, tokens, cores, l2)
+            },
+            |&(block, block_rows, mean_blocks, tokens, cores, l2)| {
+                let mut hw = HwSpec::haswell_reference();
+                hw.cores = cores;
+                hw.l2_bytes = l2;
+                let p = derive_exec_params(block, block_rows, mean_blocks, tokens, &hw);
+                if p.threads > cores {
+                    return Err(format!("threads {} > cores {cores}", p.threads));
+                }
+                if p.threads == 0 {
+                    return Err("zero threads".into());
+                }
+                if p.grain == 0 || p.grain > 16 {
+                    return Err(format!("grain {} outside [1, 16]", p.grain));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn order_recommendation_tracks_repetition() {
         let hw = HwSpec::haswell_reference();
         let sched = AutoScheduler::new(hw);
@@ -235,6 +507,63 @@ mod tests {
         let s = sched.cache.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
         assert_eq!(a.params_for(32, &hw), sched.exec_params(&m, 32));
+    }
+
+    #[test]
+    fn sweep_policy_matches_legacy_heuristic() {
+        let sched = AutoScheduler::new(HwSpec::haswell_reference());
+        sched.set_policy(CostPolicy::Sweep);
+        let m = bsr(BlockShape::new(1, 8), 64, 64, 2, 11);
+        let ep = sched.exec_plan("l0.q", &m);
+        assert_eq!(sched.params_for(&m, &ep, 32), ep.params_for(32, &sched.hw));
+        // sweep choices are not counted as cost-model decisions
+        assert_eq!(sched.cost_stats().analytic_choices, 0);
+    }
+
+    #[test]
+    fn roofline_policy_memoizes_and_counts() {
+        let sched = AutoScheduler::new(HwSpec::haswell_reference());
+        assert_eq!(sched.policy(), CostPolicy::Roofline);
+        let m = bsr(BlockShape::new(32, 1), 128, 128, 4, 12);
+        let ep = sched.exec_plan("l0.q", &m);
+        let p1 = sched.params_for(&m, &ep, 64);
+        let p2 = sched.params_for(&m, &ep, 64);
+        assert_eq!(p1, p2);
+        assert!(p1.threads >= 1 && p1.threads <= sched.hw.cores);
+        assert!((1..=16).contains(&p1.grain));
+        // the second call is a memo hit, not a second decision
+        assert_eq!(sched.cost_stats().analytic_choices, 1);
+        // a different token count is a fresh decision
+        let _ = sched.params_for(&m, &ep, 8);
+        assert_eq!(sched.cost_stats().analytic_choices, 2);
+    }
+
+    #[test]
+    fn hybrid_policy_resolves_near_ties_by_measurement() {
+        let sched = AutoScheduler::new(HwSpec::haswell_reference());
+        sched.set_policy(CostPolicy::Hybrid);
+        sched.set_hybrid_margin(1.0); // everything is a near-tie → must measure
+        let m = bsr(BlockShape::new(32, 1), 64, 64, 4, 13);
+        let ep = sched.exec_plan("l0.q", &m);
+        let p = sched.params_for(&m, &ep, 16);
+        assert!(p.threads >= 1 && (1..=16).contains(&p.grain));
+        let stats = sched.cost_stats();
+        assert_eq!(stats.measured_fallbacks, 1);
+        assert!(stats.mean_abs_err_pct.is_some());
+        // memoized: no second measurement for the same (plan, tokens)
+        let _ = sched.params_for(&m, &ep, 16);
+        assert_eq!(sched.cost_stats().measured_fallbacks, 1);
+    }
+
+    #[test]
+    fn hybrid_margin_is_clamped() {
+        let sched = AutoScheduler::new(HwSpec::haswell_reference());
+        sched.set_hybrid_margin(0.3);
+        assert!((sched.hybrid_margin() - 0.3).abs() < 1e-12);
+        sched.set_hybrid_margin(7.0);
+        assert!((sched.hybrid_margin() - 1.0).abs() < 1e-12);
+        sched.set_hybrid_margin(-1.0);
+        assert!((sched.hybrid_margin() - DEFAULT_HYBRID_MARGIN).abs() < 1e-12);
     }
 
     #[test]

@@ -23,10 +23,12 @@ pub struct TaskBuffer {
     plans: Mutex<HashMap<TaskKey, Arc<SpmmPlan>>>,
     /// Registered task descriptions (for `inspect` listings).
     tasks: Mutex<Vec<SparseTask>>,
+    /// Hit/miss and reuse counters.
     pub stats: SchedulerStats,
 }
 
 impl TaskBuffer {
+    /// Empty buffer compiling plans with the given options.
     pub fn new(opts: PlanOptions) -> TaskBuffer {
         TaskBuffer {
             opts,
@@ -36,6 +38,7 @@ impl TaskBuffer {
         }
     }
 
+    /// The plan-compilation options this buffer was created with.
     pub fn options(&self) -> PlanOptions {
         self.opts
     }
@@ -71,6 +74,7 @@ impl TaskBuffer {
         self.plans.lock().expect("task buffer poisoned").len()
     }
 
+    /// Whether no plans are cached yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

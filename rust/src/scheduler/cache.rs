@@ -47,8 +47,11 @@ use std::sync::{Arc, Mutex};
 /// execution parameters without re-walking the matrix.
 #[derive(Debug, Clone)]
 pub struct ExecPlan {
+    /// The compiled, shareable band plan.
     pub plan: Arc<SpmmPlan>,
+    /// BSR block shape the plan was compiled for.
     pub block: BlockShape,
+    /// Number of block rows (Y bands).
     pub block_rows: usize,
     /// Mean stored blocks per block-row (drives the L2 grain budget).
     pub mean_blocks_per_row: f64,
@@ -80,11 +83,15 @@ impl ExecPlan {
 /// Counter snapshot for instrumentation and tests.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from the cache.
     pub hits: u64,
+    /// Lookups that compiled (or store-loaded) a plan.
     pub misses: u64,
+    /// Plans currently resident.
     pub entries: usize,
     /// Entries displaced by the LRU cap since construction.
     pub evictions: u64,
+    /// The LRU bound.
     pub capacity: usize,
 }
 
@@ -134,6 +141,7 @@ pub struct PlanCache {
 }
 
 impl PlanCache {
+    /// Cache bounded to [`DEFAULT_PLAN_CACHE_CAPACITY`] plans.
     pub fn new() -> PlanCache {
         Self::with_capacity(DEFAULT_PLAN_CACHE_CAPACITY)
     }
@@ -152,6 +160,7 @@ impl PlanCache {
         }
     }
 
+    /// The LRU bound this cache was created with.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -252,6 +261,7 @@ impl PlanCache {
         plan
     }
 
+    /// Counter snapshot (hits, misses, entries, evictions).
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -262,10 +272,12 @@ impl PlanCache {
         }
     }
 
+    /// Number of resident plans.
     pub fn len(&self) -> usize {
         self.entries.lock().expect("plan cache poisoned").map.len()
     }
 
+    /// Whether no plans are resident.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -1,0 +1,512 @@
+//! Analytical roofline cost model for candidate execution plans.
+//!
+//! The paper found its headline result (32x1 linear blocks beating square
+//! 32x32 blocks on CPU) by *sweeping* threads × grain × block shape. The
+//! Sparsity Roofline line of work (arXiv 2310.00496) shows the same
+//! ranking can be *predicted* from arithmetic intensity and memory
+//! bandwidth, and Shen et al. (arXiv 2306.16601) demonstrate shape-aware
+//! CPU cost reasoning for sparse transformer serving. This module is that
+//! predictor: for a candidate `(threads, grain)` over a fixed BSR
+//! structure it estimates flops, bytes moved, arithmetic intensity, and a
+//! predicted wall time, so [`AutoScheduler`](super::AutoScheduler) can
+//! rank candidates without running them.
+//!
+//! The model, term by term (full derivation in `docs/cost-model.md`):
+//!
+//! * **flops** — `2 · nnz_blocks · r · c · tokens` (one multiply + one
+//!   add per stored weight element per activation column);
+//! * **bytes** — packed block data (streamed once), BSR index traffic
+//!   (`indices` + `indptr`), X panel traffic (read once when the panel
+//!   fits L3, re-streamed per touching block otherwise), and Y band
+//!   writes (×2 for write-allocate);
+//! * **roofline time** — `max(compute_time, memory_time)` where compute
+//!   scales with `threads` against [`HwSpec::peak_flops`] and memory
+//!   scales against [`HwSpec::mem_bw`] with a bandwidth-saturation knee
+//!   (a few cores saturate a socket's DRAM channels);
+//! * **scheduling terms** — a per-claim cost for the work-stealing
+//!   cursor (penalizes tiny grains) and an end-of-band imbalance tail
+//!   proportional to one grain's serial time (penalizes huge grains).
+//!
+//! Absolute times are rough — the constants are calibrated to a
+//! Haswell-class core, not measured per machine — but *ranking* within a
+//! structure's candidate grid is what the scheduler consumes, and
+//! `sparsebert costcheck` validates exactly that against measured A4
+//! sweep data (rank correlation, inversion counts, top-1 regret).
+
+use super::autosched::ExecParams;
+use super::hwspec::HwSpec;
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::pattern::PatternStats;
+use crate::sparse::prune::BlockShape;
+use std::fmt;
+
+/// How the auto-scheduler chooses `(threads, grain)` for a plan.
+///
+/// Selected per deployment via the manifest's `[scheduler]` table
+/// (`cost_model = "roofline" | "sweep" | "hybrid"`); see
+/// `docs/deployment-manifest.md`.
+///
+/// # Examples
+///
+/// ```
+/// use sparsebert::scheduler::costmodel::CostPolicy;
+///
+/// assert_eq!(CostPolicy::parse("hybrid"), Some(CostPolicy::Hybrid));
+/// assert_eq!(CostPolicy::Roofline.as_str(), "roofline");
+/// assert_eq!(CostPolicy::parse("magic"), None);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CostPolicy {
+    /// Legacy heuristic: the cache-budget formula
+    /// [`derive_exec_params`](super::autosched::derive_exec_params),
+    /// whose constants were tuned from offline schedsweep measurements.
+    Sweep,
+    /// Rank every candidate with the analytical roofline model and take
+    /// the top prediction — zero measurement, O(candidates) arithmetic.
+    #[default]
+    Roofline,
+    /// Roofline ranking, but when the top predictions are within a
+    /// configurable relative margin (a near-tie the model cannot
+    /// separate), fall back to measuring just those candidates once and
+    /// memoizing the winner.
+    Hybrid,
+}
+
+impl CostPolicy {
+    /// Stable label used in manifests, `BuildReport`s, the serving stats
+    /// JSON, and plan-store artifact metadata.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CostPolicy::Sweep => "sweep",
+            CostPolicy::Roofline => "roofline",
+            CostPolicy::Hybrid => "hybrid",
+        }
+    }
+
+    /// Parse a manifest label; `None` for anything unrecognized.
+    pub fn parse(s: &str) -> Option<CostPolicy> {
+        match s {
+            "sweep" => Some(CostPolicy::Sweep),
+            "roofline" => Some(CostPolicy::Roofline),
+            "hybrid" => Some(CostPolicy::Hybrid),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for CostPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Default near-tie margin for [`CostPolicy::Hybrid`]: predictions within
+/// 15% of the top candidate are considered indistinguishable and resolved
+/// by measurement.
+pub const DEFAULT_HYBRID_MARGIN: f64 = 0.15;
+
+/// Per-claim cost of the work-stealing cursor (one atomic fetch-add plus
+/// cache-line ping-pong), in seconds. Penalizes grain = 1 on large row
+/// counts.
+const T_CLAIM_S: f64 = 150e-9;
+
+/// Fixed per-block dispatch overhead (loop control, index load, kernel
+/// entry), in seconds. Distinguishes many-small-blocks structures (32x1,
+/// 1x32) from few-large-blocks ones (32x32) at equal nnz elements.
+const T_BLOCK_S: f64 = 6e-9;
+
+/// Fraction of written Y bytes also *read* due to write-allocate cache
+/// fills (no streaming stores in the scalar/AVX2 kernels).
+const Y_WRITE_ALLOCATE: f64 = 2.0;
+
+/// The structure-level quantities the model needs — everything is
+/// available from a [`BsrMatrix`] or a cached
+/// [`ExecPlan`](super::cache::ExecPlan) without re-walking the structure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostInputs {
+    /// BSR block shape.
+    pub block: BlockShape,
+    /// Number of block rows (Y bands).
+    pub block_rows: usize,
+    /// Dense column count of the weight matrix (= X row count).
+    pub cols: usize,
+    /// Mean stored blocks per block row (from [`PatternStats`]).
+    pub mean_blocks_per_row: f64,
+    /// Activation columns (tokens) this spmm streams.
+    pub tokens: usize,
+}
+
+impl CostInputs {
+    /// Capture the model inputs for one spmm over `tokens` activation
+    /// columns. Walks the structure once (`O(block_rows)`).
+    pub fn of(m: &BsrMatrix, tokens: usize) -> CostInputs {
+        let stats = PatternStats::of(m);
+        CostInputs {
+            block: m.block,
+            block_rows: m.block_rows(),
+            cols: m.cols,
+            mean_blocks_per_row: stats.mean_blocks_per_row,
+            tokens,
+        }
+    }
+
+    /// Total stored blocks implied by the per-row mean.
+    pub fn nnz_blocks(&self) -> f64 {
+        self.mean_blocks_per_row * self.block_rows as f64
+    }
+}
+
+/// One candidate's predicted cost breakdown.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanEstimate {
+    /// The candidate `(threads, grain)`.
+    pub params: ExecParams,
+    /// Total floating-point operations for one spmm.
+    pub flops: f64,
+    /// Total bytes moved to/from memory (model's traffic estimate).
+    pub bytes: f64,
+    /// Arithmetic intensity, flops / bytes.
+    pub intensity: f64,
+    /// Compute-roof time in milliseconds at this thread count.
+    pub compute_ms: f64,
+    /// Memory-roof time in milliseconds at this thread count.
+    pub memory_ms: f64,
+    /// `max(compute, memory)` plus the scheduling terms — the quantity
+    /// candidates are ranked by.
+    pub predicted_ms: f64,
+}
+
+/// Estimate the cost of executing one spmm with the given parameters.
+///
+/// # Examples
+///
+/// ```
+/// use sparsebert::scheduler::costmodel::{estimate, CostInputs};
+/// use sparsebert::scheduler::{ExecParams, HwSpec};
+/// use sparsebert::sparse::prune::BlockShape;
+///
+/// let inputs = CostInputs {
+///     block: BlockShape::new(32, 1),
+///     block_rows: 24,
+///     cols: 768,
+///     mean_blocks_per_row: 76.8, // 90% sparse over 768 column blocks
+///     tokens: 128,
+/// };
+/// let hw = HwSpec::haswell_reference();
+/// let one = estimate(&inputs, ExecParams { threads: 1, grain: 4 }, &hw);
+/// let four = estimate(&inputs, ExecParams { threads: 4, grain: 4 }, &hw);
+/// assert!(four.predicted_ms < one.predicted_ms); // parallelism helps
+/// assert!(one.intensity > 1.0); // spmm is not purely memory-bound here
+/// ```
+pub fn estimate(inputs: &CostInputs, params: ExecParams, hw: &HwSpec) -> PlanEstimate {
+    let nnz = inputs.nnz_blocks().max(1.0);
+    let elems = nnz * inputs.block.elems() as f64;
+    let tokens = inputs.tokens.max(1) as f64;
+    let brows = inputs.block_rows.max(1) as f64;
+    let threads = params.threads.max(1) as f64;
+
+    // --- flops -----------------------------------------------------------
+    let flops = 2.0 * elems * tokens;
+
+    // --- bytes -----------------------------------------------------------
+    // Packed block data: each stored element streamed exactly once.
+    let w_bytes = 4.0 * elems;
+    // Index traffic: u32 `indices` per block + u32 `indptr` per row.
+    let idx_bytes = 4.0 * nnz + 4.0 * (brows + 1.0);
+    // X panels: the full activation panel read once if it stays resident
+    // in L3 across bands; otherwise every block re-streams its c×tokens
+    // panel from DRAM.
+    let x_resident = 4.0 * inputs.cols as f64 * tokens;
+    let x_streamed = 4.0 * nnz * inputs.block.c as f64 * tokens;
+    let x_bytes = if x_resident <= hw.l3_bytes as f64 {
+        x_resident
+    } else {
+        x_streamed.max(x_resident)
+    };
+    // Y bands: written once, with a write-allocate read alongside.
+    let y_bytes = Y_WRITE_ALLOCATE * 4.0 * brows * inputs.block.r as f64 * tokens;
+    let bytes = w_bytes + idx_bytes + x_bytes + y_bytes;
+
+    // --- roofline --------------------------------------------------------
+    // Compute roof: per-core peak × threads, plus a fixed per-block
+    // dispatch cost that the wide-block shapes amortize and the linear
+    // shapes pay in full.
+    let peak_core = (hw.peak_flops as f64 / hw.cores.max(1) as f64).max(1.0);
+    let compute_s = flops / (peak_core * threads) + (nnz * T_BLOCK_S) / threads;
+    // Memory roof: DRAM bandwidth saturates after a few cores; extra
+    // threads past the knee do not buy more bytes/s.
+    let sat = hw.cores.min(4).max(1) as f64;
+    let bw_frac = (threads / sat).min(1.0);
+    let memory_s = bytes / ((hw.mem_bw as f64).max(1.0) * bw_frac);
+    let roofline_s = compute_s.max(memory_s);
+
+    // --- scheduling terms ------------------------------------------------
+    // Work-stealing claims: block_rows / grain cursor bumps, spread over
+    // the workers doing them.
+    let claims = (brows / params.grain.max(1) as f64).ceil();
+    let claim_s = claims * T_CLAIM_S / threads;
+    // Imbalance tail: when the cursor runs dry, up to one grain of work
+    // remains on a single straggler while the other threads idle.
+    let serial_s = flops / peak_core + nnz * T_BLOCK_S;
+    let grain_serial_s = serial_s * params.grain.max(1) as f64 / brows;
+    let tail_s = if params.threads > 1 {
+        grain_serial_s * (threads - 1.0) / threads
+    } else {
+        0.0
+    };
+
+    let predicted_s = roofline_s + claim_s + tail_s;
+    PlanEstimate {
+        params,
+        flops,
+        bytes,
+        intensity: flops / bytes.max(1.0),
+        compute_ms: compute_s * 1e3,
+        memory_ms: memory_s * 1e3,
+        predicted_ms: predicted_s * 1e3,
+    }
+}
+
+/// The candidate grid the analytical policies rank: power-of-two thread
+/// counts up to `hw.cores` (capped by the band count — no point running
+/// more workers than Y bands) × power-of-two grains in `[1, 16]`.
+pub fn candidates(block_rows: usize, hw: &HwSpec) -> Vec<ExecParams> {
+    let max_threads = hw.cores.min(block_rows.max(1)).max(1);
+    let mut threads: Vec<usize> = Vec::new();
+    let mut t = 1;
+    while t < max_threads {
+        threads.push(t);
+        t *= 2;
+    }
+    threads.push(max_threads);
+    let mut out = Vec::new();
+    for &threads in &threads {
+        for grain in [1usize, 2, 4, 8, 16] {
+            out.push(ExecParams { threads, grain });
+        }
+    }
+    out
+}
+
+/// Rank the full candidate grid for a structure, best (lowest predicted
+/// time) first. Ties broken toward fewer threads, then smaller grain, so
+/// the choice is deterministic.
+pub fn rank(inputs: &CostInputs, hw: &HwSpec) -> Vec<PlanEstimate> {
+    let mut ests: Vec<PlanEstimate> = candidates(inputs.block_rows, hw)
+        .into_iter()
+        .map(|p| estimate(inputs, p, hw))
+        .collect();
+    ests.sort_by(|a, b| {
+        a.predicted_ms
+            .total_cmp(&b.predicted_ms)
+            .then(a.params.threads.cmp(&b.params.threads))
+            .then(a.params.grain.cmp(&b.params.grain))
+    });
+    ests
+}
+
+/// Average fractional ranks (ties share the mean of the positions they
+/// occupy), the standard preprocessing for Spearman correlation.
+fn fractional_ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let mean_rank = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            ranks[k] = mean_rank;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Spearman rank correlation between predicted and measured times over a
+/// candidate grid. Returns a value in `[-1, 1]`; `NaN`-free (degenerate
+/// inputs — fewer than two points or zero variance — return 0).
+///
+/// # Examples
+///
+/// ```
+/// use sparsebert::scheduler::costmodel::spearman;
+///
+/// let perfect = spearman(&[1.0, 2.0, 3.0], &[10.0, 20.0, 30.0]);
+/// assert!((perfect - 1.0).abs() < 1e-12);
+/// let inverted = spearman(&[1.0, 2.0, 3.0], &[3.0, 2.0, 1.0]);
+/// assert!((inverted + 1.0).abs() < 1e-12);
+/// ```
+pub fn spearman(pred: &[f64], meas: &[f64]) -> f64 {
+    assert_eq!(pred.len(), meas.len(), "rank correlation needs paired samples");
+    let n = pred.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let ra = fractional_ranks(pred);
+    let rb = fractional_ranks(meas);
+    let mean = (n as f64 + 1.0) / 2.0;
+    let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for i in 0..n {
+        let da = ra[i] - mean;
+        let db = rb[i] - mean;
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va == 0.0 || vb == 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Count pairwise order inversions: candidate pairs the model ranks one
+/// way and the measurements rank the other (Kendall discordant pairs).
+/// Ties on either side are not counted.
+pub fn inversions(pred: &[f64], meas: &[f64]) -> usize {
+    assert_eq!(pred.len(), meas.len(), "inversion count needs paired samples");
+    let mut count = 0;
+    for i in 0..pred.len() {
+        for j in (i + 1)..pred.len() {
+            let dp = pred[i] - pred[j];
+            let dm = meas[i] - meas[j];
+            if dp * dm < 0.0 {
+                count += 1;
+            }
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs_32x1() -> CostInputs {
+        CostInputs {
+            block: BlockShape::new(32, 1),
+            block_rows: 24,
+            cols: 768,
+            mean_blocks_per_row: 76.8,
+            tokens: 128,
+        }
+    }
+
+    #[test]
+    fn policy_labels_roundtrip() {
+        for p in [CostPolicy::Sweep, CostPolicy::Roofline, CostPolicy::Hybrid] {
+            assert_eq!(CostPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(CostPolicy::parse(""), None);
+        assert_eq!(CostPolicy::default(), CostPolicy::Roofline);
+    }
+
+    #[test]
+    fn flops_and_bytes_match_hand_derivation() {
+        let inp = inputs_32x1();
+        let hw = HwSpec::haswell_reference();
+        let e = estimate(&inp, ExecParams { threads: 1, grain: 1 }, &hw);
+        // 2 * nnz * r * c * tokens = 2 * (76.8*24) * 32 * 128
+        let flops = 2.0 * 76.8 * 24.0 * 32.0 * 128.0;
+        assert!((e.flops - flops).abs() < 1.0, "{} vs {}", e.flops, flops);
+        // weights once + indices + resident X panel + write-allocate Y
+        let nnz = 76.8 * 24.0;
+        let bytes = 4.0 * nnz * 32.0
+            + 4.0 * nnz
+            + 4.0 * 25.0
+            + 4.0 * 768.0 * 128.0
+            + 2.0 * 4.0 * 768.0 * 128.0;
+        assert!((e.bytes - bytes).abs() < 1.0, "{} vs {}", e.bytes, bytes);
+        assert!((e.intensity - e.flops / e.bytes).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_threads_reduce_predicted_time_until_rows_cap() {
+        let inp = inputs_32x1();
+        let hw = HwSpec::haswell_reference();
+        let t1 = estimate(&inp, ExecParams { threads: 1, grain: 4 }, &hw);
+        let t4 = estimate(&inp, ExecParams { threads: 4, grain: 4 }, &hw);
+        assert!(t4.predicted_ms < t1.predicted_ms);
+    }
+
+    #[test]
+    fn oversized_grain_pays_an_imbalance_tail() {
+        let inp = inputs_32x1(); // 24 block rows
+        let hw = HwSpec::haswell_reference();
+        let modest = estimate(&inp, ExecParams { threads: 4, grain: 1 }, &hw);
+        let huge = estimate(&inp, ExecParams { threads: 4, grain: 16 }, &hw);
+        assert!(
+            huge.predicted_ms > modest.predicted_ms,
+            "grain 16 over 24 rows must predict slower than grain 1 ({} vs {})",
+            huge.predicted_ms,
+            modest.predicted_ms
+        );
+    }
+
+    #[test]
+    fn tiny_grain_pays_claim_overhead_on_many_rows() {
+        let inp = CostInputs {
+            block: BlockShape::new(1, 32),
+            block_rows: 768,
+            cols: 768,
+            mean_blocks_per_row: 2.4,
+            tokens: 8,
+        };
+        let hw = HwSpec::haswell_reference();
+        let fine = estimate(&inp, ExecParams { threads: 4, grain: 1 }, &hw);
+        let coarse = estimate(&inp, ExecParams { threads: 4, grain: 8 }, &hw);
+        assert!(
+            coarse.predicted_ms < fine.predicted_ms,
+            "768 tiny rows at grain 1 must pay more claim overhead ({} vs {})",
+            fine.predicted_ms,
+            coarse.predicted_ms
+        );
+    }
+
+    #[test]
+    fn candidate_grid_respects_row_and_core_caps() {
+        let hw = HwSpec::haswell_reference(); // 4 cores
+        for c in candidates(2, &hw) {
+            assert!(c.threads <= 2);
+            assert!((1..=16).contains(&c.grain));
+        }
+        let all = candidates(1024, &hw);
+        assert!(all.iter().any(|c| c.threads == hw.cores));
+        assert!(all.iter().all(|c| c.threads <= hw.cores));
+    }
+
+    #[test]
+    fn rank_is_sorted_and_deterministic() {
+        let inp = inputs_32x1();
+        let hw = HwSpec::haswell_reference();
+        let a = rank(&inp, &hw);
+        let b = rank(&inp, &hw);
+        assert_eq!(a, b);
+        for w in a.windows(2) {
+            assert!(w[0].predicted_ms <= w[1].predicted_ms);
+        }
+    }
+
+    #[test]
+    fn spearman_and_inversions_agree_on_extremes() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let same = [2.0, 3.0, 5.0, 9.0];
+        let flip = [9.0, 5.0, 3.0, 2.0];
+        assert!((spearman(&x, &same) - 1.0).abs() < 1e-12);
+        assert_eq!(inversions(&x, &same), 0);
+        assert!((spearman(&x, &flip) + 1.0).abs() < 1e-12);
+        assert_eq!(inversions(&x, &flip), 6);
+        assert_eq!(spearman(&[1.0], &[1.0]), 0.0);
+        assert_eq!(spearman(&[1.0, 1.0], &[2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn ties_share_fractional_ranks() {
+        let r = fractional_ranks(&[5.0, 1.0, 5.0, 0.0]);
+        assert_eq!(r, vec![3.5, 2.0, 3.5, 1.0]);
+    }
+}

@@ -1,13 +1,45 @@
 //! Hardware specification — the parameters the paper says the task
 //! search stage attends to: "number of cores, cache size, instruction set
-//! architecture (ISA), max memory per block, and max thread per block".
+//! architecture (ISA), max memory per block, and max thread per block" —
+//! plus the two roofline parameters the analytical cost model
+//! ([`super::costmodel`]) ranks candidates against: peak f32 throughput
+//! and sustainable memory bandwidth.
 //!
 //! Detected from `/proc/cpuinfo` and sysfs on Linux with conservative
 //! fallbacks, and overridable for tests/ablations.
 
 use std::fmt;
 
+/// Fallback nominal clock when `/proc/cpuinfo` exposes no `cpu MHz`
+/// line (containers, exotic kernels): a conservative 2.5 GHz.
+const FALLBACK_HZ: u64 = 2_500_000_000;
+
+/// Per-core share of sustainable DRAM bandwidth used when no measured
+/// figure is available: 6.4 GB/s per core (one DDR4-1600-class channel
+/// per two cores), see [`HwSpec::detect`].
+const BW_PER_CORE: u64 = 6_400_000_000;
+
+/// Core count past which extra cores stop adding memory channels in the
+/// bandwidth fallback (commodity sockets top out around 8 channels).
+const BW_CORE_CAP: usize = 8;
+
 /// CPU execution resources the auto-scheduler tunes against.
+///
+/// All fields are plain integers (bytes, flop/s, bytes/s) so the struct
+/// stays `Eq` + hashable into the [`HwSpec::fingerprint`] that keys the
+/// plan cache and the persistent plan store.
+///
+/// # Examples
+///
+/// ```
+/// use sparsebert::scheduler::HwSpec;
+///
+/// let hw = HwSpec::haswell_reference();
+/// assert_eq!(hw.cores, 4);
+/// assert!(hw.peak_flops > 0 && hw.mem_bw > 0);
+/// // Fingerprints are stable and cover every field:
+/// assert_eq!(hw.fingerprint(), HwSpec::haswell_reference().fingerprint());
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct HwSpec {
     /// Logical cores available to the process.
@@ -22,11 +54,25 @@ pub struct HwSpec {
     pub simd_f32_lanes: usize,
     /// Human-readable ISA summary, e.g. `"x86_64+avx2"`.
     pub isa: String,
+    /// Peak single-precision throughput in FLOP/s across all cores:
+    /// `cores × simd_f32_lanes × 2 × clock` (one vector multiply + one
+    /// vector add per cycle; the kernels do not contract to FMA).
+    pub peak_flops: u64,
+    /// Sustainable main-memory bandwidth in bytes/s (socket total).
+    /// There is no portable way to read this from sysfs, so it is a
+    /// documented per-core-channel estimate; see [`HwSpec::detect`].
+    pub mem_bw: u64,
 }
 
 impl HwSpec {
-    /// Probe the running machine. Never fails — falls back to a modest
-    /// Haswell-like profile (the paper's own testbed class) on any error.
+    /// Probe the running machine. Never fails — every probe falls back to
+    /// a modest Haswell-class figure (the paper's own testbed class) on
+    /// any error:
+    ///
+    /// * cache sizes → 32K / 256K / 8M when sysfs is unreadable;
+    /// * clock → 2.5 GHz when `/proc/cpuinfo` has no `cpu MHz` line;
+    /// * bandwidth → 6.4 GB/s per core, capped at 8 cores' worth
+    ///   (there is no sysfs source for DRAM bandwidth at all).
     pub fn detect() -> HwSpec {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
         let cpuinfo = std::fs::read_to_string("/proc/cpuinfo").unwrap_or_default();
@@ -50,6 +96,9 @@ impl HwSpec {
         } else {
             (4, "scalar")
         };
+        let hz = parse_cpu_mhz(&cpuinfo)
+            .map(|mhz| (mhz * 1e6) as u64)
+            .unwrap_or(FALLBACK_HZ);
         HwSpec {
             cores,
             l1d_bytes: read_cache_size("index0").unwrap_or(32 * 1024),
@@ -57,11 +106,14 @@ impl HwSpec {
             l3_bytes: read_cache_size("index3").unwrap_or(8 * 1024 * 1024),
             simd_f32_lanes: lanes,
             isa: format!("{}+{}", std::env::consts::ARCH, isa_ext),
+            peak_flops: cores as u64 * lanes as u64 * 2 * hz,
+            mem_bw: cores.min(BW_CORE_CAP) as u64 * BW_PER_CORE,
         }
     }
 
     /// The paper's reference testbed class: a Haswell-era commodity server
-    /// core. Used by deterministic unit tests and documented ablations.
+    /// core at 3 GHz with dual-channel DDR3-1600 (25.6 GB/s). Used by
+    /// deterministic unit tests and documented ablations.
     pub fn haswell_reference() -> HwSpec {
         HwSpec {
             cores: 4,
@@ -70,6 +122,9 @@ impl HwSpec {
             l3_bytes: 8 * 1024 * 1024,
             simd_f32_lanes: 8,
             isa: "x86_64+avx2".to_string(),
+            // 4 cores × 8 lanes × 2 flops/cycle × 3 GHz
+            peak_flops: 4 * 8 * 2 * 3_000_000_000,
+            mem_bw: 25_600_000_000,
         }
     }
 
@@ -93,6 +148,8 @@ impl HwSpec {
         mix(self.l2_bytes as u64);
         mix(self.l3_bytes as u64);
         mix(self.simd_f32_lanes as u64);
+        mix(self.peak_flops);
+        mix(self.mem_bw);
         for b in self.isa.bytes() {
             mix(b as u64);
         }
@@ -118,17 +175,31 @@ pub fn parse_cache_size(s: &str) -> Option<usize> {
     s.parse::<usize>().ok()
 }
 
+/// Extract the first `cpu MHz : <float>` line from a `/proc/cpuinfo`
+/// dump. Returns `None` (→ the 2.5 GHz fallback) when the field is
+/// absent or malformed.
+pub fn parse_cpu_mhz(cpuinfo: &str) -> Option<f64> {
+    cpuinfo
+        .lines()
+        .find(|l| l.starts_with("cpu MHz"))
+        .and_then(|l| l.split(':').nth(1))
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .filter(|mhz| *mhz > 0.0)
+}
+
 impl fmt::Display for HwSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "{} cores, L1d {}K, L2 {}K, L3 {}M, {} f32 lanes ({})",
+            "{} cores, L1d {}K, L2 {}K, L3 {}M, {} f32 lanes ({}), {:.0} Gflop/s, {:.1} GB/s",
             self.cores,
             self.l1d_bytes / 1024,
             self.l2_bytes / 1024,
             self.l3_bytes / (1024 * 1024),
             self.simd_f32_lanes,
-            self.isa
+            self.isa,
+            self.peak_flops as f64 / 1e9,
+            self.mem_bw as f64 / 1e9,
         )
     }
 }
@@ -145,6 +216,11 @@ mod tests {
         assert!(hw.l2_bytes >= hw.l1d_bytes);
         assert!([4usize, 8, 16].contains(&hw.simd_f32_lanes), "{}", hw.simd_f32_lanes);
         assert!(!hw.isa.is_empty());
+        // Roofline parameters are always nonzero, whatever detection found
+        // (the clock may legitimately be low — /proc/cpuinfo reports the
+        // *current* frequency on machines with scaling governors).
+        assert!(hw.peak_flops > 0);
+        assert!(hw.mem_bw >= BW_PER_CORE);
     }
 
     #[test]
@@ -154,6 +230,35 @@ mod tests {
         assert_eq!(parse_cache_size("65536"), Some(65536));
         assert_eq!(parse_cache_size("8192K\n"), Some(8192 * 1024));
         assert_eq!(parse_cache_size("abc"), None);
+    }
+
+    #[test]
+    fn parse_cpu_mhz_handles_presence_absence_and_garbage() {
+        let real = "processor : 0\ncpu MHz\t\t: 2894.561\nflags : avx2\n";
+        assert_eq!(parse_cpu_mhz(real), Some(2894.561));
+        // absent → None → detect() falls back to 2.5 GHz
+        assert_eq!(parse_cpu_mhz("processor : 0\nflags : sse2\n"), None);
+        assert_eq!(parse_cpu_mhz("cpu MHz : not-a-number\n"), None);
+        assert_eq!(parse_cpu_mhz("cpu MHz : 0.0\n"), None);
+        assert_eq!(parse_cpu_mhz(""), None);
+    }
+
+    #[test]
+    fn detection_failure_defaults_are_the_documented_constants() {
+        // The fallbacks detect() applies when every probe fails: the
+        // Haswell-class cache sizes, the 2.5 GHz clock, and the
+        // per-core-channel bandwidth estimate.
+        assert_eq!(FALLBACK_HZ, 2_500_000_000);
+        let cores = 4usize;
+        let lanes = 4u64; // "scalar" ISA floor
+        let floor_flops = cores as u64 * lanes * 2 * FALLBACK_HZ;
+        assert_eq!(floor_flops, 80_000_000_000);
+        assert_eq!(cores.min(BW_CORE_CAP) as u64 * BW_PER_CORE, 25_600_000_000);
+        // and the bandwidth estimate stops growing past the channel cap
+        assert_eq!(
+            64usize.min(BW_CORE_CAP) as u64 * BW_PER_CORE,
+            8 * BW_PER_CORE
+        );
     }
 
     #[test]
@@ -167,6 +272,13 @@ mod tests {
         let mut d = HwSpec::haswell_reference();
         d.isa = "x86_64+avx512".to_string();
         assert_ne!(a.fingerprint(), d.fingerprint());
+        // the roofline fields are part of the digest too
+        let mut e = HwSpec::haswell_reference();
+        e.peak_flops += 1;
+        assert_ne!(a.fingerprint(), e.fingerprint());
+        let mut f = HwSpec::haswell_reference();
+        f.mem_bw /= 2;
+        assert_ne!(a.fingerprint(), f.fingerprint());
     }
 
     #[test]
@@ -175,5 +287,7 @@ mod tests {
         assert_eq!(hw.simd_f32_lanes, 8);
         assert_eq!(hw.l2_bytes, 256 * 1024);
         assert!(hw.l2_f32_budget() > 0);
+        assert_eq!(hw.peak_flops, 192_000_000_000);
+        assert_eq!(hw.mem_bw, 25_600_000_000);
     }
 }

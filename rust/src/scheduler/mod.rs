@@ -18,8 +18,13 @@
 //!   pattern and optionally orders block rows so similar patterns execute
 //!   adjacently (temporal locality on the X panels they share);
 //! * the *hardware spec* ([`hwspec::HwSpec`]) — cores, cache sizes, SIMD
-//!   width — parameterizes grain sizes and thread counts
-//!   ([`autosched::AutoScheduler`]);
+//!   width, peak flops, memory bandwidth — parameterizes grain sizes and
+//!   thread counts ([`autosched::AutoScheduler`]);
+//! * the *cost model* ([`costmodel`]) prices every `(threads, grain)`
+//!   candidate analytically (roofline: flops, bytes moved, arithmetic
+//!   intensity) so the scheduler ranks plans without running them,
+//!   measuring only near-ties under the hybrid policy — derivation in
+//!   `docs/cost-model.md`, validated by `sparsebert costcheck`;
 //! * the *plan cache* ([`cache::PlanCache`]) keys compiled plans by
 //!   structure signature × dense shape × hardware fingerprint, bundling
 //!   the pattern statistics the thread/grain choice needs so the serving
@@ -29,17 +34,21 @@
 //!   [`cache::PlanCache::stats`]) because the paper's follow-up #1 asks
 //!   for task-reuse introspection tooling, and our ablation A2 reports it.
 
+#![warn(missing_docs)]
+
 pub mod autosched;
 pub mod buffer;
 pub mod cache;
+pub mod costmodel;
 pub mod hwspec;
 pub mod plan;
 pub mod stats;
 pub mod task;
 
-pub use autosched::{AutoScheduler, ExecParams};
+pub use autosched::{AutoScheduler, CostModelStats, ExecParams};
 pub use buffer::TaskBuffer;
 pub use cache::{CacheStats, ExecPlan, PlanCache, DEFAULT_PLAN_CACHE_CAPACITY};
+pub use costmodel::{CostInputs, CostPolicy, PlanEstimate, DEFAULT_HYBRID_MARGIN};
 pub use hwspec::HwSpec;
 pub use plan::{build_plan, OrderPolicy, PlanOptions};
 pub use stats::SchedulerStats;

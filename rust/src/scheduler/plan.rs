@@ -37,6 +37,7 @@ pub struct PlanOptions {
     /// Dedup row programs by pattern signature (the reuse mechanism).
     /// Disabling compiles one program per row — ablation A1.
     pub dedup: bool,
+    /// How bands are ordered in the compiled plan.
     pub order: OrderPolicy,
 }
 
@@ -50,6 +51,8 @@ impl Default for PlanOptions {
 }
 
 impl PlanOptions {
+    /// The paper's TVM⁺ configuration: dedup on, similarity-adjacent
+    /// band ordering.
     pub fn tvm_plus() -> Self {
         PlanOptions {
             dedup: true,
@@ -57,6 +60,7 @@ impl PlanOptions {
         }
     }
 
+    /// Ablation A1: one program per row, no dedup, sequential order.
     pub fn no_reuse() -> Self {
         PlanOptions {
             dedup: false,

@@ -28,19 +28,27 @@ pub struct SchedulerStats {
 /// Plain-data snapshot of [`SchedulerStats`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct StatsSnapshot {
+    /// Tasks (structure lookups) observed.
     pub tasks_seen: u64,
+    /// Lookups served by an already-compiled plan.
     pub plan_hits: u64,
+    /// Lookups that compiled a new plan.
     pub plan_misses: u64,
+    /// Row programs compiled (post-dedup).
     pub programs_compiled: u64,
+    /// Block rows covered by shared (deduped) programs.
     pub rows_shared: u64,
+    /// Total block rows planned.
     pub rows_total: u64,
 }
 
 impl SchedulerStats {
+    /// Fresh zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one structure lookup (`hit` = served by a cached plan).
     pub fn record_task(&self, hit: bool) {
         self.tasks_seen.fetch_add(1, Ordering::Relaxed);
         if hit {
@@ -50,6 +58,8 @@ impl SchedulerStats {
         }
     }
 
+    /// Record one plan compilation: `rows` bands served by
+    /// `distinct_programs` deduped row programs.
     pub fn record_plan(&self, rows: usize, distinct_programs: usize) {
         self.programs_compiled
             .fetch_add(distinct_programs as u64, Ordering::Relaxed);
@@ -58,6 +68,7 @@ impl SchedulerStats {
             .fetch_add((rows - distinct_programs.min(rows)) as u64, Ordering::Relaxed);
     }
 
+    /// Plain-data copy of the live counters.
     pub fn snapshot(&self) -> StatsSnapshot {
         StatsSnapshot {
             tasks_seen: self.tasks_seen.load(Ordering::Relaxed),
@@ -89,6 +100,7 @@ impl StatsSnapshot {
         }
     }
 
+    /// JSON rendering for the serving stats endpoint.
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("tasks_seen", self.tasks_seen)

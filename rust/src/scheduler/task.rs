@@ -33,9 +33,13 @@ impl fmt::Display for OpKind {
 /// the cached plan applies verbatim.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct TaskKey {
+    /// Operation family (currently only BSR spmm).
     pub op: OpKind,
+    /// Dense row count.
     pub rows: usize,
+    /// Dense column count.
     pub cols: usize,
+    /// BSR block shape.
     pub block: BlockShape,
     /// Structure signature over all rows ([`matrix_signature`]): equal ⇒
     /// identical sparsity structure (values may differ — plans are
@@ -46,6 +50,7 @@ pub struct TaskKey {
 /// A task-buffer entry.
 #[derive(Debug, Clone)]
 pub struct SparseTask {
+    /// Reuse key (equal key ⇒ the cached plan applies verbatim).
     pub key: TaskKey,
     /// Stored nonzero blocks (cost model input).
     pub nnz_blocks: usize,
@@ -54,6 +59,7 @@ pub struct SparseTask {
 }
 
 impl SparseTask {
+    /// Describe one spmm over `m` (computes the structure signature).
     pub fn for_bsr(label: &str, m: &BsrMatrix) -> SparseTask {
         SparseTask {
             key: TaskKey {
