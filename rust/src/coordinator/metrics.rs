@@ -49,6 +49,56 @@ impl StageSpan {
 /// registry O(1) in memory under sustained traffic.
 const MAX_SPANS: usize = 512;
 
+/// Sliding throughput window length in seconds.
+const RATE_WINDOW_SECS: u64 = 60;
+
+/// Sliding-window request counter: one bucket per second, keyed by the
+/// absolute second index since registry start so stale buckets from a
+/// previous lap of the ring are recognizable (and excluded) without a
+/// background sweeper. Fixes the since-process-start throughput formula,
+/// whose reported rate decayed toward zero on an idle server no matter
+/// what the recent traffic was.
+#[derive(Debug, Clone, Copy)]
+struct RateWindow {
+    /// `(second index, count)`; slot `i` holds some second `s` with
+    /// `s % RATE_WINDOW_SECS == i`.
+    buckets: [(u64, u64); RATE_WINDOW_SECS as usize],
+}
+
+impl Default for RateWindow {
+    fn default() -> Self {
+        // u64::MAX never matches a real second index, so fresh buckets
+        // contribute nothing.
+        RateWindow {
+            buckets: [(u64::MAX, 0); RATE_WINDOW_SECS as usize],
+        }
+    }
+}
+
+impl RateWindow {
+    fn record(&mut self, now_sec: u64) {
+        let b = &mut self.buckets[(now_sec % RATE_WINDOW_SECS) as usize];
+        if b.0 != now_sec {
+            *b = (now_sec, 0);
+        }
+        b.1 += 1;
+    }
+
+    /// Requests/second over the window ending at `now_sec`, dividing by
+    /// the effective window length (uptime, clamped to `[1, 60]` s, so a
+    /// young process is not over-reported).
+    fn rate(&self, now_sec: u64, uptime_secs: f64) -> f64 {
+        let lo = now_sec.saturating_sub(RATE_WINDOW_SECS - 1);
+        let count: u64 = self
+            .buckets
+            .iter()
+            .filter(|(s, _)| *s >= lo && *s <= now_sec)
+            .map(|(_, c)| *c)
+            .sum();
+        count as f64 / uptime_secs.min(RATE_WINDOW_SECS as f64).max(1.0)
+    }
+}
+
 #[derive(Debug, Default)]
 struct VariantMetrics {
     total: LatencyHistogram,
@@ -62,6 +112,8 @@ struct VariantMetrics {
     /// Batches closed by the size cap (vs the deadline) — a sustained
     /// ratio near 1.0 means the window never limits throughput.
     full_batches: u64,
+    /// Per-second request counts for the sliding throughput window.
+    rate: RateWindow,
     spans: Vec<StageSpan>,
     /// Monotonic count of cross-batch prepare/execute overlaps,
     /// maintained incrementally as spans are recorded (each new span is
@@ -107,12 +159,14 @@ impl Metrics {
     }
 
     pub fn record(&self, variant: &str, total_us: u64, queue_us: u64, compute_us: u64) {
+        let now_sec = self.started.elapsed().as_secs();
         let mut m = self.variants.lock().expect("metrics poisoned");
         let v = m.entry(variant.to_string()).or_default();
         v.total.record_us(total_us as f64);
         v.queue.record_us(queue_us as f64);
         v.compute.record_us(compute_us as f64);
         v.requests += 1;
+        v.rate.record(now_sec);
     }
 
     /// Record one executed batch; `full` marks batches closed by the
@@ -179,12 +233,15 @@ impl Metrics {
         m.get(variant).map(|v| v.overlaps as usize).unwrap_or(0)
     }
 
-    /// Requests per second since startup, per variant.
+    /// Requests per second over the last [`RATE_WINDOW_SECS`] seconds,
+    /// per variant. Windowed (not since-startup), so the figure tracks
+    /// *current* load: it reads zero on an idle server and full rate
+    /// under fresh traffic regardless of process age.
     pub fn throughput_rps(&self, variant: &str) -> f64 {
+        let elapsed = self.started.elapsed();
         let m = self.variants.lock().expect("metrics poisoned");
-        let elapsed = self.started.elapsed().as_secs_f64();
         m.get(variant)
-            .map(|v| v.requests as f64 / elapsed.max(1e-9))
+            .map(|v| v.rate.rate(elapsed.as_secs(), elapsed.as_secs_f64()))
             .unwrap_or(0.0)
     }
 
@@ -207,7 +264,9 @@ impl Metrics {
     }
 
     pub fn to_json(&self) -> Json {
-        let elapsed = self.started.elapsed().as_secs_f64();
+        let elapsed = self.started.elapsed();
+        let now_sec = elapsed.as_secs();
+        let elapsed = elapsed.as_secs_f64();
         let mut root = Json::obj();
         root.set("uptime_seconds", elapsed);
         let mut variants = Json::obj();
@@ -232,16 +291,28 @@ impl Metrics {
                         v.full_batches as f64 / v.batches as f64
                     },
                 )
-                .set("throughput_rps", v.requests as f64 / elapsed.max(1e-9))
+                .set("throughput_rps", v.rate.rate(now_sec, elapsed))
                 .set("latency_p50_us", v.total.percentile_us(50.0))
                 .set("latency_p95_us", v.total.percentile_us(95.0))
                 .set("latency_p99_us", v.total.percentile_us(99.0))
+                .set("latency_p999_us", v.total.percentile_us(99.9))
                 .set("latency_mean_us", v.total.mean_us())
                 .set("queue_p95_us", v.queue.percentile_us(95.0))
                 .set("compute_p50_us", v.compute.percentile_us(50.0))
                 .set("prepare_p50_us", v.prepare.percentile_us(50.0))
                 .set("execute_p50_us", v.execute.percentile_us(50.0))
                 .set("stage_overlaps", v.overlaps);
+            let buckets = v
+                .total
+                .buckets()
+                .into_iter()
+                .map(|(up_to_us, count)| {
+                    let mut b = Json::obj();
+                    b.set("up_to_us", up_to_us).set("count", count);
+                    b
+                })
+                .collect();
+            j.set("latency_buckets", Json::Arr(buckets));
             variants.set(name, j);
         }
         drop(m);
@@ -283,8 +354,45 @@ mod tests {
         assert_eq!(v.get("full_batch_ratio").unwrap().as_f64(), Some(0.5));
         let p50 = v.get("latency_p50_us").unwrap().as_f64().unwrap();
         let p99 = v.get("latency_p99_us").unwrap().as_f64().unwrap();
+        let p999 = v.get("latency_p999_us").unwrap().as_f64().unwrap();
         assert!(p50 <= p99);
+        assert!(p99 <= p999);
         assert_eq!(v.get("stage_overlaps").unwrap().as_f64(), Some(0.0));
+        // exported histogram buckets cover every recorded request
+        let buckets = v.get("latency_buckets").unwrap().as_arr().unwrap();
+        assert!(!buckets.is_empty());
+        let total: f64 = buckets
+            .iter()
+            .map(|b| b.get("count").unwrap().as_f64().unwrap())
+            .sum();
+        assert_eq!(total, 100.0);
+        for b in buckets {
+            assert!(b.get("up_to_us").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn rate_window_slides() {
+        let mut w = RateWindow::default();
+        for _ in 0..120 {
+            w.record(0);
+        }
+        // young process: divide by uptime (clamped to >= 1 s)
+        assert!((w.rate(0, 0.5) - 120.0).abs() < 1e-9);
+        // 200 s later with no traffic, the window is empty — the old
+        // since-startup formula would still report 0.6 rps here
+        assert_eq!(w.rate(200, 200.0), 0.0);
+        // fresh traffic reclaims stale buckets from the previous lap
+        w.record(200);
+        w.record(200);
+        assert!((w.rate(200, 200.0) - 2.0 / 60.0).abs() < 1e-9);
+        // spread across the window boundary: second 141 has aged out at
+        // now=201, second 142 is the oldest still inside
+        let mut w = RateWindow::default();
+        w.record(141);
+        w.record(142);
+        w.record(201);
+        assert!((w.rate(201, 300.0) - 2.0 / 60.0).abs() < 1e-9);
     }
 
     #[test]

@@ -277,6 +277,12 @@ fn prepare_batch(
     seq: u64,
     closed: ClosedBatch,
 ) -> PreparedBatch {
+    let _span = crate::trace::span(
+        "coord",
+        "prepare",
+        seq,
+        &[("batch", closed.requests.len() as i64)],
+    );
     let mut inputs = Vec::with_capacity(closed.requests.len());
     for r in &closed.requests {
         inputs.push(weights.embed(&r.tokens));
@@ -295,6 +301,7 @@ fn prepare_batch(
 fn execute_batch(ctx: &ExecCtx, batch: &PreparedBatch) {
     let picked_up = Instant::now();
     let size = batch.requests.len();
+    let _span = crate::trace::span("coord", "execute", batch.seq, &[("batch", size as i64)]);
     ctx.metrics.record_batch(&ctx.variant, size, batch.full);
     let workers_now = ctx.workers.min(size).max(1);
     let handle_span = |_w: usize, span: std::ops::Range<usize>| {

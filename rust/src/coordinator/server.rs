@@ -7,6 +7,8 @@
 //! ← {"id": 7, "cls": [...], "latency_us": 812, "batch": 4}
 //! → {"cmd": "stats"}
 //! ← {"variants": {...}, "uptime_seconds": ...}
+//! → {"cmd": "trace"}
+//! ← {"traceEvents": [...], "displayTimeUnit": "ms"}
 //! → {"cmd": "shutdown"}
 //! ```
 //!
@@ -115,6 +117,11 @@ fn process_line(line: &str, router: &Router) -> Result<LineOutcome> {
     if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "stats" => Ok(LineOutcome::Reply(router.metrics.to_json())),
+            // Chrome trace-event snapshot of the tracing ring buffers;
+            // empty (but well-formed) when tracing is disabled.
+            "trace" => Ok(LineOutcome::Reply(crate::trace::export::chrome_trace(
+                &crate::trace::snapshot(),
+            ))),
             "variants" => {
                 let mut j = Json::obj();
                 let names = router.variants();
@@ -238,6 +245,13 @@ mod tests {
         req.set("cmd", "stats");
         let stats = client.call(&req).unwrap();
         assert!(stats.at(&["variants", "dense"]).is_some());
+        // trace snapshot: always a well-formed Chrome trace document,
+        // whether or not tracing is currently enabled
+        let mut tq = Json::obj();
+        tq.set("cmd", "trace");
+        let trace = client.call(&tq).unwrap();
+        assert!(trace.get("traceEvents").is_some());
+        crate::trace::export::validate_chrome_trace(&trace).unwrap();
         // variants listing includes the pipeline mode per variant
         let mut vq = Json::obj();
         vq.set("cmd", "variants");

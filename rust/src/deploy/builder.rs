@@ -359,6 +359,7 @@ impl EngineBuilder {
 
     /// Validate the configuration and construct the engine.
     pub fn build(self) -> Result<BuiltEngine, DeployError> {
+        let _span = crate::trace::span("deploy", "build", 0, &[]);
         let kind = self.kind;
         check_kind_options(
             kind,

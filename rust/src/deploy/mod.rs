@@ -45,6 +45,6 @@ pub use builder::{
 };
 pub use error::DeployError;
 pub use spec::{
-    Deployment, DeploymentSpec, ModelSpec, NumaPolicy, SchedulerSpec, ServingSpec, StoreSpec,
-    VariantSpec, SPEC_SCHEMA,
+    Deployment, DeploymentSpec, ModelSpec, NumaPolicy, ObservabilitySpec, SchedulerSpec,
+    ServingSpec, StoreSpec, VariantSpec, SPEC_SCHEMA,
 };

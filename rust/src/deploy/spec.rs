@@ -119,6 +119,25 @@ impl Default for SchedulerSpec {
     }
 }
 
+/// `[observability]` — runtime tracing (see `docs/observability.md`).
+///
+/// Tracing is always compiled in; this table only flips the runtime
+/// switch and sizes the per-thread ring buffers. The `workers` stats
+/// gauge is registered unconditionally — it reports `enabled: false`
+/// and no workers until tracing is turned on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObservabilitySpec {
+    /// Enable event collection at instantiation (`trace = true`).
+    pub trace: bool,
+    /// Where `serve` writes the Chrome trace JSON on shutdown; absent =
+    /// no file (the `{"cmd": "trace"}` endpoint still works). The CLI's
+    /// `--trace-out` flag overrides this and implies `trace = true`.
+    pub trace_out: Option<PathBuf>,
+    /// Per-thread ring capacity in events; absent =
+    /// [`crate::trace::DEFAULT_RING_CAPACITY`]. Must be ≥ 2.
+    pub ring_capacity: Option<usize>,
+}
+
 /// Worker/artifact NUMA placement policy (`numa = "pin"` reserved for
 /// the NUMA-pinning ROADMAP item).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -189,6 +208,8 @@ pub struct DeploymentSpec {
     pub scheduler: SchedulerSpec,
     /// `[store]` — optional persistent artifact store.
     pub store: Option<StoreSpec>,
+    /// `[observability]` — runtime tracing switch and ring sizing.
+    pub observability: ObservabilitySpec,
     /// `numa` — worker/artifact placement policy (reserved).
     pub numa: NumaPolicy,
     /// `[[variant]]` — the engines to register, in order.
@@ -208,6 +229,9 @@ pub struct Deployment {
     pub reports: Vec<BuildReport>,
     /// Resolved worker-thread count.
     pub threads: usize,
+    /// Where to write the Chrome trace on shutdown (from the manifest's
+    /// `observability.trace_out`; the CLI flag may override it).
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Deployment {
@@ -273,6 +297,7 @@ impl DeploymentSpec {
             serving: ServingSpec::default(),
             scheduler: SchedulerSpec::default(),
             store: None,
+            observability: ObservabilitySpec::default(),
             numa: NumaPolicy::None,
             variants,
         }
@@ -313,7 +338,16 @@ impl DeploymentSpec {
         check_keys(
             j,
             "<root>",
-            &["schema", "model", "serving", "scheduler", "store", "numa", "variant"],
+            &[
+                "schema",
+                "model",
+                "serving",
+                "scheduler",
+                "store",
+                "observability",
+                "numa",
+                "variant",
+            ],
         )?;
         if let Some(schema) = j.get("schema") {
             let s = schema.as_str().ok_or_else(|| invalid("schema", "must be a string"))?;
@@ -377,6 +411,17 @@ impl DeploymentSpec {
                 })
             }
         };
+        let mut observability = ObservabilitySpec::default();
+        if let Some(o) = j.get("observability") {
+            check_keys(o, "observability", &["trace", "trace_out", "ring_capacity"])?;
+            if let Some(t) = bool_field(o, "observability.trace")? {
+                observability.trace = t;
+            }
+            if let Some(p) = str_field(o, "observability.trace_out")? {
+                observability.trace_out = Some(PathBuf::from(p));
+            }
+            observability.ring_capacity = usize_field(o, "observability.ring_capacity")?;
+        }
         let numa = match j.get("numa") {
             None => NumaPolicy::None,
             Some(v) => match v.as_str() {
@@ -430,6 +475,7 @@ impl DeploymentSpec {
             serving,
             scheduler,
             store,
+            observability,
             numa,
             variants,
         })
@@ -463,6 +509,14 @@ impl DeploymentSpec {
                 return Err(invalid(
                     "scheduler.hybrid_margin",
                     &format!("{m} is outside (0, 1]"),
+                ));
+            }
+        }
+        if let Some(cap) = self.observability.ring_capacity {
+            if cap < 2 {
+                return Err(invalid(
+                    "observability.ring_capacity",
+                    "must be ≥ 2 events per thread (omit the key for the default)",
                 ));
             }
         }
@@ -551,6 +605,14 @@ impl DeploymentSpec {
                     what: "store.sync_url (cross-host artifact sharing is a ROADMAP item)".into(),
                 });
             }
+        }
+        // Ring sizing must precede any engine construction so the build
+        // spans land in rings of the configured capacity.
+        if let Some(cap) = self.observability.ring_capacity {
+            crate::trace::set_ring_capacity(cap);
+        }
+        if self.observability.trace {
+            crate::trace::set_enabled(true);
         }
         let threads = self.serving.threads.unwrap_or_else(default_threads);
         let exec_pool = Arc::new(Pool::new(threads));
@@ -661,6 +723,12 @@ impl DeploymentSpec {
                 .metrics
                 .register_gauge("plan_store", move || st.stats().to_json());
         }
+        // Per-worker utilization derived from the tracing rings. Always
+        // registered: with tracing off it reports `enabled: false` and an
+        // empty worker list, so the stats schema is stable either way.
+        router.metrics.register_gauge("workers", || {
+            crate::trace::export::worker_stats(&crate::trace::snapshot())
+        });
         // Per-variant build reports (including the selected microkernel
         // variant) are static after construction; snapshot them once and
         // serve the snapshot from the gauge.
@@ -676,6 +744,7 @@ impl DeploymentSpec {
             store,
             reports,
             threads,
+            trace_out: self.observability.trace_out.clone(),
         })
     }
 }
@@ -723,6 +792,15 @@ fn usize_field(j: &Json, field: &str) -> Result<Option<usize>, DeployError> {
             .as_usize()
             .map(Some)
             .ok_or_else(|| invalid(field, "expected a non-negative integer")),
+    }
+}
+
+fn bool_field(j: &Json, field: &str) -> Result<Option<bool>, DeployError> {
+    let key = field.rsplit('.').next().expect("dotted field name");
+    match j.get(key) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(invalid(field, "expected a boolean")),
     }
 }
 
@@ -803,6 +881,10 @@ pool = 4
             ("[model]\nconfg = \"tiny\"\n[[variant]]\nname = \"a\"\nkind = \"tvm\"", "model"),
             ("[serving]\ntreads = 2\n[[variant]]\nname = \"a\"\nkind = \"tvm\"", "serving"),
             ("[[variant]]\nname = \"a\"\nkind = \"tvm\"\nsparsety = 0.5", "variant[0]"),
+            (
+                "[observability]\ntrase = true\n[[variant]]\nname = \"a\"\nkind = \"tvm\"",
+                "observability",
+            ),
         ] {
             let e = DeploymentSpec::from_toml_str(doc).unwrap_err();
             match e {
@@ -887,6 +969,64 @@ pool = 4
                    [[variant]]\nname = \"a\"\nkind = \"tvm\"";
         let e = DeploymentSpec::from_toml_str(oob).unwrap().validate().unwrap_err();
         assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn observability_table_parses_and_validates() {
+        let doc = "[observability]\ntrace = true\ntrace_out = \"trace.json\"\n\
+                   ring_capacity = 4096\n\
+                   [[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let spec = DeploymentSpec::from_toml_str(doc).unwrap();
+        spec.validate().unwrap();
+        assert!(spec.observability.trace);
+        assert_eq!(spec.observability.trace_out, Some(PathBuf::from("trace.json")));
+        assert_eq!(spec.observability.ring_capacity, Some(4096));
+        // omitted table → tracing off, default ring
+        let spec = DeploymentSpec::from_toml_str(GOOD).unwrap();
+        assert_eq!(spec.observability, ObservabilitySpec::default());
+        assert!(!spec.observability.trace);
+        // non-boolean trace rejected at parse time
+        let bad = "[observability]\ntrace = \"yes\"\n[[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(bad).unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        // degenerate ring capacity is a validation error
+        let tiny = "[observability]\nring_capacity = 1\n\
+                    [[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(tiny).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn workers_gauge_always_in_stats() {
+        let dep = DeploymentSpec::from_toml_str(GOOD).unwrap().instantiate().unwrap();
+        let stats = dep.router.metrics.to_json();
+        let workers = stats.get("workers").expect("workers gauge in stats");
+        assert!(workers.get("enabled").is_some());
+        assert!(workers.get("per_worker").and_then(Json::as_arr).is_some());
+        assert!(workers.get("dropped_events").is_some());
+        dep.router.shutdown();
+    }
+
+    #[test]
+    fn tracing_does_not_change_outputs() {
+        // Acceptance gate: enabling tracing must be observation-only —
+        // the engine's numeric outputs stay bitwise identical.
+        let _guard = crate::trace::test_guard();
+        crate::trace::set_enabled(false);
+        let dep = DeploymentSpec::from_toml_str(GOOD).unwrap().instantiate().unwrap();
+        let tokens = vec![5, 17, 2, 91, 8];
+        let base_dense = dep.router.infer("tvm", tokens.clone()).unwrap().cls;
+        let base_sparse = dep.router.infer("tvm+", tokens.clone()).unwrap().cls;
+        crate::trace::set_enabled(true);
+        let traced_dense = dep.router.infer("tvm", tokens.clone()).unwrap().cls;
+        let traced_sparse = dep.router.infer("tvm+", tokens).unwrap().cls;
+        crate::trace::set_enabled(false);
+        assert_eq!(base_dense, traced_dense);
+        assert_eq!(base_sparse, traced_sparse);
+        // and the spans emitted while tracing exported cleanly
+        let doc = crate::trace::export::chrome_trace(&crate::trace::snapshot());
+        crate::trace::export::validate_chrome_trace(&doc).unwrap();
+        dep.router.shutdown();
     }
 
     #[test]

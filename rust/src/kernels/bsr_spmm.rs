@@ -214,6 +214,15 @@ pub fn bsr_linear_planned_fused(
     let r = w.block.r;
     let y_ptr = SendPtr(y.data.as_mut_ptr());
     let exec_range = |range: std::ops::Range<usize>| {
+        // Shape-tagged twin of the pool's "band" span: same worker, same
+        // wall time, but carries the block shape so traces separate 32x1
+        // from 32x32 band behavior.
+        let _band = crate::trace::span(
+            "kernel",
+            "spmm.band",
+            0,
+            &[("block_r", r as i64), ("block_c", w.block.c as i64)],
+        );
         for &bi_u in &plan.order[range] {
             let bi = bi_u as usize;
             let (program, base) = &plan.rows[bi];

@@ -91,6 +91,21 @@
 //! pinning, cross-host artifact-store sync) lands as `DeploymentSpec`
 //! fields (`numa`, `store.sync_url`), already parsed and reserved.
 //!
+//! ## Tracing & observability
+//!
+//! The [`trace`] subsystem is an always-compiled, runtime-enabled tracer:
+//! per-thread lock-free ring buffers of span begin/end events covering the
+//! whole hot path (coordinator prepare/execute, plan-cache hit/miss, plan
+//! store loads, BSR pack, and each per-worker Y-band inside
+//! [`util::pool`]), exported as Chrome trace-event JSON loadable in
+//! Perfetto (`sparsebert serve --trace-out`, `sparsebert cibench
+//! --trace`). The same event stream feeds a `workers` gauge (per-worker
+//! busy fraction, band-duration histogram, steal counts) in the serving
+//! stats JSON and predicted-vs-observed error feedback into the
+//! auto-scheduler's cost-model stats. When disabled (the default) the
+//! instrumentation costs one relaxed atomic load per site and never
+//! changes numeric results. See `docs/observability.md`.
+//!
 //! ## Serving pipeline
 //!
 //! The coordinator's request path is a **two-stage pipeline**
@@ -114,6 +129,7 @@
 //! measured-vs-paper results.
 
 pub mod util;
+pub mod trace;
 pub mod sparse;
 pub mod kernels;
 pub mod scheduler;

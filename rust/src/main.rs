@@ -52,6 +52,7 @@ fn main() {
         "costcheck" => cmd_costcheck(rest),
         "cibench" => cmd_cibench(rest),
         "benchdiff" => cmd_benchdiff(rest),
+        "tracecheck" => cmd_tracecheck(rest),
         "figure2" => cmd_figure2(rest),
         "table2" => cmd_table2(rest),
         "serve" => cmd_serve(rest),
@@ -85,6 +86,7 @@ fn usage() -> String {
          \x20 costcheck  validate the roofline cost model against measured sweep timings\n\
          \x20 cibench    CI bench smoke: tiny schedsweep + A3 serving sweep → JSON\n\
          \x20 benchdiff  compare a cibench JSON against a checked-in baseline (regression gate)\n\
+         \x20 tracecheck validate a Chrome trace JSON emitted by serve/cibench tracing\n\
          \x20 figure2    regenerate Figure 2 (TVM+/Dense curve)\n\
          \x20 table2     render Table 2 from artifacts/table2.json (run `make table2` first)\n\
          \x20 serve      start the serving coordinator (TCP, JSON lines; --spec deploy.toml)\n\
@@ -302,7 +304,12 @@ fn cmd_cibench(argv: Vec<String>) -> Result<()> {
         "plan-store-ci",
         "artifact-store root for the cold-vs-warm smoke (persisted across CI runs)",
     )
+    .opt("trace-out", "TRACE_ci.json", "Chrome trace output path (with --trace)")
+    .flag("trace", "collect a runtime trace of the whole bench run")
     .parse(argv)?;
+    if args.flag("trace") {
+        sparsebert::trace::set_enabled(true);
+    }
     // Tiny but representative: the paper's 32x1-vs-32x32 scheduler
     // comparison plus the serving pipeline's barrier-vs-pipelined sweep,
     // sized to finish in seconds on a bare CI runner.
@@ -398,6 +405,41 @@ fn cmd_cibench(argv: Vec<String>) -> Result<()> {
         .set("warmstart", warm_start_json(&ws));
     std::fs::write(args.get("out"), root.to_string_pretty())?;
     eprintln!("wrote {}", args.get("out"));
+    if args.flag("trace") {
+        write_trace(std::path::Path::new(args.get("trace-out")))?;
+    }
+    Ok(())
+}
+
+/// Snapshot the tracing rings and write a Chrome trace-event JSON
+/// (load it at `chrome://tracing` or <https://ui.perfetto.dev>).
+fn write_trace(path: &std::path::Path) -> Result<()> {
+    let doc = sparsebert::trace::export::chrome_trace(&sparsebert::trace::snapshot());
+    std::fs::write(path, doc.to_string_pretty())
+        .with_context(|| format!("writing trace {}", path.display()))?;
+    eprintln!("wrote trace {}", path.display());
+    Ok(())
+}
+
+/// Validate a trace file the way CI does: parse, then check the Chrome
+/// trace-event invariants (balanced B/E pairs, monotonic timestamps per
+/// thread).
+fn cmd_tracecheck(argv: Vec<String>) -> Result<()> {
+    let args = Parser::new(
+        "sparsebert tracecheck",
+        "validate a Chrome trace JSON emitted by serve/cibench tracing",
+    )
+    .req("file", "trace JSON path")
+    .parse(argv)?;
+    let path = args.get("file");
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    let summary = sparsebert::trace::export::validate_chrome_trace(&doc)
+        .map_err(|e| anyhow::anyhow!("{path}: invalid trace: {e}"))?;
+    println!(
+        "{path}: OK — {} events, {} complete spans, {} threads",
+        summary.events, summary.complete_spans, summary.threads
+    );
     Ok(())
 }
 
@@ -409,6 +451,7 @@ struct BenchDiffRow {
     grain: usize,
     ms: f64,
     ms_scalar: Option<f64>,
+    speedup_vs_serial: Option<f64>,
 }
 
 fn benchdiff_rows(doc: &Json, label: &str) -> Result<Vec<BenchDiffRow>> {
@@ -438,6 +481,7 @@ fn benchdiff_rows(doc: &Json, label: &str) -> Result<Vec<BenchDiffRow>> {
                     .and_then(Json::as_f64)
                     .with_context(|| format!("{label}: row missing ms"))?,
                 ms_scalar: r.get("ms_scalar").and_then(Json::as_f64),
+                speedup_vs_serial: r.get("speedup_vs_serial").and_then(Json::as_f64),
             })
         })
         .collect()
@@ -449,9 +493,13 @@ fn benchdiff_rows(doc: &Json, label: &str) -> Result<Vec<BenchDiffRow>> {
 /// threshold fail the build; every other shape only warns (those cells
 /// are small enough that runner noise dominates). Because absolute ms
 /// does not transfer between runner classes, a baseline recorded on
-/// different hardware downgrades gate failures to warnings unless
-/// `--strict` — the within-run SIMD-vs-scalar gate below still enforces
-/// the microkernel win on whatever machine the current run used.
+/// different hardware downgrades *that* gate to warnings unless
+/// `--strict`. Two hardware-portable gates stay enforced regardless:
+/// the within-run SIMD-vs-scalar gate (the dispatched kernel must beat
+/// its scalar twin measured in the same process) and the parallel
+/// scaling gate (gate-block `speedup_vs_serial`, a within-run ratio,
+/// must not collapse vs baseline) — so the 32x1 gate is never
+/// warn-only, even against the bootstrap baseline.
 fn cmd_benchdiff(argv: Vec<String>) -> Result<()> {
     let args = Parser::new(
         "sparsebert benchdiff",
@@ -473,9 +521,14 @@ fn cmd_benchdiff(argv: Vec<String>) -> Result<()> {
         "32x1",
         "block shape whose regressions fail the build (others warn)",
     )
+    .opt(
+        "scaling-threshold",
+        "0.35",
+        "tolerated relative drop in gate-block speedup_vs_serial (enforced on any hardware)",
+    )
     .flag(
         "strict",
-        "enforce the gate even when baseline/current hardware strings differ",
+        "enforce the absolute-ms gate even when baseline/current hardware strings differ",
     )
     .parse(argv)?;
     let read = |path: &str| -> Result<Json> {
@@ -493,7 +546,8 @@ fn cmd_benchdiff(argv: Vec<String>) -> Result<()> {
     if !gate_enforced {
         eprintln!(
             "benchdiff: baseline hardware ({hw_base}) differs from current ({hw_cur}); \
-             absolute-ms gate downgraded to warnings (pass --strict to enforce)"
+             absolute-ms gate downgraded to warnings (pass --strict to enforce) — the \
+             scaling and SIMD gates below are still enforced"
         );
     }
     let base_rows = benchdiff_rows(&base_doc, "baseline")?;
@@ -543,6 +597,37 @@ fn cmd_benchdiff(argv: Vec<String>) -> Result<()> {
         eprintln!("benchdiff: warn — baseline row {block} t{threads} g{grain} missing from current run");
         warnings += 1;
     }
+    // Hardware-portable scaling gate: speedup_vs_serial is measured
+    // within one run, so the ratio survives runner-class changes that
+    // invalidate absolute ms. A collapse on multi-thread gate-block rows
+    // (e.g. an accidental serialization of the band scheduler) fails the
+    // build even against a foreign or bootstrap baseline.
+    let scaling_threshold = args.get_f64("scaling-threshold")?;
+    for r in cur_rows.iter().filter(|r| r.block == gate_block && r.threads > 1) {
+        let Some(cur_s) = r.speedup_vs_serial else { continue };
+        let Some(base_s) = base_rows
+            .iter()
+            .find(|b| b.block == r.block && b.threads == r.threads && b.grain == r.grain)
+            .and_then(|b| b.speedup_vs_serial)
+        else {
+            continue;
+        };
+        let ratio = cur_s / base_s.max(1e-9);
+        let collapsed = ratio < 1.0 - scaling_threshold;
+        println!(
+            "scaling  {:<8} t{:<2} g{:<3} {:>6.2}x vs {:>6.2}x baseline  ({:+.1}%){}",
+            r.block,
+            r.threads,
+            r.grain,
+            cur_s,
+            base_s,
+            (ratio - 1.0) * 100.0,
+            if collapsed { "  FAIL" } else { "" }
+        );
+        if collapsed {
+            failures += 1;
+        }
+    }
     // Within-run microkernel gate: on a SIMD-active run, the dispatched
     // gate-block kernel must beat its scalar twin measured in the *same*
     // process on the *same* machine — immune to runner-class drift.
@@ -577,9 +662,10 @@ fn cmd_benchdiff(argv: Vec<String>) -> Result<()> {
     }
     if failures > 0 {
         bail!(
-            "{failures} gate-block ({gate_block}) rows regressed more than {:.0}% vs baseline \
-             ({warnings} warnings)",
-            threshold * 100.0
+            "{failures} gate-block ({gate_block}) rows regressed vs baseline (ms threshold \
+             {:.0}%, scaling threshold {:.0}%; {warnings} warnings)",
+            threshold * 100.0,
+            scaling_threshold * 100.0
         );
     }
     eprintln!("benchdiff: ok ({warnings} warnings)");
@@ -733,7 +819,18 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             "",
             "artifact store dir for warm starts (populate with `sparsebert plan build`)",
         )
+        .opt(
+            "trace-out",
+            "",
+            "enable tracing and write a Chrome trace here on shutdown \
+             (overrides [observability].trace_out)",
+        )
         .parse(argv)?;
+    // The CLI flag both enables tracing and names the output file; a
+    // manifest can do the same via [observability].
+    if !args.get("trace-out").is_empty() {
+        sparsebert::trace::set_enabled(true);
+    }
     let spec = if args.get("spec").is_empty() {
         serve_spec_from_flags(&args)?
     } else {
@@ -758,6 +855,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             store.hw_match()
         );
     }
+    let trace_out: Option<std::path::PathBuf> = if args.get("trace-out").is_empty() {
+        dep.trace_out.clone()
+    } else {
+        Some(args.get("trace-out").into())
+    };
     let router = Arc::new(dep.router);
     eprintln!(
         "serving variants {:?} on {addr} (model={}, mode={}, hw: {})",
@@ -769,6 +871,9 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let server = Server::new(Arc::clone(&router));
     server.serve(&addr, |a| eprintln!("listening on {a}"))?;
     router.shutdown();
+    if let Some(p) = &trace_out {
+        write_trace(p)?;
+    }
     eprintln!("server stopped");
     Ok(())
 }

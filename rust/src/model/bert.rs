@@ -207,6 +207,12 @@ impl SparseBsrEngine {
                 let bsr = match store.as_deref().and_then(|s| s.load_packed(m, block)) {
                     Some(packed) => packed,
                     None => {
+                        let _span = crate::trace::span(
+                            "model",
+                            "bsr.pack",
+                            0,
+                            &[("block_r", block.r as i64), ("block_c", block.c as i64)],
+                        );
                         let packed = BsrMatrix::from_dense(m, block)?;
                         if let Some(s) = store.as_deref() {
                             let _ = s.store_packed(m, &packed);
@@ -264,6 +270,26 @@ impl SparseBsrEngine {
         epilogue: Epilogue,
     ) -> Matrix {
         let p = self.sched.params_for(&m.0, &m.1, x.cols).capped(self.threads);
+        // Predicted-vs-observed feedback: when tracing is on, time the
+        // planned spmm and score it against the cost model's memoized
+        // prediction. Timing only — the computation itself is identical
+        // either way.
+        if crate::trace::enabled() {
+            let t0 = std::time::Instant::now();
+            let y = bsr_linear_planned_fused(
+                &m.0,
+                &m.1.plan,
+                x,
+                Some(bias),
+                epilogue,
+                self.pool(),
+                p.threads,
+                p.grain,
+            );
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.sched.record_observed(&m.1, x.cols, ms);
+            return y;
+        }
         bsr_linear_planned_fused(
             &m.0,
             &m.1.plan,

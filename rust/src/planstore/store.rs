@@ -280,6 +280,12 @@ impl PlanStore {
     /// (→ live planning) on miss, hardware mismatch, or any integrity
     /// failure.
     pub fn load_plan(&self, m: &BsrMatrix, opts: PlanOptions) -> Option<Arc<ExecPlan>> {
+        let _span = crate::trace::span(
+            "store",
+            "plan.load",
+            0,
+            &[("block_r", m.block.r as i64), ("block_c", m.block.c as i64)],
+        );
         if !self.hw_match {
             self.hw_rejects.fetch_add(1, Ordering::Relaxed);
             return None;
@@ -371,6 +377,12 @@ impl PlanStore {
     /// failure. Packed weights are hardware-independent, so they load
     /// even when the store's plan half is hardware-rejected.
     pub fn load_packed(&self, dense: &Matrix, block: BlockShape) -> Option<BsrMatrix> {
+        let _span = crate::trace::span(
+            "store",
+            "packed.load",
+            0,
+            &[("block_r", block.r as i64), ("block_c", block.c as i64)],
+        );
         let id = ArtifactKey::packed_weights(dense, block).id();
         let entry = {
             self.entries

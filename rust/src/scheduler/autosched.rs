@@ -97,6 +97,13 @@ pub struct CostModelStats {
     /// the measured time of the winning candidate, in percent, over all
     /// measured fallbacks. `None` until a measurement has happened.
     pub mean_abs_err_pct: Option<f64>,
+    /// Production-path timings fed back through
+    /// [`AutoScheduler::record_observed`] (the tracing layer times each
+    /// planned spmm when tracing is enabled).
+    pub observed_samples: usize,
+    /// Mean absolute relative error of the model's prediction against
+    /// those observed timings, in percent. `None` until a sample lands.
+    pub observed_mean_abs_err_pct: Option<f64>,
 }
 
 impl CostModelStats {
@@ -111,6 +118,14 @@ impl CostModelStats {
                     Some(e) => Json::Num(e),
                     None => Json::Null,
                 },
+            )
+            .set("observed_samples", self.observed_samples)
+            .set(
+                "observed_mean_abs_err_pct",
+                match self.observed_mean_abs_err_pct {
+                    Some(e) => Json::Num(e),
+                    None => Json::Null,
+                },
             );
         j
     }
@@ -119,14 +134,20 @@ impl CostModelStats {
 /// Memoized choices plus accumulated prediction-error statistics.
 #[derive(Default)]
 struct CostState {
-    /// `(plan identity, tokens)` → decided parameters. Keyed by the
-    /// plan's `Arc` address: stable for the plan's lifetime, and a plan
-    /// evicted from the cache simply re-decides (cheap).
-    memo: HashMap<(usize, usize), ExecParams>,
+    /// `(plan identity, tokens)` → decided parameters plus the model's
+    /// predicted time for them (ms; `0.0` when the policy produced no
+    /// prediction). Keyed by the plan's `Arc` address: stable for the
+    /// plan's lifetime, and a plan evicted from the cache simply
+    /// re-decides (cheap).
+    memo: HashMap<(usize, usize), (ExecParams, f64)>,
     analytic: usize,
     measured: usize,
     err_sum_pct: f64,
     err_n: usize,
+    /// Prediction error against *production* timings fed back by the
+    /// tracing layer ([`AutoScheduler::record_observed`]).
+    obs_err_sum_pct: f64,
+    obs_n: usize,
 }
 
 /// Hardware-aware parameter selection + plan caching for the BSR engine.
@@ -246,6 +267,31 @@ impl AutoScheduler {
             } else {
                 None
             },
+            observed_samples: st.obs_n,
+            observed_mean_abs_err_pct: if st.obs_n > 0 {
+                Some(st.obs_err_sum_pct / st.obs_n as f64)
+            } else {
+                None
+            },
+        }
+    }
+
+    /// Feed one *observed* planned-spmm wall time back against the memoized
+    /// prediction for `(plan, tokens)`. Called by the engine when tracing
+    /// is enabled; a no-op when no prediction was memoized (sweep policy,
+    /// or the plan re-decided away). Accumulates into
+    /// [`CostModelStats::observed_mean_abs_err_pct`].
+    pub fn record_observed(&self, ep: &ExecPlan, tokens: usize, measured_ms: f64) {
+        if !measured_ms.is_finite() || measured_ms <= 0.0 {
+            return;
+        }
+        let key = (Arc::as_ptr(&ep.plan) as usize, tokens);
+        let mut st = self.cost_state.write().expect("scheduler cost state poisoned");
+        if let Some(&(_, predicted_ms)) = st.memo.get(&key) {
+            if predicted_ms.is_finite() && predicted_ms > 0.0 {
+                st.obs_err_sum_pct += (measured_ms - predicted_ms).abs() / measured_ms * 100.0;
+                st.obs_n += 1;
+            }
         }
     }
 
@@ -314,7 +360,7 @@ impl AutoScheduler {
             return ep.params_for(tokens, &self.hw);
         }
         let key = (Arc::as_ptr(&ep.plan) as usize, tokens);
-        if let Some(&hit) = self
+        if let Some(&(hit, _)) = self
             .cost_state
             .read()
             .expect("scheduler cost state poisoned")
@@ -351,7 +397,16 @@ impl AutoScheduler {
             st.analytic += 1;
             top.params
         };
-        st.memo.insert(key, chosen);
+        // Remember the model's prediction for whatever won, so observed
+        // production timings ([`Self::record_observed`]) can be scored
+        // against it.
+        let predicted_ms = near_ties
+            .iter()
+            .chain(ranked.iter())
+            .find(|e| e.params == chosen)
+            .map(|e| e.predicted_ms)
+            .unwrap_or(0.0);
+        st.memo.insert(key, (chosen, predicted_ms));
         chosen
     }
 
@@ -553,6 +608,26 @@ mod tests {
         // memoized: no second measurement for the same (plan, tokens)
         let _ = sched.params_for(&m, &ep, 16);
         assert_eq!(sched.cost_stats().measured_fallbacks, 1);
+    }
+
+    #[test]
+    fn observed_timings_feed_cost_model_stats() {
+        let sched = AutoScheduler::new(HwSpec::haswell_reference());
+        let m = bsr(BlockShape::new(32, 1), 128, 128, 4, 14);
+        let ep = sched.exec_plan("l0.q", &m);
+        // nothing memoized yet → feedback is dropped
+        sched.record_observed(&ep, 64, 1.0);
+        assert_eq!(sched.cost_stats().observed_samples, 0);
+        let _ = sched.params_for(&m, &ep, 64);
+        sched.record_observed(&ep, 64, 1.0);
+        sched.record_observed(&ep, 64, f64::NAN); // ignored
+        sched.record_observed(&ep, 64, -1.0); // ignored
+        let stats = sched.cost_stats();
+        assert_eq!(stats.observed_samples, 1);
+        assert!(stats.observed_mean_abs_err_pct.is_some());
+        let j = stats.to_json();
+        assert_eq!(j.get("observed_samples").and_then(Json::as_usize), Some(1));
+        assert!(j.get("observed_mean_abs_err_pct").and_then(Json::as_f64).is_some());
     }
 
     #[test]

@@ -199,6 +199,7 @@ impl PlanCache {
             if let Some(hit) = st.map.get_mut(&key) {
                 hit.last_used = tick;
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                crate::trace::instant("sched", "plan_cache.hit", 0, &[]);
                 return Arc::clone(&hit.plan);
             }
         }
@@ -213,6 +214,15 @@ impl PlanCache {
         }
         // Compile outside the lock; the task buffer dedups the underlying
         // SpmmPlan, so a racing compile of the same structure is cheap.
+        let _span = crate::trace::span(
+            "sched",
+            "plan_cache.compile",
+            0,
+            &[
+                ("block_r", m.block.r as i64),
+                ("block_c", m.block.c as i64),
+            ],
+        );
         let plan = buffer.plan_for(label, m);
         let stats = PatternStats::of(m);
         let built = Arc::new(ExecPlan {

@@ -1,0 +1,480 @@
+//! Chrome trace-event export, validation, and worker-utilization
+//! aggregation over a [`Snapshot`].
+//!
+//! The exporter guarantees a *well-formed* trace no matter what the
+//! rings held: a per-thread balance pass drops orphaned span ends
+//! (their begin was overwritten by ring wrap) and synthesizes ends for
+//! still-open begins, so every emitted `"B"` has a matching `"E"` and
+//! timestamps are monotonic per thread. [`validate_chrome_trace`]
+//! re-checks exactly those invariants — it is the `sparsebert
+//! tracecheck` CI gate.
+
+use super::{Phase, Snapshot, TraceEvent};
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+use std::collections::BTreeMap;
+
+/// Process id stamped on every exported event (single-process tracer).
+const PID: usize = 1;
+
+fn event_json(ev: &TraceEvent, ph: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("ph", ph)
+        .set("pid", PID)
+        .set("tid", ev.tid as usize)
+        .set("ts", ev.ts_us)
+        .set("cat", ev.cat)
+        .set("name", ev.name);
+    if ph == "i" {
+        // instant scope: thread
+        j.set("s", "t");
+    }
+    if ph != "E" {
+        let mut args = Json::obj();
+        for &(k, v) in ev.args.iter().take(ev.nargs as usize) {
+            args.set(k, v);
+        }
+        if ev.id != 0 {
+            args.set("batch", ev.id);
+        }
+        j.set("args", args);
+    }
+    j
+}
+
+/// Render a snapshot as Chrome trace-event JSON (`{"traceEvents":
+/// [...]}`), loadable in Perfetto / `chrome://tracing`.
+///
+/// Per thread, events are emitted in timestamp order with balanced
+/// begin/end pairs: an end whose begin fell out of the ring is dropped,
+/// and a begin that never ended (snapshot taken mid-span, or the end
+/// was overwritten) gets a synthetic end at the thread's last seen
+/// timestamp.
+pub fn chrome_trace(snap: &Snapshot) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+    let names: BTreeMap<u32, &str> = snap
+        .threads
+        .iter()
+        .map(|(tid, name)| (*tid, name.as_str()))
+        .collect();
+    let mut by_tid: BTreeMap<u32, Vec<&TraceEvent>> = BTreeMap::new();
+    for ev in &snap.events {
+        by_tid.entry(ev.tid).or_default().push(ev);
+    }
+    for (tid, name) in &names {
+        let mut args = Json::obj();
+        args.set("name", *name);
+        let mut m = Json::obj();
+        m.set("ph", "M")
+            .set("pid", PID)
+            .set("tid", *tid as usize)
+            .set("ts", 0u64)
+            .set("name", "thread_name")
+            .set("args", args);
+        out.push(m);
+    }
+    for (_, mut evs) in by_tid {
+        // Rings are chronological per thread already; the sort is a
+        // safety net for slots recycled mid-snapshot.
+        evs.sort_by_key(|e| e.ts_us);
+        let mut open: Vec<&TraceEvent> = Vec::new();
+        let mut last_ts = 0u64;
+        for ev in evs {
+            last_ts = last_ts.max(ev.ts_us);
+            match ev.phase {
+                Phase::Begin => {
+                    out.push(event_json(ev, "B"));
+                    open.push(ev);
+                }
+                Phase::End => match open.last() {
+                    Some(b) if b.name == ev.name && b.cat == ev.cat => {
+                        open.pop();
+                        out.push(event_json(ev, "E"));
+                    }
+                    // Orphan end: its begin was overwritten. Dropping it
+                    // keeps the stack (and the export) balanced.
+                    _ => {}
+                },
+                Phase::Instant => out.push(event_json(ev, "i")),
+            }
+        }
+        // Close still-open spans innermost-first at the last timestamp.
+        while let Some(b) = open.pop() {
+            let mut e = *b;
+            e.ts_us = last_ts;
+            out.push(event_json(&e, "E"));
+        }
+    }
+    let mut root = Json::obj();
+    root.set("traceEvents", Json::Arr(out))
+        .set("displayTimeUnit", "ms")
+        .set("dropped_events", snap.dropped);
+    root
+}
+
+/// Summary returned by [`validate_chrome_trace`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// Total events in `traceEvents`.
+    pub events: usize,
+    /// Matched begin/end span pairs.
+    pub complete_spans: usize,
+    /// Distinct thread ids seen.
+    pub threads: usize,
+}
+
+/// Validate a Chrome trace-event document: `traceEvents` must exist,
+/// every event needs `ph`/`pid`/`tid` (+ `ts` and `name` on non-`M`
+/// phases), begin/end events must pair up per thread, and timestamps
+/// must be monotonic per thread. This is the contract `sparsebert
+/// tracecheck` enforces in CI on the `cibench --trace` artifact.
+pub fn validate_chrome_trace(doc: &Json) -> Result<TraceSummary, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+    let mut stacks: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut complete_spans = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        ev.get("pid")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("event {i}: missing pid"))?;
+        let tid = ev
+            .get("tid")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("event {i}: missing tid"))?;
+        if ph == "M" {
+            continue;
+        }
+        let ts = ev
+            .get("ts")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("event {i}: missing ts"))?;
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing name"))?;
+        let prev = last_ts.entry(tid).or_insert(f64::NEG_INFINITY);
+        if ts < *prev {
+            return Err(format!(
+                "event {i}: ts {ts} < {prev} — non-monotonic on tid {tid}"
+            ));
+        }
+        *prev = ts;
+        match ph {
+            "B" => stacks.entry(tid).or_default().push(name.to_string()),
+            "E" => {
+                let stack = stacks.entry(tid).or_default();
+                match stack.pop() {
+                    Some(open) if open == name => complete_spans += 1,
+                    Some(open) => {
+                        return Err(format!(
+                            "event {i}: E '{name}' does not match open '{open}' on tid {tid}"
+                        ))
+                    }
+                    None => {
+                        return Err(format!("event {i}: E '{name}' with no open span on tid {tid}"))
+                    }
+                }
+            }
+            "i" | "X" | "C" => {}
+            other => return Err(format!("event {i}: unsupported phase '{other}'")),
+        }
+    }
+    for (tid, stack) in &stacks {
+        if let Some(open) = stack.last() {
+            return Err(format!("unclosed span '{open}' on tid {tid}"));
+        }
+    }
+    Ok(TraceSummary {
+        events: events.len(),
+        complete_spans,
+        threads: last_ts.len().max(stacks.len()),
+    })
+}
+
+/// Derive per-worker utilization from a snapshot's band spans (the
+/// `"pool"/"band"` events emitted by `Pool::run_dynamic`): busy
+/// fraction, band counts, steal counts, and a band-duration histogram.
+/// Rendered as the `workers` gauge in the serving stats JSON.
+pub fn worker_stats(snap: &Snapshot) -> Json {
+    struct Worker {
+        busy_us: u64,
+        bands: u64,
+        steals: u64,
+    }
+    let (mut min_ts, mut max_ts) = (u64::MAX, 0u64);
+    for ev in &snap.events {
+        min_ts = min_ts.min(ev.ts_us);
+        max_ts = max_ts.max(ev.ts_us);
+    }
+    let window_us = max_ts.saturating_sub(min_ts);
+    let mut hist = LatencyHistogram::new();
+    let mut workers: BTreeMap<u32, Worker> = BTreeMap::new();
+    let mut by_tid: BTreeMap<u32, Vec<&TraceEvent>> = BTreeMap::new();
+    for ev in snap
+        .events
+        .iter()
+        .filter(|e| e.cat == "pool" && e.name == "band")
+    {
+        by_tid.entry(ev.tid).or_default().push(ev);
+    }
+    for (tid, mut evs) in by_tid {
+        evs.sort_by_key(|e| e.ts_us);
+        let w = workers.entry(tid).or_insert(Worker {
+            busy_us: 0,
+            bands: 0,
+            steals: 0,
+        });
+        let mut open: Option<&TraceEvent> = None;
+        for ev in evs {
+            match ev.phase {
+                Phase::Begin => {
+                    open = Some(ev);
+                    w.bands += 1;
+                    let claim = ev
+                        .args
+                        .iter()
+                        .take(ev.nargs as usize)
+                        .find(|(k, _)| *k == "claim")
+                        .map(|&(_, v)| v)
+                        .unwrap_or(0);
+                    if claim > 0 {
+                        w.steals += 1;
+                    }
+                }
+                Phase::End => {
+                    if let Some(b) = open.take() {
+                        let dur = ev.ts_us.saturating_sub(b.ts_us);
+                        w.busy_us += dur;
+                        hist.record_us(dur as f64);
+                    }
+                }
+                Phase::Instant => {}
+            }
+        }
+    }
+    let names: BTreeMap<u32, &str> = snap
+        .threads
+        .iter()
+        .map(|(tid, name)| (*tid, name.as_str()))
+        .collect();
+    let per_worker: Vec<Json> = workers
+        .iter()
+        .map(|(tid, w)| {
+            let mut j = Json::obj();
+            j.set("tid", *tid as usize)
+                .set("name", names.get(tid).copied().unwrap_or(""))
+                .set("bands", w.bands)
+                .set("steals", w.steals)
+                .set("busy_us", w.busy_us)
+                .set(
+                    "busy_frac",
+                    if window_us > 0 {
+                        (w.busy_us as f64 / window_us as f64).min(1.0)
+                    } else {
+                        0.0
+                    },
+                );
+            j
+        })
+        .collect();
+    let mut band = Json::obj();
+    band.set("count", hist.count())
+        .set("p50_us", hist.percentile_us(50.0))
+        .set("p95_us", hist.percentile_us(95.0))
+        .set("mean_us", if hist.count() > 0 { hist.mean_us() } else { 0.0 })
+        .set(
+            "buckets",
+            Json::Arr(
+                hist.buckets()
+                    .into_iter()
+                    .map(|(up, c)| {
+                        let mut b = Json::obj();
+                        b.set("up_to_us", up).set("count", c);
+                        b
+                    })
+                    .collect(),
+            ),
+        );
+    let mut j = Json::obj();
+    j.set("enabled", super::enabled())
+        .set("events", snap.events.len())
+        .set("dropped_events", snap.dropped)
+        .set("window_us", window_us)
+        .set("per_worker", Json::Arr(per_worker))
+        .set("band_duration", band);
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn raw(phase: Phase, tid: u32, ts: u64, name: &'static str) -> TraceEvent {
+        TraceEvent {
+            phase,
+            cat: "pool",
+            name,
+            ts_us: ts,
+            tid,
+            id: 0,
+            args: [("", 0), ("", 0)],
+            nargs: 0,
+        }
+    }
+
+    fn band(phase: Phase, tid: u32, ts: u64, claim: i64) -> TraceEvent {
+        TraceEvent {
+            phase,
+            cat: "pool",
+            name: "band",
+            ts_us: ts,
+            tid,
+            id: 0,
+            args: [("lo", 0), ("claim", claim)],
+            nargs: 2,
+        }
+    }
+
+    #[test]
+    fn cross_thread_interleaving_exports_balanced_pairs() {
+        let _g = crate::trace::test_guard();
+        let was = crate::trace::enabled();
+        crate::trace::set_enabled(true);
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for i in 0..50i64 {
+                        let _outer = crate::trace::span("xthread", "work", t, &[("i", i)]);
+                        let _inner = crate::trace::span("xthread", "sub", 0, &[]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        crate::trace::set_enabled(was);
+        let doc = chrome_trace(&crate::trace::snapshot());
+        let summary = validate_chrome_trace(&doc).expect("exported trace must validate");
+        assert!(summary.complete_spans >= 400, "{summary:?}");
+        assert!(summary.threads >= 4, "{summary:?}");
+        // and the serialized document round-trips through the parser
+        let text = doc.to_string_pretty();
+        let parsed = json::parse(&text).expect("chrome trace JSON parses");
+        assert!(validate_chrome_trace(&parsed).is_ok());
+    }
+
+    #[test]
+    fn orphan_ends_dropped_and_open_begins_closed() {
+        let snap = Snapshot {
+            events: vec![
+                // orphan end: its begin fell out of the ring
+                raw(Phase::End, 1, 5, "lost"),
+                raw(Phase::Begin, 1, 10, "kept"),
+                raw(Phase::End, 1, 20, "kept"),
+                // open begin: snapshot taken mid-span
+                raw(Phase::Begin, 1, 30, "open"),
+            ],
+            threads: vec![(1, "w".to_string())],
+            dropped: 3,
+        };
+        let doc = chrome_trace(&snap);
+        let summary = validate_chrome_trace(&doc).expect("balance pass yields a valid trace");
+        assert_eq!(summary.complete_spans, 2); // kept + synthesized open
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let lost = events
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("lost"))
+            .count();
+        assert_eq!(lost, 0, "orphan end must be dropped");
+        // the synthetic end lands at the thread's last timestamp
+        let open_end = events
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(Json::as_str) == Some("open")
+                    && e.get("ph").and_then(Json::as_str) == Some("E")
+            })
+            .expect("synthesized end");
+        assert_eq!(open_end.get("ts").and_then(Json::as_f64), Some(30.0));
+        assert_eq!(doc.get("dropped_events").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        // no traceEvents
+        assert!(validate_chrome_trace(&json::parse("{}").unwrap()).is_err());
+        // unbalanced: E with no open span
+        let unbalanced = r#"{"traceEvents":[
+            {"ph":"E","pid":1,"tid":1,"ts":5,"name":"a"}]}"#;
+        assert!(validate_chrome_trace(&json::parse(unbalanced).unwrap()).is_err());
+        // unclosed B
+        let unclosed = r#"{"traceEvents":[
+            {"ph":"B","pid":1,"tid":1,"ts":5,"name":"a"}]}"#;
+        assert!(validate_chrome_trace(&json::parse(unclosed).unwrap()).is_err());
+        // non-monotonic ts on one tid
+        let backwards = r#"{"traceEvents":[
+            {"ph":"B","pid":1,"tid":1,"ts":10,"name":"a"},
+            {"ph":"E","pid":1,"tid":1,"ts":4,"name":"a"}]}"#;
+        assert!(validate_chrome_trace(&json::parse(backwards).unwrap()).is_err());
+        // mismatched nesting
+        let crossed = r#"{"traceEvents":[
+            {"ph":"B","pid":1,"tid":1,"ts":1,"name":"a"},
+            {"ph":"B","pid":1,"tid":1,"ts":2,"name":"b"},
+            {"ph":"E","pid":1,"tid":1,"ts":3,"name":"a"},
+            {"ph":"E","pid":1,"tid":1,"ts":4,"name":"b"}]}"#;
+        assert!(validate_chrome_trace(&json::parse(crossed).unwrap()).is_err());
+        // a correct document passes
+        let good = r#"{"traceEvents":[
+            {"ph":"M","pid":1,"tid":1,"name":"thread_name","args":{"name":"w"}},
+            {"ph":"B","pid":1,"tid":1,"ts":1,"name":"a"},
+            {"ph":"i","pid":1,"tid":1,"ts":2,"name":"tick","s":"t"},
+            {"ph":"E","pid":1,"tid":1,"ts":3,"name":"a"}]}"#;
+        let s = validate_chrome_trace(&json::parse(good).unwrap()).unwrap();
+        assert_eq!(s.complete_spans, 1);
+        assert_eq!(s.events, 4);
+    }
+
+    #[test]
+    fn worker_stats_derives_busy_bands_and_steals() {
+        let snap = Snapshot {
+            events: vec![
+                band(Phase::Begin, 1, 0, 0),
+                band(Phase::End, 1, 40, 0),
+                band(Phase::Begin, 1, 50, 1),
+                band(Phase::End, 1, 100, 1),
+                band(Phase::Begin, 2, 0, 0),
+                band(Phase::End, 2, 25, 0),
+            ],
+            threads: vec![(1, "w1".to_string()), (2, "w2".to_string())],
+            dropped: 0,
+        };
+        let j = worker_stats(&snap);
+        assert_eq!(j.get("window_us").and_then(Json::as_f64), Some(100.0));
+        let per = j.get("per_worker").and_then(Json::as_arr).unwrap();
+        assert_eq!(per.len(), 2);
+        let w1 = &per[0];
+        assert_eq!(w1.get("tid").and_then(Json::as_usize), Some(1));
+        assert_eq!(w1.get("bands").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(w1.get("steals").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(w1.get("busy_us").and_then(Json::as_f64), Some(90.0));
+        assert!((w1.get("busy_frac").and_then(Json::as_f64).unwrap() - 0.9).abs() < 1e-9);
+        let w2 = &per[1];
+        assert_eq!(w2.get("steals").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(w2.get("busy_us").and_then(Json::as_f64), Some(25.0));
+        let band_hist = j.get("band_duration").unwrap();
+        assert_eq!(band_hist.get("count").and_then(Json::as_f64), Some(3.0));
+        assert!(!band_hist
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .is_empty());
+    }
+}

@@ -1,0 +1,523 @@
+//! Low-overhead, always-compiled runtime tracing.
+//!
+//! The subsystem behind `sparsebert serve --trace-out`, `sparsebert
+//! cibench --trace`, the `{"cmd": "trace"}` server command, and the
+//! `[observability]` manifest section. Design:
+//!
+//! * **Per-thread lock-free ring buffers.** The first event a thread
+//!   emits registers a fixed-capacity ring in the global registry; every
+//!   subsequent event is a handful of relaxed atomic stores guarded by a
+//!   per-slot seqlock generation counter. The producer never blocks and
+//!   never allocates on the hot path; on wrap the oldest event is
+//!   overwritten.
+//! * **Runtime-enabled.** Tracing compiles in unconditionally but is
+//!   gated by one relaxed atomic load ([`enabled`]); a call site on a
+//!   disabled process costs a load and a branch, so the band-claim loop
+//!   in `util::pool` can stay instrumented permanently.
+//! * **Non-stopping snapshots.** [`snapshot`] copies every ring without
+//!   pausing producers: a slot whose seqlock generation moved while it
+//!   was being copied was being overwritten and is skipped.
+//! * **Chrome trace export.** [`export::chrome_trace`] renders a
+//!   snapshot as Chrome trace-event JSON loadable in Perfetto /
+//!   `chrome://tracing`, with a per-thread balance pass that drops
+//!   orphaned span ends (their begin was overwritten) and closes
+//!   still-open spans, so the output is always well-formed.
+//!
+//! The span taxonomy, event schema, and overhead budget are documented
+//! in `docs/observability.md`.
+
+pub mod export;
+
+use std::sync::atomic::{fence, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread ring capacity in events (~1.8 MB per ring).
+pub const DEFAULT_RING_CAPACITY: usize = 16_384;
+
+/// Maximum number of key/value args carried on one event.
+pub const MAX_ARGS: usize = 2;
+
+/// Chrome trace-event phase of one [`TraceEvent`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Span begin (`ph: "B"`).
+    Begin,
+    /// Span end (`ph: "E"`).
+    End,
+    /// Point event (`ph: "i"`).
+    Instant,
+}
+
+/// One fixed-size trace record.
+///
+/// `Copy` by design: category, name, and arg keys are `&'static str` so
+/// a record encodes to a flat array of words the ring can store through
+/// relaxed atomics (no allocation, no drop glue, torn reads detectable).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Begin / end / instant.
+    pub phase: Phase,
+    /// Coarse grouping (`"pool"`, `"kernel"`, `"coord"`, `"sched"`, …).
+    pub cat: &'static str,
+    /// Event name; begin/end pairs match on it.
+    pub name: &'static str,
+    /// Microseconds since the trace clock epoch ([`now_us`]).
+    pub ts_us: u64,
+    /// Trace-local thread id (assigned at ring registration).
+    pub tid: u32,
+    /// Correlation id (batch sequence number; `0` = none).
+    pub id: u64,
+    /// Up to [`MAX_ARGS`] integer args; unused slots are `("", 0)`.
+    pub args: [(&'static str, i64); MAX_ARGS],
+    /// How many of `args` are live.
+    pub nargs: u8,
+}
+
+/// Words per encoded event: packed meta, ts, id, then (ptr, len) pairs
+/// for cat/name/arg-keys plus the two arg values.
+const WORDS: usize = 13;
+
+fn encode(ev: &TraceEvent) -> [u64; WORDS] {
+    let ph = match ev.phase {
+        Phase::Begin => 0u64,
+        Phase::End => 1,
+        Phase::Instant => 2,
+    };
+    let meta = ph | ((ev.nargs as u64) << 2) | ((ev.tid as u64) << 8);
+    [
+        meta,
+        ev.ts_us,
+        ev.id,
+        ev.cat.as_ptr() as u64,
+        ev.cat.len() as u64,
+        ev.name.as_ptr() as u64,
+        ev.name.len() as u64,
+        ev.args[0].0.as_ptr() as u64,
+        ev.args[0].0.len() as u64,
+        ev.args[0].1 as u64,
+        ev.args[1].0.as_ptr() as u64,
+        ev.args[1].0.len() as u64,
+        ev.args[1].1 as u64,
+    ]
+}
+
+/// Rebuild a `&'static str` from the (ptr, len) words of a
+/// seq-validated slot.
+///
+/// SAFETY: callers must only pass word pairs read from a slot whose
+/// seqlock generation was stable across the copy, so the pair was
+/// written together by [`encode`] from a live `&'static str`.
+unsafe fn decode_str(ptr: u64, len: u64) -> &'static str {
+    std::str::from_utf8_unchecked(std::slice::from_raw_parts(ptr as *const u8, len as usize))
+}
+
+fn decode(w: &[u64; WORDS]) -> TraceEvent {
+    let phase = match w[0] & 0b11 {
+        0 => Phase::Begin,
+        1 => Phase::End,
+        _ => Phase::Instant,
+    };
+    let nargs = ((w[0] >> 2) & 0x3f) as u8;
+    let tid = (w[0] >> 8) as u32;
+    // SAFETY: the caller validated the slot's generation (see
+    // `Ring::snapshot_into`), so every (ptr, len) pair was written
+    // together from a real `&'static str`.
+    unsafe {
+        TraceEvent {
+            phase,
+            cat: decode_str(w[3], w[4]),
+            name: decode_str(w[5], w[6]),
+            ts_us: w[1],
+            tid,
+            id: w[2],
+            args: [
+                (decode_str(w[7], w[8]), w[9] as i64),
+                (decode_str(w[10], w[11]), w[12] as i64),
+            ],
+            nargs,
+        }
+    }
+}
+
+struct Slot {
+    /// Seqlock generation: `2 × writes-completed`; odd while a write is
+    /// in flight.
+    seq: AtomicU64,
+    words: [AtomicU64; WORDS],
+}
+
+/// One thread's event ring. Single producer (the owning thread), any
+/// number of concurrent snapshot readers.
+pub(crate) struct Ring {
+    tid: u32,
+    name: String,
+    slots: Box<[Slot]>,
+    /// Total events ever written; `head % capacity` is the next slot.
+    head: AtomicU64,
+}
+
+impl Ring {
+    fn new(tid: u32, name: String, capacity: usize) -> Ring {
+        let cap = capacity.max(2);
+        let slots: Vec<Slot> = (0..cap)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                words: std::array::from_fn(|_| AtomicU64::new(0)),
+            })
+            .collect();
+        Ring {
+            tid,
+            name,
+            slots: slots.into_boxed_slice(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    /// Write one event. Producer-only (the owning thread); never blocks
+    /// and never allocates — on wrap the oldest event is overwritten.
+    fn push(&self, ev: &TraceEvent) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h % self.slots.len() as u64) as usize];
+        let gen = slot.seq.load(Ordering::Relaxed);
+        slot.seq.store(gen + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        for (w, v) in slot.words.iter().zip(encode(ev)) {
+            w.store(v, Ordering::Relaxed);
+        }
+        fence(Ordering::Release);
+        slot.seq.store(gen + 2, Ordering::Release);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Copy the stable events oldest-first into `out`; returns how many
+    /// events this ring has dropped to overwrite. Slots the producer is
+    /// concurrently rewriting fail their generation check and are
+    /// skipped rather than blocking either side.
+    fn snapshot_into(&self, out: &mut Vec<TraceEvent>) -> u64 {
+        let cap = self.slots.len() as u64;
+        let head = self.head.load(Ordering::Acquire);
+        for i in head.saturating_sub(cap)..head {
+            let slot = &self.slots[(i % cap) as usize];
+            // The write that stored event index `i` left the slot at
+            // generation 2 × (i / cap + 1); anything else means the slot
+            // is torn or was already recycled for a newer event.
+            let expect = 2 * (i / cap + 1);
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 != expect {
+                continue;
+            }
+            let mut words = [0u64; WORDS];
+            for (dst, w) in words.iter_mut().zip(slot.words.iter()) {
+                *dst = w.load(Ordering::Relaxed);
+            }
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != s1 {
+                continue;
+            }
+            out.push(decode(&words));
+        }
+        head.saturating_sub(cap)
+    }
+}
+
+struct Registry {
+    enabled: AtomicBool,
+    capacity: AtomicUsize,
+    next_tid: AtomicU32,
+    start: Instant,
+    rings: Mutex<Vec<Arc<Ring>>>,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        enabled: AtomicBool::new(false),
+        capacity: AtomicUsize::new(DEFAULT_RING_CAPACITY),
+        next_tid: AtomicU32::new(1),
+        start: Instant::now(),
+        rings: Mutex::new(Vec::new()),
+    })
+}
+
+thread_local! {
+    static THREAD_RING: std::cell::OnceCell<Arc<Ring>> = const { std::cell::OnceCell::new() };
+}
+
+fn with_ring<F: FnOnce(&Ring, &Registry)>(f: F) {
+    let reg = registry();
+    THREAD_RING.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let tid = reg.next_tid.fetch_add(1, Ordering::Relaxed);
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{tid}"));
+            let ring = Arc::new(Ring::new(tid, name, reg.capacity.load(Ordering::Relaxed)));
+            reg.rings
+                .lock()
+                .expect("trace registry poisoned")
+                .push(Arc::clone(&ring));
+            ring
+        });
+        f(ring, reg);
+    });
+}
+
+fn emit(phase: Phase, cat: &'static str, name: &'static str, id: u64, args: &[(&'static str, i64)]) {
+    with_ring(|ring, reg| {
+        let mut a = [("", 0i64); MAX_ARGS];
+        let n = args.len().min(MAX_ARGS);
+        a[..n].copy_from_slice(&args[..n]);
+        let ev = TraceEvent {
+            phase,
+            cat,
+            name,
+            ts_us: reg.start.elapsed().as_micros() as u64,
+            tid: ring.tid,
+            id,
+            args: a,
+            nargs: n as u8,
+        };
+        ring.push(&ev);
+    });
+}
+
+/// Whether tracing is currently recording. One relaxed load — this is
+/// the entire cost of a disabled call site.
+#[inline]
+pub fn enabled() -> bool {
+    registry().enabled.load(Ordering::Relaxed)
+}
+
+/// Turn recording on or off process-wide. Rings persist across toggles,
+/// so a snapshot after disabling still exports what was recorded.
+pub fn set_enabled(on: bool) {
+    registry().enabled.store(on, Ordering::Relaxed);
+}
+
+/// Set the per-thread ring capacity (events) used by threads that
+/// register *after* this call; existing rings keep their size.
+pub fn set_ring_capacity(capacity: usize) {
+    registry().capacity.store(capacity.max(2), Ordering::Relaxed);
+}
+
+/// Microseconds since the trace clock epoch (the registry's creation).
+pub fn now_us() -> u64 {
+    registry().start.elapsed().as_micros() as u64
+}
+
+/// Emit a point event (`ph: "i"`) if tracing is enabled.
+#[inline]
+pub fn instant(cat: &'static str, name: &'static str, id: u64, args: &[(&'static str, i64)]) {
+    if enabled() {
+        emit(Phase::Instant, cat, name, id, args);
+    }
+}
+
+/// RAII span: [`span`] emits the begin event, dropping the guard emits
+/// the matching end on the same thread.
+#[must_use = "dropping the guard immediately ends the span"]
+pub struct SpanGuard {
+    live: bool,
+    cat: &'static str,
+    name: &'static str,
+    id: u64,
+}
+
+/// Open a span if tracing is enabled; the returned guard closes it on
+/// drop. When disabled this is one atomic load and a trivial struct.
+#[inline]
+pub fn span(
+    cat: &'static str,
+    name: &'static str,
+    id: u64,
+    args: &[(&'static str, i64)],
+) -> SpanGuard {
+    let live = enabled();
+    if live {
+        emit(Phase::Begin, cat, name, id, args);
+    }
+    SpanGuard {
+        live,
+        cat,
+        name,
+        id,
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.live {
+            emit(Phase::End, self.cat, self.name, self.id, &[]);
+        }
+    }
+}
+
+/// A point-in-time copy of every ring: the raw material for
+/// [`export::chrome_trace`] and [`export::worker_stats`].
+pub struct Snapshot {
+    /// All stable events, grouped by ring (chronological within a ring).
+    pub events: Vec<TraceEvent>,
+    /// `(tid, thread name)` for every registered ring.
+    pub threads: Vec<(u32, String)>,
+    /// Events lost to ring overwrites across all rings.
+    pub dropped: u64,
+}
+
+/// Snapshot every registered ring without stopping producers.
+pub fn snapshot() -> Snapshot {
+    let rings: Vec<Arc<Ring>> = registry()
+        .rings
+        .lock()
+        .expect("trace registry poisoned")
+        .clone();
+    let mut events = Vec::new();
+    let mut threads = Vec::with_capacity(rings.len());
+    let mut dropped = 0u64;
+    for ring in rings {
+        threads.push((ring.tid, ring.name.clone()));
+        dropped += ring.snapshot_into(&mut events);
+    }
+    Snapshot {
+        events,
+        threads,
+        dropped,
+    }
+}
+
+/// Serialize tests that toggle the process-wide enabled flag.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, ts: u64) -> TraceEvent {
+        TraceEvent {
+            phase: Phase::Instant,
+            cat: "t",
+            name: "e",
+            ts_us: ts,
+            tid: 7,
+            id,
+            args: [("k", 3), ("", 0)],
+            nargs: 1,
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let e = TraceEvent {
+            phase: Phase::Begin,
+            cat: "pool",
+            name: "band",
+            ts_us: 123_456,
+            tid: 42,
+            id: 9,
+            args: [("lo", -4), ("claim", 2)],
+            nargs: 2,
+        };
+        let d = decode(&encode(&e));
+        assert_eq!(d.phase, Phase::Begin);
+        assert_eq!(d.cat, "pool");
+        assert_eq!(d.name, "band");
+        assert_eq!(d.ts_us, 123_456);
+        assert_eq!(d.tid, 42);
+        assert_eq!(d.id, 9);
+        assert_eq!(d.nargs, 2);
+        assert_eq!(d.args[0], ("lo", -4));
+        assert_eq!(d.args[1], ("claim", 2));
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_never_blocks() {
+        let ring = Ring::new(7, "test".into(), 8);
+        for i in 0..20u64 {
+            ring.push(&ev(i, i));
+        }
+        let mut out = Vec::new();
+        let dropped = ring.snapshot_into(&mut out);
+        assert_eq!(dropped, 12);
+        assert_eq!(out.len(), 8);
+        // exactly the newest 8 survive, oldest-first
+        let ids: Vec<u64> = out.iter().map(|e| e.id).collect();
+        assert_eq!(ids, (12..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ring_below_capacity_keeps_everything() {
+        let ring = Ring::new(1, "test".into(), 16);
+        for i in 0..5u64 {
+            ring.push(&ev(i, 10 * i));
+        }
+        let mut out = Vec::new();
+        assert_eq!(ring.snapshot_into(&mut out), 0);
+        assert_eq!(out.len(), 5);
+        assert!(out.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+    }
+
+    #[test]
+    fn span_guards_emit_balanced_pairs() {
+        let _g = test_guard();
+        let was = enabled();
+        set_enabled(true);
+        {
+            let _outer = span("trace-test", "outer", 5, &[("k", 1)]);
+            let _inner = span("trace-test", "inner", 0, &[]);
+        }
+        instant("trace-test", "tick", 0, &[]);
+        set_enabled(was);
+        let snap = snapshot();
+        let mine: Vec<&TraceEvent> = snap
+            .events
+            .iter()
+            .filter(|e| e.cat == "trace-test")
+            .collect();
+        let begins = mine.iter().filter(|e| e.phase == Phase::Begin).count();
+        let ends = mine.iter().filter(|e| e.phase == Phase::End).count();
+        assert!(begins >= 2, "{mine:?}");
+        assert_eq!(begins, ends);
+        assert!(mine
+            .iter()
+            .any(|e| e.phase == Phase::Instant && e.name == "tick"));
+        // inner end precedes outer end (RAII drop order)
+        let order: Vec<&str> = mine
+            .iter()
+            .filter(|e| e.phase == Phase::End)
+            .map(|e| e.name)
+            .collect();
+        let (i_inner, i_outer) = (
+            order.iter().position(|n| *n == "inner").unwrap(),
+            order.iter().position(|n| *n == "outer").unwrap(),
+        );
+        assert!(i_inner < i_outer);
+    }
+
+    #[test]
+    fn disabled_emits_nothing() {
+        let _g = test_guard();
+        let was = enabled();
+        set_enabled(false);
+        let before = snapshot()
+            .events
+            .iter()
+            .filter(|e| e.cat == "trace-off")
+            .count();
+        {
+            let _s = span("trace-off", "ghost", 0, &[]);
+            instant("trace-off", "ghost-i", 0, &[]);
+        }
+        let after = snapshot()
+            .events
+            .iter()
+            .filter(|e| e.cat == "trace-off")
+            .count();
+        set_enabled(was);
+        assert_eq!(before, after);
+    }
+}

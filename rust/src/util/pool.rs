@@ -243,6 +243,7 @@ impl Pool {
             .min(n.div_ceil(grain))
             .max(1);
         if workers <= 1 || CURRENT_POOL.with(|c| c.get()) == self.id {
+            let _band = crate::trace::span("pool", "band", 0, &[("lo", 0), ("claim", 0)]);
             f(0..n);
             return;
         }
@@ -258,12 +259,23 @@ impl Pool {
             let run = Arc::clone(&run);
             self.submit(move || {
                 let _g = RunGuard(&run);
+                // `claim` counts this worker's grabs from the shared
+                // cursor; claim > 0 bands are "steals" in the worker
+                // utilization gauge (work beyond the first grab).
+                let mut claims: i64 = 0;
                 loop {
                     let lo = run.next.fetch_add(grain, Ordering::Relaxed);
                     if lo >= n {
                         break;
                     }
                     let span = lo..(lo + grain).min(n);
+                    let _band = crate::trace::span(
+                        "pool",
+                        "band",
+                        0,
+                        &[("lo", lo as i64), ("claim", claims)],
+                    );
+                    claims += 1;
                     if let Err(payload) =
                         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                             f_static(span)

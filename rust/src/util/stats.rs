@@ -190,6 +190,19 @@ impl LatencyHistogram {
         }
         self.max_us
     }
+
+    /// Nonzero buckets as `(upper-edge µs, count)` pairs — the exported
+    /// histogram shape behind the stats JSON's `latency_buckets` field
+    /// (groundwork for SLO admission control, which needs the full
+    /// distribution rather than point percentiles).
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| (self.base_us * self.growth.powi(i as i32 + 1), c))
+            .collect()
+    }
 }
 
 impl Default for LatencyHistogram {
