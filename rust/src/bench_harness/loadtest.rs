@@ -1,0 +1,277 @@
+//! SLO-vs-serving-knob scenario grid: block shape × pipeline depth ×
+//! admission policy, each cell driven closed-loop through the real
+//! coordinator path (intake → admission gate → batcher → depth-N
+//! prepare/execute pipeline) by the [`crate::loadgen`] client fleet.
+//!
+//! Where [`super::serving`] replays a fixed burst to compare pipeline
+//! modes, this grid offers a *seeded Poisson arrival stream* and reports
+//! SLO-style tails per cell — the co-design question the paper poses
+//! (which compiled block shape, at which serving configuration, holds a
+//! latency target under load) answered as one table. Every cell replays
+//! the identical schedule (same seed), so rows differ only by the knob
+//! under test.
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::pool::{AdmissionPolicy, PipelineMode};
+use crate::coordinator::{Router, VariantConfig};
+use crate::deploy::EngineBuilder;
+use crate::loadgen::{
+    parse_splits, run_closed_loop, ArrivalProcess, RequestSink, RouterSink, SeqLenDist, SloReport,
+    SloTargets, WorkloadSpec,
+};
+use crate::model::config::BertConfig;
+use crate::model::engine::EngineKind;
+use crate::sparse::prune::BlockShape;
+use crate::util::json::Json;
+use crate::util::pool::{default_threads, Pool};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Grid configuration.
+#[derive(Debug, Clone)]
+pub struct LoadSweepConfig {
+    pub model: BertConfig,
+    pub sparsity: f64,
+    /// Compiled block shapes to sweep (one engine each, shared pool).
+    pub blocks: Vec<BlockShape>,
+    /// Pattern-pool size for structured pruning.
+    pub pool: usize,
+    pub threads: usize,
+    /// Prepare→execute channel depths to sweep.
+    pub depths: Vec<usize>,
+    pub admissions: Vec<AdmissionPolicy>,
+    /// Admission bound applied to every cell.
+    pub queue_bound: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Offered Poisson rate, requests/s.
+    pub rate_rps: f64,
+    pub duration_us: u64,
+    pub clients: usize,
+    pub seq_lens: SeqLenDist,
+    pub slo: SloTargets,
+    pub seed: u64,
+}
+
+impl Default for LoadSweepConfig {
+    fn default() -> Self {
+        let quick = std::env::var("SPARSEBERT_BENCH_QUICK").is_ok();
+        LoadSweepConfig {
+            model: BertConfig::tiny(),
+            sparsity: 0.8,
+            blocks: vec![
+                BlockShape::new(32, 1),
+                BlockShape::new(1, 32),
+                BlockShape::new(32, 32),
+            ],
+            pool: 16,
+            threads: default_threads(),
+            depths: vec![1, 2, 4],
+            admissions: vec![AdmissionPolicy::Block, AdmissionPolicy::Shed],
+            queue_bound: 16,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            rate_rps: 200.0,
+            duration_us: if quick { 500_000 } else { 2_000_000 },
+            clients: 4,
+            seq_lens: SeqLenDist::Fixed(48),
+            slo: SloTargets::default(),
+            seed: 1234,
+        }
+    }
+}
+
+impl LoadSweepConfig {
+    /// Tiny profile for unit/integration tests and the CI smoke job.
+    pub fn smoke() -> LoadSweepConfig {
+        LoadSweepConfig {
+            model: BertConfig::micro(),
+            sparsity: 0.6,
+            blocks: vec![BlockShape::new(2, 4)],
+            pool: 4,
+            threads: 2,
+            depths: vec![1, 2],
+            admissions: vec![AdmissionPolicy::Block, AdmissionPolicy::Shed],
+            queue_bound: 8,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            rate_rps: 400.0,
+            duration_us: 250_000,
+            clients: 2,
+            seq_lens: SeqLenDist::Fixed(6),
+            slo: SloTargets::default(),
+            seed: 7,
+        }
+    }
+}
+
+/// One cell of the grid.
+#[derive(Debug, Clone)]
+pub struct LoadSweepRow {
+    pub block: BlockShape,
+    pub depth: usize,
+    pub admission: AdmissionPolicy,
+    pub scheduled: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub achieved_rps: f64,
+    pub slo_met: bool,
+}
+
+/// Run the block × depth × admission grid. One engine per block shape
+/// (all sharing one engine-side pool), a fresh router per cell so shed
+/// counters and queue-depth peaks are isolated, and one seeded schedule
+/// replayed into every cell.
+pub fn run_load_sweep(cfg: &LoadSweepConfig) -> Vec<LoadSweepRow> {
+    let shared = Arc::new(Pool::new(cfg.threads));
+    let workload = WorkloadSpec {
+        arrivals: ArrivalProcess::poisson(cfg.rate_rps),
+        seq_lens: cfg.seq_lens.clone(),
+        splits: parse_splits("tvm+").expect("static split parses"),
+        vocab: cfg.model.vocab,
+        duration_us: cfg.duration_us,
+        seed: cfg.seed,
+    };
+    let schedule = workload.schedule();
+    let mut rows = Vec::new();
+    for &block in &cfg.blocks {
+        let built = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights_synthetic(cfg.model.clone(), 1234)
+            .block(block)
+            .sparsity(cfg.sparsity)
+            .prune_pool(cfg.pool)
+            .threads(cfg.threads)
+            .exec_pool(Arc::clone(&shared))
+            .build()
+            .expect("block shape must divide the model geometry");
+        let (engine, w) = (built.engine, built.weights);
+        for &depth in &cfg.depths {
+            for &admission in &cfg.admissions {
+                let mut router = Router::with_exec_pool(Arc::clone(&shared));
+                let vcfg = VariantConfig::new(
+                    BatchPolicy {
+                        max_batch: cfg.max_batch,
+                        max_wait: cfg.max_wait,
+                    },
+                    cfg.threads,
+                )
+                .with_mode(PipelineMode::Pipelined)
+                .with_pipeline_depth(depth)
+                .with_queue_bound(cfg.queue_bound)
+                .with_admission(admission);
+                router.register_with_config("tvm+", Arc::clone(&engine), Arc::clone(&w), vcfg);
+                let router = Arc::new(router);
+                let sink_router = Arc::clone(&router);
+                let outcome = run_closed_loop(&schedule, cfg.clients, move |_| {
+                    Ok(Box::new(RouterSink::new(Arc::clone(&sink_router)))
+                        as Box<dyn RequestSink + Send>)
+                })
+                .expect("in-process sinks cannot fail to connect");
+                router.shutdown();
+                let report = SloReport::from_outcome(&outcome, &cfg.slo);
+                rows.push(LoadSweepRow {
+                    block,
+                    depth,
+                    admission,
+                    scheduled: report.scheduled,
+                    completed: report.completed,
+                    shed: report.shed,
+                    errors: report.errors,
+                    p50_ms: report.p50_us as f64 / 1e3,
+                    p99_ms: report.p99_us as f64 / 1e3,
+                    achieved_rps: report.achieved_rps,
+                    slo_met: report.slo_met,
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Render the grid as an aligned text table.
+pub fn render_load_sweep(rows: &[LoadSweepRow], title: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<8} {:>6} {:>9} {:>6} {:>6} {:>6} {:>9} {:>9} {:>9} {:>5}\n",
+        "block", "depth", "admission", "sched", "ok", "shed", "p50 ms", "p99 ms", "rps", "slo"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<8} {:>6} {:>9} {:>6} {:>6} {:>6} {:>9.1} {:>9.1} {:>9.1} {:>5}\n",
+            r.block.to_string(),
+            r.depth,
+            r.admission.as_str(),
+            r.scheduled,
+            r.completed,
+            r.shed,
+            r.p50_ms,
+            r.p99_ms,
+            r.achieved_rps,
+            if r.slo_met { "ok" } else { "MISS" }
+        ));
+    }
+    out
+}
+
+/// JSON export (`BENCH_ci.json` loadtest section).
+pub fn load_sweep_json(rows: &[LoadSweepRow], meta: &[(&str, Json)]) -> Json {
+    let mut root = Json::obj();
+    for (k, v) in meta {
+        root.set(k, v.clone());
+    }
+    let cells: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut j = Json::obj();
+            j.set("block", r.block.to_string())
+                .set("pipeline_depth", r.depth)
+                .set("admission", r.admission.as_str())
+                .set("scheduled", r.scheduled as usize)
+                .set("completed", r.completed as usize)
+                .set("shed", r.shed as usize)
+                .set("errors", r.errors as usize)
+                .set("p50_ms", r.p50_ms)
+                .set("p99_ms", r.p99_ms)
+                .set("achieved_rps", r.achieved_rps)
+                .set("slo_met", r.slo_met);
+            j
+        })
+        .collect();
+    root.set("rows", cells);
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_sweep_smoke() {
+        let cfg = LoadSweepConfig::smoke();
+        let rows = run_load_sweep(&cfg);
+        assert_eq!(
+            rows.len(),
+            cfg.blocks.len() * cfg.depths.len() * cfg.admissions.len()
+        );
+        for r in &rows {
+            assert_eq!(r.scheduled, r.completed + r.shed + r.errors);
+            assert_eq!(r.errors, 0, "no cell may error: {r:?}");
+            assert!(r.completed > 0, "every cell completes some requests: {r:?}");
+        }
+        // closed-loop blocking admission never sheds; only the shed cells may
+        for r in rows.iter().filter(|r| r.admission == AdmissionPolicy::Block) {
+            assert_eq!(r.shed, 0, "block admission must not shed: {r:?}");
+        }
+        let text = render_load_sweep(&rows, "smoke");
+        assert!(text.contains("admission") && text.contains("p99 ms"), "{text}");
+        let j = load_sweep_json(&rows, &[("experiment", Json::Str("smoke".into()))]);
+        assert_eq!(
+            j.get("rows").and_then(Json::as_arr).map(|a| a.len()),
+            Some(rows.len())
+        );
+    }
+}

@@ -16,6 +16,10 @@
 //! * [`serving`] — the A3 serving sweep: pipelined vs barrier
 //!   coordinator mode across batch-size caps (also behind `sparsebert
 //!   cibench`, whose JSON becomes the CI `BENCH_ci.json` artifact);
+//! * [`loadtest`] — the SLO grid: block shape × pipeline depth ×
+//!   admission policy under a seeded closed-loop Poisson load
+//!   ([`crate::loadgen`]), reporting tail latencies and shed counts per
+//!   cell (methodology in `docs/serving-load.md`);
 //! * [`warmstart`] — the cold-vs-warm artifact-store smoke: first run
 //!   populates a plan store, second run must reload everything (zero
 //!   live plannings, zero BSR re-packs), asserted by `cibench`;
@@ -30,11 +34,15 @@
 
 pub mod costcheck;
 pub mod figure2;
+pub mod loadtest;
 pub mod report;
 pub mod serving;
 pub mod table1;
 pub mod warmstart;
 
+pub use loadtest::{
+    load_sweep_json, render_load_sweep, run_load_sweep, LoadSweepConfig, LoadSweepRow,
+};
 pub use serving::{
     pipelined_speedup, render_serving_sweep, run_serving_sweep, serving_sweep_json,
     ServingSweepConfig, ServingSweepRow,

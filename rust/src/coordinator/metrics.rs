@@ -112,6 +112,14 @@ struct VariantMetrics {
     /// Batches closed by the size cap (vs the deadline) — a sustained
     /// ratio near 1.0 means the window never limits throughput.
     full_batches: u64,
+    /// Requests refused at admission under the `shed` policy.
+    shed: u64,
+    /// Requests admitted with truncated tokens under the `degrade` policy.
+    degraded: u64,
+    /// Admission-queue depth after the most recent admit/release.
+    queue_depth: u64,
+    /// High-water mark of the admission queue.
+    queue_depth_peak: u64,
     /// Per-second request counts for the sliding throughput window.
     rate: RateWindow,
     spans: Vec<StageSpan>,
@@ -179,6 +187,46 @@ impl Metrics {
         if full {
             v.full_batches += 1;
         }
+    }
+
+    /// Record one request refused at admission (the `shed` policy).
+    pub fn record_shed(&self, variant: &str) {
+        let mut m = self.variants.lock().expect("metrics poisoned");
+        m.entry(variant.to_string()).or_default().shed += 1;
+    }
+
+    /// Record one request admitted with truncated tokens (the `degrade`
+    /// policy).
+    pub fn record_degraded(&self, variant: &str) {
+        let mut m = self.variants.lock().expect("metrics poisoned");
+        m.entry(variant.to_string()).or_default().degraded += 1;
+    }
+
+    /// Record the admission-queue depth observed after an admit or a
+    /// release; maintains the high-water mark.
+    pub fn record_queue_depth(&self, variant: &str, depth: usize) {
+        let mut m = self.variants.lock().expect("metrics poisoned");
+        let v = m.entry(variant.to_string()).or_default();
+        v.queue_depth = depth as u64;
+        v.queue_depth_peak = v.queue_depth_peak.max(depth as u64);
+    }
+
+    /// Requests refused at admission for `variant`.
+    pub fn shed(&self, variant: &str) -> u64 {
+        let m = self.variants.lock().expect("metrics poisoned");
+        m.get(variant).map(|v| v.shed).unwrap_or(0)
+    }
+
+    /// Requests admitted degraded for `variant`.
+    pub fn degraded(&self, variant: &str) -> u64 {
+        let m = self.variants.lock().expect("metrics poisoned");
+        m.get(variant).map(|v| v.degraded).unwrap_or(0)
+    }
+
+    /// High-water mark of the admission queue for `variant`.
+    pub fn queue_depth_peak(&self, variant: &str) -> u64 {
+        let m = self.variants.lock().expect("metrics poisoned");
+        m.get(variant).map(|v| v.queue_depth_peak).unwrap_or(0)
     }
 
     /// Record one pipeline-stage interval for `batch` of `variant`.
@@ -301,7 +349,11 @@ impl Metrics {
                 .set("compute_p50_us", v.compute.percentile_us(50.0))
                 .set("prepare_p50_us", v.prepare.percentile_us(50.0))
                 .set("execute_p50_us", v.execute.percentile_us(50.0))
-                .set("stage_overlaps", v.overlaps);
+                .set("stage_overlaps", v.overlaps)
+                .set("shed", v.shed)
+                .set("degraded", v.degraded)
+                .set("queue_depth", v.queue_depth)
+                .set("queue_depth_peak", v.queue_depth_peak);
             let buckets = v
                 .total
                 .buckets()
@@ -358,6 +410,8 @@ mod tests {
         assert!(p50 <= p99);
         assert!(p99 <= p999);
         assert_eq!(v.get("stage_overlaps").unwrap().as_f64(), Some(0.0));
+        assert_eq!(v.get("shed").unwrap().as_f64(), Some(0.0));
+        assert_eq!(v.get("queue_depth_peak").unwrap().as_f64(), Some(0.0));
         // exported histogram buckets cover every recorded request
         let buckets = v.get("latency_buckets").unwrap().as_arr().unwrap();
         assert!(!buckets.is_empty());
@@ -423,6 +477,30 @@ mod tests {
         assert_eq!(m.throughput_rps("nope"), 0.0);
         assert_eq!(m.stage_overlaps("nope"), 0);
         assert!(m.stage_spans("nope").is_empty());
+        assert_eq!(m.shed("nope"), 0);
+        assert_eq!(m.degraded("nope"), 0);
+        assert_eq!(m.queue_depth_peak("nope"), 0);
+    }
+
+    #[test]
+    fn admission_counters_export() {
+        let m = Metrics::new();
+        m.record_shed("tvm+");
+        m.record_shed("tvm+");
+        m.record_degraded("tvm+");
+        m.record_queue_depth("tvm+", 3);
+        m.record_queue_depth("tvm+", 7);
+        m.record_queue_depth("tvm+", 2);
+        assert_eq!(m.shed("tvm+"), 2);
+        assert_eq!(m.degraded("tvm+"), 1);
+        assert_eq!(m.queue_depth_peak("tvm+"), 7);
+        let j = m.to_json();
+        let v = j.at(&["variants", "tvm+"]).unwrap();
+        assert_eq!(v.get("shed").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("degraded").unwrap().as_f64(), Some(1.0));
+        // current depth reflects the last observation, the peak the max
+        assert_eq!(v.get("queue_depth").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("queue_depth_peak").unwrap().as_f64(), Some(7.0));
     }
 
     #[test]

@@ -3,18 +3,22 @@
 //! Architecture (vLLM-router-like, scaled to this system's needs):
 //!
 //! ```text
-//!  clients ──submit()──► Router ──► Batcher ─► prepare ─► execute ─┐
-//!     ▲                    │    (per variant)   (embed)  (forward  │
-//!     │                    │                      ║       on the   │
-//!     │                    │                      ║    shared pool)│
-//!     └──── oneshot reply ◄┴───── Metrics ◄═══ stage spans ◄───────┘
+//!  clients ──submit()──► Router ─► admission ─► Batcher ─► prepare ─► execute ─┐
+//!     ▲                    │     (bound+policy) (variant)   (embed)  (forward  │
+//!     │                    │                                  ║       on the   │
+//!     │                    │                                  ║    shared pool)│
+//!     └──── oneshot reply ◄┴────────── Metrics ◄═══ stage spans ◄──────────────┘
 //! ```
 //!
 //! Each variant's request path is a **two-stage pipeline**: a prepare
 //! stage (request decode, embedding lookup, batch tensor assembly) runs
-//! concurrently with the execute stage (engine forward), double-buffered
-//! so batch N+1 assembles while batch N computes. All variants execute
-//! on **one shared engine-side worker pool** owned by the router.
+//! concurrently with the execute stage (engine forward), buffered
+//! through a configurable depth-N channel so batch N+1 assembles while
+//! batch N computes. In front of each variant's batcher sits an optional
+//! admission gate (`queue_bound` + [`pool::AdmissionPolicy`]): overload
+//! is met with backpressure, sheds, or degraded (truncated) requests
+//! rather than an unbounded queue. All variants execute on **one shared
+//! engine-side worker pool** owned by the router.
 //!
 //! * [`request`] — request/response types and synthetic workload traces;
 //! * [`batcher`] — size-or-deadline dynamic batching (the A3 ablation
@@ -38,6 +42,6 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use pool::PipelineMode;
+pub use pool::{AdmissionPolicy, PipelineMode, SubmitOutcome, VariantConfig};
 pub use request::{InferenceRequest, InferenceResponse, WorkloadTrace};
-pub use router::Router;
+pub use router::{Router, Submission};

@@ -6,17 +6,21 @@
 //! pipeline:
 //!
 //! ```text
-//!  intake ─► Batcher ─► prepare (decode + embed + assemble) ─┐
-//!                                            sync_channel(1) ─┴─► execute
-//!                                                                 (engine
-//!                                                                  forward)
+//!  admission ─► intake ─► Batcher ─► prepare (decode + embed) ─┐
+//!  (bound +                                   sync_channel(N) ──┴─► execute
+//!   policy)                                                         (engine
+//!                                                                    forward)
 //! ```
 //!
-//! The stages run on their own threads, double-buffered through a
-//! depth-[`PIPELINE_DEPTH`] channel: batch N+1 is being assembled while
-//! batch N runs, so embedding/batch assembly no longer serializes with
-//! kernel execution ([`PipelineMode::Barrier`] keeps the old
-//! batch-then-compute loop for the A3 ablation). Batch members execute
+//! The stages run on their own threads, buffered through a depth-N
+//! channel (depth [`DEFAULT_PIPELINE_DEPTH`] = classic double
+//! buffering): batch N+1 is being assembled while batch N runs, so
+//! embedding/batch assembly no longer serializes with kernel execution
+//! ([`PipelineMode::Barrier`] keeps the old batch-then-compute loop for
+//! the A3 ablation). In front of intake sits an optional admission gate:
+//! when `queue_bound` requests are waiting for a batch, new arrivals are
+//! blocked, shed, or degraded per [`AdmissionPolicy`], with shed and
+//! queue-depth counters in [`Metrics`]. Batch members execute
 //! concurrently on a **shared** engine-side [`crate::util::pool::Pool`]
 //! owned by the [`super::router::Router`] — one pool for *all* variants,
 //! so M registered engines no longer oversubscribe cores M-fold the way
@@ -35,16 +39,17 @@ use crate::sparse::dense::Matrix;
 use crate::util::pool::Pool as WorkerPool;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Reply channel plumbed through with each request.
 pub type ReplyTx = mpsc::Sender<InferenceResponse>;
 
-/// Prepared batches buffered between the stages. Depth 1 + the batch
-/// inside the execute stage = classic double buffering; deeper queues
-/// only add memory pressure and queue latency without more overlap.
-pub const PIPELINE_DEPTH: usize = 1;
+/// Default prepared-batch buffer depth between the stages. Depth 1 + the
+/// batch inside the execute stage = classic double buffering; deeper
+/// queues trade memory pressure and queue latency for burst absorption
+/// (configurable per deployment via `[serving] pipeline_depth`).
+pub const DEFAULT_PIPELINE_DEPTH: usize = 1;
 
 /// Coordinator execution mode (the A3 ablation's pipeline dimension).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -81,6 +86,71 @@ impl std::fmt::Display for PipelineMode {
     }
 }
 
+/// What happens to a request arriving while `queue_bound` requests are
+/// already waiting for a batch slot (no bound = always admit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Backpressure: the submitting thread waits until the queue drains
+    /// below the bound (closed-loop clients slow down; nothing is lost).
+    #[default]
+    Block,
+    /// Refuse the request immediately — the caller gets
+    /// [`SubmitOutcome::Shed`] and can retry or fail fast (open-loop
+    /// overload protection).
+    Shed,
+    /// Admit, but truncate the token sequence to half its length (min 1):
+    /// a cheaper, lower-fidelity answer instead of a refusal.
+    Degrade,
+}
+
+impl AdmissionPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::Shed => "shed",
+            AdmissionPolicy::Degrade => "degrade",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<AdmissionPolicy, String> {
+        match s {
+            "block" => Ok(AdmissionPolicy::Block),
+            "shed" | "drop" => Ok(AdmissionPolicy::Shed),
+            "degrade" => Ok(AdmissionPolicy::Degrade),
+            other => Err(format!(
+                "unknown admission policy '{other}' (block|shed|degrade)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Result of [`VariantPool::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Admitted; the response will arrive on the reply channel.
+    Accepted,
+    /// Admitted with truncated tokens (the `degrade` policy fired).
+    AcceptedDegraded,
+    /// Refused at admission (the `shed` policy fired); no response will
+    /// arrive.
+    Shed,
+    /// The pool is shut down; no response will arrive.
+    Closed,
+}
+
+impl SubmitOutcome {
+    /// Whether a response will arrive for this submission.
+    pub fn accepted(&self) -> bool {
+        matches!(self, SubmitOutcome::Accepted | SubmitOutcome::AcceptedDegraded)
+    }
+}
+
 /// Per-variant batching/execution configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct VariantConfig {
@@ -89,6 +159,13 @@ pub struct VariantConfig {
     /// Concurrent sequences per batch on the shared pool (capped by the
     /// batch size and the pool width).
     pub workers: usize,
+    /// Prepared-batch buffer depth between the prepare and execute stages
+    /// (pipelined mode only; clamped to ≥ 1).
+    pub pipeline_depth: usize,
+    /// Admission bound: max requests waiting for a batch before the
+    /// [`AdmissionPolicy`] fires. `None` = unbounded (always admit).
+    pub queue_bound: Option<usize>,
+    pub admission: AdmissionPolicy,
 }
 
 impl VariantConfig {
@@ -97,12 +174,96 @@ impl VariantConfig {
             policy,
             mode: PipelineMode::default(),
             workers,
+            pipeline_depth: DEFAULT_PIPELINE_DEPTH,
+            queue_bound: None,
+            admission: AdmissionPolicy::default(),
         }
     }
 
     pub fn with_mode(mut self, mode: PipelineMode) -> VariantConfig {
         self.mode = mode;
         self
+    }
+
+    pub fn with_pipeline_depth(mut self, depth: usize) -> VariantConfig {
+        self.pipeline_depth = depth.max(1);
+        self
+    }
+
+    pub fn with_queue_bound(mut self, bound: usize) -> VariantConfig {
+        self.queue_bound = Some(bound.max(1));
+        self
+    }
+
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> VariantConfig {
+        self.admission = admission;
+        self
+    }
+}
+
+/// Admission decision for one request.
+enum Admit {
+    Accept,
+    Degrade,
+    Shed,
+}
+
+/// Counting gate in front of intake: tracks how many admitted requests
+/// have not yet been claimed into a closed batch, and applies the
+/// admission policy when the bound is reached. Depth is decremented by
+/// the batching stage as it claims requests, which wakes blocked
+/// submitters.
+struct AdmissionGate {
+    depth: Mutex<usize>,
+    drained: Condvar,
+    bound: Option<usize>,
+    admission: AdmissionPolicy,
+}
+
+impl AdmissionGate {
+    fn new(bound: Option<usize>, admission: AdmissionPolicy) -> AdmissionGate {
+        AdmissionGate {
+            depth: Mutex::new(0),
+            drained: Condvar::new(),
+            bound,
+            admission,
+        }
+    }
+
+    /// Apply the policy and (except on shed) claim a queue slot. Returns
+    /// the decision and the post-decision queue depth.
+    fn admit(&self) -> (Admit, usize) {
+        let mut depth = self.depth.lock().expect("admission gate poisoned");
+        let Some(bound) = self.bound else {
+            *depth += 1;
+            return (Admit::Accept, *depth);
+        };
+        if *depth >= bound {
+            match self.admission {
+                AdmissionPolicy::Block => {
+                    while *depth >= bound {
+                        depth = self.drained.wait(depth).expect("admission gate poisoned");
+                    }
+                }
+                AdmissionPolicy::Shed => return (Admit::Shed, *depth),
+                AdmissionPolicy::Degrade => {
+                    *depth += 1;
+                    return (Admit::Degrade, *depth);
+                }
+            }
+        }
+        *depth += 1;
+        (Admit::Accept, *depth)
+    }
+
+    /// Release `n` queue slots (requests claimed into a batch, or an
+    /// admitted request whose forward failed); wakes blocked submitters.
+    /// Returns the new depth.
+    fn release(&self, n: usize) -> usize {
+        let mut depth = self.depth.lock().expect("admission gate poisoned");
+        *depth = depth.saturating_sub(n);
+        self.drained.notify_all();
+        *depth
     }
 }
 
@@ -139,6 +300,8 @@ pub struct VariantPool {
     tx: Mutex<Option<mpsc::Sender<Job>>>,
     stages: Mutex<Vec<std::thread::JoinHandle<()>>>,
     accepting: AtomicBool,
+    gate: Arc<AdmissionGate>,
+    metrics: Arc<Metrics>,
 }
 
 impl VariantPool {
@@ -154,6 +317,7 @@ impl VariantPool {
         let (tx, rx) = mpsc::channel::<Job>();
         let replies: Arc<Mutex<HashMap<u64, ReplyTx>>> = Arc::new(Mutex::new(HashMap::new()));
         let (breq_tx, breq_rx) = mpsc::channel::<InferenceRequest>();
+        let gate = Arc::new(AdmissionGate::new(cfg.queue_bound, cfg.admission));
         let mut stages = Vec::with_capacity(3);
         // Intake: register the reply route *before* forwarding the
         // request, so a response can never race its reply channel.
@@ -186,16 +350,20 @@ impl VariantPool {
         });
         match cfg.mode {
             PipelineMode::Pipelined => {
-                let (prep_tx, prep_rx) = mpsc::sync_channel::<PreparedBatch>(PIPELINE_DEPTH);
+                let (prep_tx, prep_rx) =
+                    mpsc::sync_channel::<PreparedBatch>(cfg.pipeline_depth.max(1));
                 {
                     let vname = name.to_string();
                     let metrics = Arc::clone(&ctx.metrics);
                     let policy = cfg.policy;
+                    let gate = Arc::clone(&gate);
                     stages.push(
                         std::thread::Builder::new()
                             .name(format!("prepare-{name}"))
                             .spawn(move || {
-                                prepare_loop(&vname, &weights, breq_rx, policy, &metrics, prep_tx)
+                                prepare_loop(
+                                    &vname, &weights, breq_rx, policy, &metrics, &gate, prep_tx,
+                                )
                             })
                             .expect("spawn prepare stage"),
                     );
@@ -213,20 +381,24 @@ impl VariantPool {
             PipelineMode::Barrier => {
                 let ctx = Arc::clone(&ctx);
                 let policy = cfg.policy;
+                let gate = Arc::clone(&gate);
                 stages.push(
                     std::thread::Builder::new()
                         .name(format!("dispatch-{name}"))
-                        .spawn(move || barrier_loop(&ctx, &weights, breq_rx, policy))
+                        .spawn(move || barrier_loop(&ctx, &weights, breq_rx, policy, &gate))
                         .expect("spawn dispatcher"),
                 );
             }
         }
+        let metrics = Arc::clone(&ctx.metrics);
         Arc::new(VariantPool {
             name: name.to_string(),
             mode: cfg.mode,
             tx: Mutex::new(Some(tx)),
             stages: Mutex::new(stages),
             accepting: AtomicBool::new(true),
+            gate,
+            metrics,
         })
     }
 
@@ -234,15 +406,54 @@ impl VariantPool {
         self.mode
     }
 
-    /// Submit a request; the response arrives on `reply`.
-    pub fn submit(&self, request: InferenceRequest, reply: ReplyTx) -> bool {
+    /// Submit a request through the admission gate; on
+    /// [`SubmitOutcome::Accepted`] (or `AcceptedDegraded`) the response
+    /// arrives on `reply`. Under the `block` policy this call waits while
+    /// the queue is at its bound.
+    pub fn submit(&self, mut request: InferenceRequest, reply: ReplyTx) -> SubmitOutcome {
         if !self.accepting.load(Ordering::Acquire) {
-            return false;
+            return SubmitOutcome::Closed;
         }
-        let guard = self.tx.lock().expect("pool tx poisoned");
-        match guard.as_ref() {
-            Some(tx) => tx.send(Job { request, reply }).is_ok(),
-            None => false,
+        let _adm = crate::trace::span("coord", "admission", request.id, &[]);
+        let (decision, depth) = self.gate.admit();
+        match decision {
+            Admit::Shed => {
+                crate::trace::instant("coord", "shed", request.id, &[("depth", depth as i64)]);
+                self.metrics.record_shed(&self.name);
+                return SubmitOutcome::Shed;
+            }
+            Admit::Degrade => {
+                let keep = (request.tokens.len() / 2).max(1);
+                request.tokens.truncate(keep);
+                crate::trace::instant(
+                    "coord",
+                    "degrade",
+                    request.id,
+                    &[("depth", depth as i64), ("tokens", keep as i64)],
+                );
+                self.metrics.record_degraded(&self.name);
+            }
+            Admit::Accept => {}
+        }
+        self.metrics.record_queue_depth(&self.name, depth);
+        let degraded = matches!(decision, Admit::Degrade);
+        let sent = {
+            let guard = self.tx.lock().expect("pool tx poisoned");
+            match guard.as_ref() {
+                Some(tx) => tx.send(Job { request, reply }).is_ok(),
+                None => false,
+            }
+        };
+        if !sent {
+            // Shutdown raced the admission: give the claimed slot back so
+            // blocked submitters are not stranded.
+            self.gate.release(1);
+            return SubmitOutcome::Closed;
+        }
+        if degraded {
+            SubmitOutcome::AcceptedDegraded
+        } else {
+            SubmitOutcome::Accepted
         }
     }
 
@@ -334,18 +545,22 @@ fn execute_batch(ctx: &ExecCtx, batch: &PreparedBatch) {
 
 /// Prepare stage: pull closed batches, assemble tensors, hand off to the
 /// execute stage. Exits once the batcher drains (intake gone) or the
-/// execute stage disappears.
+/// execute stage disappears. Each closed batch releases its members'
+/// admission slots — the batch is no longer "waiting", it is in flight.
 fn prepare_loop(
     variant: &str,
     weights: &BertWeights,
     rx: mpsc::Receiver<InferenceRequest>,
     policy: BatchPolicy,
     metrics: &Metrics,
+    gate: &AdmissionGate,
     tx: mpsc::SyncSender<PreparedBatch>,
 ) {
     let mut batcher = Batcher::new(rx, policy);
     let mut seq = 0u64;
     while let Some(closed) = batcher.next_closed_batch() {
+        let depth = gate.release(closed.requests.len());
+        metrics.record_queue_depth(variant, depth);
         let prepared = prepare_batch(variant, weights, metrics, seq, closed);
         if tx.send(prepared).is_err() {
             break;
@@ -369,10 +584,13 @@ fn barrier_loop(
     weights: &BertWeights,
     rx: mpsc::Receiver<InferenceRequest>,
     policy: BatchPolicy,
+    gate: &AdmissionGate,
 ) {
     let mut batcher = Batcher::new(rx, policy);
     let mut seq = 0u64;
     while let Some(closed) = batcher.next_closed_batch() {
+        let depth = gate.release(closed.requests.len());
+        ctx.metrics.record_queue_depth(&ctx.variant, depth);
         let prepared = prepare_batch(&ctx.variant, weights, &ctx.metrics, seq, closed);
         execute_batch(ctx, &prepared);
         seq += 1;
@@ -435,10 +653,9 @@ mod tests {
         );
         let (rtx, rrx) = mpsc::channel();
         for i in 0..20 {
-            assert!(pool.submit(
-                InferenceRequest::new(i, vec![1, 2, 3, 4], "test"),
-                rtx.clone()
-            ));
+            assert!(pool
+                .submit(InferenceRequest::new(i, vec![1, 2, 3, 4], "test"), rtx.clone())
+                .accepted());
         }
         let mut got = Vec::new();
         for _ in 0..20 {
@@ -470,7 +687,9 @@ mod tests {
                 Arc::clone(&metrics),
             );
             let (rtx, rrx) = mpsc::channel();
-            pool.submit(InferenceRequest::new(7, vec![5, 6, 7], "d"), rtx);
+            assert!(pool
+                .submit(InferenceRequest::new(7, vec![5, 6, 7], "d"), rtx)
+                .accepted());
             let resp = rrx.recv_timeout(Duration::from_secs(10)).unwrap();
             answers.push(resp.cls);
             pool.shutdown();
@@ -478,8 +697,9 @@ mod tests {
         assert_eq!(answers[0], answers[1]);
     }
 
-    /// Satellite: pipelined responses must be byte-identical to barrier
-    /// responses across batch sizes 1, 8, and mixed-length sequences.
+    /// Satellite: pipelined responses at depths {1, 2, 4} must be
+    /// byte-identical to barrier responses across batch sizes 1, 8, and
+    /// mixed-length sequences.
     #[test]
     fn pipelined_matches_barrier_byte_identical() {
         let (engine, weights) = setup();
@@ -506,37 +726,47 @@ mod tests {
                 mixed,
             ),
         ];
-        for (policy, seqs) in cases {
-            let mut by_mode: Vec<BTreeMap<u64, Vec<f32>>> = Vec::new();
-            for mode in [PipelineMode::Pipelined, PipelineMode::Barrier] {
-                let pool = VariantPool::start(
-                    "m",
-                    Arc::clone(&engine),
-                    Arc::clone(&weights),
-                    VariantConfig::new(policy, 2).with_mode(mode),
-                    exec_pool(),
-                    Arc::new(Metrics::new()),
-                );
-                assert_eq!(pool.mode(), mode);
-                let (rtx, rrx) = mpsc::channel();
-                for (i, tokens) in seqs.iter().enumerate() {
-                    assert!(pool.submit(
-                        InferenceRequest::new(i as u64, tokens.clone(), "m"),
-                        rtx.clone()
-                    ));
-                }
-                let mut got = BTreeMap::new();
-                for _ in 0..seqs.len() {
-                    let resp = rrx.recv_timeout(Duration::from_secs(10)).unwrap();
-                    got.insert(resp.id, resp.cls);
-                }
-                pool.shutdown();
-                by_mode.push(got);
-            }
-            assert_eq!(
-                by_mode[0], by_mode[1],
-                "pipelined and barrier responses diverged"
+        let run = |cfg: VariantConfig, seqs: &[Vec<u32>]| -> BTreeMap<u64, Vec<f32>> {
+            let pool = VariantPool::start(
+                "m",
+                Arc::clone(&engine),
+                Arc::clone(&weights),
+                cfg,
+                exec_pool(),
+                Arc::new(Metrics::new()),
             );
+            assert_eq!(pool.mode(), cfg.mode);
+            let (rtx, rrx) = mpsc::channel();
+            for (i, tokens) in seqs.iter().enumerate() {
+                assert!(pool
+                    .submit(InferenceRequest::new(i as u64, tokens.clone(), "m"), rtx.clone())
+                    .accepted());
+            }
+            let mut got = BTreeMap::new();
+            for _ in 0..seqs.len() {
+                let resp = rrx.recv_timeout(Duration::from_secs(10)).unwrap();
+                got.insert(resp.id, resp.cls);
+            }
+            pool.shutdown();
+            got
+        };
+        for (policy, seqs) in cases {
+            let barrier = run(
+                VariantConfig::new(policy, 2).with_mode(PipelineMode::Barrier),
+                &seqs,
+            );
+            for depth in [1usize, 2, 4] {
+                let pipelined = run(
+                    VariantConfig::new(policy, 2)
+                        .with_mode(PipelineMode::Pipelined)
+                        .with_pipeline_depth(depth),
+                    &seqs,
+                );
+                assert_eq!(
+                    pipelined, barrier,
+                    "depth-{depth} pipelined responses diverged from barrier"
+                );
+            }
         }
     }
 
@@ -566,7 +796,9 @@ mod tests {
         );
         let (rtx, rrx) = mpsc::channel();
         for i in 0..10 {
-            assert!(pool.submit(InferenceRequest::new(i, vec![1, 2, 3], "drain"), rtx.clone()));
+            assert!(pool
+                .submit(InferenceRequest::new(i, vec![1, 2, 3], "drain"), rtx.clone())
+                .accepted());
         }
         // Immediate shutdown: batches are still queued, prepared, or
         // executing. shutdown() must block until all are answered.
@@ -603,7 +835,9 @@ mod tests {
         );
         let (rtx, rrx) = mpsc::channel();
         for i in 0..16 {
-            assert!(pool.submit(InferenceRequest::new(i, vec![2, 3, 4], "slow"), rtx.clone()));
+            assert!(pool
+                .submit(InferenceRequest::new(i, vec![2, 3, 4], "slow"), rtx.clone())
+                .accepted());
         }
         for _ in 0..16 {
             rrx.recv_timeout(Duration::from_secs(20)).unwrap();
@@ -632,6 +866,190 @@ mod tests {
         );
         pool.shutdown();
         let (rtx, _rrx) = mpsc::channel();
-        assert!(!pool.submit(InferenceRequest::new(1, vec![1], "s"), rtx));
+        assert_eq!(
+            pool.submit(InferenceRequest::new(1, vec![1], "s"), rtx),
+            SubmitOutcome::Closed
+        );
+    }
+
+    /// Satellite: with `admission = shed`, a burst past `queue_bound` is
+    /// refused deterministically with correct counters. The long batch
+    /// window guarantees no batch closes (and so no slot is released)
+    /// while the burst is being submitted.
+    #[test]
+    fn shed_policy_refuses_over_bound_requests() {
+        let (engine, weights) = setup();
+        let metrics = Arc::new(Metrics::new());
+        let pool = VariantPool::start(
+            "shed",
+            engine,
+            weights,
+            VariantConfig::new(
+                BatchPolicy {
+                    max_batch: 16,
+                    max_wait: Duration::from_millis(200),
+                },
+                2,
+            )
+            .with_queue_bound(4)
+            .with_admission(AdmissionPolicy::Shed),
+            exec_pool(),
+            Arc::clone(&metrics),
+        );
+        let (rtx, rrx) = mpsc::channel();
+        let mut accepted = 0usize;
+        let mut shed = 0usize;
+        for i in 0..12 {
+            match pool.submit(InferenceRequest::new(i, vec![1, 2, 3], "shed"), rtx.clone()) {
+                SubmitOutcome::Accepted => accepted += 1,
+                SubmitOutcome::Shed => shed += 1,
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        assert_eq!(accepted, 4);
+        assert_eq!(shed, 8);
+        assert_eq!(metrics.shed("shed"), 8);
+        assert_eq!(metrics.queue_depth_peak("shed"), 4);
+        // every accepted request still gets its answer
+        drop(rtx);
+        let got: Vec<u64> = rrx.iter().map(|r| r.id).collect();
+        assert_eq!(got.len(), 4);
+        pool.shutdown();
+    }
+
+    /// Satellite: `admission = block` applies backpressure instead of
+    /// refusing — every request in a burst past the bound is eventually
+    /// accepted and answered, and nothing is shed.
+    #[test]
+    fn block_policy_backpressures_instead_of_shedding() {
+        let (engine, weights) = setup();
+        let metrics = Arc::new(Metrics::new());
+        let pool = VariantPool::start(
+            "blk",
+            engine,
+            weights,
+            VariantConfig::new(
+                BatchPolicy {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(1),
+                },
+                2,
+            )
+            .with_queue_bound(2)
+            .with_admission(AdmissionPolicy::Block),
+            exec_pool(),
+            Arc::clone(&metrics),
+        );
+        let (rtx, rrx) = mpsc::channel();
+        for i in 0..12 {
+            assert_eq!(
+                pool.submit(InferenceRequest::new(i, vec![1, 2], "blk"), rtx.clone()),
+                SubmitOutcome::Accepted
+            );
+        }
+        let mut got: Vec<u64> = (0..12)
+            .map(|_| rrx.recv_timeout(Duration::from_secs(10)).unwrap().id)
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..12).collect::<Vec<_>>());
+        assert_eq!(metrics.shed("blk"), 0);
+        assert!(metrics.queue_depth_peak("blk") <= 2);
+        pool.shutdown();
+    }
+
+    /// Satellite: `admission = degrade` admits over-bound requests with
+    /// truncated tokens — all are answered, none shed.
+    #[test]
+    fn degrade_policy_truncates_over_bound_requests() {
+        let (engine, weights) = setup();
+        let metrics = Arc::new(Metrics::new());
+        let pool = VariantPool::start(
+            "deg",
+            engine,
+            weights,
+            VariantConfig::new(
+                BatchPolicy {
+                    max_batch: 16,
+                    max_wait: Duration::from_millis(100),
+                },
+                2,
+            )
+            .with_queue_bound(2)
+            .with_admission(AdmissionPolicy::Degrade),
+            exec_pool(),
+            Arc::clone(&metrics),
+        );
+        let (rtx, rrx) = mpsc::channel();
+        let mut degraded = 0usize;
+        for i in 0..8 {
+            match pool.submit(
+                InferenceRequest::new(i, vec![1, 2, 3, 4, 5, 6], "deg"),
+                rtx.clone(),
+            ) {
+                SubmitOutcome::Accepted => {}
+                SubmitOutcome::AcceptedDegraded => degraded += 1,
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        assert_eq!(degraded, 6);
+        assert_eq!(metrics.degraded("deg"), 6);
+        assert_eq!(metrics.shed("deg"), 0);
+        drop(rtx);
+        let got: Vec<u64> = rrx.iter().map(|r| r.id).collect();
+        assert_eq!(got.len(), 8, "degraded requests must still be answered");
+        pool.shutdown();
+    }
+
+    /// Satellite: shutdown under load on a bounded pool still drains
+    /// every accepted request.
+    #[test]
+    fn shutdown_under_load_drains_bounded_pool() {
+        let cfg = BertConfig::micro();
+        let weights = Arc::new(BertWeights::synthetic(&cfg, 54));
+        let engine: Arc<dyn Engine> = Arc::new(SlowEngine {
+            inner: CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&weights), 1)),
+            delay: Duration::from_millis(3),
+        });
+        let pool = VariantPool::start(
+            "bdrain",
+            engine,
+            weights,
+            VariantConfig::new(
+                BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                1,
+            )
+            .with_queue_bound(4)
+            .with_admission(AdmissionPolicy::Block)
+            .with_pipeline_depth(2),
+            exec_pool(),
+            Arc::new(Metrics::new()),
+        );
+        let (rtx, rrx) = mpsc::channel();
+        let mut accepted = 0usize;
+        for i in 0..10 {
+            if pool
+                .submit(InferenceRequest::new(i, vec![1, 2, 3], "bdrain"), rtx.clone())
+                .accepted()
+            {
+                accepted += 1;
+            }
+        }
+        pool.shutdown();
+        drop(rtx);
+        let got: Vec<u64> = rrx.iter().map(|r| r.id).collect();
+        assert_eq!(got.len(), accepted, "shutdown dropped accepted requests");
+    }
+
+    #[test]
+    fn admission_policy_parses() {
+        assert_eq!(AdmissionPolicy::parse("block"), Ok(AdmissionPolicy::Block));
+        assert_eq!(AdmissionPolicy::parse("shed"), Ok(AdmissionPolicy::Shed));
+        assert_eq!(AdmissionPolicy::parse("drop"), Ok(AdmissionPolicy::Shed));
+        assert_eq!(AdmissionPolicy::parse("degrade"), Ok(AdmissionPolicy::Degrade));
+        assert!(AdmissionPolicy::parse("nope").is_err());
+        assert_eq!(AdmissionPolicy::Shed.to_string(), "shed");
     }
 }

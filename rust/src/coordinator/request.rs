@@ -59,9 +59,7 @@ impl WorkloadTrace {
         let mut t_us = 0u64;
         let mut arrivals = Vec::with_capacity(n);
         for _ in 0..n {
-            // exponential inter-arrival via inverse CDF
-            let u = rng.f64().max(1e-12);
-            let gap = (-u.ln() / rate_rps * 1e6) as u64;
+            let gap = (rng.exp(rate_rps) * 1e6) as u64;
             t_us += gap;
             let tokens: Vec<u32> = (0..seq_len).map(|_| rng.range(10, vocab) as u32).collect();
             arrivals.push((t_us, tokens));

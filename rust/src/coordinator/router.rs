@@ -9,7 +9,7 @@
 
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
-use super::pool::{PipelineMode, VariantConfig, VariantPool};
+use super::pool::{PipelineMode, SubmitOutcome, VariantConfig, VariantPool};
 use super::request::{InferenceRequest, InferenceResponse, WorkloadTrace};
 use crate::model::engine::Engine;
 use crate::model::weights::BertWeights;
@@ -31,6 +31,17 @@ pub struct Router {
     exec_pool: Arc<WorkerPool>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
+}
+
+/// Result of an admission-aware submission ([`Router::try_submit`]).
+pub enum Submission {
+    /// Admitted; the response arrives on the receiver.
+    Enqueued(mpsc::Receiver<InferenceResponse>),
+    /// Refused by the variant's `shed` admission policy; no response
+    /// will arrive. Callers decide whether that is an error (the
+    /// blocking [`Router::infer`] path) or an expected signal (the load
+    /// generator counts sheds).
+    Shed,
 }
 
 /// Result of replaying a workload trace ([`Router::run_trace`]).
@@ -92,11 +103,29 @@ impl Router {
         workers: usize,
         mode: PipelineMode,
     ) {
-        let pool = VariantPool::start(
+        self.register_with_config(
             name,
             engine,
             weights,
             VariantConfig::new(policy, workers).with_mode(mode),
+        );
+    }
+
+    /// Register an engine with a full [`VariantConfig`] — pipeline
+    /// depth, queue bound, and admission policy included (what the
+    /// deployment manifest's `[serving]` table instantiates through).
+    pub fn register_with_config(
+        &mut self,
+        name: &str,
+        engine: Arc<dyn Engine>,
+        weights: Arc<BertWeights>,
+        cfg: VariantConfig,
+    ) {
+        let pool = VariantPool::start(
+            name,
+            engine,
+            weights,
+            cfg,
             Arc::clone(&self.exec_pool),
             Arc::clone(&self.metrics),
         );
@@ -112,13 +141,11 @@ impl Router {
         self.pools.get(variant).map(|p| p.mode())
     }
 
-    /// Submit asynchronously; the response arrives on the returned
-    /// receiver.
-    pub fn submit(
-        &self,
-        variant: &str,
-        tokens: Vec<u32>,
-    ) -> Result<mpsc::Receiver<InferenceResponse>> {
+    /// Submit through the variant's admission gate. Distinguishes a shed
+    /// (policy decision, expected under overload) from a shutdown (error).
+    /// Under the `block` policy this call waits while the queue is at its
+    /// bound.
+    pub fn try_submit(&self, variant: &str, tokens: Vec<u32>) -> Result<Submission> {
         let pool = match self.pools.get(variant) {
             Some(p) => p,
             None => bail!(
@@ -128,10 +155,29 @@ impl Router {
         };
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        if !pool.submit(InferenceRequest::new(id, tokens, variant), tx) {
-            bail!("variant '{variant}' is shut down");
+        match pool.submit(InferenceRequest::new(id, tokens, variant), tx) {
+            SubmitOutcome::Accepted | SubmitOutcome::AcceptedDegraded => {
+                Ok(Submission::Enqueued(rx))
+            }
+            SubmitOutcome::Shed => Ok(Submission::Shed),
+            SubmitOutcome::Closed => bail!("variant '{variant}' is shut down"),
         }
-        Ok(rx)
+    }
+
+    /// Submit asynchronously; the response arrives on the returned
+    /// receiver. A shed is an error on this path — callers that want to
+    /// handle sheds use [`Router::try_submit`].
+    pub fn submit(
+        &self,
+        variant: &str,
+        tokens: Vec<u32>,
+    ) -> Result<mpsc::Receiver<InferenceResponse>> {
+        match self.try_submit(variant, tokens)? {
+            Submission::Enqueued(rx) => Ok(rx),
+            Submission::Shed => {
+                bail!("variant '{variant}' shed the request (queue bound reached)")
+            }
+        }
     }
 
     /// Blocking convenience call.
@@ -280,6 +326,49 @@ mod tests {
         let ra = r.infer("a", vec![5, 6, 7]).unwrap();
         let rb = r.infer("b", vec![5, 6, 7]).unwrap();
         assert_eq!(ra.cls, rb.cls);
+        r.shutdown();
+    }
+
+    #[test]
+    fn bounded_variant_sheds_through_router() {
+        use super::super::pool::AdmissionPolicy;
+        let cfg = BertConfig::micro();
+        let w = Arc::new(BertWeights::synthetic(&cfg, 63));
+        let e: Arc<dyn Engine> =
+            Arc::new(CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 1)));
+        let mut r = Router::new();
+        // a long batch window keeps every admitted request queued while
+        // the burst below is submitted, so the shed count is exact
+        let policy = BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(200),
+        };
+        r.register_with_config(
+            "bounded",
+            e,
+            w,
+            VariantConfig::new(policy, 2)
+                .with_queue_bound(2)
+                .with_admission(AdmissionPolicy::Shed),
+        );
+        let mut enqueued = Vec::new();
+        let mut sheds = 0usize;
+        for _ in 0..6 {
+            match r.try_submit("bounded", vec![1, 2, 3]).unwrap() {
+                Submission::Enqueued(rx) => enqueued.push(rx),
+                Submission::Shed => sheds += 1,
+            }
+        }
+        assert_eq!(enqueued.len(), 2);
+        assert_eq!(sheds, 4);
+        assert_eq!(r.metrics.shed("bounded"), 4);
+        // the blocking path reports the same shed as an error (the queue
+        // is still full — the 200 ms window has not closed yet)
+        let err = r.infer("bounded", vec![1]).unwrap_err();
+        assert!(err.to_string().contains("shed"), "{err}");
+        for rx in enqueued {
+            assert!(rx.recv().is_ok());
+        }
         r.shutdown();
     }
 }

@@ -5,6 +5,8 @@
 //! ```text
 //! → {"tokens": [12, 99, 4], "variant": "tvm+"}
 //! ← {"id": 7, "cls": [...], "latency_us": 812, "batch": 4}
+//!   (or, at a full queue under `admission = "shed"`:
+//!    {"shed": true, "error": "..."})
 //! → {"cmd": "stats"}
 //! ← {"variants": {...}, "uptime_seconds": ...}
 //! → {"cmd": "trace"}
@@ -153,7 +155,19 @@ fn process_line(line: &str, router: &Router) -> Result<LineOutcome> {
         .and_then(Json::as_str)
         .unwrap_or("tvm+")
         .to_string();
-    let resp = router.infer(&variant, tokens)?;
+    let resp = match router.try_submit(&variant, tokens)? {
+        super::router::Submission::Enqueued(rx) => rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("variant '{variant}' dropped the request"))?,
+        super::router::Submission::Shed => {
+            // A shed is a policy decision, not a server fault: reply with
+            // a machine-readable marker so load generators can count it.
+            let mut j = Json::obj();
+            j.set("shed", true)
+                .set("error", format!("variant '{variant}' shed the request"));
+            return Ok(LineOutcome::Reply(j));
+        }
+    };
     let mut j = Json::obj();
     j.set("id", resp.id)
         .set("cls", resp.cls.iter().map(|&v| v as f64).collect::<Vec<f64>>())
@@ -274,5 +288,62 @@ mod tests {
         let ack = client.call(&sd).unwrap();
         assert_eq!(ack.get("shutting_down").and_then(Json::as_bool), Some(true));
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_shed_reply_is_machine_readable() {
+        use crate::coordinator::pool::AdmissionPolicy;
+        use crate::coordinator::VariantConfig;
+        use std::time::Duration;
+        let cfg = BertConfig::micro();
+        let w = Arc::new(BertWeights::synthetic(&cfg, 72));
+        let e: Arc<dyn Engine> =
+            Arc::new(CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 1)));
+        let mut r = Router::new();
+        // bound 1 + a long batch window: the first request parks in the
+        // queue, so a second concurrent request is deterministically shed
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(400),
+        };
+        r.register_with_config(
+            "tight",
+            e,
+            w,
+            VariantConfig::new(policy, 1)
+                .with_queue_bound(1)
+                .with_admission(AdmissionPolicy::Shed),
+        );
+        let router = Arc::new(r);
+        let server = Server::new(Arc::clone(&router));
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", move |addr| {
+                    addr_tx.send(addr).unwrap();
+                })
+                .unwrap();
+        });
+        let addr = addr_rx.recv().unwrap();
+        let first = std::thread::spawn(move || {
+            let mut a = Client::connect(&addr.to_string()).unwrap();
+            a.infer("tight", &[1, 2, 3]).unwrap()
+        });
+        // give the first request time to be admitted and parked
+        std::thread::sleep(Duration::from_millis(100));
+        let mut b = Client::connect(&addr.to_string()).unwrap();
+        let shed = b.infer("tight", &[4, 5, 6]).unwrap();
+        assert_eq!(shed.get("shed").and_then(Json::as_bool), Some(true));
+        assert!(shed.get("error").is_some());
+        // the parked request is still answered once its window closes
+        let ok = first.join().unwrap();
+        assert!(ok.get("error").is_none(), "{ok:?}");
+        assert!(ok.get("cls").is_some());
+        assert_eq!(router.metrics.shed("tight"), 1);
+        let mut sd = Json::obj();
+        sd.set("cmd", "shutdown");
+        let _ = b.call(&sd).unwrap();
+        handle.join().unwrap();
+        router.shutdown();
     }
 }

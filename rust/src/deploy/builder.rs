@@ -14,6 +14,7 @@
 //! is born.
 
 use super::error::DeployError;
+use crate::coordinator::pool::DEFAULT_PIPELINE_DEPTH;
 use crate::coordinator::PipelineMode;
 use crate::interp::bert::InterpEngine;
 use crate::model::bert::{
@@ -209,6 +210,8 @@ pub struct BuiltEngine {
     pub name: String,
     /// Pipeline mode to register under.
     pub mode: PipelineMode,
+    /// Prepare→execute channel depth to register under.
+    pub pipeline_depth: usize,
     /// The scheduler the engine's plans live in (sparse engines only).
     pub sched: Option<Arc<AutoScheduler>>,
     /// What the build actually did.
@@ -243,6 +246,7 @@ pub struct EngineBuilder {
     plan_store: Option<Arc<PlanStore>>,
     exec_pool: Option<Arc<Pool>>,
     mode: PipelineMode,
+    pipeline_depth: usize,
 }
 
 impl EngineBuilder {
@@ -262,6 +266,7 @@ impl EngineBuilder {
             plan_store: None,
             exec_pool: None,
             mode: PipelineMode::default(),
+            pipeline_depth: DEFAULT_PIPELINE_DEPTH,
         }
     }
 
@@ -357,6 +362,14 @@ impl EngineBuilder {
         self
     }
 
+    /// Prepare→execute channel depth to register the engine under
+    /// (carried through to [`BuiltEngine::pipeline_depth`]; clamped to
+    /// ≥ 1, defaults to 1 — classic double buffering).
+    pub fn pipeline_depth(mut self, depth: usize) -> Self {
+        self.pipeline_depth = depth.max(1);
+        self
+    }
+
     /// Validate the configuration and construct the engine.
     pub fn build(self) -> Result<BuiltEngine, DeployError> {
         let _span = crate::trace::span("deploy", "build", 0, &[]);
@@ -415,19 +428,24 @@ impl EngineBuilder {
             }
         };
         let name = self.name.unwrap_or_else(|| kind.to_string());
+        let depth = self.pipeline_depth;
         let t0 = Instant::now();
         match kind {
             EngineKind::PyTorch | EngineKind::TensorFlow => {
                 let blocked = kind == EngineKind::TensorFlow;
                 let engine: Arc<dyn Engine> =
                     Arc::new(InterpEngine::new(Arc::clone(&weights), blocked, threads));
-                Ok(finish(engine, weights, name, self.mode, None, kind, None, None, threads, t0))
+                Ok(finish(
+                    engine, weights, name, self.mode, depth, None, kind, None, None, threads, t0,
+                ))
             }
             EngineKind::TvmStd => {
                 let engine: Arc<dyn Engine> = Arc::new(CompiledDenseEngine::build(
                     DenseEngineOptions::new(Arc::clone(&weights), threads).named(&name),
                 ));
-                Ok(finish(engine, weights, name, self.mode, None, kind, None, None, threads, t0))
+                Ok(finish(
+                    engine, weights, name, self.mode, depth, None, kind, None, None, threads, t0,
+                ))
             }
             EngineKind::TvmPlus => {
                 let block = self.block.ok_or(DeployError::MissingOption {
@@ -521,6 +539,7 @@ impl EngineBuilder {
                     weights,
                     name,
                     mode: self.mode,
+                    pipeline_depth: depth,
                     sched: Some(sched),
                     report,
                 })
@@ -591,6 +610,7 @@ fn finish(
     weights: Arc<BertWeights>,
     name: String,
     mode: PipelineMode,
+    pipeline_depth: usize,
     sched: Option<Arc<AutoScheduler>>,
     kind: EngineKind,
     block: Option<BlockShape>,
@@ -622,6 +642,7 @@ fn finish(
         weights,
         name,
         mode,
+        pipeline_depth,
         sched,
         report,
     }

@@ -22,7 +22,7 @@ use super::builder::{
 use super::error::DeployError;
 use super::toml;
 use crate::coordinator::batcher::BatchPolicy;
-use crate::coordinator::{PipelineMode, Router};
+use crate::coordinator::{AdmissionPolicy, PipelineMode, Router, VariantConfig};
 use crate::model::engine::EngineKind;
 use crate::model::{BertConfig, BertWeights};
 use crate::planstore::PlanStore;
@@ -72,6 +72,17 @@ pub struct ServingSpec {
     pub max_batch: usize,
     /// Dynamic-batch window in milliseconds.
     pub batch_wait_ms: u64,
+    /// Prepare→execute channel depth (1 = classic double buffering).
+    pub pipeline_depth: usize,
+    /// Admission-gate capacity (admitted-but-unbatched requests); absent
+    /// = unbounded queue, admission policy inert.
+    pub queue_bound: Option<usize>,
+    /// What happens at the bound: block (backpressure), shed (refuse),
+    /// or degrade (truncate the sequence).
+    pub admission: AdmissionPolicy,
+    /// Declared p99 latency target (µs) for `sparsebert loadtest`;
+    /// informational for `serve`.
+    pub slo_p99_us: Option<u64>,
 }
 
 impl Default for ServingSpec {
@@ -82,6 +93,10 @@ impl Default for ServingSpec {
             mode: PipelineMode::default(),
             max_batch: 8,
             batch_wait_ms: 2,
+            pipeline_depth: 1,
+            queue_bound: None,
+            admission: AdmissionPolicy::default(),
+            slo_p99_us: None,
         }
     }
 }
@@ -373,7 +388,21 @@ impl DeploymentSpec {
         }
         let mut serving = ServingSpec::default();
         if let Some(s) = j.get("serving") {
-            check_keys(s, "serving", &["addr", "threads", "mode", "max_batch", "batch_wait_ms"])?;
+            check_keys(
+                s,
+                "serving",
+                &[
+                    "addr",
+                    "threads",
+                    "mode",
+                    "max_batch",
+                    "batch_wait_ms",
+                    "pipeline_depth",
+                    "queue_bound",
+                    "admission",
+                    "slo_p99_us",
+                ],
+            )?;
             serving.addr = str_field(s, "serving.addr")?;
             serving.threads = usize_field(s, "serving.threads")?;
             if let Some(m) = str_field(s, "serving.mode")? {
@@ -385,6 +414,15 @@ impl DeploymentSpec {
             if let Some(w) = usize_field(s, "serving.batch_wait_ms")? {
                 serving.batch_wait_ms = w as u64;
             }
+            if let Some(d) = usize_field(s, "serving.pipeline_depth")? {
+                serving.pipeline_depth = d;
+            }
+            serving.queue_bound = usize_field(s, "serving.queue_bound")?;
+            if let Some(a) = str_field(s, "serving.admission")? {
+                serving.admission =
+                    AdmissionPolicy::parse(&a).map_err(|e| invalid("serving.admission", &e))?;
+            }
+            serving.slo_p99_us = usize_field(s, "serving.slo_p99_us")?.map(|v| v as u64);
         }
         let mut scheduler = SchedulerSpec::default();
         if let Some(sc) = j.get("scheduler") {
@@ -497,6 +535,33 @@ impl DeploymentSpec {
         }
         if self.serving.max_batch == 0 {
             return Err(invalid("serving.max_batch", "must be ≥ 1"));
+        }
+        if self.serving.pipeline_depth == 0 {
+            return Err(invalid(
+                "serving.pipeline_depth",
+                "must be ≥ 1 (1 = classic double buffering)",
+            ));
+        }
+        if self.serving.queue_bound == Some(0) {
+            return Err(invalid(
+                "serving.queue_bound",
+                "must be ≥ 1 (omit the key for an unbounded queue)",
+            ));
+        }
+        if self.serving.admission != AdmissionPolicy::Block && self.serving.queue_bound.is_none() {
+            // A non-blocking policy with no bound would silently never
+            // fire; reject the config instead of letting the operator
+            // believe overload protection is on.
+            return Err(invalid(
+                "serving.admission",
+                &format!(
+                    "admission = \"{}\" requires serving.queue_bound",
+                    self.serving.admission
+                ),
+            ));
+        }
+        if self.serving.slo_p99_us == Some(0) {
+            return Err(invalid("serving.slo_p99_us", "must be ≥ 1 µs"));
         }
         if let Some(m) = self.scheduler.hybrid_margin {
             if self.scheduler.cost_model != CostPolicy::Hybrid {
@@ -671,7 +736,8 @@ impl DeploymentSpec {
                 .name(&v.name)
                 .weights(Arc::clone(&base_weights))
                 .threads(threads)
-                .pipeline_mode(v.mode.unwrap_or(self.serving.mode));
+                .pipeline_mode(v.mode.unwrap_or(self.serving.mode))
+                .pipeline_depth(self.serving.pipeline_depth);
             if v.kind == EngineKind::TvmPlus {
                 b = b
                     .scheduler(Arc::clone(&sched))
@@ -688,14 +754,14 @@ impl DeploymentSpec {
                 }
             }
             let built = b.build()?;
-            router.register_with_mode(
-                &built.name,
-                built.engine,
-                built.weights,
-                policy,
-                threads,
-                built.mode,
-            );
+            let mut vcfg = VariantConfig::new(policy, threads)
+                .with_mode(built.mode)
+                .with_pipeline_depth(built.pipeline_depth)
+                .with_admission(self.serving.admission);
+            if let Some(bound) = self.serving.queue_bound {
+                vcfg = vcfg.with_queue_bound(bound);
+            }
+            router.register_with_config(&built.name, built.engine, built.weights, vcfg);
             reports.push(built.report);
         }
         // Plan-cache (and, when warm-starting, store) counters surface in
@@ -830,6 +896,10 @@ seed = 42
 mode = "pipelined"
 max_batch = 4
 batch_wait_ms = 1
+pipeline_depth = 2
+queue_bound = 64
+admission = "block"
+slo_p99_us = 50000
 
 [[variant]]
 name = "tvm"
@@ -850,6 +920,10 @@ pool = 4
         assert_eq!(spec.model.config, "micro");
         assert_eq!(spec.model.seed, 42);
         assert_eq!(spec.serving.max_batch, 4);
+        assert_eq!(spec.serving.pipeline_depth, 2);
+        assert_eq!(spec.serving.queue_bound, Some(64));
+        assert_eq!(spec.serving.admission, AdmissionPolicy::Block);
+        assert_eq!(spec.serving.slo_p99_us, Some(50_000));
         assert_eq!(spec.variants.len(), 2);
         assert_eq!(spec.variants[1].kind, EngineKind::TvmPlus);
         assert_eq!(spec.variants[1].block, Some(BlockShape::new(2, 4)));
@@ -1055,6 +1129,53 @@ pool = 4
         spec.validate().unwrap();
         let e = spec.instantiate().unwrap_err();
         assert!(matches!(e, DeployError::Unsupported { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn serving_admission_keys_validate() {
+        // depth 0 is a validation error, not a silent clamp
+        let zd = "[serving]\npipeline_depth = 0\n[[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(zd).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        // so is a zero queue bound
+        let zb = "[serving]\nqueue_bound = 0\n[[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(zb).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        // a non-blocking policy without a bound would never fire
+        let nb = "[serving]\nadmission = \"shed\"\n[[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(nb).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        // unknown policy names fail at parse time
+        let bad = "[serving]\nadmission = \"retry\"\n[[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        assert!(DeploymentSpec::from_toml_str(bad).is_err());
+        // zero SLO target is meaningless
+        let zs = "[serving]\nslo_p99_us = 0\n[[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(zs).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        // shed + bound validates and instantiates into a shedding router
+        let ok = "[model]\nconfig = \"micro\"\n\
+                  [serving]\nqueue_bound = 1\nadmission = \"shed\"\n\
+                  max_batch = 16\nbatch_wait_ms = 200\n\
+                  [[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let spec = DeploymentSpec::from_toml_str(ok).unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.serving.admission, AdmissionPolicy::Shed);
+        let dep = spec.instantiate().unwrap();
+        let mut enqueued = Vec::new();
+        let mut sheds = 0usize;
+        for _ in 0..4 {
+            match dep.router.try_submit("a", vec![1, 2]).unwrap() {
+                crate::coordinator::Submission::Enqueued(rx) => enqueued.push(rx),
+                crate::coordinator::Submission::Shed => sheds += 1,
+            }
+        }
+        assert_eq!(enqueued.len(), 1, "bound 1 admits exactly one request");
+        assert_eq!(sheds, 3);
+        assert_eq!(dep.router.metrics.shed("a"), 3);
+        for rx in enqueued {
+            assert!(rx.recv().is_ok());
+        }
+        dep.router.shutdown();
     }
 
     #[test]

@@ -111,17 +111,33 @@
 //! The coordinator's request path is a **two-stage pipeline**
 //! ([`coordinator::pool`]): a prepare stage (request decode, embedding
 //! lookup, batch tensor assembly) runs concurrently with an execute
-//! stage (planned BSR forward), double-buffered through a depth-1
-//! channel so batch N+1 assembles while batch N computes. All variants
-//! execute their batches on **one shared engine-side pool** owned by the
-//! [`coordinator::Router`] (M registered variants no longer oversubscribe
-//! cores M-fold), and `sparsebert serve` hands the same pool handle to
-//! the sparse engine so kernel fan-out shares it too. Per-batch
-//! queue/prepare/execute spans land in [`coordinator::metrics`];
-//! overlapping spans from different batches witness the concurrency.
-//! Barrier mode (the old batch-then-compute loop) survives as the A3
-//! ablation baseline (`benches/ablation_batching.rs`, `sparsebert
-//! cibench`).
+//! stage (planned BSR forward), buffered through a configurable
+//! depth-N channel (`pipeline_depth` in the deployment manifest) so
+//! batch N+1 assembles while batch N computes. In front of each
+//! variant's batcher sits an optional admission gate (`queue_bound` +
+//! [`coordinator::AdmissionPolicy`]): overload is met with
+//! backpressure, sheds, or degraded (truncated) requests rather than an
+//! unbounded queue, with shed/queue-depth counters exported in the
+//! serving stats JSON. All variants execute their batches on **one
+//! shared engine-side pool** owned by the [`coordinator::Router`] (M
+//! registered variants no longer oversubscribe cores M-fold), and
+//! `sparsebert serve` hands the same pool handle to the sparse engine
+//! so kernel fan-out shares it too. Per-batch queue/prepare/execute
+//! spans land in [`coordinator::metrics`]; overlapping spans from
+//! different batches witness the concurrency. Barrier mode (the old
+//! batch-then-compute loop) survives as the A3 ablation baseline
+//! (`benches/ablation_batching.rs`, `sparsebert cibench`).
+//!
+//! ## Load generation & SLOs
+//!
+//! The [`loadgen`] subsystem closes the loop on deployment claims:
+//! seeded Poisson / bursty arrival schedules with mixed sequence-length
+//! and multi-variant traffic, driven by N closed-loop clients against
+//! the real TCP server (`sparsebert loadtest`) or the in-process router
+//! ([`bench_harness::loadtest`]), aggregated into an
+//! [`loadgen::SloReport`] (p50/p99/p999 vs declared targets, achieved
+//! RPS, shed counts) and archived by CI as `LOAD_ci.json`. See
+//! `docs/serving-load.md`.
 //!
 //! [`SpmmPlan`]: kernels::bsr_spmm::SpmmPlan
 //!
@@ -139,6 +155,7 @@ pub mod model;
 pub mod runtime;
 pub mod coordinator;
 pub mod deploy;
+pub mod loadgen;
 pub mod bench_harness;
 
 /// Crate version string, reported by the CLI and the serving stats endpoint.

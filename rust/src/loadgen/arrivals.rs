@@ -1,0 +1,169 @@
+//! Arrival processes: when requests hit the server.
+//!
+//! Two models, both seeded and deterministic (the same seed reproduces
+//! the same schedule byte-for-byte):
+//!
+//! * **Poisson** — independent exponential inter-arrival gaps at a fixed
+//!   mean rate; the classic open-system traffic model.
+//! * **Bursty (ON/OFF)** — a Poisson process modulated by a square wave:
+//!   arrivals come in ON windows at `burst_mult ×` the base rate and stop
+//!   entirely in OFF windows, with the window lengths chosen so the
+//!   long-run mean rate equals the configured `rate_rps`. This is the
+//!   adversarial load shape for admission control: the instantaneous
+//!   rate during a burst far exceeds what the steady-state rate suggests.
+
+use crate::util::rng::Rng;
+
+/// A seeded arrival-time generator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Exponential inter-arrival gaps with mean `1/rate_rps`.
+    Poisson { rate_rps: f64 },
+    /// ON/OFF-modulated Poisson: `burst_mult × rate_rps` inside each
+    /// `on_us`-long window, silence for the following `off_us`.
+    Bursty {
+        rate_rps: f64,
+        burst_mult: f64,
+        on_us: u64,
+        off_us: u64,
+    },
+}
+
+impl ArrivalProcess {
+    pub fn poisson(rate_rps: f64) -> ArrivalProcess {
+        assert!(rate_rps > 0.0, "arrival rate must be positive");
+        ArrivalProcess::Poisson { rate_rps }
+    }
+
+    /// Bursty process with the default shape: 100 ms ON, 300 ms OFF,
+    /// burst multiplier 4 — the duty cycle (1/4) times the multiplier
+    /// (4×) keeps the long-run mean at `rate_rps`.
+    pub fn bursty(rate_rps: f64) -> ArrivalProcess {
+        assert!(rate_rps > 0.0, "arrival rate must be positive");
+        ArrivalProcess::Bursty {
+            rate_rps,
+            burst_mult: 4.0,
+            on_us: 100_000,
+            off_us: 300_000,
+        }
+    }
+
+    /// Parse a CLI/manifest name (`poisson` | `bursty`) at `rate_rps`.
+    pub fn parse(s: &str, rate_rps: f64) -> Result<ArrivalProcess, String> {
+        match s {
+            "poisson" => Ok(ArrivalProcess::poisson(rate_rps)),
+            "bursty" | "onoff" => Ok(ArrivalProcess::bursty(rate_rps)),
+            other => Err(format!("unknown arrival process '{other}' (poisson|bursty)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+        }
+    }
+
+    /// Long-run mean arrival rate in requests/second.
+    pub fn rate_rps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => *rate_rps,
+            ArrivalProcess::Bursty { rate_rps, .. } => *rate_rps,
+        }
+    }
+
+    /// Generate every arrival offset (µs) inside `[0, duration_us)`,
+    /// sorted ascending. Deterministic in `rng`'s state.
+    pub fn schedule(&self, duration_us: u64, rng: &mut Rng) -> Vec<u64> {
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                let mut out = Vec::new();
+                let mut t = 0.0f64;
+                loop {
+                    t += rng.exp(rate_rps) * 1e6;
+                    if t >= duration_us as f64 {
+                        return out;
+                    }
+                    out.push(t as u64);
+                }
+            }
+            ArrivalProcess::Bursty {
+                rate_rps,
+                burst_mult,
+                on_us,
+                off_us,
+            } => {
+                // The exponential clock only runs during ON windows: draw
+                // cumulative ON-time at the burst rate, then map ON-time
+                // back to wall time by inserting the OFF gaps.
+                let burst_rate = rate_rps * burst_mult;
+                let period = on_us + off_us;
+                let mut out = Vec::new();
+                let mut on_t = 0.0f64;
+                loop {
+                    on_t += rng.exp(burst_rate) * 1e6;
+                    let windows = (on_t / on_us as f64) as u64;
+                    let wall = windows * period + (on_t % on_us as f64) as u64;
+                    if wall >= duration_us {
+                        return out;
+                    }
+                    out.push(wall);
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ArrivalProcess {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_and_determinism() {
+        let p = ArrivalProcess::poisson(500.0);
+        let a = p.schedule(4_000_000, &mut Rng::new(11));
+        let b = p.schedule(4_000_000, &mut Rng::new(11));
+        assert_eq!(a, b, "same seed must give an identical schedule");
+        // 500 rps over 4 s ≈ 2000 arrivals; Poisson σ ≈ 45
+        assert!((1700..2300).contains(&a.len()), "{}", a.len());
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert!(a.iter().all(|&t| t < 4_000_000));
+    }
+
+    #[test]
+    fn bursty_mean_rate_matches_and_respects_off_windows() {
+        let p = ArrivalProcess::bursty(400.0);
+        let arr = p.schedule(8_000_000, &mut Rng::new(3));
+        // long-run mean 400 rps over 8 s ≈ 3200 arrivals
+        assert!((2700..3700).contains(&arr.len()), "{}", arr.len());
+        // nothing lands in an OFF window
+        for &t in &arr {
+            assert!(t % 400_000 < 100_000, "arrival at {t} is inside an OFF window");
+        }
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn bursty_instantaneous_rate_exceeds_mean() {
+        let p = ArrivalProcess::bursty(400.0);
+        let arr = p.schedule(8_000_000, &mut Rng::new(5));
+        // the first ON window should see ~4× the mean rate
+        let first_on = arr.iter().filter(|&&t| t < 100_000).count();
+        assert!(first_on > 80, "only {first_on} arrivals in the first burst");
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(ArrivalProcess::parse("poisson", 10.0), Ok(ArrivalProcess::poisson(10.0)));
+        assert_eq!(ArrivalProcess::parse("bursty", 10.0), Ok(ArrivalProcess::bursty(10.0)));
+        assert!(ArrivalProcess::parse("uniform", 10.0).is_err());
+        assert_eq!(ArrivalProcess::poisson(1.0).to_string(), "poisson");
+        assert!((ArrivalProcess::bursty(25.0).rate_rps() - 25.0).abs() < 1e-12);
+    }
+}

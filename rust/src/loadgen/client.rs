@@ -1,0 +1,273 @@
+//! Closed-loop client fleet.
+//!
+//! N clients share one request schedule; each client claims the next
+//! scheduled request, waits for its arrival time, issues it, and **blocks
+//! until the response arrives** before claiming another — the defining
+//! property of closed-loop load generation. When the server slows down,
+//! the offered load backs off with it (each client has at most one
+//! request outstanding), so measured latencies are honest response times
+//! rather than queue-explosion artifacts; the gap between the scheduled
+//! and achieved rate is itself a saturation signal. Open-loop replay
+//! (issue on schedule regardless of completions) remains available as
+//! [`crate::coordinator::Router::run_trace`].
+//!
+//! The driver is transport-agnostic: a [`RequestSink`] either calls the
+//! in-process [`crate::coordinator::Router`] directly ([`RouterSink`],
+//! used by the bench grid) or speaks the TCP JSON-lines protocol
+//! ([`TcpSink`], used by `sparsebert loadtest` against a real server).
+
+use super::workload::ScheduledRequest;
+use crate::coordinator::server::Client;
+use crate::coordinator::{Router, Submission};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// What one sink call produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SinkReply {
+    /// A full response arrived.
+    Answered,
+    /// The server shed the request (admission policy).
+    Shed,
+}
+
+/// One transport connection a closed-loop client issues requests on.
+pub trait RequestSink {
+    fn call(&mut self, variant: &str, tokens: &[u32]) -> Result<SinkReply>;
+}
+
+/// In-process sink: submits straight into a [`Router`].
+pub struct RouterSink {
+    router: Arc<Router>,
+}
+
+impl RouterSink {
+    pub fn new(router: Arc<Router>) -> RouterSink {
+        RouterSink { router }
+    }
+}
+
+impl RequestSink for RouterSink {
+    fn call(&mut self, variant: &str, tokens: &[u32]) -> Result<SinkReply> {
+        match self.router.try_submit(variant, tokens.to_vec())? {
+            Submission::Enqueued(rx) => {
+                rx.recv()
+                    .map_err(|_| anyhow::anyhow!("variant '{variant}' dropped the request"))?;
+                Ok(SinkReply::Answered)
+            }
+            Submission::Shed => Ok(SinkReply::Shed),
+        }
+    }
+}
+
+/// TCP sink: one JSON-lines connection to a running `sparsebert serve`.
+pub struct TcpSink {
+    client: Client,
+}
+
+impl TcpSink {
+    pub fn connect(addr: &str) -> Result<TcpSink> {
+        Ok(TcpSink {
+            client: Client::connect(addr)?,
+        })
+    }
+}
+
+impl RequestSink for TcpSink {
+    fn call(&mut self, variant: &str, tokens: &[u32]) -> Result<SinkReply> {
+        let reply = self.client.infer(variant, tokens)?;
+        if reply.get("shed").and_then(Json::as_bool) == Some(true) {
+            return Ok(SinkReply::Shed);
+        }
+        if let Some(err) = reply.get("error") {
+            anyhow::bail!("server error: {}", err.to_string_compact());
+        }
+        Ok(SinkReply::Answered)
+    }
+}
+
+/// Per-request outcome, in schedule order.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub variant: String,
+    /// Scheduled arrival offset, µs.
+    pub scheduled_us: u64,
+    /// Client-observed response time (send → reply), µs; `None` when the
+    /// request was shed or errored.
+    pub latency_us: Option<u64>,
+    pub shed: bool,
+    pub error: Option<String>,
+}
+
+/// Everything a load run produced, before SLO aggregation.
+#[derive(Debug, Clone)]
+pub struct LoadOutcome {
+    pub results: Vec<RequestResult>,
+    pub wall_seconds: f64,
+    pub clients: usize,
+}
+
+/// Drive `schedule` through `clients` closed-loop clients. `connect` is
+/// called once per client (index `0..clients`) to open its transport;
+/// a connect failure aborts the whole run. Behind-schedule requests are
+/// issued immediately — lateness shows up as a lower achieved rate, not
+/// as inflated latency.
+pub fn run_closed_loop<F>(
+    schedule: &[ScheduledRequest],
+    clients: usize,
+    connect: F,
+) -> Result<LoadOutcome>
+where
+    F: Fn(usize) -> Result<Box<dyn RequestSink + Send>>,
+{
+    let clients = clients.max(1);
+    let mut sinks = Vec::with_capacity(clients);
+    for i in 0..clients {
+        sinks.push(connect(i)?);
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<RequestResult>>> = Mutex::new(vec![None; schedule.len()]);
+    let started = Instant::now();
+    std::thread::scope(|s| {
+        for mut sink in sinks {
+            let next = &next;
+            let results = &results;
+            s.spawn(move || loop {
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= schedule.len() {
+                    break;
+                }
+                let req = &schedule[idx];
+                let target = Duration::from_micros(req.at_us);
+                let now = started.elapsed();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                let t0 = Instant::now();
+                let reply = sink.call(&req.variant, &req.tokens);
+                let latency_us = t0.elapsed().as_micros() as u64;
+                let result = match reply {
+                    Ok(SinkReply::Answered) => RequestResult {
+                        variant: req.variant.clone(),
+                        scheduled_us: req.at_us,
+                        latency_us: Some(latency_us),
+                        shed: false,
+                        error: None,
+                    },
+                    Ok(SinkReply::Shed) => RequestResult {
+                        variant: req.variant.clone(),
+                        scheduled_us: req.at_us,
+                        latency_us: None,
+                        shed: true,
+                        error: None,
+                    },
+                    Err(e) => RequestResult {
+                        variant: req.variant.clone(),
+                        scheduled_us: req.at_us,
+                        latency_us: None,
+                        shed: false,
+                        error: Some(e.to_string()),
+                    },
+                };
+                results.lock().expect("loadgen results poisoned")[idx] = Some(result);
+            });
+        }
+    });
+    let wall_seconds = started.elapsed().as_secs_f64();
+    let results = results
+        .into_inner()
+        .expect("loadgen results poisoned")
+        .into_iter()
+        .flatten()
+        .collect();
+    Ok(LoadOutcome {
+        results,
+        wall_seconds,
+        clients,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::pool::AdmissionPolicy;
+    use crate::coordinator::VariantConfig;
+    use crate::model::bert::{CompiledDenseEngine, DenseEngineOptions};
+    use crate::model::config::BertConfig;
+    use crate::model::engine::Engine;
+    use crate::model::weights::BertWeights;
+
+    fn router(cfg: VariantConfig) -> Arc<Router> {
+        let model = BertConfig::micro();
+        let w = Arc::new(BertWeights::synthetic(&model, 81));
+        let e: Arc<dyn Engine> =
+            Arc::new(CompiledDenseEngine::build(DenseEngineOptions::new(Arc::clone(&w), 1)));
+        let mut r = Router::new();
+        r.register_with_config("dense", e, w, cfg);
+        Arc::new(r)
+    }
+
+    fn schedule(n: usize) -> Vec<ScheduledRequest> {
+        (0..n)
+            .map(|i| ScheduledRequest {
+                at_us: i as u64 * 500,
+                variant: "dense".into(),
+                tokens: vec![1, 2, 3 + i as u32],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn closed_loop_answers_every_request() {
+        let r = router(VariantConfig::new(BatchPolicy::default(), 2));
+        let sched = schedule(24);
+        let router = Arc::clone(&r);
+        let outcome = run_closed_loop(&sched, 4, move |_| {
+            Ok(Box::new(RouterSink::new(Arc::clone(&router))) as Box<dyn RequestSink + Send>)
+        })
+        .unwrap();
+        assert_eq!(outcome.results.len(), 24);
+        assert_eq!(outcome.clients, 4);
+        assert!(outcome.wall_seconds > 0.0);
+        assert!(outcome.results.iter().all(|x| x.latency_us.is_some()));
+        assert!(outcome.results.iter().all(|x| !x.shed && x.error.is_none()));
+        // results are in schedule order
+        for (i, res) in outcome.results.iter().enumerate() {
+            assert_eq!(res.scheduled_us, sched[i].at_us);
+        }
+        r.shutdown();
+    }
+
+    #[test]
+    fn closed_loop_counts_sheds() {
+        // bound 1 + shed + a batch window far longer than the schedule:
+        // exactly one request is admitted, everything else is shed.
+        let r = router(
+            VariantConfig::new(
+                BatchPolicy {
+                    max_batch: 64,
+                    max_wait: Duration::from_millis(300),
+                },
+                2,
+            )
+            .with_queue_bound(1)
+            .with_admission(AdmissionPolicy::Shed),
+        );
+        let sched = schedule(10);
+        let router = Arc::clone(&r);
+        let outcome = run_closed_loop(&sched, 2, move |_| {
+            Ok(Box::new(RouterSink::new(Arc::clone(&router))) as Box<dyn RequestSink + Send>)
+        })
+        .unwrap();
+        let sheds = outcome.results.iter().filter(|x| x.shed).count();
+        let answered = outcome.results.iter().filter(|x| x.latency_us.is_some()).count();
+        assert_eq!(answered, 1, "exactly one admitted request is answered");
+        assert_eq!(sheds, 9);
+        assert_eq!(r.metrics.shed("dense"), 9);
+        r.shutdown();
+    }
+}

@@ -1,0 +1,36 @@
+//! Closed-loop load generation and SLO measurement — L3's harness side.
+//!
+//! The paper's co-design argument lands at the serving layer: a block
+//! shape and schedule are only "better" if the deployed engine meets its
+//! latency targets under realistic traffic. This subsystem supplies that
+//! traffic and the verdict:
+//!
+//! * [`arrivals`] — seeded Poisson and bursty (ON/OFF) arrival
+//!   processes; identical seeds yield byte-identical schedules;
+//! * [`workload`] — what each arrival asks for: weighted multi-variant
+//!   splits and fixed/mixture sequence-length distributions, all drawn
+//!   from forks of one [`crate::util::rng::Rng`];
+//! * [`client`] — the closed-loop client fleet (N clients, one
+//!   outstanding request each) and its transports: in-process
+//!   [`RouterSink`] or TCP [`TcpSink`] against a live `sparsebert serve`;
+//! * [`slo`] — aggregation into an [`SloReport`] (p50/p99/p999 vs
+//!   declared targets, achieved RPS, shed/error counts, per-variant
+//!   breakdown), its `LOAD_ci.json` form, and the structural validator
+//!   CI gates on.
+//!
+//! Entry points: `sparsebert loadtest` (spawns a real TCP server from a
+//! deployment manifest and measures it end-to-end) and
+//! [`crate::bench_harness::loadtest`] (the SLO-vs-pipeline-depth-vs-
+//! block-shape sweep grid).
+
+pub mod arrivals;
+pub mod client;
+pub mod slo;
+pub mod workload;
+
+pub use arrivals::ArrivalProcess;
+pub use client::{
+    run_closed_loop, LoadOutcome, RequestResult, RequestSink, RouterSink, SinkReply, TcpSink,
+};
+pub use slo::{validate_load_report, SloReport, SloTargets, VariantLoad, LOAD_SCHEMA};
+pub use workload::{parse_splits, ScheduledRequest, SeqLenDist, VariantShare, WorkloadSpec};

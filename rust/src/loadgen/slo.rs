@@ -1,0 +1,378 @@
+//! SLO aggregation and the `LOAD_ci.json` report.
+//!
+//! A load run produces per-request outcomes ([`super::client::LoadOutcome`]);
+//! this module folds them into an [`SloReport`]: tail latencies
+//! (p50/p99/p999) checked against declared [`SloTargets`], the achieved
+//! request rate, shed/error counts, and a per-variant breakdown. The JSON
+//! form (schema [`LOAD_SCHEMA`]) is what CI archives and what
+//! [`validate_load_report`] gates on — the same self-check the `loadtest`
+//! command runs on its own output before writing it.
+
+use super::client::LoadOutcome;
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+use std::collections::BTreeMap;
+
+/// Schema tag stamped into every load report.
+pub const LOAD_SCHEMA: &str = "sparsebert-load/v1";
+
+/// Declared latency targets, µs. `None` means "not declared" — the
+/// percentile is still reported but never fails the SLO check.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SloTargets {
+    pub p50_us: Option<u64>,
+    pub p99_us: Option<u64>,
+    pub p999_us: Option<u64>,
+}
+
+impl SloTargets {
+    pub fn is_empty(&self) -> bool {
+        self.p50_us.is_none() && self.p99_us.is_none() && self.p999_us.is_none()
+    }
+}
+
+/// Per-variant slice of the report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantLoad {
+    pub completed: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+/// The aggregate result of one load run.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub scheduled: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub clients: usize,
+    pub wall_seconds: f64,
+    /// Completed requests per wall-clock second.
+    pub achieved_rps: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub mean_us: u64,
+    pub max_us: u64,
+    pub targets: SloTargets,
+    /// True iff every declared target held. Vacuously true with no
+    /// targets or no completed requests.
+    pub slo_met: bool,
+    pub variants: BTreeMap<String, VariantLoad>,
+}
+
+impl SloReport {
+    pub fn from_outcome(outcome: &LoadOutcome, targets: &SloTargets) -> SloReport {
+        let mut lat: Vec<f64> = outcome
+            .results
+            .iter()
+            .filter_map(|r| r.latency_us.map(|l| l as f64))
+            .collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let completed = lat.len() as u64;
+        let shed = outcome.results.iter().filter(|r| r.shed).count() as u64;
+        let errors = outcome.results.iter().filter(|r| r.error.is_some()).count() as u64;
+        let pct = |q: f64| {
+            if lat.is_empty() {
+                0
+            } else {
+                percentile_sorted(&lat, q) as u64
+            }
+        };
+        let (p50_us, p99_us, p999_us) = (pct(50.0), pct(99.0), pct(99.9));
+        let mean_us = if lat.is_empty() {
+            0
+        } else {
+            (lat.iter().sum::<f64>() / lat.len() as f64) as u64
+        };
+        let max_us = lat.last().copied().unwrap_or(0.0) as u64;
+        let wall_seconds = outcome.wall_seconds.max(1e-9);
+        let met = |p: u64, t: Option<u64>| t.is_none_or(|t| p <= t);
+        let slo_met = completed == 0
+            || (met(p50_us, targets.p50_us)
+                && met(p99_us, targets.p99_us)
+                && met(p999_us, targets.p999_us));
+        let mut variants: BTreeMap<String, VariantLoad> = BTreeMap::new();
+        let mut per_variant: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+        for r in &outcome.results {
+            let v = variants.entry(r.variant.clone()).or_insert(VariantLoad {
+                completed: 0,
+                shed: 0,
+                errors: 0,
+                p50_us: 0,
+                p99_us: 0,
+            });
+            match r.latency_us {
+                Some(l) => {
+                    v.completed += 1;
+                    per_variant.entry(&r.variant).or_default().push(l as f64);
+                }
+                None if r.shed => v.shed += 1,
+                None => v.errors += 1,
+            }
+        }
+        for (name, mut lats) in per_variant {
+            lats.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+            let v = variants.get_mut(name).expect("variant was inserted above");
+            v.p50_us = percentile_sorted(&lats, 50.0) as u64;
+            v.p99_us = percentile_sorted(&lats, 99.0) as u64;
+        }
+        SloReport {
+            scheduled: outcome.results.len() as u64,
+            completed,
+            shed,
+            errors,
+            clients: outcome.clients,
+            wall_seconds: outcome.wall_seconds,
+            achieved_rps: completed as f64 / wall_seconds,
+            p50_us,
+            p99_us,
+            p999_us,
+            mean_us,
+            max_us,
+            targets: *targets,
+            slo_met,
+            variants,
+        }
+    }
+
+    /// Human-readable summary table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("load report (closed-loop)\n");
+        out.push_str(&format!(
+            "  requests   {} scheduled / {} completed / {} shed / {} errors\n",
+            self.scheduled, self.completed, self.shed, self.errors
+        ));
+        out.push_str(&format!(
+            "  rate       {:.1} rps achieved over {:.2} s ({} clients)\n",
+            self.achieved_rps, self.wall_seconds, self.clients
+        ));
+        let tgt = |t: Option<u64>| match t {
+            Some(t) => format!(" (target {t})"),
+            None => String::new(),
+        };
+        out.push_str(&format!(
+            "  latency µs p50 {}{} | p99 {}{} | p999 {}{} | mean {} | max {}\n",
+            self.p50_us,
+            tgt(self.targets.p50_us),
+            self.p99_us,
+            tgt(self.targets.p99_us),
+            self.p999_us,
+            tgt(self.targets.p999_us),
+            self.mean_us,
+            self.max_us
+        ));
+        out.push_str(&format!(
+            "  slo        {}\n",
+            if self.slo_met { "met" } else { "VIOLATED" }
+        ));
+        for (name, v) in &self.variants {
+            out.push_str(&format!(
+                "  [{name}] {} ok / {} shed / {} err, p50 {} µs, p99 {} µs\n",
+                v.completed, v.shed, v.errors, v.p50_us, v.p99_us
+            ));
+        }
+        out
+    }
+
+    /// The `LOAD_ci.json` document.
+    pub fn to_json(&self) -> Json {
+        let mut requests = Json::obj();
+        requests
+            .set("scheduled", self.scheduled as usize)
+            .set("completed", self.completed as usize)
+            .set("shed", self.shed as usize)
+            .set("errors", self.errors as usize);
+        let mut latency = Json::obj();
+        latency
+            .set("p50_us", self.p50_us as usize)
+            .set("p99_us", self.p99_us as usize)
+            .set("p999_us", self.p999_us as usize)
+            .set("mean_us", self.mean_us as usize)
+            .set("max_us", self.max_us as usize);
+        let mut slo = Json::obj();
+        slo.set("met", self.slo_met);
+        if let Some(t) = self.targets.p50_us {
+            slo.set("p50_target_us", t as usize);
+        }
+        if let Some(t) = self.targets.p99_us {
+            slo.set("p99_target_us", t as usize);
+        }
+        if let Some(t) = self.targets.p999_us {
+            slo.set("p999_target_us", t as usize);
+        }
+        let mut variants = Json::obj();
+        for (name, v) in &self.variants {
+            let mut vj = Json::obj();
+            vj.set("completed", v.completed as usize)
+                .set("shed", v.shed as usize)
+                .set("errors", v.errors as usize)
+                .set("p50_us", v.p50_us as usize)
+                .set("p99_us", v.p99_us as usize);
+            variants.set(name.as_str(), vj);
+        }
+        let mut root = Json::obj();
+        root.set("schema", LOAD_SCHEMA)
+            .set("version", crate::VERSION)
+            .set("clients", self.clients)
+            .set("wall_seconds", self.wall_seconds)
+            .set("achieved_rps", self.achieved_rps)
+            .set("requests", requests)
+            .set("latency_us", latency)
+            .set("slo", slo)
+            .set("variants", variants);
+        root
+    }
+}
+
+/// Structural self-check for a load report document — the gate CI runs
+/// on the emitted `LOAD_ci.json`.
+pub fn validate_load_report(doc: &Json) -> Result<(), String> {
+    let schema = doc.get("schema").and_then(Json::as_str).unwrap_or_default();
+    if schema != LOAD_SCHEMA {
+        return Err(format!("schema is '{schema}', want '{LOAD_SCHEMA}'"));
+    }
+    let count = |key: &str| {
+        doc.at(&["requests", key])
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("requests.{key} missing"))
+    };
+    let (scheduled, completed) = (count("scheduled")?, count("completed")?);
+    let (shed, errors) = (count("shed")?, count("errors")?);
+    if scheduled != completed + shed + errors {
+        return Err(format!(
+            "request accounting broken: {scheduled} scheduled != \
+             {completed} completed + {shed} shed + {errors} errors"
+        ));
+    }
+    let lat = |key: &str| {
+        doc.at(&["latency_us", key])
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("latency_us.{key} missing"))
+    };
+    let (p50, p99, p999) = (lat("p50_us")?, lat("p99_us")?, lat("p999_us")?);
+    if completed > 0 && !(p50 <= p99 && p99 <= p999) {
+        return Err(format!("percentiles out of order: p50 {p50}, p99 {p99}, p999 {p999}"));
+    }
+    if doc.at(&["slo", "met"]).and_then(Json::as_bool).is_none() {
+        return Err("slo.met missing or not a bool".into());
+    }
+    if doc.get("variants").is_none() {
+        return Err("variants missing".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadgen::client::RequestResult;
+
+    fn outcome() -> LoadOutcome {
+        let mut results = Vec::new();
+        for i in 0..100u64 {
+            results.push(RequestResult {
+                variant: if i % 4 == 0 { "tvm" } else { "tvm+" }.into(),
+                scheduled_us: i * 1000,
+                latency_us: Some(100 + i * 10),
+                shed: false,
+                error: None,
+            });
+        }
+        results.push(RequestResult {
+            variant: "tvm+".into(),
+            scheduled_us: 100_000,
+            latency_us: None,
+            shed: true,
+            error: None,
+        });
+        results.push(RequestResult {
+            variant: "tvm+".into(),
+            scheduled_us: 101_000,
+            latency_us: None,
+            shed: false,
+            error: Some("boom".into()),
+        });
+        LoadOutcome {
+            results,
+            wall_seconds: 2.0,
+            clients: 4,
+        }
+    }
+
+    #[test]
+    fn report_aggregates_and_validates() {
+        let targets = SloTargets {
+            p99_us: Some(2000),
+            ..SloTargets::default()
+        };
+        let rep = SloReport::from_outcome(&outcome(), &targets);
+        assert_eq!(rep.scheduled, 102);
+        assert_eq!(rep.completed, 100);
+        assert_eq!(rep.shed, 1);
+        assert_eq!(rep.errors, 1);
+        assert!((rep.achieved_rps - 50.0).abs() < 1e-9);
+        assert!(rep.p50_us <= rep.p99_us && rep.p99_us <= rep.p999_us);
+        assert!(rep.slo_met, "p99 {} vs target 2000", rep.p99_us);
+        assert_eq!(rep.variants.len(), 2);
+        assert_eq!(rep.variants["tvm"].completed, 25);
+        assert_eq!(rep.variants["tvm+"].shed, 1);
+        assert_eq!(rep.variants["tvm+"].errors, 1);
+        let doc = rep.to_json();
+        validate_load_report(&doc).unwrap();
+        let text = rep.render();
+        assert!(text.contains("102 scheduled"));
+        assert!(text.contains("[tvm+]"));
+    }
+
+    #[test]
+    fn slo_violation_is_flagged() {
+        let targets = SloTargets {
+            p50_us: Some(1),
+            ..SloTargets::default()
+        };
+        let rep = SloReport::from_outcome(&outcome(), &targets);
+        assert!(!rep.slo_met);
+        assert!(rep.render().contains("VIOLATED"));
+        // the report is still structurally valid — SLO and schema are
+        // independent gates
+        validate_load_report(&rep.to_json()).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_broken_documents() {
+        let rep = SloReport::from_outcome(&outcome(), &SloTargets::default());
+        let mut doc = rep.to_json();
+        doc.set("schema", "wrong/v0");
+        assert!(validate_load_report(&doc).is_err());
+        let mut doc = rep.to_json();
+        let mut requests = doc.get("requests").cloned().expect("requests");
+        requests.set("completed", 1usize);
+        doc.set("requests", requests);
+        let err = validate_load_report(&doc).unwrap_err();
+        assert!(err.contains("accounting"), "{err}");
+    }
+
+    #[test]
+    fn empty_outcome_is_vacuously_fine() {
+        let empty = LoadOutcome {
+            results: Vec::new(),
+            wall_seconds: 1.0,
+            clients: 1,
+        };
+        let rep = SloReport::from_outcome(
+            &empty,
+            &SloTargets {
+                p99_us: Some(10),
+                ..SloTargets::default()
+            },
+        );
+        assert_eq!(rep.completed, 0);
+        assert!(rep.slo_met);
+        validate_load_report(&rep.to_json()).unwrap();
+    }
+}

@@ -1,0 +1,257 @@
+//! Workload composition: what each arrival actually asks for.
+//!
+//! An arrival schedule ([`super::arrivals`]) says *when*; this module
+//! says *what* — which engine variant the request routes to (weighted
+//! multi-variant splits) and how long its token sequence is (fixed or a
+//! discrete mixture, e.g. 70% short / 30% long). Everything samples from
+//! one seeded [`Rng`], so a `--seed` reproduces the full request
+//! schedule byte-for-byte, not just the arrival times.
+
+use super::arrivals::ArrivalProcess;
+use crate::util::rng::Rng;
+
+/// Sequence-length distribution for generated requests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SeqLenDist {
+    Fixed(usize),
+    /// Discrete mixture of `(len, weight)` components; weights need not
+    /// sum to 1 (they are normalized at sampling time).
+    Mixture(Vec<(usize, f64)>),
+}
+
+impl SeqLenDist {
+    /// Parse `"16"` (fixed) or `"8:0.7,32:0.3"` (mixture).
+    pub fn parse(s: &str) -> Result<SeqLenDist, String> {
+        if !s.contains(':') {
+            let len: usize = s
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad sequence length '{s}'"))?;
+            if len == 0 {
+                return Err("sequence length must be >= 1".into());
+            }
+            return Ok(SeqLenDist::Fixed(len));
+        }
+        let mut parts = Vec::new();
+        for item in s.split(',') {
+            let (len, weight) = item
+                .trim()
+                .split_once(':')
+                .ok_or_else(|| format!("bad mixture component '{item}' (want len:weight)"))?;
+            let len: usize = len
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad sequence length '{len}'"))?;
+            let weight: f64 = weight
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad weight '{weight}'"))?;
+            if len == 0 || weight <= 0.0 {
+                return Err(format!("mixture component '{item}' must be positive"));
+            }
+            parts.push((len, weight));
+        }
+        if parts.is_empty() {
+            return Err("empty sequence-length mixture".into());
+        }
+        Ok(SeqLenDist::Mixture(parts))
+    }
+
+    /// Largest length the distribution can produce (used to check a
+    /// workload against a model's `max_seq` before starting the run).
+    pub fn max_len(&self) -> usize {
+        match self {
+            SeqLenDist::Fixed(len) => *len,
+            SeqLenDist::Mixture(parts) => {
+                parts.iter().map(|&(len, _)| len).max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Draw one sequence length.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match self {
+            SeqLenDist::Fixed(len) => *len,
+            SeqLenDist::Mixture(parts) => {
+                let total: f64 = parts.iter().map(|(_, w)| w).sum();
+                let mut u = rng.f64() * total;
+                for (len, w) in parts {
+                    if u < *w {
+                        return *len;
+                    }
+                    u -= w;
+                }
+                parts.last().expect("mixture is non-empty").0
+            }
+        }
+    }
+}
+
+/// One component of a weighted multi-variant traffic split.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantShare {
+    pub variant: String,
+    pub weight: f64,
+}
+
+/// Parse `"tvm+"` (all traffic) or `"tvm+:0.8,tvm:0.2"`.
+pub fn parse_splits(s: &str) -> Result<Vec<VariantShare>, String> {
+    let mut out = Vec::new();
+    for item in s.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        let (variant, weight) = match item.split_once(':') {
+            Some((v, w)) => {
+                let weight: f64 = w
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad split weight '{w}'"))?;
+                (v.trim(), weight)
+            }
+            None => (item, 1.0),
+        };
+        if variant.is_empty() || weight <= 0.0 {
+            return Err(format!("bad traffic split component '{item}'"));
+        }
+        out.push(VariantShare {
+            variant: variant.to_string(),
+            weight,
+        });
+    }
+    if out.is_empty() {
+        return Err("empty traffic split".into());
+    }
+    Ok(out)
+}
+
+/// A fully materialized request: when, where, and what.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduledRequest {
+    /// Arrival offset from the run start, µs.
+    pub at_us: u64,
+    pub variant: String,
+    pub tokens: Vec<u32>,
+}
+
+/// Everything needed to materialize a deterministic request schedule.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub arrivals: ArrivalProcess,
+    pub seq_lens: SeqLenDist,
+    pub splits: Vec<VariantShare>,
+    pub vocab: usize,
+    pub duration_us: u64,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// Materialize the schedule. Identical specs (seed included) produce
+    /// identical schedules — arrivals, routing, lengths, and token ids
+    /// all derive from forks of the one seeded generator.
+    pub fn schedule(&self) -> Vec<ScheduledRequest> {
+        assert!(self.vocab > 10, "vocab must exceed the reserved token range");
+        let mut root = Rng::new(self.seed);
+        let mut arrival_rng = root.fork(1);
+        let mut body_rng = root.fork(2);
+        let total: f64 = self.splits.iter().map(|s| s.weight).sum();
+        self.arrivals
+            .schedule(self.duration_us, &mut arrival_rng)
+            .into_iter()
+            .map(|at_us| {
+                let mut u = body_rng.f64() * total;
+                let mut variant = &self.splits.last().expect("split is non-empty").variant;
+                for share in &self.splits {
+                    if u < share.weight {
+                        variant = &share.variant;
+                        break;
+                    }
+                    u -= share.weight;
+                }
+                let len = self.seq_lens.sample(&mut body_rng);
+                let tokens: Vec<u32> = (0..len)
+                    .map(|_| body_rng.range(10, self.vocab) as u32)
+                    .collect();
+                ScheduledRequest {
+                    at_us,
+                    variant: variant.clone(),
+                    tokens,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec {
+            arrivals: ArrivalProcess::poisson(300.0),
+            seq_lens: SeqLenDist::parse("8:0.7,32:0.3").unwrap(),
+            splits: parse_splits("tvm+:0.8,tvm:0.2").unwrap(),
+            vocab: 1000,
+            duration_us: 2_000_000,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn schedule_is_seed_deterministic() {
+        let a = spec().schedule();
+        let b = spec().schedule();
+        assert_eq!(a, b, "same spec + seed must be byte-identical");
+        let mut other = spec();
+        other.seed = 43;
+        assert_ne!(a, other.schedule());
+    }
+
+    #[test]
+    fn mixture_and_split_proportions_are_roughly_honored() {
+        let sched = spec().schedule();
+        assert!(sched.len() > 300, "{}", sched.len());
+        let short = sched.iter().filter(|r| r.tokens.len() == 8).count();
+        let long = sched.iter().filter(|r| r.tokens.len() == 32).count();
+        assert_eq!(short + long, sched.len());
+        let short_frac = short as f64 / sched.len() as f64;
+        assert!((0.55..0.85).contains(&short_frac), "short fraction {short_frac}");
+        let plus = sched.iter().filter(|r| r.variant == "tvm+").count();
+        let plus_frac = plus as f64 / sched.len() as f64;
+        assert!((0.65..0.95).contains(&plus_frac), "tvm+ fraction {plus_frac}");
+        assert!(sched
+            .iter()
+            .all(|r| r.tokens.iter().all(|&t| (10..1000).contains(&(t as usize)))));
+    }
+
+    #[test]
+    fn seq_len_dist_parses() {
+        assert_eq!(SeqLenDist::parse("16"), Ok(SeqLenDist::Fixed(16)));
+        assert_eq!(
+            SeqLenDist::parse("8:0.7,32:0.3"),
+            Ok(SeqLenDist::Mixture(vec![(8, 0.7), (32, 0.3)]))
+        );
+        assert!(SeqLenDist::parse("0").is_err());
+        assert!(SeqLenDist::parse("8:0").is_err());
+        assert!(SeqLenDist::parse("nope").is_err());
+        let mut rng = Rng::new(1);
+        assert_eq!(SeqLenDist::Fixed(5).sample(&mut rng), 5);
+        assert_eq!(SeqLenDist::Fixed(5).max_len(), 5);
+        assert_eq!(SeqLenDist::parse("8:0.7,32:0.3").unwrap().max_len(), 32);
+    }
+
+    #[test]
+    fn splits_parse() {
+        assert_eq!(
+            parse_splits("tvm+").unwrap(),
+            vec![VariantShare {
+                variant: "tvm+".into(),
+                weight: 1.0
+            }]
+        );
+        assert_eq!(parse_splits("a:0.5,b:0.5").unwrap().len(), 2);
+        assert!(parse_splits("").is_err());
+        assert!(parse_splits("a:-1").is_err());
+    }
+}

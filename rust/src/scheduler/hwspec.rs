@@ -135,6 +135,17 @@ impl HwSpec {
         self.l2_bytes / 2 / 4
     }
 
+    /// Runner-class identity: only the fields that are stable across
+    /// runs on the same *class* of machine (ISA, SIMD width, core
+    /// count). The full [`Display`](fmt::Display) string also bakes in
+    /// the clock-derived roofline figures, which drift run-to-run under
+    /// frequency scaling — `benchdiff` compares this string instead, so
+    /// a baseline recorded on the same CI runner class keeps its
+    /// absolute-ms gate enforced.
+    pub fn class_string(&self) -> String {
+        format!("{} {}x f32, {} cores", self.isa, self.simd_f32_lanes, self.cores)
+    }
+
     /// Stable 64-bit digest of every field (FNV-1a). Part of the plan-cache
     /// key so plans tuned for one machine are never replayed on another.
     pub fn fingerprint(&self) -> u64 {
@@ -279,6 +290,21 @@ mod tests {
         let mut f = HwSpec::haswell_reference();
         f.mem_bw /= 2;
         assert_ne!(a.fingerprint(), f.fingerprint());
+    }
+
+    #[test]
+    fn class_string_ignores_clock_drift() {
+        let a = HwSpec::haswell_reference();
+        let mut b = HwSpec::haswell_reference();
+        // frequency scaling changes the roofline figures between runs on
+        // the same machine; the class identity must not move with them
+        b.peak_flops /= 2;
+        b.mem_bw /= 2;
+        assert_eq!(a.class_string(), b.class_string());
+        assert_eq!(a.class_string(), "x86_64+avx2 8x f32, 4 cores");
+        let mut c = HwSpec::haswell_reference();
+        c.cores = 16;
+        assert_ne!(a.class_string(), c.class_string());
     }
 
     #[test]

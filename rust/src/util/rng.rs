@@ -90,6 +90,16 @@ impl Rng {
         self.f64() < p
     }
 
+    /// Exponential deviate with rate `rate` (mean `1/rate`) via inverse
+    /// CDF — the inter-arrival distribution of a Poisson process, used by
+    /// the load generator's arrival schedules.
+    #[inline]
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0, "exp() needs a positive rate");
+        let u = self.f64().max(1e-12);
+        -u.ln() / rate
+    }
+
     /// Standard normal via Box–Muller (we discard the second value for
     /// simplicity; weight init is not a hot path).
     pub fn normal(&mut self) -> f64 {
@@ -246,6 +256,21 @@ mod tests {
         let var = sq / n as f64 - mean * mean;
         assert!(mean.abs() < 0.01, "mean {mean}");
         assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn exp_mean_matches_rate() {
+        let mut rng = Rng::new(23);
+        let rate = 4.0;
+        let n = 200_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.exp(rate);
+            assert!(x >= 0.0);
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.005, "mean {mean}");
     }
 
     #[test]
