@@ -142,6 +142,7 @@ pub fn run_costcheck(cfg: &CostCheckConfig) -> CostCheckReport {
             cols: bsr.cols,
             mean_blocks_per_row: ep.mean_blocks_per_row,
             tokens: cfg.tokens,
+            weight_dtype: crate::sparse::quant::WeightDtype::F32,
         };
         let mut cells = Vec::with_capacity(cfg.threads.len() * cfg.grains.len());
         for &threads in &cfg.threads {

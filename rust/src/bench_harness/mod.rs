@@ -51,7 +51,8 @@ pub use warmstart::{
     render_warm_start, run_warm_start_smoke, warm_start_json, WarmStartConfig, WarmStartReport,
 };
 pub use table1::{
-    render_sched_sweep, run_scheduler_sweep, run_table1, SchedSweepConfig, SchedSweepReport,
+    render_int8_accuracy, render_sched_sweep, run_int8_accuracy_sweep, run_scheduler_sweep,
+    run_table1, Int8AccuracyConfig, Int8AccuracyRow, SchedSweepConfig, SchedSweepReport,
     SchedSweepRow, Table1Config, Table1Row,
 };
 pub use costcheck::{

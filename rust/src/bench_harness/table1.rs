@@ -3,7 +3,8 @@
 //! behind the paper's 32x1-vs-32x32 finding.
 
 use crate::deploy::EngineBuilder;
-use crate::kernels::bsr_spmm::bsr_linear_planned_on;
+use crate::kernels::bsr_spmm::{bsr_linear_planned_fused_i8, bsr_linear_planned_on};
+use crate::kernels::micro::{self, Epilogue};
 use crate::model::config::BertConfig;
 use crate::model::engine::{Engine, EngineKind};
 use crate::model::weights::{BertWeights, PruneMode, PruneSpec};
@@ -11,6 +12,7 @@ use crate::scheduler::{AutoScheduler, CacheStats, HwSpec};
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::dense::Matrix;
 use crate::sparse::prune::{prune_structured_replicated, BlockShape};
+use crate::sparse::quant::QuantBsr;
 use crate::util::bench::{measure, BenchConfig, Measurement};
 use crate::util::pool::{self, default_threads};
 use std::sync::Arc;
@@ -321,6 +323,12 @@ pub struct SchedSweepRow {
     /// `ms_scalar / ms` — the microkernel win in isolation (1.0 on
     /// scalar builds or non-AVX2 machines).
     pub simd_speedup: f64,
+    /// Mean ms of the same cell on the int8 twin kernel (per-block
+    /// quantized weights through the fused dequant path).
+    pub ms_int8: f64,
+    /// `ms / ms_int8` — the int8-over-f32 throughput win for this cell
+    /// (the `benchdiff` int8 gate aggregates the gate-block rows).
+    pub int8_speedup: f64,
 }
 
 /// Sweep result: cells plus plan-cache instrumentation.
@@ -360,6 +368,10 @@ pub fn run_scheduler_sweep(cfg: &SchedSweepConfig) -> SchedSweepReport {
             ));
         });
         let variant = ep.plan.kernel_variant;
+        // Int8 twin of the same structure: quantize once per block, time
+        // the fused dequant kernel next to every f32 cell.
+        let qw = QuantBsr::quantize(&bsr);
+        let i8_plan = ep.plan.with_kernel_variant(micro::select_variant_i8(block));
         for &threads in &cfg.threads {
             for &grain in &cfg.grains {
                 let m = measure(&format!("{block}-t{threads}-g{grain}"), &cfg.bench, || {
@@ -400,6 +412,19 @@ pub fn run_scheduler_sweep(cfg: &SchedSweepConfig) -> SchedSweepReport {
                 } else {
                     (m.summary.mean, 1.0)
                 };
+                let im = measure(&format!("{block}-t{threads}-g{grain}-int8"), &cfg.bench, || {
+                    std::hint::black_box(bsr_linear_planned_fused_i8(
+                        &bsr,
+                        &qw,
+                        &i8_plan,
+                        &x,
+                        None,
+                        Epilogue::None,
+                        pool::global(),
+                        threads,
+                        grain,
+                    ));
+                });
                 rows.push(SchedSweepRow {
                     block,
                     threads,
@@ -409,6 +434,8 @@ pub fn run_scheduler_sweep(cfg: &SchedSweepConfig) -> SchedSweepReport {
                     kernel_variant: variant.as_str().to_string(),
                     ms_scalar,
                     simd_speedup,
+                    ms_int8: im.summary.mean,
+                    int8_speedup: m.summary.mean / im.summary.mean.max(1e-9),
                 });
             }
         }
@@ -433,12 +460,13 @@ pub fn render_sched_sweep(report: &SchedSweepReport, title: &str) -> String {
     let mut out = String::new();
     out.push_str(&format!("== {title} ==\n"));
     out.push_str(&format!(
-        "{:<10} {:>8} {:>7} {:>12} {:>14} {:<16} {:>12} {:>8}\n",
-        "block", "threads", "grain", "ms", "speedup vs 1t", "kernel", "ms scalar", "simd x"
+        "{:<10} {:>8} {:>7} {:>12} {:>14} {:<16} {:>12} {:>8} {:>10} {:>8}\n",
+        "block", "threads", "grain", "ms", "speedup vs 1t", "kernel", "ms scalar", "simd x",
+        "ms int8", "int8 x"
     ));
     for r in &report.rows {
         out.push_str(&format!(
-            "{:<10} {:>8} {:>7} {:>12.2} {:>14.2} {:<16} {:>12.2} {:>8.2}\n",
+            "{:<10} {:>8} {:>7} {:>12.2} {:>14.2} {:<16} {:>12.2} {:>8.2} {:>10.2} {:>8.2}\n",
             r.block.to_string(),
             r.threads,
             r.grain,
@@ -446,12 +474,171 @@ pub fn render_sched_sweep(report: &SchedSweepReport, title: &str) -> String {
             r.speedup_vs_serial,
             r.kernel_variant,
             r.ms_scalar,
-            r.simd_speedup
+            r.simd_speedup,
+            r.ms_int8,
+            r.int8_speedup
         ));
     }
     out.push_str(&format!(
         "plan cache: {} entries, {} hits, {} misses; re-plans on repeat: {}\n",
         report.cache.entries, report.cache.hits, report.cache.misses, report.replans_on_repeat
+    ));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Int8 accuracy sweep: block shape × sparsity error deltas
+// ---------------------------------------------------------------------------
+
+/// Configuration of the int8-vs-f32 accuracy sweep over one projection
+/// geometry. Measurement-free (single evaluation per cell): the output
+/// is an error table, not a timing table.
+#[derive(Debug, Clone)]
+pub struct Int8AccuracyConfig {
+    pub rows: usize,
+    pub cols: usize,
+    /// Activation columns per spmm.
+    pub tokens: usize,
+    pub blocks: Vec<BlockShape>,
+    pub sparsities: Vec<f64>,
+    /// Pattern-pool size for structured pruning.
+    pub pool: usize,
+    pub seed: u64,
+}
+
+impl Default for Int8AccuracyConfig {
+    fn default() -> Self {
+        Int8AccuracyConfig {
+            rows: 768,
+            cols: 768,
+            tokens: 128,
+            blocks: vec![
+                BlockShape::new(32, 1),
+                BlockShape::new(32, 32),
+                BlockShape::new(1, 32),
+                BlockShape::new(16, 16),
+            ],
+            sparsities: vec![0.7, 0.9],
+            pool: 16,
+            seed: 42,
+        }
+    }
+}
+
+impl Int8AccuracyConfig {
+    /// Tiny profile for unit/integration tests and `cibench`.
+    pub fn smoke() -> Int8AccuracyConfig {
+        Int8AccuracyConfig {
+            rows: 256,
+            cols: 256,
+            tokens: 32,
+            blocks: vec![
+                BlockShape::new(32, 1),
+                BlockShape::new(32, 32),
+                BlockShape::new(1, 32),
+            ],
+            sparsities: vec![0.7, 0.9],
+            pool: 8,
+            seed: 42,
+        }
+    }
+}
+
+/// One cell of the accuracy sweep: int8 output error against the f32
+/// output of the same structure.
+#[derive(Debug, Clone)]
+pub struct Int8AccuracyRow {
+    pub block: BlockShape,
+    pub sparsity: f64,
+    /// `max |y_i8 - y_f32|` over the projection output.
+    pub max_abs_err: f64,
+    /// `mean |y_i8 - y_f32|` over the projection output.
+    pub mean_abs_err: f64,
+    /// `max_abs_err / max |y_f32|` — gated against
+    /// [`crate::sparse::quant::INT8_ACCURACY_TOL_REL`] by `cibench`.
+    pub rel_err: f64,
+}
+
+impl Int8AccuracyRow {
+    /// The declared-tolerance accuracy gate (`cibench` fails when any
+    /// cell trips it).
+    pub fn within_tolerance(&self) -> bool {
+        self.rel_err <= crate::sparse::quant::INT8_ACCURACY_TOL_REL
+    }
+}
+
+/// Run the accuracy sweep: for every block shape × sparsity, prune one
+/// projection-geometry matrix, quantize its BSR form, and compare the
+/// int8 fused kernel's output against the f32 planned kernel over the
+/// same activations.
+pub fn run_int8_accuracy_sweep(cfg: &Int8AccuracyConfig) -> Vec<Int8AccuracyRow> {
+    let sched = AutoScheduler::new(HwSpec::detect());
+    let mut rng = crate::util::rng::Rng::new(cfg.seed);
+    let x = Matrix::randn(cfg.cols, cfg.tokens, 1.0, &mut rng);
+    let mut rows = Vec::new();
+    for &block in &cfg.blocks {
+        for &sparsity in &cfg.sparsities {
+            let mut w = Matrix::randn(cfg.rows, cfg.cols, 1.0, &mut rng);
+            prune_structured_replicated(&mut w, sparsity, block, cfg.pool, &mut rng);
+            let bsr = BsrMatrix::from_dense(&w, block).expect("block divides geometry");
+            let ep = sched.exec_plan(&format!("acc.{block}.{sparsity}"), &bsr);
+            let qw = QuantBsr::quantize(&bsr);
+            let i8_plan = ep.plan.with_kernel_variant(micro::select_variant_i8(block));
+            let y_f32 = bsr_linear_planned_on(&bsr, &ep.plan, &x, None, pool::global(), 1, 1);
+            let y_i8 = bsr_linear_planned_fused_i8(
+                &bsr,
+                &qw,
+                &i8_plan,
+                &x,
+                None,
+                Epilogue::None,
+                pool::global(),
+                1,
+                1,
+            );
+            let mut max_abs_err = 0.0f64;
+            let mut sum_abs_err = 0.0f64;
+            let mut y_max = 0.0f64;
+            for (&a, &b) in y_f32.data.iter().zip(&y_i8.data) {
+                let err = f64::from((a - b).abs());
+                max_abs_err = max_abs_err.max(err);
+                sum_abs_err += err;
+                y_max = y_max.max(f64::from(a.abs()));
+            }
+            rows.push(Int8AccuracyRow {
+                block,
+                sparsity,
+                max_abs_err,
+                mean_abs_err: sum_abs_err / y_f32.data.len().max(1) as f64,
+                rel_err: max_abs_err / y_max.max(1e-12),
+            });
+        }
+    }
+    rows
+}
+
+/// Render the accuracy sweep as an aligned text table.
+pub fn render_int8_accuracy(rows: &[Int8AccuracyRow], title: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<10} {:>9} {:>13} {:>13} {:>10} {:>6}\n",
+        "block", "sparsity", "max abs err", "mean abs err", "rel err", "gate"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<10} {:>9.2} {:>13.3e} {:>13.3e} {:>10.4} {:>6}\n",
+            r.block.to_string(),
+            r.sparsity,
+            r.max_abs_err,
+            r.mean_abs_err,
+            r.rel_err,
+            if r.within_tolerance() { "ok" } else { "FAIL" }
+        ));
+    }
+    out.push_str(&format!(
+        "tolerance: rel err ≤ {}\n",
+        crate::sparse::quant::INT8_ACCURACY_TOL_REL
     ));
     out
 }
@@ -472,6 +659,8 @@ mod tests {
         assert!(report.rows.iter().all(|r| {
             !r.kernel_variant.is_empty() && r.ms_scalar > 0.0 && r.simd_speedup > 0.0
         }));
+        // every cell carries its int8 twin's timing
+        assert!(report.rows.iter().all(|r| r.ms_int8 > 0.0 && r.int8_speedup > 0.0));
         // scalar cells report themselves as their own scalar baseline
         for r in report.rows.iter().filter(|r| !r.kernel_variant.starts_with("simd")) {
             assert_eq!(r.ms, r.ms_scalar);
@@ -482,7 +671,36 @@ mod tests {
         let text = render_sched_sweep(&report, "smoke");
         assert!(text.contains("32x1"), "{text}");
         assert!(text.contains("kernel"), "{text}");
+        assert!(text.contains("int8 x"), "{text}");
         assert!(text.contains("re-plans on repeat: 0"), "{text}");
+    }
+
+    #[test]
+    fn int8_accuracy_sweep_stays_within_declared_tolerance() {
+        let cfg = Int8AccuracyConfig {
+            rows: 64,
+            cols: 64,
+            tokens: 8,
+            blocks: vec![BlockShape::new(32, 1), BlockShape::new(1, 32)],
+            sparsities: vec![0.7, 0.9],
+            pool: 4,
+            seed: 42,
+        };
+        let rows = run_int8_accuracy_sweep(&cfg);
+        assert_eq!(rows.len(), cfg.blocks.len() * cfg.sparsities.len());
+        for r in &rows {
+            assert!(r.max_abs_err >= r.mean_abs_err);
+            assert!(
+                r.within_tolerance(),
+                "{} @ {} rel err {} over tolerance",
+                r.block,
+                r.sparsity,
+                r.rel_err
+            );
+        }
+        let text = render_int8_accuracy(&rows, "smoke");
+        assert!(text.contains("rel err"), "{text}");
+        assert!(text.contains("ok"), "{text}");
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::model::BertConfig;
 use crate::planstore::PlanStore;
 use crate::scheduler::{AutoScheduler, HwSpec};
 use crate::sparse::prune::BlockShape;
+use crate::sparse::quant::WeightDtype;
 use crate::util::json::Json;
 use crate::util::pool::{default_threads, Pool};
 use crate::util::tensorfile::TensorBundle;
@@ -93,6 +94,9 @@ pub struct BuildReport {
     /// engines only) — e.g. `"simd-32x1"`; see
     /// [`crate::kernels::micro::KernelVariant`].
     pub kernel_variant: Option<String>,
+    /// Stored-weight precision of the packed BSR buffers (sparse engines
+    /// only) — `"f32"` or `"int8"`.
+    pub weight_dtype: Option<WeightDtype>,
     /// Active cost policy of the scheduler the engine's plans live in
     /// (sparse engines only) — `"sweep"` / `"roofline"` / `"hybrid"`.
     pub cost_policy: Option<String>,
@@ -115,7 +119,7 @@ impl BuildReport {
     /// One operator-facing line (`serve` prints one per variant).
     pub fn summary(&self) -> String {
         format!(
-            "{}: built in {:.1} ms — {} live plans, {} cache hits, {} packs, {} packed loads, {} store writes{}{}",
+            "{}: built in {:.1} ms — {} live plans, {} cache hits, {} packs, {} packed loads, {} store writes{}{}{}",
             self.name,
             self.build_ms,
             self.live_plans,
@@ -125,6 +129,10 @@ impl BuildReport {
             self.store_writes,
             match &self.kernel_variant {
                 Some(v) => format!(", kernel {v}"),
+                None => String::new(),
+            },
+            match self.weight_dtype {
+                Some(d) => format!(", weights {d}"),
                 None => String::new(),
             },
             match &self.cost_policy {
@@ -173,6 +181,13 @@ impl BuildReport {
                 "kernel_variant",
                 match &self.kernel_variant {
                     Some(v) => Json::Str(v.clone()),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "weight_dtype",
+                match self.weight_dtype {
+                    Some(d) => Json::Str(d.as_str().to_string()),
                     None => Json::Null,
                 },
             )
@@ -239,6 +254,7 @@ pub struct EngineBuilder {
     weights: Option<WeightSource>,
     block: Option<BlockShape>,
     sparsity: Option<f64>,
+    weight_dtype: WeightDtype,
     prune_pool: usize,
     prune_seed: u64,
     threads: Option<usize>,
@@ -259,6 +275,7 @@ impl EngineBuilder {
             weights: None,
             block: None,
             sparsity: None,
+            weight_dtype: WeightDtype::F32,
             prune_pool: DEFAULT_PRUNE_POOL,
             prune_seed: DEFAULT_PRUNE_SEED,
             threads: None,
@@ -309,6 +326,15 @@ impl EngineBuilder {
     /// 1×1).
     pub fn sparsity(mut self, sparsity: f64) -> Self {
         self.sparsity = Some(sparsity);
+        self
+    }
+
+    /// Stored-weight precision for the packed BSR buffers (default f32;
+    /// only valid on [`EngineKind::TvmPlus`]). [`WeightDtype::Int8`]
+    /// quantizes each block to `i8` with per-block scales at pack time
+    /// and executes through the fused dequant int8 microkernels.
+    pub fn weight_dtype(mut self, dtype: WeightDtype) -> Self {
+        self.weight_dtype = dtype;
         self
     }
 
@@ -378,6 +404,7 @@ impl EngineBuilder {
             kind,
             self.block.is_some(),
             self.sparsity.is_some(),
+            self.weight_dtype != WeightDtype::F32,
             self.plan_store.is_some(),
             self.sched.is_some(),
             self.exec_pool.is_some(),
@@ -491,7 +518,8 @@ impl EngineBuilder {
                     block,
                     Arc::clone(&sched),
                     threads,
-                );
+                )
+                .with_weight_dtype(self.weight_dtype);
                 opts.exec_pool = self.exec_pool;
                 let engine = SparseBsrEngine::build(opts).map_err(|e| DeployError::Build {
                     context: format!("constructing '{name}' (block {block})"),
@@ -530,6 +558,7 @@ impl EngineBuilder {
                     store_writes,
                     hw_fingerprint: Some(sched.hw.fingerprint()),
                     kernel_variant: engine.kernel_variant().map(|v| v.to_string()),
+                    weight_dtype: Some(engine.weight_dtype()),
                     cost_policy: Some(sched.policy().as_str().to_string()),
                     cost_model_error_pct: cost_stats.mean_abs_err_pct,
                     weight_footprint_bytes: engine.weight_footprint_bytes(),
@@ -556,6 +585,7 @@ pub(crate) fn check_kind_options(
     kind: EngineKind,
     has_block: bool,
     has_sparsity: bool,
+    has_int8: bool,
     has_store: bool,
     has_sched: bool,
     has_exec_pool: bool,
@@ -568,6 +598,14 @@ pub(crate) fn check_kind_options(
             kind,
             option: "block",
             reason: "only the tvm+ (BSR) engine packs weights at a block granularity",
+        });
+    }
+    if has_int8 {
+        return Err(DeployError::IncompatibleOption {
+            kind,
+            option: "weight-dtype",
+            reason: "only the tvm+ (BSR) engine quantizes packed weights; dense engines \
+                     run f32 throughout",
         });
     }
     if has_sparsity {
@@ -633,6 +671,7 @@ fn finish(
         store_writes: 0,
         hw_fingerprint: None,
         kernel_variant: None,
+        weight_dtype: None,
         cost_policy: None,
         cost_model_error_pct: None,
         weight_footprint_bytes: engine.weight_footprint_bytes(),
@@ -798,6 +837,53 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(matches!(e, DeployError::Build { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn int8_build_reports_dtype_and_variant() {
+        let w = micro_weights();
+        let block = BlockShape::new(2, 4);
+        let built = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(Arc::clone(&w))
+            .block(block)
+            .sparsity(0.6)
+            .weight_dtype(WeightDtype::Int8)
+            .threads(2)
+            .build()
+            .unwrap();
+        assert_eq!(built.report.weight_dtype, Some(WeightDtype::Int8));
+        assert_eq!(
+            built.report.kernel_variant.as_deref(),
+            Some(crate::kernels::micro::select_variant_i8(block).as_str())
+        );
+        assert!(built.report.summary().contains("weights int8"));
+        let j = built.report.to_json();
+        assert_eq!(
+            j.get("weight_dtype").and_then(Json::as_str),
+            Some("int8"),
+            "{j:?}"
+        );
+        // and an f32 build of the same kind reports f32
+        let f = EngineBuilder::new(EngineKind::TvmPlus)
+            .weights(Arc::clone(&w))
+            .block(block)
+            .threads(2)
+            .build()
+            .unwrap();
+        assert_eq!(f.report.weight_dtype, Some(WeightDtype::F32));
+    }
+
+    #[test]
+    fn int8_on_dense_engine_is_a_typed_error() {
+        let e = EngineBuilder::new(EngineKind::TvmStd)
+            .weights(micro_weights())
+            .weight_dtype(WeightDtype::Int8)
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(e, DeployError::IncompatibleOption { option: "weight-dtype", .. }),
+            "{e:?}"
+        );
     }
 
     #[test]

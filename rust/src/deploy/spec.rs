@@ -28,6 +28,7 @@ use crate::model::{BertConfig, BertWeights};
 use crate::planstore::PlanStore;
 use crate::scheduler::{AutoScheduler, CostPolicy, HwSpec};
 use crate::sparse::prune::BlockShape;
+use crate::sparse::quant::WeightDtype;
 use crate::util::json::{self, Json};
 use crate::util::pool::{default_threads, Pool};
 use crate::util::tensorfile::TensorBundle;
@@ -47,6 +48,9 @@ pub struct ModelSpec {
     pub weights: Option<PathBuf>,
     /// Synthetic-weight seed.
     pub seed: u64,
+    /// Packed-weight precision for `tvm+` variants (`"f32"` | `"int8"`,
+    /// default `"f32"`); see `docs/quantization.md`.
+    pub weight_dtype: WeightDtype,
 }
 
 impl Default for ModelSpec {
@@ -55,6 +59,7 @@ impl Default for ModelSpec {
             config: "tiny".to_string(),
             weights: None,
             seed: DEFAULT_WEIGHT_SEED,
+            weight_dtype: WeightDtype::F32,
         }
     }
 }
@@ -375,7 +380,7 @@ impl DeploymentSpec {
         }
         let mut model = ModelSpec::default();
         if let Some(m) = j.get("model") {
-            check_keys(m, "model", &["config", "weights", "seed"])?;
+            check_keys(m, "model", &["config", "weights", "seed", "weight_dtype"])?;
             if let Some(c) = str_field(m, "model.config")? {
                 model.config = c;
             }
@@ -384,6 +389,10 @@ impl DeploymentSpec {
             }
             if let Some(s) = usize_field(m, "model.seed")? {
                 model.seed = s as u64;
+            }
+            if let Some(d) = str_field(m, "model.weight_dtype")? {
+                model.weight_dtype = WeightDtype::parse(&d)
+                    .map_err(|e| invalid("model.weight_dtype", &format!("{e:#}")))?;
             }
         }
         let mut serving = ServingSpec::default();
@@ -591,6 +600,18 @@ impl DeploymentSpec {
                 reason: "a deployment needs at least one [[variant]]".to_string(),
             });
         }
+        // Like the store: quantization only affects tvm+ packed weights,
+        // so an int8 dtype on an all-dense deployment would silently do
+        // nothing. Refuse it.
+        if self.model.weight_dtype != WeightDtype::F32
+            && !self.variants.iter().any(|v| v.kind == EngineKind::TvmPlus)
+        {
+            return Err(invalid(
+                "model.weight_dtype",
+                "\"int8\" requires at least one tvm+ variant (dense engines run f32 \
+                 throughout)",
+            ));
+        }
         if let Some(store) = &self.store {
             if store.path.as_os_str().is_empty() {
                 return Err(invalid("store.path", "must not be empty"));
@@ -620,6 +641,7 @@ impl DeploymentSpec {
                 v.kind,
                 v.block.is_some(),
                 v.sparsity.is_some(),
+                false,
                 false,
                 false,
                 false,
@@ -742,6 +764,7 @@ impl DeploymentSpec {
                 b = b
                     .scheduler(Arc::clone(&sched))
                     .exec_pool(Arc::clone(&exec_pool))
+                    .weight_dtype(self.model.weight_dtype)
                     .prune_pool(v.pool.unwrap_or(DEFAULT_PRUNE_POOL));
                 if let Some(store) = &store {
                     b = b.plan_store(Arc::clone(store));
@@ -1217,6 +1240,40 @@ pool = 4
         assert_eq!(cm.get("policy").and_then(Json::as_str), Some("roofline"));
         assert!(cm.get("analytic_choices").is_some());
         dep.router.shutdown();
+    }
+
+    #[test]
+    fn weight_dtype_key_parses_validates_and_instantiates() {
+        // default is f32
+        let spec = DeploymentSpec::from_toml_str(GOOD).unwrap();
+        assert_eq!(spec.model.weight_dtype, WeightDtype::F32);
+        // int8 deployment instantiates and surfaces the dtype through the
+        // build-report gauge
+        let doc = "[model]\nconfig = \"micro\"\nweight_dtype = \"int8\"\n\
+                   [[variant]]\nname = \"tvm+\"\nkind = \"tvm+\"\nblock = \"2x4\"\nsparsity = 0.5";
+        let spec = DeploymentSpec::from_toml_str(doc).unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.model.weight_dtype, WeightDtype::Int8);
+        let dep = spec.instantiate().unwrap();
+        assert_eq!(dep.reports[0].weight_dtype, Some(WeightDtype::Int8));
+        let stats = dep.router.metrics.to_json();
+        let reports = stats.get("build_reports").and_then(Json::as_arr).unwrap();
+        assert_eq!(
+            reports[0].get("weight_dtype").and_then(Json::as_str),
+            Some("int8")
+        );
+        assert!(dep.router.infer("tvm+", vec![1, 2, 3]).is_ok());
+        dep.router.shutdown();
+        // unknown dtype strings are rejected at parse time
+        let bad = "[model]\nconfig = \"micro\"\nweight_dtype = \"fp16\"\n\
+                   [[variant]]\nname = \"a\"\nkind = \"tvm+\"\nblock = \"2x4\"";
+        let e = DeploymentSpec::from_toml_str(bad).unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
+        // int8 without a tvm+ variant would silently do nothing
+        let dense = "[model]\nconfig = \"micro\"\nweight_dtype = \"int8\"\n\
+                     [[variant]]\nname = \"a\"\nkind = \"tvm\"";
+        let e = DeploymentSpec::from_toml_str(dense).unwrap().validate().unwrap_err();
+        assert!(matches!(e, DeployError::InvalidValue { .. }), "{e:?}");
     }
 
     #[test]

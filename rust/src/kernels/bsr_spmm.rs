@@ -34,6 +34,7 @@ use crate::kernels::micro::{self, Epilogue, KernelVariant};
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::dense::Matrix;
 use crate::sparse::prune::BlockShape;
+use crate::sparse::quant::{self, QuantBsr};
 use crate::util::pool;
 use std::sync::Arc;
 
@@ -237,6 +238,79 @@ pub fn bsr_linear_planned_fused(
                 }
             }
             kernel.run_program(program, *base as usize, &w.data, x, yband, t);
+            micro::apply_epilogue(yband, epilogue);
+        }
+    };
+    if threads <= 1 {
+        exec_range(0..plan.order.len());
+    } else {
+        exec_pool.run_dynamic(plan.order.len(), threads, grain.max(1), &exec_range);
+    }
+    y
+}
+
+/// INT8 twin of [`bsr_linear_planned_fused`]: executes the same plan
+/// against a quantized weight companion ([`QuantBsr`]). Activations are
+/// quantized once per call (dynamic per-token scales via
+/// [`quant::quantize_activations`]); each Y band is then accumulated in
+/// exact `i32` per block and dequantized into f32 while the band is
+/// still hot, with bias seeding and the fused [`Epilogue`] identical to
+/// the f32 path. `w` supplies the block *structure* only — its f32
+/// `data` is never read, which is what makes cold and warm-started INT8
+/// engines byte-identical (warm starts reload `qdata`/`scales`
+/// verbatim).
+#[allow(clippy::too_many_arguments)]
+pub fn bsr_linear_planned_fused_i8(
+    w: &BsrMatrix,
+    qw: &QuantBsr,
+    plan: &SpmmPlan,
+    x: &Matrix,
+    bias: Option<&[f32]>,
+    epilogue: Epilogue,
+    exec_pool: &pool::Pool,
+    threads: usize,
+    grain: usize,
+) -> Matrix {
+    assert_eq!(w.cols, x.rows);
+    assert_eq!(plan.rows.len(), w.block_rows(), "plan/matrix row mismatch");
+    assert_eq!(plan.block, w.block, "plan/matrix block mismatch");
+    assert_eq!(qw.block, w.block, "quant/matrix block mismatch");
+    assert_eq!(qw.qdata.len(), w.data.len(), "quant/matrix data length mismatch");
+    let kernel = micro::kernel_i8_for(plan.kernel_variant);
+    let qx = quant::quantize_activations(x);
+    let args = micro::QuantArgs {
+        qdata: &qw.qdata,
+        scales: &qw.scales,
+        spb: qw.scales_per_block(),
+        xq: &qx.q,
+        sx: &qx.sx,
+    };
+    let mut y = Matrix::zeros(w.rows, x.cols);
+    let t = x.cols;
+    let r = w.block.r;
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    let exec_range = |range: std::ops::Range<usize>| {
+        let _band = crate::trace::span(
+            "kernel",
+            "spmm.band.i8",
+            0,
+            &[("block_r", r as i64), ("block_c", w.block.c as i64)],
+        );
+        for &bi_u in &plan.order[range] {
+            let bi = bi_u as usize;
+            let (program, base) = &plan.rows[bi];
+            // SAFETY: each block-row index appears exactly once in
+            // plan.order (validated at plan build), so writers of Y row
+            // bands are disjoint.
+            let yband =
+                unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(bi * r * t), r * t) };
+            if let Some(b) = bias {
+                for i in 0..r {
+                    let v = b[bi * r + i];
+                    yband[i * t..(i + 1) * t].iter_mut().for_each(|o| *o = v);
+                }
+            }
+            kernel.run_program(program, *base as usize, &args, yband, t);
             micro::apply_epilogue(yband, epilogue);
         }
     };
@@ -488,6 +562,119 @@ mod tests {
                 2,
             );
             assert_eq!(fused.data, unfused.data, "fused vs unfused {block}");
+        }
+    }
+
+    /// Satellite property test: the INT8 scalar and SIMD twins are
+    /// bitwise identical (exact i32 accumulation + identical float
+    /// fold), across shapes covering per-block and per-block-row scale
+    /// granularities, merged linear runs, and token counts that are not
+    /// multiples of the 8-lane AVX2 width. On scalar-only builds this
+    /// degenerates to self-consistency, and the accuracy check against
+    /// the f32 reference still runs.
+    #[test]
+    fn int8_scalar_and_simd_kernels_are_byte_identical() {
+        let shapes = [
+            (BlockShape::new(1, 1), 37, 53),
+            (BlockShape::new(2, 1), 38, 53),
+            (BlockShape::new(32, 1), 96, 37),
+            (BlockShape::new(1, 32), 37, 96),
+            (BlockShape::new(32, 32), 96, 96),
+            (BlockShape::new(4, 8), 36, 40),
+        ];
+        let tokens = [1usize, 5, 8, 9, 33];
+        let exec_pool = crate::util::pool::Pool::new(4);
+        for &(block, o, i) in &shapes {
+            for &sparsity in &[0.5f64, 0.9] {
+                let mut rng = Rng::new(0x18e ^ block.r as u64 ^ sparsity.to_bits());
+                let mut w = Matrix::randn(o, i, 1.0, &mut rng);
+                prune_structured(&mut w, sparsity, block);
+                let bsr = BsrMatrix::from_dense(&w, block).unwrap();
+                let qw = QuantBsr::quantize(&bsr);
+                let plan = build_plan(&bsr, Default::default());
+                let v8 = micro::select_variant_i8(block);
+                let scalar_plan = plan.with_kernel_variant(v8.scalar_twin());
+                let simd_plan = plan.with_kernel_variant(v8.simd_twin());
+                for &t in &tokens {
+                    let x = Matrix::randn(i, t, 1.0, &mut rng);
+                    let bias: Vec<f32> = (0..o).map(|_| rng.f32()).collect();
+                    let ys = bsr_linear_planned_fused_i8(
+                        &bsr, &qw, &scalar_plan, &x, Some(&bias),
+                        Epilogue::None, &exec_pool, 3, 2,
+                    );
+                    let yv = bsr_linear_planned_fused_i8(
+                        &bsr, &qw, &simd_plan, &x, Some(&bias),
+                        Epilogue::None, &exec_pool, 3, 2,
+                    );
+                    let label = format!("{block} s={sparsity} t={t}");
+                    assert_eq!(
+                        ys.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        yv.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "int8 scalar vs simd bits: {label}"
+                    );
+                    // Accuracy contract vs the f32 reference.
+                    let direct = bsr_linear(&bsr, &x, Some(&bias));
+                    let ymax = direct.data.iter().fold(0.0f64, |m, &v| m.max(v.abs() as f64));
+                    let maxerr = ys
+                        .data
+                        .iter()
+                        .zip(&direct.data)
+                        .fold(0.0f64, |m, (a, b)| m.max((a - b).abs() as f64));
+                    assert!(
+                        maxerr <= crate::sparse::quant::INT8_ACCURACY_TOL_REL * ymax.max(1.0),
+                        "int8 accuracy {label}: max err {maxerr} vs ymax {ymax}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The fused GELU epilogue on the INT8 path is bitwise equal to the
+    /// unfused INT8 spmm followed by the standalone whole-matrix GELU,
+    /// exactly as on the f32 path.
+    #[test]
+    fn int8_fused_epilogue_matches_unfused_bitwise() {
+        let exec_pool = crate::util::pool::Pool::new(3);
+        for &block in &[BlockShape::new(32, 1), BlockShape::new(1, 4)] {
+            let (_, bsr) = random_bsr(64, 64, block, 0.7, 23);
+            let qw = QuantBsr::quantize(&bsr);
+            let mut rng = Rng::new(0x8e1 ^ block.r as u64);
+            let x = Matrix::randn(64, 7, 1.0, &mut rng);
+            let bias: Vec<f32> = (0..64).map(|_| rng.f32()).collect();
+            let plan = build_plan(&bsr, Default::default())
+                .with_kernel_variant(micro::select_variant_i8(block));
+            let mut unfused = bsr_linear_planned_fused_i8(
+                &bsr, &qw, &plan, &x, Some(&bias), Epilogue::None, &exec_pool, 3, 2,
+            );
+            crate::kernels::ops::gelu(&mut unfused);
+            let fused = bsr_linear_planned_fused_i8(
+                &bsr, &qw, &plan, &x, Some(&bias), Epilogue::Gelu, &exec_pool, 3, 2,
+            );
+            assert_eq!(fused.data, unfused.data, "int8 fused vs unfused {block}");
+        }
+    }
+
+    /// Thread/grain choices must not change INT8 results (bands are
+    /// disjoint and per-band arithmetic is deterministic).
+    #[test]
+    fn int8_pool_parity_across_threads() {
+        let exec_pool = crate::util::pool::Pool::new(4);
+        let block = BlockShape::new(32, 1);
+        let (_, bsr) = random_bsr(96, 64, block, 0.8, 31);
+        let qw = QuantBsr::quantize(&bsr);
+        let mut rng = Rng::new(0x91);
+        let x = Matrix::randn(64, 9, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..96).map(|_| rng.f32()).collect();
+        let plan = build_plan(&bsr, Default::default())
+            .with_kernel_variant(micro::select_variant_i8(block));
+        let want = bsr_linear_planned_fused_i8(
+            &bsr, &qw, &plan, &x, Some(&bias), Epilogue::None, &exec_pool, 1, 1,
+        );
+        for &(threads, grain) in &[(4usize, 1usize), (4, 3), (3, 16)] {
+            let got = bsr_linear_planned_fused_i8(
+                &bsr, &qw, &plan, &x, Some(&bias), Epilogue::None, &exec_pool, threads, grain,
+            );
+            assert_eq!(got.data, want.data, "t={threads} g={grain}");
         }
     }
 

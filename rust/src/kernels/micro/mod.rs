@@ -38,10 +38,32 @@
 //! the full activation matrix. The element function is the same
 //! [`gelu_scalar`][crate::kernels::ops::gelu_scalar] the standalone pass
 //! uses, so fused and unfused execution are byte-identical.
+//!
+//! ## INT8 variants
+//!
+//! Each shape class additionally has an INT8 twin (`scalar-i8-32x1`,
+//! `simd-i8-linear`, …) executing quantized weight blocks
+//! ([`crate::sparse::quant::QuantBsr`]) against per-token-quantized
+//! activations through the separate [`MicrokernelI8`] trait. INT8
+//! kernels accumulate the integer dot product exactly in `i32` — on
+//! AVX2 by widening `i8`→`i32` and using integer multiply-accumulate
+//! (the VPMADDUBSW-family widening idiom, spelled with 32-bit lanes so
+//! lane order cannot change the sum) — then fold each block into the
+//! f32 Y band as `y += (sb·sx[k]) · acc`, dequantizing once per band
+//! while it is hot; bias and [`Epilogue`] fuse exactly as on the f32
+//! path. Because integer accumulation is exact, scalar and SIMD INT8
+//! twins are bitwise identical by the same contract as the f32 pair.
+//! The f32 [`kernel_for`] dispatcher degrades INT8-tagged variants to
+//! their f32 shape-class kernel, so an INT8-tagged plan can still be
+//! executed against f32 data (e.g. the Hybrid cost policy's measurement
+//! probe).
 
 pub mod scalar;
+pub mod scalar_i8;
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 pub mod simd;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub mod simd_i8;
 
 use crate::kernels::bsr_spmm::RowProgram;
 use crate::kernels::ops::gelu_scalar;
@@ -49,9 +71,15 @@ use crate::sparse::dense::Matrix;
 use crate::sparse::prune::BlockShape;
 use std::fmt;
 
-/// The microkernel chosen for a plan, named `<path>-<shape>`:
-/// `scalar-32x1`, `simd-linear`, … Selected per structure×hardware at
-/// plan-compile time and recorded in `BuildReport` / stats JSON.
+/// The microkernel chosen for a plan, named `<path>[-i8]-<shape>`:
+/// `scalar-32x1`, `simd-linear`, `simd-i8-32x1`, … Selected per
+/// structure×hardware×dtype at plan-compile time and recorded in
+/// `BuildReport` / stats JSON.
+///
+/// Adding a variant: extend [`KernelVariant::ALL`] and every twin
+/// mapping — the exhaustive round-trip test in this module fails to
+/// compile/pass otherwise, which is what keeps `parse`/`as_str` total
+/// (the plan codec stores the name as an informational field).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelVariant {
     /// `r == 1` blocks (incl. the paper's 1×32): merged-run axpy panels.
@@ -66,9 +94,42 @@ pub enum KernelVariant {
     Simd32x1,
     Simd32x32,
     SimdGeneric,
+    /// INT8 twin of [`KernelVariant::ScalarLinear`].
+    ScalarI8Linear,
+    /// INT8 twin of [`KernelVariant::Scalar32x1`].
+    ScalarI8Tall,
+    /// INT8 twin of [`KernelVariant::Scalar32x32`].
+    ScalarI8Square,
+    /// INT8 twin of [`KernelVariant::ScalarGeneric`].
+    ScalarI8Generic,
+    SimdI8Linear,
+    SimdI8Tall,
+    SimdI8Square,
+    SimdI8Generic,
 }
 
 impl KernelVariant {
+    /// Every variant, in declaration order. `parse` iterates this list,
+    /// so membership here is what makes the name round-trip total.
+    pub const ALL: [KernelVariant; 16] = [
+        KernelVariant::ScalarLinear,
+        KernelVariant::Scalar32x1,
+        KernelVariant::Scalar32x32,
+        KernelVariant::ScalarGeneric,
+        KernelVariant::SimdLinear,
+        KernelVariant::Simd32x1,
+        KernelVariant::Simd32x32,
+        KernelVariant::SimdGeneric,
+        KernelVariant::ScalarI8Linear,
+        KernelVariant::ScalarI8Tall,
+        KernelVariant::ScalarI8Square,
+        KernelVariant::ScalarI8Generic,
+        KernelVariant::SimdI8Linear,
+        KernelVariant::SimdI8Tall,
+        KernelVariant::SimdI8Square,
+        KernelVariant::SimdI8Generic,
+    ];
+
     pub fn as_str(&self) -> &'static str {
         match self {
             KernelVariant::ScalarLinear => "scalar-linear",
@@ -79,48 +140,66 @@ impl KernelVariant {
             KernelVariant::Simd32x1 => "simd-32x1",
             KernelVariant::Simd32x32 => "simd-32x32",
             KernelVariant::SimdGeneric => "simd-generic",
+            KernelVariant::ScalarI8Linear => "scalar-i8-linear",
+            KernelVariant::ScalarI8Tall => "scalar-i8-32x1",
+            KernelVariant::ScalarI8Square => "scalar-i8-32x32",
+            KernelVariant::ScalarI8Generic => "scalar-i8-generic",
+            KernelVariant::SimdI8Linear => "simd-i8-linear",
+            KernelVariant::SimdI8Tall => "simd-i8-32x1",
+            KernelVariant::SimdI8Square => "simd-i8-32x32",
+            KernelVariant::SimdI8Generic => "simd-i8-generic",
         }
     }
 
+    /// Inverse of [`KernelVariant::as_str`], total over [`ALL`] by
+    /// construction (it searches the list instead of hand-matching).
+    ///
+    /// [`ALL`]: KernelVariant::ALL
     pub fn parse(s: &str) -> Option<KernelVariant> {
-        Some(match s {
-            "scalar-linear" => KernelVariant::ScalarLinear,
-            "scalar-32x1" => KernelVariant::Scalar32x1,
-            "scalar-32x32" => KernelVariant::Scalar32x32,
-            "scalar-generic" => KernelVariant::ScalarGeneric,
-            "simd-linear" => KernelVariant::SimdLinear,
-            "simd-32x1" => KernelVariant::Simd32x1,
-            "simd-32x32" => KernelVariant::Simd32x32,
-            "simd-generic" => KernelVariant::SimdGeneric,
-            _ => return None,
-        })
+        KernelVariant::ALL.iter().copied().find(|v| v.as_str() == s)
     }
 
     pub fn is_simd(&self) -> bool {
+        // Invariant relied on by dispatch and tests: a variant is SIMD
+        // iff its name starts with "simd".
+        self.as_str().starts_with("simd")
+    }
+
+    /// True for the INT8-quantized variants (either path).
+    pub fn is_int8(&self) -> bool {
         matches!(
             self,
-            KernelVariant::SimdLinear
-                | KernelVariant::Simd32x1
-                | KernelVariant::Simd32x32
-                | KernelVariant::SimdGeneric
+            KernelVariant::ScalarI8Linear
+                | KernelVariant::ScalarI8Tall
+                | KernelVariant::ScalarI8Square
+                | KernelVariant::ScalarI8Generic
+                | KernelVariant::SimdI8Linear
+                | KernelVariant::SimdI8Tall
+                | KernelVariant::SimdI8Square
+                | KernelVariant::SimdI8Generic
         )
     }
 
-    /// The scalar reference kernel for the same shape class (identity for
-    /// scalar variants). Used for forced-scalar benchmarking and as the
-    /// runtime fallback when AVX2 is unavailable.
+    /// The scalar reference kernel for the same shape class and dtype
+    /// (identity for scalar variants). Used for forced-scalar
+    /// benchmarking and as the runtime fallback when AVX2 is
+    /// unavailable.
     pub fn scalar_twin(&self) -> KernelVariant {
         match self {
             KernelVariant::SimdLinear => KernelVariant::ScalarLinear,
             KernelVariant::Simd32x1 => KernelVariant::Scalar32x1,
             KernelVariant::Simd32x32 => KernelVariant::Scalar32x32,
             KernelVariant::SimdGeneric => KernelVariant::ScalarGeneric,
+            KernelVariant::SimdI8Linear => KernelVariant::ScalarI8Linear,
+            KernelVariant::SimdI8Tall => KernelVariant::ScalarI8Tall,
+            KernelVariant::SimdI8Square => KernelVariant::ScalarI8Square,
+            KernelVariant::SimdI8Generic => KernelVariant::ScalarI8Generic,
             v => *v,
         }
     }
 
-    /// The SIMD kernel for the same shape class (identity for SIMD
-    /// variants). Whether it actually runs still depends on
+    /// The SIMD kernel for the same shape class and dtype (identity for
+    /// SIMD variants). Whether it actually runs still depends on
     /// [`simd_active`] at dispatch time.
     pub fn simd_twin(&self) -> KernelVariant {
         match self {
@@ -128,6 +207,43 @@ impl KernelVariant {
             KernelVariant::Scalar32x1 => KernelVariant::Simd32x1,
             KernelVariant::Scalar32x32 => KernelVariant::Simd32x32,
             KernelVariant::ScalarGeneric => KernelVariant::SimdGeneric,
+            KernelVariant::ScalarI8Linear => KernelVariant::SimdI8Linear,
+            KernelVariant::ScalarI8Tall => KernelVariant::SimdI8Tall,
+            KernelVariant::ScalarI8Square => KernelVariant::SimdI8Square,
+            KernelVariant::ScalarI8Generic => KernelVariant::SimdI8Generic,
+            v => *v,
+        }
+    }
+
+    /// The INT8 kernel for the same shape class and path (identity for
+    /// INT8 variants).
+    pub fn int8_twin(&self) -> KernelVariant {
+        match self {
+            KernelVariant::ScalarLinear => KernelVariant::ScalarI8Linear,
+            KernelVariant::Scalar32x1 => KernelVariant::ScalarI8Tall,
+            KernelVariant::Scalar32x32 => KernelVariant::ScalarI8Square,
+            KernelVariant::ScalarGeneric => KernelVariant::ScalarI8Generic,
+            KernelVariant::SimdLinear => KernelVariant::SimdI8Linear,
+            KernelVariant::Simd32x1 => KernelVariant::SimdI8Tall,
+            KernelVariant::Simd32x32 => KernelVariant::SimdI8Square,
+            KernelVariant::SimdGeneric => KernelVariant::SimdI8Generic,
+            v => *v,
+        }
+    }
+
+    /// The f32 kernel for the same shape class and path (identity for
+    /// f32 variants). [`kernel_for`] uses this so an INT8-tagged plan can
+    /// still be executed against f32 data.
+    pub fn f32_twin(&self) -> KernelVariant {
+        match self {
+            KernelVariant::ScalarI8Linear => KernelVariant::ScalarLinear,
+            KernelVariant::ScalarI8Tall => KernelVariant::Scalar32x1,
+            KernelVariant::ScalarI8Square => KernelVariant::Scalar32x32,
+            KernelVariant::ScalarI8Generic => KernelVariant::ScalarGeneric,
+            KernelVariant::SimdI8Linear => KernelVariant::SimdLinear,
+            KernelVariant::SimdI8Tall => KernelVariant::Simd32x1,
+            KernelVariant::SimdI8Square => KernelVariant::Simd32x32,
+            KernelVariant::SimdI8Generic => KernelVariant::SimdGeneric,
             v => *v,
         }
     }
@@ -201,6 +317,14 @@ pub fn select_variant(block: BlockShape) -> KernelVariant {
     }
 }
 
+/// INT8 variant selection: the same shape-class × SIMD-availability
+/// mapping as [`select_variant`], landing on the INT8 twin. Used by the
+/// engine to re-tag a plan when the deployment requests
+/// `weight_dtype = "int8"`.
+pub fn select_variant_i8(block: BlockShape) -> KernelVariant {
+    select_variant(block).int8_twin()
+}
+
 /// One block microkernel: executes a compiled [`RowProgram`] against a
 /// Y band of `t` tokens. `base` is the block-row's absolute element
 /// offset into the BSR `data` array.
@@ -217,10 +341,14 @@ pub trait Microkernel: Send + Sync {
     );
 }
 
-/// Resolve the kernel implementation for a variant. SIMD variants fall
-/// back to their scalar twin when the feature is compiled out or the
-/// CPU lacks AVX2 (e.g. a plan built elsewhere, or a forced variant).
+/// Resolve the f32 kernel implementation for a variant. SIMD variants
+/// fall back to their scalar twin when the feature is compiled out or
+/// the CPU lacks AVX2 (e.g. a plan built elsewhere, or a forced
+/// variant); INT8-tagged variants degrade to their f32 shape-class
+/// kernel, since the data handed to this trait is always f32 (the
+/// Hybrid policy's measurement probe relies on this).
 pub fn kernel_for(variant: KernelVariant) -> &'static dyn Microkernel {
+    let variant = variant.f32_twin();
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     {
         if variant.is_simd() && simd_active() {
@@ -228,6 +356,56 @@ pub fn kernel_for(variant: KernelVariant) -> &'static dyn Microkernel {
         }
     }
     scalar::kernel(variant.scalar_twin())
+}
+
+/// Borrowed INT8 operands for one SpMM call: quantized weight blocks
+/// with their scales, and the per-token-quantized activation panel
+/// (produced once per call by
+/// [`quantize_activations`][crate::sparse::quant::quantize_activations]).
+pub struct QuantArgs<'a> {
+    /// Quantized block values, same layout as `BsrMatrix::data`.
+    pub qdata: &'a [i8],
+    /// Per-block (or per-block-row) weight scales, blocks in storage
+    /// order.
+    pub scales: &'a [f32],
+    /// Scales per stored block: 1 (per-block) or `block.r`
+    /// (per-block-row fallback).
+    pub spb: usize,
+    /// Quantized activations, row-major `[features, tokens]`.
+    pub xq: &'a [i8],
+    /// Per-token activation scales, length `tokens`.
+    pub sx: &'a [f32],
+}
+
+/// INT8 companion of [`Microkernel`]: executes a compiled
+/// [`RowProgram`] against quantized operands, accumulating in `i32` and
+/// folding each block into the f32 Y band as `y += (sb·sx[k])·acc`.
+/// The fold uses separate multiply/add (never FMA) in a fixed order, so
+/// scalar and SIMD implementations are bitwise identical.
+pub trait MicrokernelI8: Send + Sync {
+    fn variant(&self) -> KernelVariant;
+    fn run_program(
+        &self,
+        program: &RowProgram,
+        base: usize,
+        args: &QuantArgs<'_>,
+        yband: &mut [f32],
+        t: usize,
+    );
+}
+
+/// Resolve the INT8 kernel implementation for a variant (f32 variants
+/// are mapped to their INT8 twin first). SIMD falls back to the scalar
+/// twin exactly like [`kernel_for`].
+pub fn kernel_i8_for(variant: KernelVariant) -> &'static dyn MicrokernelI8 {
+    let variant = variant.int8_twin();
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if variant.is_simd() && simd_active() {
+            return simd_i8::kernel(variant);
+        }
+    }
+    scalar_i8::kernel(variant.scalar_twin())
 }
 
 #[cfg(test)]
@@ -241,24 +419,65 @@ mod tests {
     use crate::util::propcheck::assert_allclose;
     use crate::util::rng::Rng;
 
+    /// Satellite fix: the `parse`/`as_str` round-trip must stay *total*
+    /// as variants are added, because the plan codec stores the name as
+    /// an informational field. `index_of` is an exhaustive match — a new
+    /// enum variant fails compilation here until it is given an index —
+    /// and the index set must be exactly `0..ALL.len()`, so the variant
+    /// cannot be forgotten in [`KernelVariant::ALL`] either.
     #[test]
-    fn variant_names_roundtrip() {
-        let all = [
-            KernelVariant::ScalarLinear,
-            KernelVariant::Scalar32x1,
-            KernelVariant::Scalar32x32,
-            KernelVariant::ScalarGeneric,
-            KernelVariant::SimdLinear,
-            KernelVariant::Simd32x1,
-            KernelVariant::Simd32x32,
-            KernelVariant::SimdGeneric,
-        ];
-        for v in all {
-            assert_eq!(KernelVariant::parse(v.as_str()), Some(v));
-            assert_eq!(v.scalar_twin().simd_twin().scalar_twin(), v.scalar_twin());
-            assert_eq!(v.is_simd(), v.as_str().starts_with("simd"));
+    fn variant_names_roundtrip_exhaustively() {
+        fn index_of(v: KernelVariant) -> usize {
+            match v {
+                KernelVariant::ScalarLinear => 0,
+                KernelVariant::Scalar32x1 => 1,
+                KernelVariant::Scalar32x32 => 2,
+                KernelVariant::ScalarGeneric => 3,
+                KernelVariant::SimdLinear => 4,
+                KernelVariant::Simd32x1 => 5,
+                KernelVariant::Simd32x32 => 6,
+                KernelVariant::SimdGeneric => 7,
+                KernelVariant::ScalarI8Linear => 8,
+                KernelVariant::ScalarI8Tall => 9,
+                KernelVariant::ScalarI8Square => 10,
+                KernelVariant::ScalarI8Generic => 11,
+                KernelVariant::SimdI8Linear => 12,
+                KernelVariant::SimdI8Tall => 13,
+                KernelVariant::SimdI8Square => 14,
+                KernelVariant::SimdI8Generic => 15,
+            }
         }
+        // ALL is complete and duplicate-free: its indices cover 0..len.
+        let mut seen = vec![false; KernelVariant::ALL.len()];
+        for v in KernelVariant::ALL {
+            let i = index_of(v);
+            assert!(!seen[i], "duplicate in ALL: {v}");
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "ALL is missing a variant");
+        // Names are unique and round-trip; naming invariants hold.
+        for v in KernelVariant::ALL {
+            assert_eq!(KernelVariant::parse(v.as_str()), Some(v), "{v}");
+            assert_eq!(v.is_simd(), v.as_str().starts_with("simd"), "{v}");
+            assert_eq!(v.is_int8(), v.as_str().contains("-i8"), "{v}");
+            // Twin maps stay inside the variant set and commute as
+            // involutions on their target axis.
+            assert!(!v.scalar_twin().is_simd(), "{v}");
+            assert!(v.simd_twin().is_simd(), "{v}");
+            assert!(v.int8_twin().is_int8(), "{v}");
+            assert!(!v.f32_twin().is_int8(), "{v}");
+            assert_eq!(v.scalar_twin().is_int8(), v.is_int8(), "{v}");
+            assert_eq!(v.simd_twin().is_int8(), v.is_int8(), "{v}");
+            assert_eq!(v.int8_twin().is_simd(), v.is_simd(), "{v}");
+            assert_eq!(v.f32_twin().is_simd(), v.is_simd(), "{v}");
+            assert_eq!(v.scalar_twin().simd_twin().scalar_twin(), v.scalar_twin());
+            assert_eq!(v.f32_twin().int8_twin().f32_twin(), v.f32_twin());
+        }
+        let names: std::collections::HashSet<_> =
+            KernelVariant::ALL.iter().map(|v| v.as_str()).collect();
+        assert_eq!(names.len(), KernelVariant::ALL.len());
         assert_eq!(KernelVariant::parse("avx512-32x1"), None);
+        assert_eq!(KernelVariant::parse(""), None);
     }
 
     #[test]
@@ -276,6 +495,28 @@ mod tests {
             let sel = select_variant(block);
             assert_eq!(sel.scalar_twin(), want, "{block}");
             assert_eq!(sel.is_simd(), simd_active(), "{block}");
+        }
+    }
+
+    #[test]
+    fn int8_variants_dispatch_and_degrade() {
+        for block in [
+            BlockShape::new(1, 32),
+            BlockShape::new(32, 1),
+            BlockShape::new(32, 32),
+            BlockShape::new(4, 8),
+        ] {
+            let v8 = select_variant_i8(block);
+            assert!(v8.is_int8(), "{block}");
+            assert_eq!(v8.is_simd(), simd_active(), "{block}");
+            assert_eq!(v8.f32_twin(), select_variant(block), "{block}");
+            // The f32 dispatcher degrades an INT8 tag to the f32
+            // shape-class kernel (f32 data can always be executed).
+            assert_eq!(kernel_for(v8).variant(), v8.f32_twin(), "{block}");
+            // The INT8 dispatcher resolves the tagged kernel itself.
+            assert_eq!(kernel_i8_for(v8).variant(), v8, "{block}");
+            // …and maps f32 variants through to their INT8 twin.
+            assert_eq!(kernel_i8_for(v8.f32_twin()).variant(), v8, "{block}");
         }
     }
 

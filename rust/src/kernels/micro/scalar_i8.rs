@@ -1,0 +1,212 @@
+//! Safe scalar INT8 reference microkernels — the production INT8 path
+//! on machines without AVX2, and the numerical ground truth the SIMD
+//! INT8 kernels must match bit-for-bit.
+//!
+//! Per stored block the contract is: accumulate the integer dot product
+//! exactly in `i32` (`acc = Σ_j wq·xq`), then fold into the f32 Y band
+//! as `m = sb·sx[k]; y[k] += m·(acc as f32)` — separate multiply and
+//! add, never FMA. Integer addition is associative, so the accumulation
+//! *order* is free (zero coefficients may be skipped, lanes may be
+//! tiled) and only the float fold — which is elementwise — pins the
+//! rounding. That is what makes scalar↔SIMD bitwise identity cheap to
+//! maintain here, compared to the carefully sequenced f32 kernels.
+
+use super::{KernelVariant, MicrokernelI8, QuantArgs};
+use crate::kernels::bsr_spmm::RowProgram;
+
+/// Fold one block row into `yrow`:
+/// `y[k] += (sb·sx[k]) · Σ_j wq[j]·xq[x0 + j, k]`, with the i32
+/// accumulator tiled over `KT`-token chunks so the X panel is walked
+/// row-by-row (cache-friendly) without a heap buffer.
+pub(crate) fn row_dot_i8(
+    yrow: &mut [f32],
+    wq: &[i8],
+    xq: &[i8],
+    x0: usize,
+    t: usize,
+    sb: f32,
+    sx: &[f32],
+) {
+    const KT: usize = 32;
+    let yrow = &mut yrow[..t];
+    let sx = &sx[..t];
+    let mut accbuf = [0i32; KT];
+    let mut k0 = 0;
+    while k0 < t {
+        let kt = KT.min(t - k0);
+        let acc = &mut accbuf[..kt];
+        acc.fill(0);
+        for (j, &w) in wq.iter().enumerate() {
+            if w == 0 {
+                // exact arithmetic: skipping a zero term cannot change
+                // the i32 sum, unlike the f32 kernels' skip rules
+                continue;
+            }
+            let a = w as i32;
+            let xrow = &xq[(x0 + j) * t + k0..][..kt];
+            for k in 0..kt {
+                acc[k] += a * xrow[k] as i32;
+            }
+        }
+        let yr = &mut yrow[k0..k0 + kt];
+        let sxr = &sx[k0..k0 + kt];
+        for k in 0..kt {
+            let m = sb * sxr[k];
+            yr[k] += m * (acc[k] as f32);
+        }
+        k0 += kt;
+    }
+}
+
+/// Scale for row `i` of stored block `bi` under either granularity.
+#[inline]
+pub(crate) fn row_scale(scales: &[f32], bi: usize, spb: usize, i: usize) -> f32 {
+    scales[bi * spb + if spb > 1 { i } else { 0 }]
+}
+
+/// Resolve a scalar INT8 variant to its implementation. Callers pass
+/// scalar variants only ([`super::kernel_i8_for`] maps SIMD → scalar
+/// twin first).
+pub fn kernel(variant: KernelVariant) -> &'static dyn MicrokernelI8 {
+    debug_assert!(!variant.is_simd(), "scalar_i8::kernel got {variant}");
+    match variant.int8_twin().scalar_twin() {
+        KernelVariant::ScalarI8Linear => &LINEAR,
+        KernelVariant::ScalarI8Tall => &TALL,
+        KernelVariant::ScalarI8Square => &SQUARE,
+        _ => &GENERIC,
+    }
+}
+
+static LINEAR: ScalarI8LinearKernel = ScalarI8LinearKernel;
+static TALL: ScalarI8TallKernel = ScalarI8TallKernel;
+static SQUARE: ScalarI8RowKernel = ScalarI8RowKernel {
+    variant: KernelVariant::ScalarI8Square,
+};
+static GENERIC: ScalarI8RowKernel = ScalarI8RowKernel {
+    variant: KernelVariant::ScalarI8Generic,
+};
+
+/// `r == 1` blocks. Runs are merged across adjacent blocks at program
+/// compile time, but each block keeps its own scale, so the run is
+/// re-split into `width / c` sub-blocks here (scales for `r == 1`
+/// shapes are always per-block: one scale per `c`-element group).
+struct ScalarI8LinearKernel;
+
+impl MicrokernelI8 for ScalarI8LinearKernel {
+    fn variant(&self) -> KernelVariant {
+        KernelVariant::ScalarI8Linear
+    }
+
+    fn run_program(
+        &self,
+        program: &RowProgram,
+        base: usize,
+        args: &QuantArgs<'_>,
+        yband: &mut [f32],
+        t: usize,
+    ) {
+        let c = program.block.c;
+        debug_assert_eq!(program.block.r, 1);
+        debug_assert_eq!(args.spb, 1);
+        for run in &program.runs {
+            let nb = run.width as usize / c;
+            for b in 0..nb {
+                let off = base + run.rel_offset as usize + b * c;
+                let bi = off / c;
+                let wq = &args.qdata[off..][..c];
+                row_dot_i8(
+                    yband,
+                    wq,
+                    args.xq,
+                    run.x_row as usize + b * c,
+                    t,
+                    args.scales[bi],
+                    args.sx,
+                );
+            }
+        }
+    }
+}
+
+/// Tall `R×1` blocks: one coefficient per output row, all rows reading
+/// the same X row, so the per-element fold needs no accumulator tile at
+/// all (`acc = a·xq[k]` is a single exact product).
+struct ScalarI8TallKernel;
+
+impl MicrokernelI8 for ScalarI8TallKernel {
+    fn variant(&self) -> KernelVariant {
+        KernelVariant::ScalarI8Tall
+    }
+
+    fn run_program(
+        &self,
+        program: &RowProgram,
+        base: usize,
+        args: &QuantArgs<'_>,
+        yband: &mut [f32],
+        t: usize,
+    ) {
+        let r = program.block.r;
+        debug_assert_eq!(program.block.c, 1);
+        for run in &program.runs {
+            let off = base + run.rel_offset as usize;
+            let bi = off / r;
+            let blk = &args.qdata[off..][..r];
+            let xr = &args.xq[run.x_row as usize * t..][..t];
+            let sx = &args.sx[..t];
+            for (i, &w) in blk.iter().enumerate() {
+                let a = w as i32;
+                let sb = row_scale(args.scales, bi, args.spb, i);
+                let yrow = &mut yband[i * t..(i + 1) * t];
+                for k in 0..t {
+                    let acc = a * xr[k] as i32;
+                    let m = sb * sx[k];
+                    yrow[k] += m * (acc as f32);
+                }
+            }
+        }
+    }
+}
+
+/// Square 32×32 and generic blocks: per-output-row [`row_dot_i8`] over
+/// the block's coefficient rows, honoring per-block-row scales for the
+/// tiny-block fallback granularity.
+struct ScalarI8RowKernel {
+    variant: KernelVariant,
+}
+
+impl MicrokernelI8 for ScalarI8RowKernel {
+    fn variant(&self) -> KernelVariant {
+        self.variant
+    }
+
+    fn run_program(
+        &self,
+        program: &RowProgram,
+        base: usize,
+        args: &QuantArgs<'_>,
+        yband: &mut [f32],
+        t: usize,
+    ) {
+        let block = program.block;
+        let e = block.elems();
+        for run in &program.runs {
+            let off = base + run.rel_offset as usize;
+            let bi = off / e;
+            let blk = &args.qdata[off..][..e];
+            for i in 0..block.r {
+                let wq = &blk[i * block.c..(i + 1) * block.c];
+                let sb = row_scale(args.scales, bi, args.spb, i);
+                row_dot_i8(
+                    &mut yband[i * t..(i + 1) * t],
+                    wq,
+                    args.xq,
+                    run.x_row as usize,
+                    t,
+                    sb,
+                    args.sx,
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Explicit AVX2 INT8 microkernels (`--features simd`, x86_64 only).
+//!
+//! Each kernel vectorizes over the token dimension (8 lanes) and widens
+//! the `i8` operands to 32-bit lanes before the integer multiply-add —
+//! the VPMADDUBSW-family widening idiom spelled as `VPMOVSXBD` +
+//! `VPMULLD` + `VPADDD`. The classic `VPMADDUBSW`/`VPMADDWD` pairing
+//! accumulates adjacent products through *saturating* i16, which both
+//! loses exactness and fixes a pairing order; widening straight to i32
+//! keeps the accumulation exact, so any lane tiling yields the same sum
+//! and bitwise parity with the scalar twin in [`super::scalar_i8`]
+//! reduces to matching the (elementwise) float fold:
+//! `m = sb·sx[k]; y[k] += m·(acc as f32)` with separate multiply/add
+//! intrinsics, never FMA. Scalar token tails use the exact expressions
+//! of the scalar twin.
+//!
+//! Safety: every `#[target_feature(enable = "avx2")]` function is only
+//! reached through [`super::kernel_i8_for`], which checks
+//! [`super::simd_active`] (runtime AVX2 detection) before handing out a
+//! SIMD kernel.
+
+use super::scalar_i8::row_scale;
+use super::{KernelVariant, MicrokernelI8, QuantArgs};
+use crate::kernels::bsr_spmm::RowProgram;
+use core::arch::x86_64::*;
+
+/// Token lanes per vector (i32 / f32 lanes of a 256-bit register).
+const LANES: usize = 8;
+
+/// Resolve a SIMD INT8 variant to its implementation. Callers must have
+/// verified AVX2 availability ([`super::simd_active`]).
+pub fn kernel(variant: KernelVariant) -> &'static dyn MicrokernelI8 {
+    debug_assert!(variant.is_simd(), "simd_i8::kernel got {variant}");
+    match variant.int8_twin().simd_twin() {
+        KernelVariant::SimdI8Linear => &LINEAR,
+        KernelVariant::SimdI8Tall => &TALL,
+        KernelVariant::SimdI8Square => &SQUARE,
+        _ => &GENERIC,
+    }
+}
+
+static LINEAR: SimdI8LinearKernel = SimdI8LinearKernel;
+static TALL: SimdI8TallKernel = SimdI8TallKernel;
+static SQUARE: SimdI8RowKernel = SimdI8RowKernel {
+    variant: KernelVariant::SimdI8Square,
+};
+static GENERIC: SimdI8RowKernel = SimdI8RowKernel {
+    variant: KernelVariant::SimdI8Generic,
+};
+
+/// Load 8 consecutive `i8` and sign-extend to 8 × i32 lanes
+/// (`VPMOVSXBD`).
+///
+/// # Safety
+/// `p` must be valid for reading 8 bytes; caller needs AVX2.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn load8_i8_i32(p: *const i8) -> __m256i {
+    _mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i))
+}
+
+/// AVX2 twin of [`super::scalar_i8::row_dot_i8`]: one block row folded
+/// into `yrow` with an exact i32 vector accumulator per 8-token lane
+/// group, then the elementwise float fold. Zero coefficients are
+/// skipped (exact: the i32 sum is unchanged).
+#[target_feature(enable = "avx2")]
+unsafe fn row_dot_i8_avx2(
+    yrow: &mut [f32],
+    wq: &[i8],
+    xq: &[i8],
+    x0: usize,
+    t: usize,
+    sb: f32,
+    sx: &[f32],
+) {
+    let yrow = &mut yrow[..t];
+    let sx = &sx[..t];
+    let yp = yrow.as_mut_ptr();
+    let sxp = sx.as_ptr();
+    let xp = xq.as_ptr();
+    let vsb = _mm256_set1_ps(sb);
+    let mut k = 0;
+    while k + LANES <= t {
+        let mut acc = _mm256_setzero_si256();
+        for (j, &w) in wq.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            let va = _mm256_set1_epi32(w as i32);
+            // SAFETY: k + LANES <= t keeps the 8-byte load inside row
+            // x0 + j of the [rows, t] panel.
+            let xv = load8_i8_i32(xp.add((x0 + j) * t + k));
+            acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(va, xv));
+        }
+        let accf = _mm256_cvtepi32_ps(acc);
+        let vm = _mm256_mul_ps(vsb, _mm256_loadu_ps(sxp.add(k)));
+        let y = _mm256_loadu_ps(yp.add(k));
+        _mm256_storeu_ps(yp.add(k), _mm256_add_ps(y, _mm256_mul_ps(vm, accf)));
+        k += LANES;
+    }
+    // scalar token tail — identical op sequence to the scalar twin
+    while k < t {
+        let mut acc = 0i32;
+        for (j, &w) in wq.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            acc += w as i32 * *xp.add((x0 + j) * t + k) as i32;
+        }
+        let m = sb * *sxp.add(k);
+        *yp.add(k) += m * (acc as f32);
+        k += 1;
+    }
+}
+
+/// Tall-block (`c == 1`) tile: the widened X vector and the `sx` lane
+/// product are loaded once per 8-token group and reused across all `r`
+/// output rows — the INT8 analogue of the f32 tall kernel's X register
+/// reuse. Per element: `acc = a·xq[k]` (one exact product), then the
+/// standard fold.
+#[target_feature(enable = "avx2")]
+unsafe fn tall_i8_avx2(
+    blk: &[i8],
+    scales: &[f32],
+    bi: usize,
+    spb: usize,
+    xr: *const i8,
+    sx: &[f32],
+    yband: &mut [f32],
+    t: usize,
+) {
+    let yp = yband.as_mut_ptr();
+    let sxp = sx[..t].as_ptr();
+    let mut k = 0;
+    while k + LANES <= t {
+        // SAFETY: k + LANES <= t keeps the 8-byte load inside the X row.
+        let xv = load8_i8_i32(xr.add(k));
+        let vsx = _mm256_loadu_ps(sxp.add(k));
+        for (i, &w) in blk.iter().enumerate() {
+            let acc = _mm256_mullo_epi32(_mm256_set1_epi32(w as i32), xv);
+            let accf = _mm256_cvtepi32_ps(acc);
+            let sb = row_scale(scales, bi, spb, i);
+            let vm = _mm256_mul_ps(_mm256_set1_ps(sb), vsx);
+            let yk = yp.add(i * t + k);
+            _mm256_storeu_ps(yk, _mm256_add_ps(_mm256_loadu_ps(yk), _mm256_mul_ps(vm, accf)));
+        }
+        k += LANES;
+    }
+    while k < t {
+        let xk = *xr.add(k) as i32;
+        let sxk = *sxp.add(k);
+        for (i, &w) in blk.iter().enumerate() {
+            let acc = w as i32 * xk;
+            let sb = row_scale(scales, bi, spb, i);
+            let m = sb * sxk;
+            *yp.add(i * t + k) += m * (acc as f32);
+        }
+        k += 1;
+    }
+}
+
+/// `r == 1` blocks: merged runs re-split per block (each block has its
+/// own scale), AVX2 row dot per block.
+struct SimdI8LinearKernel;
+
+impl MicrokernelI8 for SimdI8LinearKernel {
+    fn variant(&self) -> KernelVariant {
+        KernelVariant::SimdI8Linear
+    }
+
+    fn run_program(
+        &self,
+        program: &RowProgram,
+        base: usize,
+        args: &QuantArgs<'_>,
+        yband: &mut [f32],
+        t: usize,
+    ) {
+        let c = program.block.c;
+        debug_assert_eq!(program.block.r, 1);
+        debug_assert_eq!(args.spb, 1);
+        for run in &program.runs {
+            let nb = run.width as usize / c;
+            for b in 0..nb {
+                let off = base + run.rel_offset as usize + b * c;
+                let bi = off / c;
+                let wq = &args.qdata[off..][..c];
+                // SAFETY: kernel_i8_for verified AVX2 before returning
+                // this kernel.
+                unsafe {
+                    row_dot_i8_avx2(
+                        yband,
+                        wq,
+                        args.xq,
+                        run.x_row as usize + b * c,
+                        t,
+                        args.scales[bi],
+                        args.sx,
+                    )
+                };
+            }
+        }
+    }
+}
+
+/// The paper's 32×1 tall block, INT8.
+struct SimdI8TallKernel;
+
+impl MicrokernelI8 for SimdI8TallKernel {
+    fn variant(&self) -> KernelVariant {
+        KernelVariant::SimdI8Tall
+    }
+
+    fn run_program(
+        &self,
+        program: &RowProgram,
+        base: usize,
+        args: &QuantArgs<'_>,
+        yband: &mut [f32],
+        t: usize,
+    ) {
+        let r = program.block.r;
+        debug_assert_eq!(program.block.c, 1);
+        for run in &program.runs {
+            let off = base + run.rel_offset as usize;
+            let bi = off / r;
+            let blk = &args.qdata[off..][..r];
+            let xr = args.xq[run.x_row as usize * t..][..t].as_ptr();
+            // SAFETY: kernel_i8_for verified AVX2 before returning this
+            // kernel; xr points at a full t-length X row.
+            unsafe { tall_i8_avx2(blk, args.scales, bi, args.spb, xr, args.sx, yband, t) };
+        }
+    }
+}
+
+/// Square 32×32 and generic blocks: AVX2 row dot per output row,
+/// honoring per-block-row scales for the tiny-block fallback.
+struct SimdI8RowKernel {
+    variant: KernelVariant,
+}
+
+impl MicrokernelI8 for SimdI8RowKernel {
+    fn variant(&self) -> KernelVariant {
+        self.variant
+    }
+
+    fn run_program(
+        &self,
+        program: &RowProgram,
+        base: usize,
+        args: &QuantArgs<'_>,
+        yband: &mut [f32],
+        t: usize,
+    ) {
+        let block = program.block;
+        let e = block.elems();
+        for run in &program.runs {
+            let off = base + run.rel_offset as usize;
+            let bi = off / e;
+            let blk = &args.qdata[off..][..e];
+            for i in 0..block.r {
+                let wq = &blk[i * block.c..(i + 1) * block.c];
+                let sb = row_scale(args.scales, bi, args.spb, i);
+                // SAFETY: kernel_i8_for verified AVX2 before returning
+                // this kernel.
+                unsafe {
+                    row_dot_i8_avx2(
+                        &mut yband[i * t..(i + 1) * t],
+                        wq,
+                        args.xq,
+                        run.x_row as usize,
+                        t,
+                        sb,
+                        args.sx,
+                    )
+                };
+            }
+        }
+    }
+}

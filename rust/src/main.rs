@@ -16,10 +16,11 @@
 use anyhow::{bail, Context, Result};
 use sparsebert::bench_harness::figure2::build_figure2;
 use sparsebert::bench_harness::{
-    render_costcheck, render_sched_sweep, render_serving_sweep, render_warm_start, report,
-    run_costcheck, run_scheduler_sweep, run_serving_sweep, run_table1, run_warm_start_smoke,
-    serving_sweep_json, warm_start_json, CostCheckConfig, SchedSweepConfig, ServingSweepConfig,
-    Table1Config, WarmStartConfig,
+    render_costcheck, render_int8_accuracy, render_sched_sweep, render_serving_sweep,
+    render_warm_start, report, run_costcheck, run_int8_accuracy_sweep, run_scheduler_sweep,
+    run_serving_sweep, run_table1, run_warm_start_smoke, serving_sweep_json, warm_start_json,
+    CostCheckConfig, Int8AccuracyConfig, SchedSweepConfig, ServingSweepConfig, Table1Config,
+    WarmStartConfig,
 };
 use sparsebert::coordinator::server::{Client, Server};
 use sparsebert::coordinator::PipelineMode;
@@ -306,6 +307,11 @@ fn cmd_cibench(argv: Vec<String>) -> Result<()> {
     )
     .opt("out", "BENCH_ci.json", "output JSON path")
     .opt(
+        "accuracy-out",
+        "BENCH_accuracy.json",
+        "int8-vs-f32 accuracy-delta JSON path (uploaded alongside the bench JSON in CI)",
+    )
+    .opt(
         "plan-store",
         "plan-store-ci",
         "artifact-store root for the cold-vs-warm smoke (persisted across CI runs)",
@@ -377,8 +383,27 @@ fn cmd_cibench(argv: Vec<String>) -> Result<()> {
             ws.warm.store.weight_misses
         );
     }
+    // Int8 accuracy deltas per block shape × sparsity: a hard gate — a
+    // quantization-scheme regression (scale granularity, accumulator
+    // width) shows up here long before it moves throughput numbers.
+    let acc_rows = run_int8_accuracy_sweep(&Int8AccuracyConfig::smoke());
+    println!(
+        "{}",
+        render_int8_accuracy(&acc_rows, "cibench — int8 accuracy deltas")
+    );
+    for r in &acc_rows {
+        if !r.within_tolerance() {
+            bail!(
+                "int8 accuracy gate: {} @ {:.0}% rel err {:.4} exceeds tolerance {}",
+                r.block,
+                r.sparsity * 100.0,
+                r.rel_err,
+                sparsebert::sparse::quant::INT8_ACCURACY_TOL_REL
+            );
+        }
+    }
     let mut root = Json::obj();
-    root.set("schema", "sparsebert-bench-ci/v2")
+    root.set("schema", "sparsebert-bench-ci/v3")
         .set("version", sparsebert::VERSION)
         .set("hw", HwSpec::detect().to_string())
         .set("hw_class", HwSpec::detect().class_string())
@@ -395,7 +420,9 @@ fn cmd_cibench(argv: Vec<String>) -> Result<()> {
                 .set("speedup_vs_serial", r.speedup_vs_serial)
                 .set("kernel_variant", r.kernel_variant.as_str())
                 .set("ms_scalar", r.ms_scalar)
-                .set("simd_speedup", r.simd_speedup);
+                .set("simd_speedup", r.simd_speedup)
+                .set("ms_int8", r.ms_int8)
+                .set("int8_speedup", r.int8_speedup);
             j
         })
         .collect();
@@ -404,14 +431,41 @@ fn cmd_cibench(argv: Vec<String>) -> Result<()> {
         .set("cache_entries", sched_rep.cache.entries)
         .set("cache_evictions", sched_rep.cache.evictions)
         .set("replans_on_repeat", sched_rep.replans_on_repeat);
+    let acc_cells: Vec<Json> = acc_rows
+        .iter()
+        .map(|r| {
+            let mut j = Json::obj();
+            j.set("block", r.block.to_string())
+                .set("sparsity", r.sparsity)
+                .set("max_abs_err", r.max_abs_err)
+                .set("mean_abs_err", r.mean_abs_err)
+                .set("rel_err", r.rel_err)
+                .set("within_tolerance", r.within_tolerance());
+            j
+        })
+        .collect();
+    let mut acc = Json::obj();
+    acc.set("tolerance_rel", sparsebert::sparse::quant::INT8_ACCURACY_TOL_REL)
+        .set("rows", acc_cells);
     root.set("schedsweep", ss)
         .set(
             "serving",
             serving_sweep_json(&serving_rows, &[("experiment", Json::Str("A3-ci".into()))]),
         )
-        .set("warmstart", warm_start_json(&ws));
+        .set("warmstart", warm_start_json(&ws))
+        .set("int8_accuracy", acc.clone());
     std::fs::write(args.get("out"), root.to_string_pretty())?;
     eprintln!("wrote {}", args.get("out"));
+    // Standalone accuracy artifact so the deltas are diffable across CI
+    // runs without pulling the whole bench JSON.
+    let mut acc_doc = Json::obj();
+    acc_doc
+        .set("schema", "sparsebert-int8-accuracy/v1")
+        .set("version", sparsebert::VERSION)
+        .set("hw_class", HwSpec::detect().class_string())
+        .set("int8_accuracy", acc);
+    std::fs::write(args.get("accuracy-out"), acc_doc.to_string_pretty())?;
+    eprintln!("wrote {}", args.get("accuracy-out"));
     if args.flag("trace") {
         write_trace(std::path::Path::new(args.get("trace-out")))?;
     }
@@ -451,13 +505,15 @@ fn cmd_tracecheck(argv: Vec<String>) -> Result<()> {
 }
 
 /// One schedsweep cell pulled out of a cibench JSON (`benchdiff` reads
-/// both v1 and v2 documents; `ms_scalar` is absent in v1).
+/// v1 through v3 documents; `ms_scalar` is absent in v1, `ms_int8` in
+/// anything before v3).
 struct BenchDiffRow {
     block: String,
     threads: usize,
     grain: usize,
     ms: f64,
     ms_scalar: Option<f64>,
+    ms_int8: Option<f64>,
     speedup_vs_serial: Option<f64>,
 }
 
@@ -488,6 +544,7 @@ fn benchdiff_rows(doc: &Json, label: &str) -> Result<Vec<BenchDiffRow>> {
                     .and_then(Json::as_f64)
                     .with_context(|| format!("{label}: row missing ms"))?,
                 ms_scalar: r.get("ms_scalar").and_then(Json::as_f64),
+                ms_int8: r.get("ms_int8").and_then(Json::as_f64),
                 speedup_vs_serial: r.get("speedup_vs_serial").and_then(Json::as_f64),
             })
         })
@@ -674,6 +731,42 @@ fn cmd_benchdiff(argv: Vec<String>) -> Result<()> {
             eprintln!("benchdiff: warn — simd_active run has no scalar-twin timings for {gate_block}");
             warnings += 1;
         }
+    }
+    // Within-run quantization gate: int8 gate-block cells must beat
+    // their f32 twins measured in the same process. Enforced only where
+    // the AVX2 int8 microkernel is live (simd_active) — the scalar int8
+    // path trades a widening multiply per lane for 4x fewer weight
+    // bytes, which portable Rust doesn't reliably win, so non-SIMD
+    // runners warn instead of failing.
+    let (mut i8_f32_ms, mut i8_ms) = (0.0f64, 0.0f64);
+    for r in cur_rows.iter().filter(|r| r.block == gate_block) {
+        if let Some(i) = r.ms_int8 {
+            i8_f32_ms += r.ms;
+            i8_ms += i;
+        }
+    }
+    if i8_ms > 0.0 {
+        let speedup = i8_f32_ms / i8_ms.max(1e-9);
+        println!(
+            "int8 gate: {gate_block} aggregate {:.3} ms int8 vs {:.3} ms f32 — {:.2}x",
+            i8_ms, i8_f32_ms, speedup
+        );
+        if speedup < 1.0 {
+            if simd_active {
+                bail!(
+                    "int8 {gate_block} kernel slower than its f32 twin ({speedup:.2}x) on a \
+                     SIMD-active runner; quantized microkernel regression"
+                );
+            }
+            eprintln!(
+                "benchdiff: warn — int8 {gate_block} slower than f32 ({speedup:.2}x) on a \
+                 non-SIMD runner (gate enforced only where AVX2 int8 kernels are live)"
+            );
+            warnings += 1;
+        }
+    } else if simd_active {
+        eprintln!("benchdiff: warn — simd_active run has no int8-twin timings for {gate_block}");
+        warnings += 1;
     }
     if failures > 0 {
         bail!(

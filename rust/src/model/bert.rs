@@ -15,14 +15,15 @@
 use super::engine::Engine;
 use super::weights::BertWeights;
 use crate::kernels::attention::multi_head_attention;
-use crate::kernels::bsr_spmm::bsr_linear_planned_fused;
+use crate::kernels::bsr_spmm::{bsr_linear_planned_fused, bsr_linear_planned_fused_i8};
 use crate::kernels::dense_matmul::{linear_dense_parallel, transpose};
-use crate::kernels::micro::{Epilogue, KernelVariant};
+use crate::kernels::micro::{self, Epilogue, KernelVariant};
 use crate::kernels::ops::{add_inplace, gelu, layernorm_fm};
 use crate::scheduler::{AutoScheduler, ExecPlan};
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::dense::Matrix;
 use crate::sparse::prune::BlockShape;
+use crate::sparse::quant::{QuantBsr, WeightDtype};
 use crate::util::pool::{self, Pool};
 use anyhow::Result;
 use std::sync::Arc;
@@ -112,15 +113,29 @@ impl Engine for CompiledDenseEngine {
     }
 }
 
-/// One layer's projections in BSR form with their cached execution plans
-/// (shared `SpmmPlan` + structure stats for O(1) thread/grain choice).
+/// One projection in BSR form with its cached execution plan (shared
+/// `SpmmPlan` + structure stats for O(1) thread/grain choice).
+///
+/// On the int8 path `quant` carries the packed `i8` blocks and per-block
+/// scales the fused int8 kernel consumes, and `bsr` holds the
+/// **dequantized** f32 blocks: any f32 fallback (Hybrid measurement
+/// probes, direct kernels) then computes exactly what the int8 kernel
+/// computes, and a warm-started engine is bitwise-identical to a cold
+/// one.
+struct Projection {
+    bsr: BsrMatrix,
+    quant: Option<QuantBsr>,
+    plan: Arc<ExecPlan>,
+}
+
+/// One layer's six projections.
 struct SparseLayer {
-    wq: (BsrMatrix, Arc<ExecPlan>),
-    wk: (BsrMatrix, Arc<ExecPlan>),
-    wv: (BsrMatrix, Arc<ExecPlan>),
-    wo: (BsrMatrix, Arc<ExecPlan>),
-    w_up: (BsrMatrix, Arc<ExecPlan>),
-    w_down: (BsrMatrix, Arc<ExecPlan>),
+    wq: Projection,
+    wk: Projection,
+    wv: Projection,
+    wo: Projection,
+    w_up: Projection,
+    w_down: Projection,
 }
 
 /// Sparse BSR engine ("TVM⁺" column): plans fetched once from the
@@ -132,6 +147,7 @@ pub struct SparseBsrEngine {
     pub sched: Arc<AutoScheduler>,
     threads: usize,
     block: BlockShape,
+    weight_dtype: WeightDtype,
     /// Dedicated worker pool (the serving coordinator passes one); `None`
     /// executes on the process-wide [`pool::global`] pool.
     exec_pool: Option<Arc<Pool>>,
@@ -156,6 +172,10 @@ pub struct SparseEngineOptions {
     /// kernel fan-out. Either way the engine never oversubscribes the
     /// machine.
     pub exec_pool: Option<Arc<Pool>>,
+    /// Stored-weight precision. [`WeightDtype::Int8`] quantizes each BSR
+    /// projection to `i8` with per-block scales at pack time and executes
+    /// through the fused int8 microkernels; default is f32.
+    pub weight_dtype: WeightDtype,
 }
 
 impl SparseEngineOptions {
@@ -171,6 +191,7 @@ impl SparseEngineOptions {
             sched,
             threads,
             exec_pool: None,
+            weight_dtype: WeightDtype::F32,
         }
     }
 
@@ -178,6 +199,13 @@ impl SparseEngineOptions {
     /// `exec_pool` field docs).
     pub fn on_pool(mut self, pool: Arc<Pool>) -> SparseEngineOptions {
         self.exec_pool = Some(pool);
+        self
+    }
+
+    /// Store weights at the given precision (see the `weight_dtype`
+    /// field docs).
+    pub fn with_weight_dtype(mut self, dtype: WeightDtype) -> SparseEngineOptions {
+        self.weight_dtype = dtype;
         self
     }
 }
@@ -195,6 +223,7 @@ impl SparseBsrEngine {
             sched,
             threads,
             exec_pool,
+            weight_dtype,
         } = opts;
         // Warm start: when the scheduler carries a persistent artifact
         // store, pre-packed BSR buffers replace the `from_dense` packing
@@ -203,25 +232,64 @@ impl SparseBsrEngine {
         let store = sched.store();
         let mut sparse_layers = Vec::with_capacity(weights.layers.len());
         for (li, lw) in weights.layers.iter().enumerate() {
-            let conv = |label: &str, m: &Matrix| -> Result<(BsrMatrix, Arc<ExecPlan>)> {
-                let bsr = match store.as_deref().and_then(|s| s.load_packed(m, block)) {
-                    Some(packed) => packed,
-                    None => {
-                        let _span = crate::trace::span(
-                            "model",
-                            "bsr.pack",
-                            0,
-                            &[("block_r", block.r as i64), ("block_c", block.c as i64)],
-                        );
-                        let packed = BsrMatrix::from_dense(m, block)?;
-                        if let Some(s) = store.as_deref() {
-                            let _ = s.store_packed(m, &packed);
+            let conv = |label: &str, m: &Matrix| -> Result<Projection> {
+                let (bsr, quant) = match weight_dtype {
+                    WeightDtype::F32 => {
+                        let bsr = match store.as_deref().and_then(|s| s.load_packed(m, block)) {
+                            Some(packed) => packed,
+                            None => {
+                                let _span = crate::trace::span(
+                                    "model",
+                                    "bsr.pack",
+                                    0,
+                                    &[("block_r", block.r as i64), ("block_c", block.c as i64)],
+                                );
+                                let packed = BsrMatrix::from_dense(m, block)?;
+                                if let Some(s) = store.as_deref() {
+                                    let _ = s.store_packed(m, &packed);
+                                }
+                                packed
+                            }
+                        };
+                        (bsr, None)
+                    }
+                    WeightDtype::Int8 => {
+                        match store.as_deref().and_then(|s| s.load_packed_quant(m, block)) {
+                            Some((packed, qw)) => (packed, Some(qw)),
+                            None => {
+                                let _span = crate::trace::span(
+                                    "model",
+                                    "bsr.pack",
+                                    0,
+                                    &[("block_r", block.r as i64), ("block_c", block.c as i64)],
+                                );
+                                let mut packed = BsrMatrix::from_dense(m, block)?;
+                                let qw = QuantBsr::quantize(&packed);
+                                // Engine-side blocks are the *dequantized*
+                                // values (see [`Projection`]).
+                                packed.data = qw.dequantize_data();
+                                if let Some(s) = store.as_deref() {
+                                    let _ = s.store_packed_quant(m, &packed, &qw);
+                                }
+                                (packed, Some(qw))
+                            }
                         }
-                        packed
                     }
                 };
                 let plan = sched.exec_plan(&format!("layer{li}.{label}"), &bsr);
-                Ok((bsr, plan))
+                // The plan cache/store stay dtype-agnostic (same structure
+                // → same band plan); the int8 engine re-tags its private
+                // copy so dispatch and cost ranking see the int8 variant.
+                let plan = match weight_dtype {
+                    WeightDtype::F32 => plan,
+                    WeightDtype::Int8 => Arc::new(ExecPlan {
+                        plan: Arc::new(
+                            plan.plan.with_kernel_variant(micro::select_variant_i8(block)),
+                        ),
+                        ..(*plan).clone()
+                    }),
+                };
+                Ok(Projection { bsr, quant, plan })
             };
             sparse_layers.push(SparseLayer {
                 wq: conv("attn.wq", &lw.wq)?,
@@ -238,12 +306,18 @@ impl SparseBsrEngine {
             sched,
             threads,
             block,
+            weight_dtype,
             exec_pool,
         })
     }
 
     pub fn block(&self) -> BlockShape {
         self.block
+    }
+
+    /// Precision the projection weights are stored (and executed) at.
+    pub fn weight_dtype(&self) -> WeightDtype {
+        self.weight_dtype
     }
 
     fn pool(&self) -> &Pool {
@@ -254,52 +328,55 @@ impl SparseBsrEngine {
     /// active cost policy (analytical roofline ranking by default,
     /// memoized per plan × token count), capped by the engine's thread
     /// budget, executed on the persistent pool.
-    fn project(&self, m: &(BsrMatrix, Arc<ExecPlan>), x: &Matrix, bias: &[f32]) -> Matrix {
+    fn project(&self, m: &Projection, x: &Matrix, bias: &[f32]) -> Matrix {
         self.project_fused(m, x, bias, Epilogue::None)
     }
 
     /// A planned projection with the activation epilogue fused into the
     /// same Y-band pass as the accumulation (the band is still hot in
     /// cache; the activation never round-trips through memory as a
-    /// separate whole-matrix walk).
-    fn project_fused(
-        &self,
-        m: &(BsrMatrix, Arc<ExecPlan>),
-        x: &Matrix,
-        bias: &[f32],
-        epilogue: Epilogue,
-    ) -> Matrix {
-        let p = self.sched.params_for(&m.0, &m.1, x.cols).capped(self.threads);
-        // Predicted-vs-observed feedback: when tracing is on, time the
-        // planned spmm and score it against the cost model's memoized
-        // prediction. Timing only — the computation itself is identical
-        // either way.
-        if crate::trace::enabled() {
-            let t0 = std::time::Instant::now();
-            let y = bsr_linear_planned_fused(
-                &m.0,
-                &m.1.plan,
+    /// separate whole-matrix walk). With an int8 companion the same band
+    /// pass runs the fused dequant+bias+epilogue int8 kernel instead.
+    fn project_fused(&self, m: &Projection, x: &Matrix, bias: &[f32], epilogue: Epilogue) -> Matrix {
+        let p = self
+            .sched
+            .params_for(&m.bsr, &m.plan, x.cols)
+            .capped(self.threads);
+        let run = || match &m.quant {
+            Some(qw) => bsr_linear_planned_fused_i8(
+                &m.bsr,
+                qw,
+                &m.plan.plan,
                 x,
                 Some(bias),
                 epilogue,
                 self.pool(),
                 p.threads,
                 p.grain,
-            );
+            ),
+            None => bsr_linear_planned_fused(
+                &m.bsr,
+                &m.plan.plan,
+                x,
+                Some(bias),
+                epilogue,
+                self.pool(),
+                p.threads,
+                p.grain,
+            ),
+        };
+        // Predicted-vs-observed feedback: when tracing is on, time the
+        // planned spmm and score it against the cost model's memoized
+        // prediction. Timing only — the computation itself is identical
+        // either way.
+        if crate::trace::enabled() {
+            let t0 = std::time::Instant::now();
+            let y = run();
             let ms = t0.elapsed().as_secs_f64() * 1e3;
-            self.sched.record_observed(&m.1, x.cols, ms);
+            self.sched.record_observed(&m.plan, x.cols, ms);
             return y;
         }
-        bsr_linear_planned_fused(
-            &m.0,
-            &m.1.plan,
-            x,
-            Some(bias),
-            epilogue,
-            self.pool(),
-            p.threads,
-            p.grain,
-        )
+        run()
     }
 
     /// The microkernel variant the engine's plans dispatch to (every
@@ -309,7 +386,7 @@ impl SparseBsrEngine {
     pub fn kernel_variant(&self) -> Option<KernelVariant> {
         self.sparse_layers
             .first()
-            .map(|sl| sl.wq.1.plan.kernel_variant)
+            .map(|sl| sl.wq.plan.plan.kernel_variant)
     }
 
     /// Stored-block sparsity of the converted model (diagnostics).
@@ -317,8 +394,8 @@ impl SparseBsrEngine {
         let mut acc = 0.0;
         let mut n = 0usize;
         for sl in &self.sparse_layers {
-            for m in [&sl.wq.0, &sl.wk.0, &sl.wv.0, &sl.wo.0, &sl.w_up.0, &sl.w_down.0] {
-                acc += m.block_sparsity();
+            for m in [&sl.wq, &sl.wk, &sl.wv, &sl.wo, &sl.w_up, &sl.w_down] {
+                acc += m.bsr.block_sparsity();
                 n += 1;
             }
         }
@@ -358,17 +435,16 @@ impl Engine for SparseBsrEngine {
     fn weight_footprint_bytes(&self) -> usize {
         self.sparse_layers
             .iter()
-            .flat_map(|sl| {
-                [
-                    &sl.wq.0,
-                    &sl.wk.0,
-                    &sl.wv.0,
-                    &sl.wo.0,
-                    &sl.w_up.0,
-                    &sl.w_down.0,
-                ]
+            .flat_map(|sl| [&sl.wq, &sl.wk, &sl.wv, &sl.wo, &sl.w_up, &sl.w_down])
+            .map(|m| match &m.quant {
+                // i8 blocks + f32 scales, plus the shared i32 structure
+                // indices (the dequantized f32 shadow in `bsr` is a
+                // build-time convenience, not deployed weight bytes).
+                Some(qw) => {
+                    qw.footprint_bytes() + (m.bsr.indices.len() + m.bsr.indptr.len()) * 4
+                }
+                None => m.bsr.footprint_bytes(),
             })
-            .map(|m| m.footprint_bytes())
             .sum()
     }
 }
@@ -611,5 +687,100 @@ mod tests {
             engine.kernel_variant(),
             Some(crate::kernels::micro::select_variant(block))
         );
+    }
+
+    /// Int8-engine shorthand for this module's tests.
+    fn sparse_i8_on(
+        w: &Arc<BertWeights>,
+        block: BlockShape,
+        sched: &Arc<AutoScheduler>,
+        threads: usize,
+    ) -> SparseBsrEngine {
+        SparseBsrEngine::build(
+            SparseEngineOptions::new(Arc::clone(w), block, Arc::clone(sched), threads)
+                .with_weight_dtype(WeightDtype::Int8),
+        )
+        .unwrap()
+    }
+
+    /// End-to-end int8 forward stays close to the f32 engine. Per-block
+    /// quantization error is ≤ maxabs/254 per weight; through the full
+    /// encoder stack (attention + layernorms) the accumulated drift must
+    /// still stay well inside a loose output-relative envelope.
+    #[test]
+    fn int8_engine_output_close_to_f32_engine() {
+        let block = BlockShape::new(2, 4);
+        let (w, x) = setup(0.6, block);
+        let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
+        let f32_engine = sparse_on(&w, block, &sched, 2);
+        let i8_engine = sparse_i8_on(&w, block, &sched, 2);
+        assert_eq!(f32_engine.weight_dtype(), WeightDtype::F32);
+        assert_eq!(i8_engine.weight_dtype(), WeightDtype::Int8);
+        let yf = f32_engine.forward(&x);
+        let yi = i8_engine.forward(&x);
+        let ymax = yf.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let maxerr = yf
+            .data
+            .iter()
+            .zip(&yi.data)
+            .fold(0.0f32, |a, (&p, &q)| a.max((p - q).abs()));
+        assert!(
+            f64::from(maxerr) <= 0.25 * f64::from(ymax.max(1.0)),
+            "int8 engine drifted: maxerr {maxerr} vs ymax {ymax}"
+        );
+    }
+
+    /// The int8 engine reports the int8 twin of the block's variant and a
+    /// smaller deployed-weight footprint than its f32 counterpart.
+    #[test]
+    fn int8_engine_reports_variant_and_smaller_footprint() {
+        let block = BlockShape::new(2, 4);
+        let (w, _) = setup(0.6, block);
+        let sched = Arc::new(AutoScheduler::new(HwSpec::haswell_reference()));
+        let f32_engine = sparse_on(&w, block, &sched, 2);
+        let i8_engine = sparse_i8_on(&w, block, &sched, 2);
+        assert_eq!(
+            i8_engine.kernel_variant(),
+            Some(crate::kernels::micro::select_variant_i8(block))
+        );
+        assert!(
+            i8_engine.weight_footprint_bytes() < f32_engine.weight_footprint_bytes(),
+            "int8 {} vs f32 {}",
+            i8_engine.weight_footprint_bytes(),
+            f32_engine.weight_footprint_bytes()
+        );
+    }
+
+    /// Warm-starting an int8 engine from a freshly built v3 store does
+    /// zero re-packs and zero re-quantizations, and reproduces the cold
+    /// engine's forward bitwise (both paths run the same int8 kernel over
+    /// the same stored blocks).
+    #[test]
+    fn int8_warm_start_engine_skips_packing_and_matches_cold() {
+        let block = BlockShape::new(2, 4);
+        let (w, x) = setup(0.6, block);
+        let dir = std::env::temp_dir().join(format!(
+            "sparsebert-warm-i8-engine-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let hw = HwSpec::haswell_reference();
+        let sched_cold = Arc::new(AutoScheduler::new(hw.clone()));
+        sched_cold.attach_store(Arc::new(
+            crate::planstore::PlanStore::open(&dir, &hw).unwrap(),
+        ));
+        let cold = sparse_i8_on(&w, block, &sched_cold, 2);
+        // warm "restart": fresh scheduler + reopened store
+        let store = Arc::new(crate::planstore::PlanStore::open(&dir, &hw).unwrap());
+        let sched_warm = Arc::new(AutoScheduler::new(hw.clone()));
+        sched_warm.attach_store(Arc::clone(&store));
+        let warm = sparse_i8_on(&w, block, &sched_warm, 2);
+        let s = store.stats();
+        assert_eq!(sched_warm.buffer.len(), 0, "zero live plannings on warm start");
+        assert_eq!(s.plan_misses, 0, "every plan served from the store: {s:?}");
+        assert_eq!(s.weight_misses, 0, "zero quantized re-packs: {s:?}");
+        assert_eq!(s.weight_hits, 6, "one quantized load per projection: {s:?}");
+        assert_eq!(warm.kernel_variant(), cold.kernel_variant());
+        assert_eq!(cold.forward(&x).data, warm.forward(&x).data);
     }
 }

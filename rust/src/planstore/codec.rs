@@ -25,8 +25,11 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Payload schema tag (belt-and-braces next to the store-level version).
-/// v2 adds `kernel_variant`.
-const SCHEMA: &str = "sparsebert-plan/v2";
+/// v2 adds `kernel_variant`; v3 tracks the store format bump for INT8
+/// quantized packed-weight payloads (the plan document layout itself is
+/// unchanged, but a v3 store must never trust v2-era payloads whose
+/// sibling weight artifacts used the old key space).
+const SCHEMA: &str = "sparsebert-plan/v3";
 
 /// Serialize a compiled plan (with its scheduling statistics) for the
 /// matrix it was built from. `policy` records which scheduler cost policy
@@ -337,6 +340,24 @@ mod tests {
         assert_ne!(stripped, text);
         let back = decode_plan(&stripped, &m).unwrap();
         assert_plans_equal(&ep, &back);
+    }
+
+    #[test]
+    fn v2_schema_payload_is_rejected() {
+        // A payload stamped with the previous schema tag must fail the
+        // schema check even though its document layout would decode.
+        let block = BlockShape::new(32, 1);
+        let m = bsr(block, 0.9, 11);
+        let ep = exec_plan_for(&m);
+        let text = encode_plan(&ep, &m, "roofline");
+        assert!(text.contains("\"schema\":\"sparsebert-plan/v3\""));
+        let downgraded = text.replace("sparsebert-plan/v3", "sparsebert-plan/v2");
+        assert_ne!(downgraded, text);
+        let err = decode_plan(&downgraded, &m).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("schema mismatch"),
+            "unexpected error: {err:#}"
+        );
     }
 
     #[test]

@@ -32,7 +32,13 @@ use std::fmt;
 /// v2: plan payloads record the microkernel `kernel_variant` (schema
 /// `sparsebert-plan/v2`). Stores written at v1 are reinitialized on open
 /// and their entries degrade to live planning.
-pub const FORMAT_VERSION: u32 = 2;
+///
+/// v3: adds INT8 quantized packed-weight payloads
+/// ([`ArtifactKind::PackedWeightsI8`]: `i8` block data plus per-block
+/// `f32` scales, schema `sparsebert-plan/v3` for plans). Stores written
+/// at v2 are reinitialized on open via the same `stale_format_reset`
+/// path.
+pub const FORMAT_VERSION: u32 = 3;
 
 /// Incremental FNV-1a 64-bit hasher (the same construction
 /// [`HwSpec::fingerprint`] uses, shared here for artifact ids and
@@ -102,14 +108,19 @@ pub enum ArtifactKind {
     Plan,
     /// Pre-packed BSR weight buffers (`data`/`indices`/`indptr`).
     PackedWeights,
+    /// INT8-quantized packed BSR weight buffers: `i8` block data plus
+    /// per-block (or per-block-row) `f32` scales, alongside the same
+    /// `indices`/`indptr` structure.
+    PackedWeightsI8,
 }
 
 impl ArtifactKind {
-    /// Stable on-disk label (`"plan"` / `"weights"`).
+    /// Stable on-disk label (`"plan"` / `"weights"` / `"weights-i8"`).
     pub fn as_str(&self) -> &'static str {
         match self {
             ArtifactKind::Plan => "plan",
             ArtifactKind::PackedWeights => "weights",
+            ArtifactKind::PackedWeightsI8 => "weights-i8",
         }
     }
 
@@ -118,6 +129,7 @@ impl ArtifactKind {
         match s {
             "plan" => Some(ArtifactKind::Plan),
             "weights" => Some(ArtifactKind::PackedWeights),
+            "weights-i8" => Some(ArtifactKind::PackedWeightsI8),
             _ => None,
         }
     }
@@ -181,6 +193,23 @@ impl ArtifactKey {
         }
     }
 
+    /// Key of the INT8-quantized packed buffers for `dense` at `block`
+    /// granularity. Content-addressed by the same dense-value digest as
+    /// [`ArtifactKey::packed_weights`] — quantization (scales included)
+    /// is a deterministic function of the dense values and the block
+    /// shape — but under a distinct kind so f32 and int8 packs of the
+    /// same layer coexist in one store.
+    pub fn packed_weights_i8(dense: &Matrix, block: BlockShape) -> ArtifactKey {
+        ArtifactKey {
+            kind: ArtifactKind::PackedWeightsI8,
+            rows: dense.rows,
+            cols: dense.cols,
+            block,
+            content: digest_f32(&dense.data),
+            hw: 0,
+        }
+    }
+
     /// Stable id string used as the index key and payload file stem.
     /// Mixes every field plus [`FORMAT_VERSION`].
     pub fn id(&self) -> String {
@@ -189,6 +218,7 @@ impl ArtifactKey {
         h.mix_u64(match self.kind {
             ArtifactKind::Plan => 1,
             ArtifactKind::PackedWeights => 2,
+            ArtifactKind::PackedWeightsI8 => 3,
         });
         h.mix_u64(self.rows as u64);
         h.mix_u64(self.cols as u64);
@@ -254,6 +284,22 @@ mod tests {
         assert_ne!(a, ArtifactKey::packed_weights(&w2, block));
         // same values, different block granularity → different key
         assert_ne!(a, ArtifactKey::packed_weights(&w, BlockShape::new(4, 4)));
+    }
+
+    #[test]
+    fn i8_weights_key_is_distinct_from_f32() {
+        let block = BlockShape::new(2, 2);
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(8, 8, 1.0, &mut rng);
+        let a = ArtifactKey::packed_weights(&w, block);
+        let q = ArtifactKey::packed_weights_i8(&w, block);
+        // same content digest, distinct kind → distinct key and id
+        assert_eq!(a.content, q.content);
+        assert_ne!(a, q);
+        assert_ne!(a.id(), q.id());
+        assert!(q.id().starts_with("weights-i8-"));
+        assert_eq!(ArtifactKind::parse("weights-i8"), Some(ArtifactKind::PackedWeightsI8));
+        assert_eq!(ArtifactKind::parse(ArtifactKind::PackedWeightsI8.as_str()), Some(ArtifactKind::PackedWeightsI8));
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::scheduler::plan::PlanOptions;
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::dense::Matrix;
 use crate::sparse::prune::BlockShape;
+use crate::sparse::quant::QuantBsr;
 use crate::util::json::Json;
 use crate::util::tensorfile::{npy_bytes, parse_npy, Dtype, NpyTensor};
 use anyhow::{bail, Context, Result};
@@ -48,6 +49,18 @@ use std::sync::{Arc, Mutex};
 pub fn weight_files(stem: &str) -> [String; 3] {
     [
         format!("{stem}.data.npy"),
+        format!("{stem}.indices.npy"),
+        format!("{stem}.indptr.npy"),
+    ]
+}
+
+/// The four payload files of one INT8 packed-weights artifact, in
+/// checksum order: quantized block data, per-block scales, then the
+/// shared BSR structure.
+pub fn weight_files_i8(stem: &str) -> [String; 4] {
+    [
+        format!("{stem}.data.npy"),
+        format!("{stem}.scales.npy"),
         format!("{stem}.indices.npy"),
         format!("{stem}.indptr.npy"),
     ]
@@ -517,6 +530,167 @@ impl PlanStore {
         Ok(())
     }
 
+    // -- quantized packed weights ------------------------------------
+
+    /// Load the INT8-quantized packed buffers for `dense` at `block`
+    /// granularity, or `None` (→ live quantization) on miss or
+    /// integrity failure. Returns the structural [`BsrMatrix`] (with
+    /// *dequantized* f32 block data, so f32 fallbacks and measurement
+    /// probes see exactly what the INT8 kernels compute) alongside the
+    /// [`QuantBsr`] the INT8 execution path reads.
+    pub fn load_packed_quant(
+        &self,
+        dense: &Matrix,
+        block: BlockShape,
+    ) -> Option<(BsrMatrix, QuantBsr)> {
+        let _span = crate::trace::span(
+            "store",
+            "packed_i8.load",
+            0,
+            &[("block_r", block.r as i64), ("block_c", block.c as i64)],
+        );
+        let id = ArtifactKey::packed_weights_i8(dense, block).id();
+        let entry = {
+            self.entries
+                .lock()
+                .expect("plan store poisoned")
+                .get(&id)
+                .cloned()
+        };
+        let Some(entry) = entry else {
+            self.weight_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        match self.read_packed_quant_payload(&entry, dense, block) {
+            Ok(pair) => {
+                self.weight_hits.fetch_add(1, Ordering::Relaxed);
+                Some(pair)
+            }
+            Err(_) => {
+                self.corrupt_rejects.fetch_add(1, Ordering::Relaxed);
+                self.entries.lock().expect("plan store poisoned").remove(&id);
+                None
+            }
+        }
+    }
+
+    fn read_packed_quant_payload(
+        &self,
+        entry: &IndexEntry,
+        dense: &Matrix,
+        block: BlockShape,
+    ) -> Result<(BsrMatrix, QuantBsr)> {
+        let files = weight_files_i8(&entry.file);
+        let mut blobs: Vec<Vec<u8>> = Vec::with_capacity(files.len());
+        let mut total = 0u64;
+        let mut h = Fnv::new();
+        for f in &files {
+            let path = self.dir.join(f);
+            let bytes = std::fs::read(&path).with_context(|| format!("read {path:?}"))?;
+            total += bytes.len() as u64;
+            h.mix_bytes(&bytes);
+            blobs.push(bytes);
+        }
+        if total != entry.bytes {
+            bail!("payload {total} bytes, index records {}", entry.bytes);
+        }
+        if h.finish() != entry.checksum {
+            bail!("payload checksum mismatch for {}", entry.id);
+        }
+        let data = parse_npy(&blobs[0])?;
+        let scales = parse_npy(&blobs[1])?;
+        let indices = parse_npy(&blobs[2])?;
+        let indptr = parse_npy(&blobs[3])?;
+        if data.dtype != Dtype::I8
+            || scales.dtype != Dtype::F32
+            || indices.dtype != Dtype::I32
+            || indptr.dtype != Dtype::I32
+        {
+            bail!("quantized packed-weight tensors have unexpected dtypes");
+        }
+        // Both `from_parts` re-validate the untrusted input: BSR
+        // invariants for the structure, length/scale finiteness for the
+        // quantized payload.
+        let qw = QuantBsr::from_parts(block, indices.len(), data.i8_data, scales.f32_data)?;
+        let bsr = BsrMatrix::from_parts(
+            dense.rows,
+            dense.cols,
+            block,
+            qw.dequantize_data(),
+            to_u32(&indices.i32_data, "indices")?,
+            to_u32(&indptr.i32_data, "indptr")?,
+        )?;
+        Ok((bsr, qw))
+    }
+
+    /// Persist INT8-quantized packed buffers for `dense` (idempotent;
+    /// skipped on hardware mismatch like every other write).
+    pub fn store_packed_quant(&self, dense: &Matrix, bsr: &BsrMatrix, qw: &QuantBsr) -> Result<()> {
+        if !self.hw_match {
+            return Ok(());
+        }
+        if bsr.rows != dense.rows || bsr.cols != dense.cols {
+            bail!(
+                "packed {}x{} does not match dense {}x{}",
+                bsr.rows,
+                bsr.cols,
+                dense.rows,
+                dense.cols
+            );
+        }
+        if qw.block != bsr.block || qw.qdata.len() != bsr.data.len() {
+            bail!("quantized payload does not match BSR structure");
+        }
+        let key = ArtifactKey::packed_weights_i8(dense, bsr.block);
+        let id = key.id();
+        if self
+            .entries
+            .lock()
+            .expect("plan store poisoned")
+            .contains_key(&id)
+        {
+            return Ok(());
+        }
+        let files = weight_files_i8(&id);
+        let payloads = [
+            npy_bytes(&NpyTensor::from_i8(vec![qw.qdata.len()], qw.qdata.clone())),
+            npy_bytes(&NpyTensor::from_f32(vec![qw.scales.len()], qw.scales.clone())),
+            npy_bytes(&NpyTensor::from_i32(
+                vec![bsr.indices.len()],
+                bsr.indices.iter().map(|&v| v as i32).collect(),
+            )),
+            npy_bytes(&NpyTensor::from_i32(
+                vec![bsr.indptr.len()],
+                bsr.indptr.iter().map(|&v| v as i32).collect(),
+            )),
+        ];
+        let mut total = 0u64;
+        let mut h = Fnv::new();
+        for (f, bytes) in files.iter().zip(&payloads) {
+            total += bytes.len() as u64;
+            h.mix_bytes(bytes);
+            std::fs::write(self.dir.join(f), bytes)
+                .with_context(|| format!("write quantized packed payload {f}"))?;
+        }
+        let mut meta = self.artifact_meta(&key);
+        meta.insert("granularity".into(), qw.granularity.to_string());
+        let entry = IndexEntry {
+            id: id.clone(),
+            kind: ArtifactKind::PackedWeightsI8,
+            file: id.clone(),
+            bytes: total,
+            checksum: h.finish(),
+            meta,
+        };
+        format::append_record(&self.dir.join(INDEX_LOG), &LogRecord::Put(entry.clone()))?;
+        self.entries
+            .lock()
+            .expect("plan store poisoned")
+            .insert(id, entry);
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
     fn artifact_meta(&self, key: &ArtifactKey) -> BTreeMap<String, String> {
         let mut meta = BTreeMap::new();
         meta.insert("rows".into(), key.rows.to_string());
@@ -559,6 +733,11 @@ impl PlanStore {
                         referenced.insert(f);
                     }
                 }
+                ArtifactKind::PackedWeightsI8 => {
+                    for f in weight_files_i8(&e.file) {
+                        referenced.insert(f);
+                    }
+                }
             }
         }
         let live = entries.len();
@@ -593,6 +772,7 @@ impl PlanStore {
         let files: Vec<String> = match entry.kind {
             ArtifactKind::Plan => vec![entry.file.clone()],
             ArtifactKind::PackedWeights => weight_files(&entry.file).to_vec(),
+            ArtifactKind::PackedWeightsI8 => weight_files_i8(&entry.file).to_vec(),
         };
         let mut total = 0u64;
         let mut h = Fnv::new();
@@ -871,6 +1051,68 @@ mod tests {
         assert!(payload.contains("\"policy\":\"hybrid\""), "{payload}");
         let reopened = PlanStore::open(&dir, &hw).unwrap();
         assert!(reopened.load_plan(&bsr, PlanOptions::tvm_plus()).is_some());
+    }
+
+    #[test]
+    fn quantized_weights_roundtrip_across_restart() {
+        let hw = HwSpec::haswell_reference();
+        let dir = tmpdir("quant");
+        // per-block (32x1) and per-block-row fallback (2x1) granularities
+        for (tag, block) in [("tall", BlockShape::new(32, 1)), ("tiny", BlockShape::new(2, 1))] {
+            let dir = dir.join(tag);
+            std::fs::create_dir_all(&dir).unwrap();
+            let (w, bsr) = pruned(block, 0.5, 41);
+            let qw = QuantBsr::quantize(&bsr);
+            let store = PlanStore::open(&dir, &hw).unwrap();
+            store.store_packed_quant(&w, &bsr, &qw).unwrap();
+            // f32 and int8 packs of the same layer coexist under
+            // distinct kinds
+            store.store_packed(&w, &bsr).unwrap();
+            assert_eq!(store.len(), 2);
+            let reopened = PlanStore::open(&dir, &hw).unwrap();
+            let (back_bsr, back_qw) = reopened.load_packed_quant(&w, block).unwrap();
+            assert_eq!(back_qw, qw);
+            assert_eq!(back_bsr.data, qw.dequantize_data());
+            assert_eq!(back_bsr.indices, bsr.indices);
+            assert_eq!(back_bsr.indptr, bsr.indptr);
+            assert_eq!(reopened.load_packed(&w, block), Some(bsr));
+            let s = reopened.stats();
+            assert_eq!(s.weight_hits, 2, "{s:?}");
+            assert_eq!(s.corrupt_rejects, 0, "{s:?}");
+            // gc keeps all four quantized payload files referenced
+            let report = reopened.gc().unwrap();
+            assert_eq!(report.live, 2);
+            assert_eq!(report.removed_files, 0, "{report:?}");
+            assert!(reopened.load_packed_quant(&w, block).is_some());
+        }
+    }
+
+    #[test]
+    fn corrupted_quantized_scales_fall_back() {
+        let hw = HwSpec::haswell_reference();
+        let dir = tmpdir("quantcorrupt");
+        let block = BlockShape::new(32, 1);
+        let (w, bsr) = pruned(block, 0.9, 43);
+        let qw = QuantBsr::quantize(&bsr);
+        let store = PlanStore::open(&dir, &hw).unwrap();
+        store.store_packed_quant(&w, &bsr, &qw).unwrap();
+        let stem = store
+            .entries()
+            .into_iter()
+            .find(|e| e.kind == ArtifactKind::PackedWeightsI8)
+            .unwrap()
+            .file;
+        let scales_file = dir.join(&weight_files_i8(&stem)[1]);
+        let mut sb = std::fs::read(&scales_file).unwrap();
+        let last = sb.len() - 1;
+        sb[last] ^= 0xff;
+        std::fs::write(&scales_file, sb).unwrap();
+        let reopened = PlanStore::open(&dir, &hw).unwrap();
+        assert!(reopened.load_packed_quant(&w, block).is_none());
+        assert_eq!(reopened.stats().corrupt_rejects, 1);
+        // entry dropped: next lookup is a clean miss
+        assert!(reopened.load_packed_quant(&w, block).is_none());
+        assert_eq!(reopened.stats().weight_misses, 1);
     }
 
     #[test]

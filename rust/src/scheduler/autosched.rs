@@ -30,6 +30,7 @@ use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::dense::Matrix;
 use crate::sparse::pattern::PatternStats;
 use crate::sparse::prune::BlockShape;
+use crate::sparse::quant::WeightDtype;
 use crate::util::json::Json;
 use crate::util::pool;
 use crate::util::rng::Rng;
@@ -375,6 +376,14 @@ impl AutoScheduler {
             cols: m.cols,
             mean_blocks_per_row: ep.mean_blocks_per_row,
             tokens,
+            // An int8-tagged plan is priced with int8 byte accounting so
+            // Hybrid/Roofline rank its candidates against what the INT8
+            // kernels actually stream.
+            weight_dtype: if ep.plan.kernel_variant.is_int8() {
+                WeightDtype::Int8
+            } else {
+                WeightDtype::F32
+            },
         };
         let ranked = costmodel::rank(&inputs, &self.hw);
         let top = ranked[0];

@@ -38,6 +38,7 @@ use super::hwspec::HwSpec;
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::pattern::PatternStats;
 use crate::sparse::prune::BlockShape;
+use crate::sparse::quant::{ScaleGranularity, WeightDtype};
 use std::fmt;
 
 /// How the auto-scheduler chooses `(threads, grain)` for a plan.
@@ -134,11 +135,17 @@ pub struct CostInputs {
     pub mean_blocks_per_row: f64,
     /// Activation columns (tokens) this spmm streams.
     pub tokens: usize,
+    /// Stored weight element type. INT8 shrinks the streamed block data
+    /// 4× (plus per-block scale traffic) and the X panel traffic (the
+    /// activations are quantized to `i8` once per spmm), which is what
+    /// lets the model rank int8 candidates against f32 ones fairly.
+    pub weight_dtype: WeightDtype,
 }
 
 impl CostInputs {
     /// Capture the model inputs for one spmm over `tokens` activation
-    /// columns. Walks the structure once (`O(block_rows)`).
+    /// columns. Walks the structure once (`O(block_rows)`). Assumes f32
+    /// weights; chain [`CostInputs::with_dtype`] for the INT8 path.
     pub fn of(m: &BsrMatrix, tokens: usize) -> CostInputs {
         let stats = PatternStats::of(m);
         CostInputs {
@@ -147,7 +154,14 @@ impl CostInputs {
             cols: m.cols,
             mean_blocks_per_row: stats.mean_blocks_per_row,
             tokens,
+            weight_dtype: WeightDtype::F32,
         }
+    }
+
+    /// The same inputs re-tagged with a weight dtype.
+    pub fn with_dtype(mut self, dtype: WeightDtype) -> CostInputs {
+        self.weight_dtype = dtype;
+        self
     }
 
     /// Total stored blocks implied by the per-row mean.
@@ -191,6 +205,7 @@ pub struct PlanEstimate {
 ///     cols: 768,
 ///     mean_blocks_per_row: 76.8, // 90% sparse over 768 column blocks
 ///     tokens: 128,
+///     weight_dtype: sparsebert::sparse::quant::WeightDtype::F32,
 /// };
 /// let hw = HwSpec::haswell_reference();
 /// let one = estimate(&inputs, ExecParams { threads: 1, grain: 4 }, &hw);
@@ -209,21 +224,50 @@ pub fn estimate(inputs: &CostInputs, params: ExecParams, hw: &HwSpec) -> PlanEst
     let flops = 2.0 * elems * tokens;
 
     // --- bytes -----------------------------------------------------------
-    // Packed block data: each stored element streamed exactly once.
-    let w_bytes = 4.0 * elems;
+    // Packed block data: each stored element streamed exactly once — 4
+    // bytes for f32, 1 byte for i8 plus the per-block f32 scales
+    // alongside. This 4x shrink of the dominant streamed term is what
+    // makes the model rank int8 candidates ahead of f32 twins.
+    let w_bytes = match inputs.weight_dtype {
+        WeightDtype::F32 => 4.0 * elems,
+        WeightDtype::Int8 => {
+            let g = ScaleGranularity::for_block(inputs.block);
+            1.0 * elems + 4.0 * nnz * g.scales_per_block(inputs.block) as f64
+        }
+    };
     // Index traffic: u32 `indices` per block + u32 `indptr` per row.
     let idx_bytes = 4.0 * nnz + 4.0 * (brows + 1.0);
-    // X panels: the full activation panel read once if it stays resident
-    // in L3 across bands; otherwise every block re-streams its c×tokens
-    // panel from DRAM.
-    let x_resident = 4.0 * inputs.cols as f64 * tokens;
-    let x_streamed = 4.0 * nnz * inputs.block.c as f64 * tokens;
-    let x_bytes = if x_resident <= hw.l3_bytes as f64 {
-        x_resident
-    } else {
-        x_streamed.max(x_resident)
+    // X panel traffic. f32: the panel is read once if it stays resident
+    // in L3 across bands, else every block re-streams its c×tokens panel
+    // from DRAM. int8: the f32 panel is still read exactly once (by the
+    // per-token quantization pass, which also writes 4 bytes of scale
+    // per token), and the i8 panel it produces is short-lived scratch —
+    // at L3-fitting sizes it is written out once and the kernel's reads
+    // hit cache; past L3 every block re-streams it at 1 byte/element.
+    let panel = inputs.cols as f64 * tokens;
+    let x_bytes = match inputs.weight_dtype {
+        WeightDtype::F32 => {
+            let resident = 4.0 * panel;
+            let streamed = 4.0 * nnz * inputs.block.c as f64 * tokens;
+            if resident <= hw.l3_bytes as f64 {
+                resident
+            } else {
+                streamed.max(resident)
+            }
+        }
+        WeightDtype::Int8 => {
+            let quant_pass = 4.0 * panel + 4.0 * tokens;
+            let i8_panel = 1.0 * panel;
+            let streamed = 1.0 * nnz * inputs.block.c as f64 * tokens;
+            if i8_panel <= hw.l3_bytes as f64 {
+                quant_pass + i8_panel
+            } else {
+                quant_pass + i8_panel + streamed.max(i8_panel)
+            }
+        }
     };
-    // Y bands: written once, with a write-allocate read alongside.
+    // Y bands: written once (always f32), with a write-allocate read
+    // alongside.
     let y_bytes = Y_WRITE_ALLOCATE * 4.0 * brows * inputs.block.r as f64 * tokens;
     let bytes = w_bytes + idx_bytes + x_bytes + y_bytes;
 
@@ -393,6 +437,7 @@ mod tests {
             cols: 768,
             mean_blocks_per_row: 76.8,
             tokens: 128,
+            weight_dtype: WeightDtype::F32,
         }
     }
 
@@ -422,6 +467,52 @@ mod tests {
             + 2.0 * 4.0 * 768.0 * 128.0;
         assert!((e.bytes - bytes).abs() < 1.0, "{} vs {}", e.bytes, bytes);
         assert!((e.intensity - e.flops / e.bytes).abs() < 1e-9);
+    }
+
+    #[test]
+    fn int8_bytes_match_hand_derivation() {
+        let inp = inputs_32x1().with_dtype(WeightDtype::Int8);
+        let hw = HwSpec::haswell_reference();
+        let e = estimate(&inp, ExecParams { threads: 1, grain: 1 }, &hw);
+        // flops are dtype-independent (same multiply-add count)
+        let f32e = estimate(&inputs_32x1(), ExecParams { threads: 1, grain: 1 }, &hw);
+        assert_eq!(e.flops, f32e.flops);
+        // i8 weights + one f32 scale per 32x1 block + indices + f32
+        // panel read + per-token scale writes + one i8 panel write-out
+        // + write-allocate f32 Y
+        let nnz = 76.8 * 24.0;
+        let bytes = 1.0 * nnz * 32.0
+            + 4.0 * nnz
+            + 4.0 * nnz
+            + 4.0 * 25.0
+            + 4.0 * 768.0 * 128.0
+            + 4.0 * 128.0
+            + 1.0 * 768.0 * 128.0
+            + 2.0 * 4.0 * 768.0 * 128.0;
+        assert!((e.bytes - bytes).abs() < 1.0, "{} vs {}", e.bytes, bytes);
+        // the model must see int8 as lighter traffic overall
+        assert!(e.bytes < f32e.bytes, "{} vs {}", e.bytes, f32e.bytes);
+        assert!(e.intensity > f32e.intensity);
+    }
+
+    #[test]
+    fn int8_per_block_row_scales_cost_more_than_per_block() {
+        // 2x1 blocks fall back to per-block-row granularity (2 scales
+        // per block); the model must charge for both.
+        let tiny = CostInputs {
+            block: BlockShape::new(2, 1),
+            block_rows: 384,
+            cols: 768,
+            mean_blocks_per_row: 76.8,
+            tokens: 128,
+            weight_dtype: WeightDtype::Int8,
+        };
+        let hw = HwSpec::haswell_reference();
+        let e = estimate(&tiny, ExecParams { threads: 1, grain: 1 }, &hw);
+        let nnz = 76.8 * 384.0;
+        // w_bytes term alone: 1 byte per elem + 4 bytes per row scale (2/block)
+        let w_bytes = 1.0 * nnz * 2.0 + 4.0 * nnz * 2.0;
+        assert!(e.bytes > w_bytes, "{} vs {}", e.bytes, w_bytes);
     }
 
     #[test]
@@ -455,6 +546,7 @@ mod tests {
             cols: 768,
             mean_blocks_per_row: 2.4,
             tokens: 8,
+            weight_dtype: WeightDtype::F32,
         };
         let hw = HwSpec::haswell_reference();
         let fine = estimate(&inp, ExecParams { threads: 4, grain: 1 }, &hw);

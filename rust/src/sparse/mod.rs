@@ -15,6 +15,9 @@
 //!   unstructured magnitude pruning and structured *group* (block)
 //!   pruning, plus the group-lasso proximal operator used by the Python
 //!   training pipeline's Rust-side mirror;
+//! * [`quant`] — symmetric INT8 quantization of packed BSR blocks
+//!   (per-block f32 scales) and dynamic per-token activation
+//!   quantization, feeding the INT8 microkernel path;
 //! * [`pattern`] — block-row structure signatures and pattern-cardinality
 //!   statistics: the quantity the paper's Discussion uses to explain the
 //!   non-monotonic block-size curve, and the instrumentation its
@@ -27,8 +30,10 @@ pub mod dense;
 pub mod elementwise;
 pub mod pattern;
 pub mod prune;
+pub mod quant;
 
 pub use bsr::BsrMatrix;
 pub use csr::CsrMatrix;
 pub use dense::Matrix;
 pub use prune::BlockShape;
+pub use quant::{QuantBsr, WeightDtype};

@@ -1,0 +1,476 @@
+//! INT8 symmetric quantization of packed BSR weights and activations —
+//! the byte-halving follow-on to the SIMD microkernels (Shen et al.,
+//! arXiv 2306.16601, applied to this repo's BSR path).
+//!
+//! Scheme (the *accuracy contract* documented in `docs/quantization.md`):
+//!
+//! * **Weights** are quantized symmetrically per stored block with an
+//!   `f32` scale `sb = maxabs(block) / 127` (`1.0` for all-zero blocks so
+//!   dequantization never divides by zero). Blocks too small to amortize
+//!   a scale across rows fall back to per-block-row scales; the
+//!   granularity is a *deterministic function of the block shape*
+//!   ([`ScaleGranularity::for_block`]), so it is never stored on disk —
+//!   a loader recomputes it from the block shape alone.
+//! * **Activations** are quantized dynamically per token (column of the
+//!   feature-major `[features, tokens]` panel) with
+//!   `sx[k] = maxabs(X[:, k]) / 127`, once per SpMM call.
+//! * Kernels accumulate the integer product exactly in `i32` (integer
+//!   addition is associative, so scalar and SIMD twins agree bitwise by
+//!   construction) and fold each block's contribution into the `f32`
+//!   output as `y += (sb * sx[k]) * (acc as f32)` — one well-defined
+//!   float rounding per block per output element.
+
+use super::bsr::BsrMatrix;
+use super::dense::Matrix;
+use super::prune::BlockShape;
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// The declared accuracy contract for the INT8 path: the max-abs error
+/// of an INT8 projection output vs its f32 twin must stay within this
+/// fraction of the f32 output's max-abs value. Property tests and the
+/// cibench accuracy gate both enforce it (`docs/quantization.md`).
+pub const INT8_ACCURACY_TOL_REL: f64 = 0.05;
+
+/// Storage dtype for packed BSR weights, selected per deployment via the
+/// `[model] weight_dtype` manifest key (default `"f32"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WeightDtype {
+    /// Full-precision packed blocks (the original path).
+    #[default]
+    F32,
+    /// INT8 blocks + per-block (or per-block-row) f32 scales.
+    Int8,
+}
+
+impl WeightDtype {
+    /// Manifest / report spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WeightDtype::F32 => "f32",
+            WeightDtype::Int8 => "int8",
+        }
+    }
+
+    /// Inverse of [`WeightDtype::as_str`] (accepts the common `"i8"`
+    /// alias).
+    pub fn parse(s: &str) -> Result<WeightDtype> {
+        match s {
+            "f32" => Ok(WeightDtype::F32),
+            "int8" | "i8" => Ok(WeightDtype::Int8),
+            other => bail!("unknown weight_dtype '{other}' (expected \"f32\" or \"int8\")"),
+        }
+    }
+}
+
+impl fmt::Display for WeightDtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// How many scales each stored block carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleGranularity {
+    /// One scale per stored block (the default).
+    PerBlock,
+    /// One scale per row *within* each stored block — the fallback for
+    /// blocks too small for a shared scale to be meaningful.
+    PerBlockRow,
+}
+
+impl ScaleGranularity {
+    /// Deterministic granularity for a block shape: per-block whenever a
+    /// block holds at least 4 elements, per-block-row otherwise. Because
+    /// this is a pure function of the shape it is *not* serialized; the
+    /// plan store recomputes it when loading quantized payloads.
+    pub fn for_block(block: BlockShape) -> ScaleGranularity {
+        if block.elems() >= 4 {
+            ScaleGranularity::PerBlock
+        } else {
+            ScaleGranularity::PerBlockRow
+        }
+    }
+
+    /// Scales stored per block under this granularity.
+    pub fn scales_per_block(self, block: BlockShape) -> usize {
+        match self {
+            ScaleGranularity::PerBlock => 1,
+            ScaleGranularity::PerBlockRow => block.r,
+        }
+    }
+
+    /// Report spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ScaleGranularity::PerBlock => "per-block",
+            ScaleGranularity::PerBlockRow => "per-block-row",
+        }
+    }
+}
+
+impl fmt::Display for ScaleGranularity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// INT8 companion of a packed [`BsrMatrix`]: same block structure
+/// (`indices` / `indptr` live on the f32 matrix it was quantized from),
+/// with `i8` block values and `f32` scales.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantBsr {
+    /// Block shape (mirrors the source matrix; kept for self-description).
+    pub block: BlockShape,
+    /// Scale granularity — always `ScaleGranularity::for_block(block)`.
+    pub granularity: ScaleGranularity,
+    /// Quantized block values, same layout/length as `BsrMatrix::data`.
+    pub qdata: Vec<i8>,
+    /// `nnz_blocks * scales_per_block` scales, blocks in storage order.
+    pub scales: Vec<f32>,
+}
+
+impl QuantBsr {
+    /// Quantize a packed BSR matrix. Structure arrays are not copied —
+    /// execution borrows them from the source matrix.
+    pub fn quantize(m: &BsrMatrix) -> QuantBsr {
+        let block = m.block;
+        let granularity = ScaleGranularity::for_block(block);
+        let spb = granularity.scales_per_block(block);
+        let e = block.elems();
+        let nblocks = m.nnz_blocks();
+        let mut qdata = Vec::with_capacity(m.data.len());
+        let mut scales = Vec::with_capacity(nblocks * spb);
+        for b in 0..nblocks {
+            let blk = m.block_data(b);
+            match granularity {
+                ScaleGranularity::PerBlock => {
+                    let s = scale_for(blk);
+                    scales.push(s);
+                    qdata.extend(blk.iter().map(|&v| quantize_one(v, s)));
+                }
+                ScaleGranularity::PerBlockRow => {
+                    for i in 0..block.r {
+                        let row = &blk[i * block.c..(i + 1) * block.c];
+                        let s = scale_for(row);
+                        scales.push(s);
+                        qdata.extend(row.iter().map(|&v| quantize_one(v, s)));
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(qdata.len(), nblocks * e);
+        QuantBsr {
+            block,
+            granularity,
+            qdata,
+            scales,
+        }
+    }
+
+    /// Rebuild from raw parts (the plan-store load path). Validates
+    /// lengths against the expected block count and recomputes the
+    /// granularity from the block shape.
+    pub fn from_parts(
+        block: BlockShape,
+        nnz_blocks: usize,
+        qdata: Vec<i8>,
+        scales: Vec<f32>,
+    ) -> Result<QuantBsr> {
+        let granularity = ScaleGranularity::for_block(block);
+        let spb = granularity.scales_per_block(block);
+        if qdata.len() != nnz_blocks * block.elems() {
+            bail!(
+                "quant data length {} != nnz_blocks {} * block elems {}",
+                qdata.len(),
+                nnz_blocks,
+                block.elems()
+            );
+        }
+        if scales.len() != nnz_blocks * spb {
+            bail!(
+                "scale count {} != nnz_blocks {} * scales/block {}",
+                scales.len(),
+                nnz_blocks,
+                spb
+            );
+        }
+        if scales.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+            bail!("quant scales must be finite and positive");
+        }
+        Ok(QuantBsr {
+            block,
+            granularity,
+            qdata,
+            scales,
+        })
+    }
+
+    /// Scales stored per block (1 for per-block granularity, `block.r`
+    /// for per-block-row).
+    #[inline]
+    pub fn scales_per_block(&self) -> usize {
+        self.granularity.scales_per_block(self.block)
+    }
+
+    /// Dequantized f32 block values, same layout as `BsrMatrix::data`.
+    /// Used to reconstruct a full-precision view when loading a quantized
+    /// payload from the plan store (execution itself stays on `qdata`).
+    pub fn dequantize_data(&self) -> Vec<f32> {
+        let e = self.block.elems();
+        let spb = self.scales_per_block();
+        let c = if spb == 1 { e } else { self.block.c };
+        self.qdata
+            .chunks(c)
+            .zip(self.scales.iter())
+            .flat_map(|(chunk, &s)| chunk.iter().map(move |&q| q as f32 * s))
+            .collect()
+    }
+
+    /// Bytes of quantized payload: `i8` values plus `f32` scales. The
+    /// cost model's INT8 weight-traffic term uses the same accounting.
+    pub fn footprint_bytes(&self) -> usize {
+        self.qdata.len() + self.scales.len() * 4
+    }
+}
+
+/// Symmetric scale for one quantization group: `maxabs / 127`, or `1.0`
+/// for an all-zero group (any scale represents zeros exactly).
+#[inline]
+pub fn scale_for(group: &[f32]) -> f32 {
+    let maxabs = group.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if maxabs > 0.0 {
+        maxabs / 127.0
+    } else {
+        1.0
+    }
+}
+
+#[inline]
+fn quantize_one(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Activations quantized per token: feature-major `[features, tokens]`
+/// i8 panel plus one scale per token, produced once per SpMM call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedActivations {
+    /// Feature count (rows of the panel).
+    pub rows: usize,
+    /// Token count (columns of the panel).
+    pub tokens: usize,
+    /// Quantized values, row-major `[rows, tokens]` like the source.
+    pub q: Vec<i8>,
+    /// Per-token scales, length `tokens`.
+    pub sx: Vec<f32>,
+}
+
+/// Dynamically quantize an activation panel (`[features, tokens]`,
+/// feature-major) with symmetric per-token scales.
+pub fn quantize_activations(x: &Matrix) -> QuantizedActivations {
+    let (rows, tokens) = (x.rows, x.cols);
+    let mut sx = vec![0.0f32; tokens];
+    for k in 0..tokens {
+        let mut maxabs = 0.0f32;
+        for i in 0..rows {
+            maxabs = maxabs.max(x.data[i * tokens + k].abs());
+        }
+        sx[k] = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+    }
+    let mut q = Vec::with_capacity(rows * tokens);
+    for i in 0..rows {
+        let row = x.row(i);
+        for k in 0..tokens {
+            q.push(quantize_one(row[k], sx[k]));
+        }
+    }
+    QuantizedActivations {
+        rows,
+        tokens,
+        q,
+        sx,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prune::prune_structured;
+    use crate::util::propcheck;
+    use crate::util::rng::Rng;
+
+    fn pruned_random(
+        rows: usize,
+        cols: usize,
+        block: BlockShape,
+        sparsity: f64,
+        seed: u64,
+    ) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::randn(rows, cols, 1.0, &mut rng);
+        prune_structured(&mut w, sparsity, block);
+        w
+    }
+
+    #[test]
+    fn granularity_is_deterministic_in_block_shape() {
+        assert_eq!(
+            ScaleGranularity::for_block(BlockShape::new(32, 1)),
+            ScaleGranularity::PerBlock
+        );
+        assert_eq!(
+            ScaleGranularity::for_block(BlockShape::new(1, 32)),
+            ScaleGranularity::PerBlock
+        );
+        assert_eq!(
+            ScaleGranularity::for_block(BlockShape::new(2, 2)),
+            ScaleGranularity::PerBlock
+        );
+        assert_eq!(
+            ScaleGranularity::for_block(BlockShape::new(1, 1)),
+            ScaleGranularity::PerBlockRow
+        );
+        assert_eq!(
+            ScaleGranularity::for_block(BlockShape::new(2, 1)),
+            ScaleGranularity::PerBlockRow
+        );
+    }
+
+    #[test]
+    fn weight_dtype_parse_roundtrip() {
+        for d in [WeightDtype::F32, WeightDtype::Int8] {
+            assert_eq!(WeightDtype::parse(d.as_str()).unwrap(), d);
+        }
+        assert_eq!(WeightDtype::parse("i8").unwrap(), WeightDtype::Int8);
+        assert!(WeightDtype::parse("fp16").is_err());
+        assert_eq!(WeightDtype::default(), WeightDtype::F32);
+    }
+
+    /// Satellite: quantize→dequantize round-trip error is bounded by half
+    /// a quantization step per element, per group scale.
+    #[test]
+    fn roundtrip_error_bounded_per_block() {
+        propcheck::check(
+            "quant roundtrip error bound",
+            32,
+            |rng| {
+                let shapes = [
+                    BlockShape::new(1, 1),
+                    BlockShape::new(2, 1),
+                    BlockShape::new(32, 1),
+                    BlockShape::new(1, 32),
+                    BlockShape::new(32, 32),
+                    BlockShape::new(4, 8),
+                ];
+                let block = shapes[rng.range(0, shapes.len())];
+                let rows = block.r * rng.range(1, 5);
+                let cols = block.c * rng.range(1, 5);
+                let sparsity = rng.f64() * 0.9;
+                (rows, cols, block, sparsity, rng.next_u64())
+            },
+            |&(rows, cols, block, sparsity, seed)| {
+                let w = pruned_random(rows, cols, block, sparsity, seed);
+                let bsr = BsrMatrix::from_dense(&w, block).map_err(|e| e.to_string())?;
+                let q = QuantBsr::quantize(&bsr);
+                let deq = q.dequantize_data();
+                if deq.len() != bsr.data.len() {
+                    return Err("dequantized length mismatch".into());
+                }
+                let spb = q.scales_per_block();
+                let group = if spb == 1 { block.elems() } else { block.c };
+                for (gi, chunk) in bsr.data.chunks(group).enumerate() {
+                    let s = q.scales[gi];
+                    // Round-to-nearest on an in-range value errs by at
+                    // most s/2 (plus float slack).
+                    let bound = 0.5 * s + 1e-6;
+                    for (j, &orig) in chunk.iter().enumerate() {
+                        let err = (deq[gi * group + j] - orig).abs();
+                        if err > bound {
+                            return Err(format!(
+                                "group {gi} elem {j}: |{}-{orig}| = {err} > {bound}",
+                                deq[gi * group + j]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn zeros_quantize_exactly() {
+        // An explicit zero inside a kept block must survive the
+        // round-trip exactly — zero-skips in kernels depend on it.
+        let mut w = Matrix::zeros(2, 4);
+        w.set(0, 0, 3.0);
+        // block (0,0) of shape 2x2 holds [3,0,0,0]; block (0,1) dropped
+        let bsr = BsrMatrix::from_dense(&w, BlockShape::new(2, 2)).unwrap();
+        let q = QuantBsr::quantize(&bsr);
+        let deq = q.dequantize_data();
+        assert_eq!(deq[1], 0.0);
+        assert_eq!(deq[2], 0.0);
+        assert!((deq[0] - 3.0).abs() < 3.0 / 127.0);
+    }
+
+    #[test]
+    fn all_zero_block_gets_unit_scale() {
+        // from_parts path: force an all-zero stored block via from_parts
+        let bsr = BsrMatrix::from_parts(
+            2,
+            2,
+            BlockShape::new(2, 2),
+            vec![0.0; 4],
+            vec![0],
+            vec![0, 1],
+        )
+        .unwrap();
+        let q = QuantBsr::quantize(&bsr);
+        assert_eq!(q.scales, vec![1.0]);
+        assert!(q.qdata.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn from_parts_validates_lengths_and_scales() {
+        let block = BlockShape::new(2, 2);
+        assert!(QuantBsr::from_parts(block, 1, vec![0; 4], vec![1.0]).is_ok());
+        assert!(QuantBsr::from_parts(block, 1, vec![0; 3], vec![1.0]).is_err());
+        assert!(QuantBsr::from_parts(block, 1, vec![0; 4], vec![1.0, 1.0]).is_err());
+        assert!(QuantBsr::from_parts(block, 1, vec![0; 4], vec![0.0]).is_err());
+        assert!(QuantBsr::from_parts(block, 1, vec![0; 4], vec![f32::NAN]).is_err());
+        // per-block-row fallback: 2x1 blocks carry r=2 scales each
+        let tall = BlockShape::new(2, 1);
+        assert!(QuantBsr::from_parts(tall, 1, vec![0; 2], vec![1.0, 1.0]).is_ok());
+        assert!(QuantBsr::from_parts(tall, 1, vec![0; 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn activation_quantization_is_per_token() {
+        // Column 0 large, column 1 tiny: per-token scales keep the tiny
+        // column's resolution independent of the large one.
+        let x = Matrix::from_vec(2, 2, vec![100.0, 0.001, -50.0, -0.00025]);
+        let qx = quantize_activations(&x);
+        assert_eq!(qx.sx.len(), 2);
+        assert!((qx.sx[0] - 100.0 / 127.0).abs() < 1e-6);
+        assert!((qx.sx[1] - 0.001 / 127.0).abs() < 1e-9);
+        assert_eq!(qx.q[0], 127); // 100 / (100/127)
+        assert_eq!(qx.q[3], -32); // -0.00025 / (0.001/127) = -31.75 → -32
+        // zero column → unit scale, zero codes
+        let z = Matrix::zeros(3, 1);
+        let qz = quantize_activations(&z);
+        assert_eq!(qz.sx, vec![1.0]);
+        assert!(qz.q.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn footprint_counts_values_and_scales() {
+        let block = BlockShape::new(1, 32);
+        let w = pruned_random(4, 64, block, 0.5, 9);
+        let bsr = BsrMatrix::from_dense(&w, block).unwrap();
+        let q = QuantBsr::quantize(&bsr);
+        assert_eq!(q.footprint_bytes(), q.qdata.len() + q.scales.len() * 4);
+        // int8 values are 4x smaller than the f32 values they replace
+        assert_eq!(q.qdata.len(), bsr.data.len());
+        assert!(q.footprint_bytes() < bsr.data.len() * 4);
+    }
+}

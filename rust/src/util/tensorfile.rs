@@ -2,8 +2,9 @@
 //!
 //! Python (numpy) writes standard `.npy` v1.0 files plus a `manifest.json`
 //! naming each tensor; Rust reads them here without any numpy/serde
-//! dependency. Supports the two dtypes the pipeline uses: little-endian
-//! `f32` (`<f4`) and `i32` (`<i4`), C-contiguous. A writer is included so
+//! dependency. Supports the dtypes the pipeline uses: little-endian
+//! `f32` (`<f4`) and `i32` (`<i4`) plus byte-order-free `i8` (`|i1`,
+//! quantized packed weights), C-contiguous. A writer is included so
 //! Rust↔Rust round-trips are testable and so Rust can export pruned
 //! weights back to Python tooling.
 
@@ -59,6 +60,7 @@ impl std::error::Error for TensorFileError {}
 pub enum Dtype {
     F32,
     I32,
+    I8,
 }
 
 impl Dtype {
@@ -66,6 +68,15 @@ impl Dtype {
         match self {
             Dtype::F32 => "<f4",
             Dtype::I32 => "<i4",
+            Dtype::I8 => "|i1",
+        }
+    }
+
+    /// Element size in bytes.
+    fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I8 => 1,
         }
     }
 
@@ -73,21 +84,25 @@ impl Dtype {
         match d {
             "<f4" | "|f4" | "=f4" => Ok(Dtype::F32),
             "<i4" | "|i4" | "=i4" => Ok(Dtype::I32),
+            // single-byte: numpy writes '|i1'; byte order is moot
+            "|i1" | "<i1" | "=i1" => Ok(Dtype::I8),
             other if other.starts_with('>') => {
                 Err(TensorFileError::NonLittleEndian(other.to_string()).into())
             }
-            other => bail!("unsupported npy dtype descr '{other}' (only <f4 / <i4)"),
+            other => bail!("unsupported npy dtype descr '{other}' (only <f4 / <i4 / |i1)"),
         }
     }
 }
 
-/// An n-d tensor of f32 or i32 with shape metadata. Data is flat C-order.
+/// An n-d tensor of f32, i32, or i8 with shape metadata. Data is flat
+/// C-order in the vector matching [`NpyTensor::dtype`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct NpyTensor {
     pub shape: Vec<usize>,
     pub dtype: Dtype,
     pub f32_data: Vec<f32>,
     pub i32_data: Vec<i32>,
+    pub i8_data: Vec<i8>,
 }
 
 impl NpyTensor {
@@ -98,6 +113,7 @@ impl NpyTensor {
             dtype: Dtype::F32,
             f32_data: data,
             i32_data: Vec::new(),
+            i8_data: Vec::new(),
         }
     }
 
@@ -108,6 +124,18 @@ impl NpyTensor {
             dtype: Dtype::I32,
             f32_data: Vec::new(),
             i32_data: data,
+            i8_data: Vec::new(),
+        }
+    }
+
+    pub fn from_i8(shape: Vec<usize>, data: Vec<i8>) -> NpyTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        NpyTensor {
+            shape,
+            dtype: Dtype::I8,
+            f32_data: Vec::new(),
+            i32_data: Vec::new(),
+            i8_data: data,
         }
     }
 
@@ -165,10 +193,10 @@ pub fn parse_npy(bytes: &[u8]) -> Result<NpyTensor> {
     let dtype = Dtype::from_descr(&descr)?;
     let count: usize = shape.iter().product();
     let data = &bytes[header_end..];
-    if data.len() < count * 4 {
+    if data.len() < count * dtype.size() {
         bail!("truncated data (want {count} elems)");
     }
-    let raw = &data[..count * 4];
+    let raw = &data[..count * dtype.size()];
     Ok(match dtype {
         Dtype::F32 => {
             let data = raw
@@ -183,6 +211,10 @@ pub fn parse_npy(bytes: &[u8]) -> Result<NpyTensor> {
                 .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
             NpyTensor::from_i32(shape, data)
+        }
+        Dtype::I8 => {
+            let data = raw.iter().map(|&b| b as i8).collect();
+            NpyTensor::from_i8(shape, data)
         }
     })
 }
@@ -242,7 +274,7 @@ pub fn npy_bytes(t: &NpyTensor) -> Vec<u8> {
     let pad = (64 - unpadded % 64) % 64;
     header.push_str(&" ".repeat(pad));
     header.push('\n');
-    let mut out = Vec::with_capacity(10 + header.len() + t.len() * 4);
+    let mut out = Vec::with_capacity(10 + header.len() + t.len() * t.dtype.size());
     out.extend_from_slice(b"\x93NUMPY\x01\x00");
     out.extend_from_slice(&(header.len() as u16).to_le_bytes());
     out.extend_from_slice(header.as_bytes());
@@ -255,6 +287,11 @@ pub fn npy_bytes(t: &NpyTensor) -> Vec<u8> {
         Dtype::I32 => {
             for &x in &t.i32_data {
                 out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Dtype::I8 => {
+            for &x in &t.i8_data {
+                out.push(x as u8);
             }
         }
     }
@@ -356,6 +393,7 @@ impl TensorBundle {
                     match t.dtype {
                         Dtype::F32 => "f32",
                         Dtype::I32 => "i32",
+                        Dtype::I8 => "i8",
                     },
                 );
             tensors.set(name, entry);
@@ -418,6 +456,20 @@ mod tests {
         let back = read_npy(&p).unwrap();
         assert_eq!(t, back);
         assert_eq!(back.shape, vec![5]);
+    }
+
+    #[test]
+    fn npy_roundtrip_i8() {
+        let d = tmpdir("i8");
+        let t = NpyTensor::from_i8(vec![2, 3], vec![0, -1, 127, -127, 5, -128]);
+        let p = d.join("q.npy");
+        write_npy(&p, &t).unwrap();
+        let back = read_npy(&p).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.dtype, Dtype::I8);
+        // numpy-style '<i1' descr is accepted too
+        assert_eq!(Dtype::from_descr("<i1").unwrap(), Dtype::I8);
+        assert_eq!(Dtype::from_descr("=i1").unwrap(), Dtype::I8);
     }
 
     #[test]
